@@ -1,0 +1,73 @@
+//! End-to-end paper pipeline — the repository's E2E validation driver
+//! (EXPERIMENTS.md records its output).
+//!
+//! Runs the full evaluation: builds the Table III dataset suite, executes
+//! all five SpGEMM implementations through the cycle-level simulator with
+//! functional verification on every product, regenerates Figure 8 (the
+//! headline speedups), the Figure 9 breakdown, Figure 10 (L1D accesses)
+//! and Figure 11 (dynamic instruction counts), runs the Table IV area
+//! model, and checks the paper's qualitative claims.
+//!
+//! ```bash
+//! cargo run --release --example paper_pipeline -- [scale] [out_dir]
+//! # scale in (0,1]; default 0.25 keeps the run to a few minutes.
+//! ```
+
+use sparsezipper::area::AreaModel;
+use sparsezipper::coordinator::{figures, report, run_suite, SuiteConfig};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let scale: f64 = args.next().map(|s| s.parse()).transpose()?.unwrap_or(0.25);
+    let out_dir = std::path::PathBuf::from(
+        args.next().unwrap_or_else(|| "reports/pipeline".to_string()),
+    );
+
+    let cfg = SuiteConfig {
+        scale,
+        verify: true, // every product checked against the oracle
+        ..Default::default()
+    };
+    println!(
+        "[paper_pipeline] {} datasets x {} impls at scale {} (verified)",
+        cfg.datasets.len(),
+        cfg.impls.len(),
+        scale
+    );
+    let t0 = std::time::Instant::now();
+    let suite = run_suite(&cfg)?;
+    println!(
+        "[paper_pipeline] suite complete in {:.1}s — all {} products verified",
+        t0.elapsed().as_secs_f64(),
+        suite.results.len()
+    );
+
+    report::emit(&out_dir, "table3.txt", &figures::table3(&suite), false)?;
+    report::emit(&out_dir, "fig8.txt", &figures::fig8(&suite), false)?;
+    report::emit(&out_dir, "fig9.txt", &figures::fig9(&suite), true)?;
+    report::emit(&out_dir, "fig10.txt", &figures::fig10(&suite), false)?;
+    report::emit(&out_dir, "fig11.txt", &figures::fig11(&suite), false)?;
+    report::emit(&out_dir, "table4.txt", &AreaModel::paper().table4(), false)?;
+    for (name, content) in figures::tsv_exports(&suite) {
+        report::emit(&out_dir, &name, &content, true)?;
+    }
+
+    // Qualitative shape checks (who wins, where, why).
+    let checks = figures::shape_checks(&suite);
+    println!("\nShape checks (paper's qualitative claims):");
+    let mut failures = 0;
+    for (name, ok) in &checks {
+        println!("  [{}] {}", if *ok { "ok" } else { "FAIL" }, name);
+        if !*ok {
+            failures += 1;
+        }
+    }
+    println!(
+        "\n{}/{} checks passed; reports in {}",
+        checks.len() - failures,
+        checks.len(),
+        out_dir.display()
+    );
+    anyhow::ensure!(failures == 0, "{failures} shape checks failed");
+    Ok(())
+}

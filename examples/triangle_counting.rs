@@ -1,0 +1,111 @@
+//! Graph analytics on the SpGEMM kernel: triangle counting via
+//! tr(A^3)/6 computed with masked row-wise products — one of the paper's
+//! §I motivating workloads ("multi-source BFS, peer-pressure clustering,
+//! cycle detection, triangle counting").
+//!
+//! The count is derived from B = A*A (SparseZipper SpGEMM under the cycle
+//! model) followed by a masked dot with A: triangles = sum_{(i,j) in A}
+//! B[i][j] / 6 for an undirected graph.
+//!
+//! ```bash
+//! cargo run --release --example triangle_counting [n] [avg_degree]
+//! ```
+
+use sparsezipper::config::SystemConfig;
+use sparsezipper::matrix::{gen, Csr};
+use sparsezipper::sim::Machine;
+use sparsezipper::spgemm::{self, SpGemm};
+
+/// Make an undirected (symmetric, zero-diagonal) graph.
+fn symmetric_graph(n: usize, nnz: usize, seed: u64) -> Csr {
+    let g = gen::powerlaw_clustered(n, nnz / 2, 0.9, 0.5, seed);
+    // Symmetrize: A | A^T, drop the diagonal, unit weights.
+    let t = g.transpose();
+    let mut rows: Vec<(Vec<u32>, Vec<f32>)> = Vec::with_capacity(n);
+    for r in 0..n {
+        let mut cols: Vec<u32> = g.row(r).0.iter().chain(t.row(r).0).copied().collect();
+        cols.sort_unstable();
+        cols.dedup();
+        cols.retain(|&c| c != r as u32);
+        let vals = vec![1.0f32; cols.len()];
+        rows.push((cols, vals));
+    }
+    Csr::from_rows(n, n, rows)
+}
+
+/// Exact triangle count by reference (neighbour intersection).
+fn reference_triangles(a: &Csr) -> u64 {
+    let mut count = 0u64;
+    for u in 0..a.nrows {
+        let (nu, _) = a.row(u);
+        for &v in nu.iter().filter(|&&v| (v as usize) > u) {
+            let (nv, _) = a.row(v as usize);
+            // |N(u) ∩ N(v)| restricted to w > v to count each triangle once.
+            let (mut i, mut j) = (0, 0);
+            while i < nu.len() && j < nv.len() {
+                match nu[i].cmp(&nv[j]) {
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                    std::cmp::Ordering::Equal => {
+                        if nu[i] > v {
+                            count += 1;
+                        }
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+    count
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let n: usize = args.next().map(|s| s.parse()).transpose()?.unwrap_or(3000);
+    let deg: usize = args.next().map(|s| s.parse()).transpose()?.unwrap_or(8);
+
+    let a = symmetric_graph(n, n * deg, 7);
+    println!(
+        "graph: {} vertices, {} edges (avg degree {:.1})",
+        a.nrows,
+        a.nnz() / 2,
+        a.nnz() as f64 / a.nrows as f64
+    );
+
+    // B = A*A through the simulated SparseZipper pipeline.
+    let mut m = Machine::new(SystemConfig::default());
+    let b = spgemm::spz::Spz::native().multiply(&mut m, &a, &a)?;
+
+    // Masked reduction: sum B[i][j] over edges (i,j) of A. (The mask keeps
+    // only wedges that close into triangles; each triangle is counted 6x.)
+    let mut closed = 0f64;
+    for r in 0..a.nrows {
+        let (ak, _) = a.row(r);
+        let (bk, bv) = b.row(r);
+        let mut i = 0usize;
+        for (&col, &val) in bk.iter().zip(bv) {
+            while i < ak.len() && ak[i] < col {
+                i += 1;
+            }
+            if i < ak.len() && ak[i] == col {
+                closed += val as f64;
+            }
+        }
+    }
+    let triangles = (closed / 6.0).round() as u64;
+    let expect = reference_triangles(&a);
+    println!("triangles: {triangles} (reference: {expect})");
+    anyhow::ensure!(triangles == expect, "triangle count mismatch");
+
+    let met = m.metrics();
+    println!(
+        "simulated: {:.2}M cycles, {} mssortk + {} mszipk pairs, {:.1}% L1D hit",
+        met.cycles / 1e6,
+        met.ops.mssortk,
+        met.ops.mszipk,
+        100.0 * met.mem.l1d_hit_rate()
+    );
+    println!("verified: masked SpGEMM triangle count matches the exact reference");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+"""AOT lowering: L2 model (wrapping the L1 Pallas kernels) -> HLO text.
+
+HLO *text* is the interchange format (NOT ``HloModuleProto.serialize()``):
+jax >= 0.5 emits protos with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md). Lowered with return_tuple=True;
+the Rust side unwraps via ``Literal::to_tuple``.
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--s 16] [--n 16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(fn, s: int, n: int) -> str:
+    mat_i = jax.ShapeDtypeStruct((s, n), jnp.int32)
+    mat_f = jax.ShapeDtypeStruct((s, n), jnp.float32)
+    vec_i = jax.ShapeDtypeStruct((s,), jnp.int32)
+
+    def wrapped(k0, v0, k1, v1, l0, l1):
+        return fn(k0, v0, k1, v1, l0, l1, s=s, n=n)
+
+    lowered = jax.jit(wrapped).lower(mat_i, mat_f, mat_i, mat_f, vec_i, vec_i)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--s", type=int, default=16, help="streams per group")
+    ap.add_argument("--n", type=int, default=16, help="chunk size (register row)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = [
+        f"s={args.s}",
+        f"n={args.n}",
+        "inputs=k0:i32[s,n] v0:f32[s,n] k1:i32[s,n] v1:f32[s,n] l0:i32[s] l1:i32[s]",
+        "outputs=k0':i32[s,n] v0':f32[s,n] k1':i32[s,n] v1':f32[s,n] "
+        "ic0:i32[s] ic1:i32[s] oc0:i32[s] oc1:i32[s]",
+        f"key_pad={2**31 - 1}",
+        f"jax={jax.__version__}",
+    ]
+    for name, fn in [("sort_step", model.sort_step), ("zip_step", model.zip_step)]:
+        text = lower_step(fn, args.s, args.n)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name}: {len(text)} chars")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print("wrote manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

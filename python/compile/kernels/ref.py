@@ -1,0 +1,133 @@
+"""Pure-numpy oracle for the SparseZipper sort/zip step semantics.
+
+This is the normative reference the L1 Pallas kernels are tested against
+(pytest + hypothesis). It mirrors rust/src/systolic/functional.rs exactly —
+the two are kept in lock-step by the golden tests (paper Figure 5 examples)
+on both sides.
+
+Conventions:
+  * keys: int32, padded with KEY_PAD beyond each stream's length;
+  * values: float32, zero-padded;
+  * chunk size N = matrix-register row length (16 for the shipped artifacts).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+KEY_PAD = np.int32(2**31 - 1)
+
+
+def sort_chunk(keys: np.ndarray, vals: np.ndarray, length: int):
+    """Sort one chunk ascending, combining duplicate keys (values summed)."""
+    k = np.asarray(keys[:length], dtype=np.int64)
+    v = np.asarray(vals[:length], dtype=np.float64)
+    order = np.argsort(k, kind="stable")
+    k, v = k[order], v[order]
+    out_k: list[int] = []
+    out_v: list[float] = []
+    for i in range(len(k)):
+        if out_k and out_k[-1] == k[i]:
+            out_v[-1] += v[i]
+        else:
+            out_k.append(int(k[i]))
+            out_v.append(float(v[i]))
+    return out_k, out_v
+
+
+def sort_step_ref(k0, v0, k1, v1, l0, l1, n: int):
+    """mssortk+mssortv over a group of streams.
+
+    Returns (k0', v0', k1', v1', ic0, ic1, oc0, oc1) with the same padded
+    [S, N] layout as the kernel.
+    """
+    s = k0.shape[0]
+    out = _empty_out(s, n)
+    for i in range(s):
+        a_k, a_v = sort_chunk(k0[i], v0[i], int(l0[i]))
+        b_k, b_v = sort_chunk(k1[i], v1[i], int(l1[i]))
+        _write_row(out, 0, i, a_k, a_v)
+        _write_row(out, 1, i, b_k, b_v)
+        out[4][i] = int(l0[i])
+        out[5][i] = int(l1[i])
+        out[6][i] = len(a_k)
+        out[7][i] = len(b_k)
+    return out
+
+
+def zip_step_ref(k0, v0, k1, v1, l0, l1, n: int):
+    """mszipk+mszipv over a group of streams.
+
+    Element x of A is mergeable iff x <= max(B) (merge-bit rule, §IV-B);
+    nothing merges against an empty chunk. Mergeable elements merge
+    ascending with cross-chunk duplicates combined; the merged sequence
+    splits into east = m[:n] (-> k0'/v0') and south = m[n:] (-> k1'/v1').
+    ic = consumed per input chunk, oc = output part lengths.
+    """
+    s = k0.shape[0]
+    out = _empty_out(s, n)
+    for i in range(s):
+        la, lb = int(l0[i]), int(l1[i])
+        a = [int(x) for x in k0[i][:la]]
+        av = [float(x) for x in v0[i][:la]]
+        b = [int(x) for x in k1[i][:lb]]
+        bv = [float(x) for x in v1[i][:lb]]
+        assert a == sorted(a) and b == sorted(b), "zip inputs must be sorted"
+        max_a = a[-1] if a else None
+        max_b = b[-1] if b else None
+        ca = 0 if max_b is None else sum(1 for x in a if x <= max_b)
+        cb = 0 if max_a is None else sum(1 for x in b if x <= max_a)
+        # two-pointer merge with duplicate combining
+        mk: list[int] = []
+        mv: list[float] = []
+
+        def push(k: int, v: float):
+            if mk and mk[-1] == k:
+                mv[-1] += v
+            else:
+                mk.append(k)
+                mv.append(v)
+
+        ia = ib = 0
+        while ia < ca and ib < cb:
+            if a[ia] <= b[ib]:
+                push(a[ia], av[ia])
+                ia += 1
+            else:
+                push(b[ib], bv[ib])
+                ib += 1
+        while ia < ca:
+            push(a[ia], av[ia])
+            ia += 1
+        while ib < cb:
+            push(b[ib], bv[ib])
+            ib += 1
+
+        east_k, east_v = mk[:n], mv[:n]
+        south_k, south_v = mk[n:], mv[n:]
+        _write_row(out, 0, i, east_k, east_v)
+        _write_row(out, 1, i, south_k, south_v)
+        out[4][i] = ca
+        out[5][i] = cb
+        out[6][i] = len(east_k)
+        out[7][i] = len(south_k)
+    return out
+
+
+def _empty_out(s: int, n: int):
+    return (
+        np.full((s, n), KEY_PAD, dtype=np.int32),
+        np.zeros((s, n), dtype=np.float32),
+        np.full((s, n), KEY_PAD, dtype=np.int32),
+        np.zeros((s, n), dtype=np.float32),
+        np.zeros((s,), dtype=np.int32),
+        np.zeros((s,), dtype=np.int32),
+        np.zeros((s,), dtype=np.int32),
+        np.zeros((s,), dtype=np.int32),
+    )
+
+
+def _write_row(out, which: int, i: int, keys, vals):
+    k_arr, v_arr = out[2 * which], out[2 * which + 1]
+    k_arr[i, : len(keys)] = np.asarray(keys, dtype=np.int32)
+    v_arr[i, : len(vals)] = np.asarray(vals, dtype=np.float32)

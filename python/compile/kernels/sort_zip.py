@@ -1,0 +1,206 @@
+"""L1 Pallas kernels: the SparseZipper matrix unit's sort/zip datapath.
+
+Hardware adaptation (DESIGN.md §5): the paper's systolic compare-exchange
+wavefront becomes a **bitonic compare-exchange network** over the lane
+dimension, with the compress pass realized as a prefix-sum segment-reduce —
+the natural TPU formulation of the same comparator work. One grid program
+processes one stream (one matrix-register row), so a [S, N] tile group maps
+exactly onto the paper's "16 streams per instruction".
+
+interpret=True is mandatory here: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and the AOT artifacts must run inside the Rust coordinator via
+the XLA CPU client (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Plain int (not a traced jnp constant): pallas kernels must not capture
+# array-valued closure constants.
+KEY_PAD = 2**31 - 1
+
+
+# ---------------------------------------------------------------------------
+# Compare-exchange primitives (shared by both kernels)
+# ---------------------------------------------------------------------------
+
+def _bitonic_sort(keys, vals):
+    """Bitonic sort of a power-of-two lane vector, carrying values.
+
+    log2(n)*(log2(n)+1)/2 compare-exchange stages, each a vectorized
+    min/max/select over all lanes — the TPU re-expression of the paper's
+    triangular comparator wavefront (same comparator count, lane-parallel).
+    """
+    n = keys.shape[-1]
+    assert n & (n - 1) == 0, "lane count must be a power of two"
+    idx = jnp.arange(n, dtype=jnp.int32)
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            partner = idx ^ j
+            pk = jnp.take(keys, partner)
+            pv = jnp.take(vals, partner)
+            self_is_lo = idx < partner
+            # Normalize each pair to (a = low-lane datum, b = high-lane datum).
+            a_k = jnp.where(self_is_lo, keys, pk)
+            a_v = jnp.where(self_is_lo, vals, pv)
+            b_k = jnp.where(self_is_lo, pk, keys)
+            b_v = jnp.where(self_is_lo, pv, vals)
+            swap = a_k > b_k  # strict: ties keep order, no duplication
+            lo_k = jnp.where(swap, b_k, a_k)
+            lo_v = jnp.where(swap, b_v, a_v)
+            hi_k = jnp.where(swap, a_k, b_k)
+            hi_v = jnp.where(swap, a_v, b_v)
+            ascending = (idx & k) == 0
+            keys = jnp.where(
+                ascending,
+                jnp.where(self_is_lo, lo_k, hi_k),
+                jnp.where(self_is_lo, hi_k, lo_k),
+            )
+            vals = jnp.where(
+                ascending,
+                jnp.where(self_is_lo, lo_v, hi_v),
+                jnp.where(self_is_lo, hi_v, lo_v),
+            )
+            j //= 2
+        k *= 2
+    return keys, vals
+
+
+def _combine_compress(keys, vals, out_n):
+    """Compress pass: combine equal-key runs (sum values), pack left.
+
+    Prefix-sum formulation: segment starts -> segment ranks (cumsum) ->
+    segment-sum of values -> scatter firsts to their rank. Returns
+    (out_keys[out_n], out_vals[out_n], unique_count) with KEY_PAD padding.
+    """
+    n = keys.shape[-1]
+    valid = keys != KEY_PAD
+    prev = jnp.concatenate([jnp.full((1,), -1, dtype=keys.dtype), keys[:-1]])
+    seg_start = valid & (keys != prev)
+    # Rank of each lane's segment among valid segments (0-based).
+    rank = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
+    unique = jnp.sum(seg_start.astype(jnp.int32))
+    rank_clamped = jnp.clip(rank, 0, n - 1)
+    seg_vals = jax.ops.segment_sum(
+        jnp.where(valid, vals, 0.0), rank_clamped, num_segments=n
+    )
+    out_keys = jnp.full((n,), KEY_PAD, dtype=keys.dtype)
+    out_keys = out_keys.at[jnp.where(seg_start, rank_clamped, n - 1)].set(
+        jnp.where(seg_start, keys, KEY_PAD), mode="drop"
+    )
+    # Defensive re-pad: lanes at or past `unique` hold no segment.
+    lane = jnp.arange(n, dtype=jnp.int32)
+    out_keys = jnp.where(lane < unique, out_keys, KEY_PAD)
+    out_vals = jnp.where(lane < unique, seg_vals, 0.0).astype(vals.dtype)
+    return out_keys[:out_n], out_vals[:out_n], unique
+
+
+# ---------------------------------------------------------------------------
+# mssortk/mssortv: sort two chunks independently
+# ---------------------------------------------------------------------------
+
+def _sort_kernel(k0, v0, k1, v1, l0, l1, ok0, ov0, ok1, ov1, ic0, ic1, oc0, oc1):
+    n = k0.shape[-1]
+    lane = jnp.arange(n, dtype=jnp.int32)
+
+    def one(kr, vr, lr):
+        length = lr[0]
+        keys = jnp.where(lane < length, kr[0], KEY_PAD)
+        vals = jnp.where(lane < length, vr[0], 0.0)
+        keys, vals = _bitonic_sort(keys, vals)
+        out_k, out_v, unique = _combine_compress(keys, vals, n)
+        return out_k, out_v, unique
+
+    a_k, a_v, a_u = one(k0, v0, l0)
+    b_k, b_v, b_u = one(k1, v1, l1)
+    ok0[0, :] = a_k
+    ov0[0, :] = a_v
+    ok1[0, :] = b_k
+    ov1[0, :] = b_v
+    ic0[0] = l0[0]
+    ic1[0] = l1[0]
+    oc0[0] = a_u
+    oc1[0] = b_u
+
+
+# ---------------------------------------------------------------------------
+# mszipk/mszipv: merge two sorted chunks
+# ---------------------------------------------------------------------------
+
+def _zip_kernel(k0, v0, k1, v1, l0, l1, ok0, ov0, ok1, ov1, ic0, ic1, oc0, oc1):
+    n = k0.shape[-1]
+    lane = jnp.arange(n, dtype=jnp.int32)
+    la, lb = l0[0], l1[0]
+    a = jnp.where(lane < la, k0[0], KEY_PAD)
+    av = jnp.where(lane < la, v0[0], 0.0)
+    b = jnp.where(lane < lb, k1[0], KEY_PAD)
+    bv = jnp.where(lane < lb, v1[0], 0.0)
+
+    # Merge-bit rule (prefix form): x in A mergeable iff x <= max(B).
+    max_a = jnp.max(jnp.where(lane < la, a, -1))
+    max_b = jnp.max(jnp.where(lane < lb, b, -1))
+    merge_a = (lane < la) & (a <= max_b)
+    merge_b = (lane < lb) & (b <= max_a)
+    consumed_a = jnp.sum(merge_a.astype(jnp.int32))
+    consumed_b = jnp.sum(merge_b.astype(jnp.int32))
+
+    # Bitonic merge of the mergeable union (2N lanes), then compress.
+    c = jnp.concatenate([jnp.where(merge_a, a, KEY_PAD), jnp.where(merge_b, b, KEY_PAD)])
+    cv = jnp.concatenate([jnp.where(merge_a, av, 0.0), jnp.where(merge_b, bv, 0.0)])
+    c, cv = _bitonic_sort(c, cv)
+    m_k, m_v, unique = _combine_compress(c, cv, 2 * n)
+
+    east = jnp.minimum(unique, n)
+    ok0[0, :] = m_k[:n]
+    ov0[0, :] = m_v[:n]
+    ok1[0, :] = m_k[n:]
+    ov1[0, :] = m_v[n:]
+    ic0[0] = consumed_a
+    ic1[0] = consumed_b
+    oc0[0] = east
+    oc1[0] = unique - east
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+def _step_call(kernel, s: int, n: int):
+    row = pl.BlockSpec((1, n), lambda i: (i, 0))
+    scl = pl.BlockSpec((1,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=(s,),
+        in_specs=[row, row, row, row, scl, scl],
+        out_specs=[row, row, row, row, scl, scl, scl, scl],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, n), jnp.int32),
+            jax.ShapeDtypeStruct((s, n), jnp.float32),
+            jax.ShapeDtypeStruct((s, n), jnp.int32),
+            jax.ShapeDtypeStruct((s, n), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("s", "n"))
+def sort_step(k0, v0, k1, v1, l0, l1, *, s: int = 16, n: int = 16):
+    """Batched mssortk+mssortv over a [s, n] stream group."""
+    return tuple(_step_call(_sort_kernel, s, n)(k0, v0, k1, v1, l0, l1))
+
+
+@functools.partial(jax.jit, static_argnames=("s", "n"))
+def zip_step(k0, v0, k1, v1, l0, l1, *, s: int = 16, n: int = 16):
+    """Batched mszipk+mszipv over a [s, n] stream group."""
+    return tuple(_step_call(_zip_kernel, s, n)(k0, v0, k1, v1, l0, l1))

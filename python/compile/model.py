@@ -1,0 +1,97 @@
+"""L2 JAX model: the matrix unit's functional datapath over the L1 kernels.
+
+Two exported computations (the AOT artifacts loaded by the Rust runtime):
+
+  * ``sort_step`` — mssortk+mssortv over a [S, N] stream group;
+  * ``zip_step``  — mszipk+mszipv over a [S, N] stream group.
+
+Plus a composed demonstration graph, ``merge_partitions``, that runs the
+chunk-at-a-time zip loop (paper Figure 2 / Figure 4b) as a
+``lax.while_loop`` — used by the python tests to show the L2 layer can
+express the full software merge loop around the L1 kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels.sort_zip import sort_step, zip_step, KEY_PAD
+
+__all__ = ["sort_step", "zip_step", "merge_partitions", "KEY_PAD"]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "max_len"))
+def merge_partitions(pa_k, pa_v, la, pb_k, pb_v, lb, *, n: int = 16, max_len: int = 256):
+    """Merge two sorted-unique partitions of a single stream with the
+    chunk-at-a-time zip loop (Fig. 2): load <=N-element chunks from each
+    partition, zip_step them, advance by the IC counters, append east+south
+    to the output, and tail-copy when one side empties.
+
+    Inputs are KEY_PAD-padded [max_len] vectors with scalar lengths.
+    Returns (out_k[2*max_len], out_v, out_len).
+    """
+
+    def body(st):
+        ia, ib, out_k, out_v, out_len = st
+        ra = la - ia
+        rb = lb - ib
+        ca = jnp.minimum(ra, n)
+        cb = jnp.minimum(rb, n)
+        lane = jnp.arange(n, dtype=jnp.int32)
+        a_k = jnp.where(lane < ca, lax.dynamic_slice(pa_k, (ia,), (n,)), KEY_PAD)[None, :]
+        a_v = jnp.where(lane < ca, lax.dynamic_slice(pa_v, (ia,), (n,)), 0.0)[None, :]
+        b_k = jnp.where(lane < cb, lax.dynamic_slice(pb_k, (ib,), (n,)), KEY_PAD)[None, :]
+        b_v = jnp.where(lane < cb, lax.dynamic_slice(pb_v, (ib,), (n,)), 0.0)[None, :]
+        ok0, ov0, ok1, ov1, ic0, ic1, oc0, oc1 = zip_step(
+            a_k, a_v, b_k, b_v, ca[None], cb[None], s=1, n=n
+        )
+        merged_k = jnp.concatenate([ok0[0], ok1[0]])
+        merged_v = jnp.concatenate([ov0[0], ov1[0]])
+        mlen = oc0[0] + oc1[0]
+        # Append merged chunk at out_len.
+        lane2 = jnp.arange(2 * n, dtype=jnp.int32)
+        upd_k = jnp.where(lane2 < mlen, merged_k, lax.dynamic_slice(out_k, (out_len,), (2 * n,)))
+        upd_v = jnp.where(lane2 < mlen, merged_v, lax.dynamic_slice(out_v, (out_len,), (2 * n,)))
+        out_k = lax.dynamic_update_slice(out_k, upd_k, (out_len,))
+        out_v = lax.dynamic_update_slice(out_v, upd_v, (out_len,))
+        return ia + ic0[0], ib + ic1[0], out_k, out_v, out_len + mlen
+
+    def cond(st):
+        ia, ib, _, _, _ = st
+        return (ia < la) & (ib < lb)
+
+    pad = 2 * max_len + 2 * n  # slack so dynamic_update_slice never clips
+    out_k0 = jnp.full((pad,), KEY_PAD, dtype=jnp.int32)
+    out_v0 = jnp.zeros((pad,), dtype=jnp.float32)
+    ia, ib, out_k, out_v, out_len = lax.while_loop(
+        cond, body, (jnp.int32(0), jnp.int32(0), out_k0, out_v0, jnp.int32(0))
+    )
+
+    # Tail copy: one side exhausted; append the remainder of the other.
+    def tail(src_k, src_v, i0, length, out_k, out_v, out_len):
+        def tbody(st):
+            i, out_k, out_v, out_len = st
+            c = jnp.minimum(length - i, n)
+            lane = jnp.arange(n, dtype=jnp.int32)
+            chunk_k = jnp.where(lane < c, lax.dynamic_slice(src_k, (i,), (n,)), KEY_PAD)
+            chunk_v = jnp.where(lane < c, lax.dynamic_slice(src_v, (i,), (n,)), 0.0)
+            upd_k = jnp.where(lane < c, chunk_k, lax.dynamic_slice(out_k, (out_len,), (n,)))
+            upd_v = jnp.where(lane < c, chunk_v, lax.dynamic_slice(out_v, (out_len,), (n,)))
+            out_k = lax.dynamic_update_slice(out_k, upd_k, (out_len,))
+            out_v = lax.dynamic_update_slice(out_v, upd_v, (out_len,))
+            return i + c, out_k, out_v, out_len + c
+
+        def tcond(st):
+            i, _, _, _ = st
+            return i < length
+
+        _, out_k, out_v, out_len = lax.while_loop(tcond, tbody, (i0, out_k, out_v, out_len))
+        return out_k, out_v, out_len
+
+    out_k, out_v, out_len = tail(pa_k, pa_v, ia, la, out_k, out_v, out_len)
+    out_k, out_v, out_len = tail(pb_k, pb_v, ib, lb, out_k, out_v, out_len)
+    return out_k[: 2 * max_len], out_v[: 2 * max_len], out_len

@@ -1,0 +1,169 @@
+"""L1 kernel correctness: Pallas sort/zip steps vs the numpy oracle.
+
+Golden tests pin the paper's Figure 5 examples (the same goldens exist on
+the Rust side, keeping oracle and engine in lock-step); hypothesis sweeps
+shapes, lengths, duplicate densities, and value ranges.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sort_zip import sort_step, zip_step, KEY_PAD
+
+N = 16
+
+
+def pack(streams_k, streams_v, s, n):
+    k = np.full((s, n), ref.KEY_PAD, dtype=np.int32)
+    v = np.zeros((s, n), dtype=np.float32)
+    lens = np.zeros((s,), dtype=np.int32)
+    for i, (ks, vs) in enumerate(zip(streams_k, streams_v)):
+        k[i, : len(ks)] = ks
+        v[i, : len(vs)] = vs
+        lens[i] = len(ks)
+    return k, v, lens
+
+
+def run_both(fn_jax, fn_ref, k0, v0, k1, v1, l0, l1, s, n):
+    got = fn_jax(k0, v0, k1, v1, l0, l1, s=s, n=n)
+    want = fn_ref(k0, v0, k1, v1, l0, l1, n)
+    for gi, wi, name in zip(got, want, ["k0", "v0", "k1", "v1", "ic0", "ic1", "oc0", "oc1"]):
+        g = np.asarray(gi)
+        w = np.asarray(wi)
+        if g.dtype.kind == "f":
+            # Mask to valid lanes (padding values are free).
+            if name == "v0":
+                lens = np.asarray(want[6])
+            else:
+                lens = np.asarray(want[7])
+            for row in range(s):
+                np.testing.assert_allclose(
+                    g[row, : lens[row]], w[row, : lens[row]], rtol=1e-5, atol=1e-5,
+                    err_msg=f"{name} row {row}",
+                )
+        else:
+            if name in ("k0", "k1"):
+                lens = np.asarray(want[6] if name == "k0" else want[7])
+                for row in range(s):
+                    np.testing.assert_array_equal(
+                        g[row, : lens[row]], w[row, : lens[row]], err_msg=f"{name} row {row}"
+                    )
+                    assert (g[row, lens[row]:] == ref.KEY_PAD).all(), f"{name} row {row} padding"
+            else:
+                np.testing.assert_array_equal(g, w, err_msg=name)
+    return got, want
+
+
+# --- goldens: paper Figure 5 ------------------------------------------------
+
+def test_fig5a_sort_golden():
+    # North chunk {5, 8, 5} -> {5, 8} with values combined; west {4, 1, 6}.
+    k0, v0, l0 = pack([[4, 1, 6]], [[1.0, 2.0, 3.0]], 1, N)
+    k1, v1, l1 = pack([[5, 8, 5]], [[1.0, 2.0, 4.0]], 1, N)
+    got, _ = run_both(sort_step, ref.sort_step_ref, k0, v0, k1, v1, l0, l1, 1, N)
+    assert list(np.asarray(got[0])[0, :3]) == [1, 4, 6]
+    assert list(np.asarray(got[2])[0, :2]) == [5, 8]
+    np.testing.assert_allclose(np.asarray(got[3])[0, :2], [5.0, 2.0])
+    assert int(np.asarray(got[7])[0]) == 2
+
+
+def test_fig5b_zip_golden():
+    # West {2,5,9}, north {3,8}: east {2,3,5}, south {8}, 9 unmergeable.
+    n = 16
+    k0, v0, l0 = pack([[2, 5, 9]], [[1.0, 2.0, 3.0]], 1, n)
+    k1, v1, l1 = pack([[3, 8]], [[4.0, 5.0]], 1, n)
+    got = zip_step(k0, v0, k1, v1, l0, l1, s=1, n=n)
+    east_len = int(np.asarray(got[6])[0])
+    east = list(np.asarray(got[0])[0, :east_len])
+    assert east == [2, 3, 5, 8]  # n=16 > merged size, all land east
+    assert int(np.asarray(got[4])[0]) == 2  # IC0: 9 excluded
+    assert int(np.asarray(got[5])[0]) == 2  # IC1
+
+
+def test_zip_cross_duplicates_combine():
+    k0, v0, l0 = pack([[1, 4, 7]], [[1.0, 2.0, 3.0]], 1, N)
+    k1, v1, l1 = pack([[4, 9]], [[10.0, 20.0]], 1, N)
+    got, want = run_both(zip_step, ref.zip_step_ref, k0, v0, k1, v1, l0, l1, 1, N)
+    east_len = int(np.asarray(got[6])[0])
+    assert list(np.asarray(got[0])[0, :east_len]) == [1, 4, 7]
+    np.testing.assert_allclose(np.asarray(got[1])[0, :east_len], [1.0, 12.0, 3.0])
+
+
+def test_zip_empty_sides():
+    k0, v0, l0 = pack([[1, 2]], [[1.0, 1.0]], 1, N)
+    k1, v1, l1 = pack([[]], [[]], 1, N)
+    got, want = run_both(zip_step, ref.zip_step_ref, k0, v0, k1, v1, l0, l1, 1, N)
+    assert int(np.asarray(got[4])[0]) == 0
+    assert int(np.asarray(got[6])[0]) == 0
+
+
+def test_sort_all_duplicates():
+    k0, v0, l0 = pack([[3] * 10], [[1.0] * 10], 1, N)
+    k1, v1, l1 = pack([[7, 7]], [[2.0, 3.0]], 1, N)
+    got, _ = run_both(sort_step, ref.sort_step_ref, k0, v0, k1, v1, l0, l1, 1, N)
+    assert int(np.asarray(got[6])[0]) == 1
+    np.testing.assert_allclose(np.asarray(got[1])[0, 0], 10.0)
+
+
+# --- hypothesis sweeps -------------------------------------------------------
+
+chunk = st.integers(min_value=0, max_value=N).flatmap(
+    lambda ln: st.tuples(
+        st.lists(st.integers(0, 40), min_size=ln, max_size=ln),
+        st.lists(st.floats(0.5, 1.5, width=32), min_size=ln, max_size=ln),
+    )
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(chunk, chunk), min_size=1, max_size=4))
+def test_sort_step_matches_ref(streams):
+    s = len(streams)
+    k0, v0, l0 = pack([c[0][0] for c in streams], [c[0][1] for c in streams], s, N)
+    k1, v1, l1 = pack([c[1][0] for c in streams], [c[1][1] for c in streams], s, N)
+    run_both(sort_step, ref.sort_step_ref, k0, v0, k1, v1, l0, l1, s, N)
+
+
+def sorted_unique(lst):
+    return sorted(set(lst))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(chunk, chunk), min_size=1, max_size=4))
+def test_zip_step_matches_ref(streams):
+    s = len(streams)
+    ak = [sorted_unique(c[0][0]) for c in streams]
+    bk = [sorted_unique(c[1][0]) for c in streams]
+    av = [[1.0 + 0.25 * i for i in range(len(k))] for k in ak]
+    bv = [[2.0 + 0.5 * i for i in range(len(k))] for k in bk]
+    k0, v0, l0 = pack(ak, av, s, N)
+    k1, v1, l1 = pack(bk, bv, s, N)
+    run_both(zip_step, ref.zip_step_ref, k0, v0, k1, v1, l0, l1, s, N)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(st.integers(0, 30), min_size=0, max_size=8),
+    st.lists(st.integers(0, 30), min_size=0, max_size=8),
+)
+def test_zip_step_smaller_n(a, b):
+    # Shape generality: n = 8 (different register geometry).
+    n = 8
+    a, b = sorted_unique(a), sorted_unique(b)
+    k0, v0, l0 = pack([a], [[1.0] * len(a)], 1, n)
+    k1, v1, l1 = pack([b], [[1.0] * len(b)], 1, n)
+    run_both(zip_step, ref.zip_step_ref, k0, v0, k1, v1, l0, l1, 1, n)
+
+
+def test_dtypes():
+    k0, v0, l0 = pack([[1]], [[1.0]], 1, N)
+    out = sort_step(k0, v0, k0, v0, l0, l0, s=1, n=N)
+    assert np.asarray(out[0]).dtype == np.int32
+    assert np.asarray(out[1]).dtype == np.float32
+    assert np.asarray(out[6]).dtype == np.int32
+
+
+def test_key_pad_constant_matches_ref():
+    assert int(KEY_PAD) == int(ref.KEY_PAD) == 2**31 - 1

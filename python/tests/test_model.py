@@ -1,0 +1,89 @@
+"""L2 model tests: the composed merge_partitions graph (lax.while_loop over
+the L1 zip_step kernel) fully merges two sorted partitions, matching a plain
+numpy merge — evidence the L2 layer can express the paper's Figure 2/4b
+software loop around the kernel."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def pad(vec, n, fill):
+    out = np.full((n,), fill, dtype=np.int32 if fill == model.KEY_PAD else np.float32)
+    out[: len(vec)] = vec
+    return out
+
+
+def run_merge(a_keys, b_keys, max_len=64):
+    a_keys = sorted(set(a_keys))
+    b_keys = sorted(set(b_keys))
+    av = [1.0 + 0.5 * i for i in range(len(a_keys))]
+    bv = [2.0 + 0.25 * i for i in range(len(b_keys))]
+    out_k, out_v, out_len = model.merge_partitions(
+        pad(a_keys, max_len, model.KEY_PAD).astype(np.int32),
+        pad(av, max_len, 0.0).astype(np.float32),
+        np.int32(len(a_keys)),
+        pad(b_keys, max_len, model.KEY_PAD).astype(np.int32),
+        pad(bv, max_len, 0.0).astype(np.float32),
+        np.int32(len(b_keys)),
+        n=16,
+        max_len=max_len,
+    )
+    ln = int(out_len)
+    got_k = list(np.asarray(out_k)[:ln])
+    got_v = list(np.asarray(out_v)[:ln])
+    # numpy reference merge
+    acc = {}
+    for k, v in list(zip(a_keys, av)) + list(zip(b_keys, bv)):
+        acc[k] = acc.get(k, 0.0) + v
+    want_k = sorted(acc)
+    want_v = [acc[k] for k in want_k]
+    return got_k, got_v, want_k, want_v
+
+
+def test_merge_disjoint():
+    gk, gv, wk, wv = run_merge([1, 3, 5, 7], [2, 4, 6, 8])
+    assert gk == wk
+    np.testing.assert_allclose(gv, wv, rtol=1e-5)
+
+
+def test_merge_with_duplicates():
+    gk, gv, wk, wv = run_merge([1, 2, 3, 10, 20], [2, 3, 4, 20, 30])
+    assert gk == wk
+    np.testing.assert_allclose(gv, wv, rtol=1e-5)
+
+
+def test_merge_empty_sides():
+    gk, gv, wk, wv = run_merge([], [5, 6])
+    assert gk == wk == [5, 6]
+    gk, gv, wk, wv = run_merge([1], [])
+    assert gk == wk == [1]
+
+
+def test_merge_long_partitions():
+    a = list(range(0, 120, 2))
+    b = list(range(1, 120, 3))
+    gk, gv, wk, wv = run_merge(a, b)
+    assert gk == wk
+    np.testing.assert_allclose(gv, wv, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.lists(st.integers(0, 100), max_size=50),
+    st.lists(st.integers(0, 100), max_size=50),
+)
+def test_merge_random(a, b):
+    gk, gv, wk, wv = run_merge(a, b)
+    assert gk == wk
+    np.testing.assert_allclose(gv, wv, rtol=1e-4)
+
+
+def test_aot_lowering_produces_hlo_text():
+    from compile import aot
+
+    text = aot.lower_step(model.sort_step, 2, 8)
+    assert text.startswith("HloModule") or "ENTRY" in text
+    assert len(text) > 1000

@@ -1,0 +1,61 @@
+//! Minimal bench harness shared by the `cargo bench` targets (criterion is
+//! not in the offline vendor set). Reports median / mean / min over R
+//! repetitions, honouring `SPZ_BENCH_SCALE` (dataset scale) and
+//! `SPZ_BENCH_REPS`.
+
+use std::time::Instant;
+
+#[allow(dead_code)]
+pub fn scale() -> f64 {
+    std::env::var("SPZ_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1)
+}
+
+#[allow(dead_code)]
+pub fn reps() -> usize {
+    std::env::var("SPZ_BENCH_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3)
+}
+
+/// Time `f` `reps` times; print a bench line; return the per-rep seconds.
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(name: &str, reps: usize, mut f: F) -> Vec<f64> {
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mut sorted = times.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = sorted[sorted.len() / 2];
+    let mean: f64 = times.iter().sum::<f64>() / times.len() as f64;
+    println!(
+        "bench {name:<40} median {:>10.3} ms   mean {:>10.3} ms   min {:>10.3} ms   ({} reps)",
+        median * 1e3,
+        mean * 1e3,
+        sorted[0] * 1e3,
+        reps
+    );
+    times
+}
+
+/// ns/op microbenchmark for hot-path functions.
+#[allow(dead_code)]
+pub fn bench_ns<F: FnMut() -> u64>(name: &str, mut f: F) {
+    // Warm up, then measure; f returns the op count it performed.
+    let _ = f();
+    let t0 = Instant::now();
+    let mut ops = 0u64;
+    let mut iters = 0;
+    while t0.elapsed().as_secs_f64() < 0.5 || iters < 3 {
+        ops += f();
+        iters += 1;
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / ops.max(1) as f64;
+    println!("bench {name:<40} {ns:>10.1} ns/op   ({ops} ops)");
+}

@@ -1,0 +1,21 @@
+//! Bench: Figure 10 regeneration — L1 data-cache access counts of
+//! vec-radix vs spz (exact event counts from the cache simulation).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use sparsezipper::coordinator::{figures, run_suite, SuiteConfig};
+
+fn main() {
+    let cfg = SuiteConfig {
+        scale: bench_util::scale(),
+        impls: vec!["vec-radix".into(), "spz".into()],
+        ..Default::default()
+    };
+    println!("== Figure 10 (scale {}) ==", cfg.scale);
+    let mut out = None;
+    bench_util::bench("fig10 suite", 1, || {
+        out = Some(run_suite(&cfg).expect("suite"));
+    });
+    println!("{}", figures::fig10(&out.unwrap()));
+}

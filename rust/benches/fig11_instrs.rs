@@ -1,0 +1,21 @@
+//! Bench: Figure 11 regeneration — dynamic mssortk/mszipk instruction
+//! counts, spz vs spz-rsort (the work-balance effect of row sorting).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use sparsezipper::coordinator::{figures, run_suite, SuiteConfig};
+
+fn main() {
+    let cfg = SuiteConfig {
+        scale: bench_util::scale(),
+        impls: vec!["spz".into(), "spz-rsort".into()],
+        ..Default::default()
+    };
+    println!("== Figure 11 (scale {}) ==", cfg.scale);
+    let mut out = None;
+    bench_util::bench("fig11 suite", 1, || {
+        out = Some(run_suite(&cfg).expect("suite"));
+    });
+    println!("{}", figures::fig11(&out.unwrap()));
+}

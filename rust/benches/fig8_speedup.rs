@@ -1,0 +1,35 @@
+//! Bench: Figure 8 end-to-end regeneration — all five implementations over
+//! the dataset suite; prints the speedup table and the headline geomeans
+//! next to the paper's numbers.
+//!
+//! `SPZ_BENCH_SCALE=1.0 cargo bench --bench fig8_speedup` = full size.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use sparsezipper::coordinator::{figures, run_suite, SuiteConfig};
+
+fn main() {
+    let cfg = SuiteConfig {
+        scale: bench_util::scale(),
+        ..Default::default()
+    };
+    println!(
+        "== Figure 8 ({} datasets x {} impls, scale {}) ==",
+        cfg.datasets.len(),
+        cfg.impls.len(),
+        cfg.scale
+    );
+    let mut out = None;
+    bench_util::bench("fig8 full suite", 1, || {
+        out = Some(run_suite(&cfg).expect("suite"));
+    });
+    let suite = out.unwrap();
+    println!("{}", figures::fig8(&suite));
+    for r in &suite.results {
+        println!(
+            "  sim {:<10} {:<10} {:>9.3}s wall  {:>14.0} cycles",
+            r.impl_name, r.dataset, r.wall_secs, r.metrics.cycles
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench: Figure 9 regeneration — execution-time breakdown of vec-radix,
+//! spz and spz-rsort per dataset.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use sparsezipper::coordinator::{figures, run_suite, SuiteConfig};
+
+fn main() {
+    let cfg = SuiteConfig {
+        scale: bench_util::scale(),
+        impls: vec!["vec-radix".into(), "spz".into(), "spz-rsort".into()],
+        ..Default::default()
+    };
+    println!("== Figure 9 (scale {}) ==", cfg.scale);
+    let mut out = None;
+    bench_util::bench("fig9 suite", 1, || {
+        out = Some(run_suite(&cfg).expect("suite"));
+    });
+    println!("{}", figures::fig9(&out.unwrap()));
+}

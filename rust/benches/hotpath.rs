@@ -1,0 +1,93 @@
+//! Hot-path microbenchmarks — the §Perf targets in EXPERIMENTS.md.
+//!
+//! * `zip_step` / `sort_step` (native engine): called O(total_work / N)
+//!   times per SpGEMM — the simulator's inner loop.
+//! * cache `access_line`: every simulated memory event probes it.
+//! * PE-level array sim (validation-path cost).
+//! * expansion-phase machine accounting.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use sparsezipper::config::SystemConfig;
+use sparsezipper::mem::{AccessKind, Hierarchy};
+use sparsezipper::runtime::{NativeEngine, ZipUnit};
+use sparsezipper::systolic::array;
+use sparsezipper::util::Pcg32;
+
+fn mk_group(rng: &mut Pcg32, s: usize, n: usize) -> (Vec<Vec<u32>>, Vec<Vec<f32>>) {
+    let mut ks = Vec::with_capacity(s);
+    let mut vs = Vec::with_capacity(s);
+    for _ in 0..s {
+        let len = 1 + rng.gen_usize(n);
+        let mut k: Vec<u32> = (0..len).map(|_| rng.gen_range(1000)).collect();
+        k.sort_unstable();
+        k.dedup();
+        let v = vec![1.0f32; k.len()];
+        ks.push(k);
+        vs.push(v);
+    }
+    (ks, vs)
+}
+
+fn main() {
+    let mut rng = Pcg32::new(1);
+
+    // Native zip_step over a full 16-stream group.
+    {
+        let mut eng = NativeEngine::new(16);
+        let (k0, v0) = mk_group(&mut rng, 16, 16);
+        let (k1, v1) = mk_group(&mut rng, 16, 16);
+        bench_util::bench_ns("native zip_step (16 streams)", || {
+            let out = eng.zip_step(&k0, &v0, &k1, &v1).unwrap();
+            std::hint::black_box(&out);
+            16
+        });
+    }
+
+    // Native sort_step.
+    {
+        let mut eng = NativeEngine::new(16);
+        let (k0, v0) = mk_group(&mut rng, 16, 16);
+        let (k1, v1) = mk_group(&mut rng, 16, 16);
+        bench_util::bench_ns("native sort_step (16 streams)", || {
+            let out = eng.sort_step(&k0, &v0, &k1, &v1).unwrap();
+            std::hint::black_box(&out);
+            16
+        });
+    }
+
+    // Cache hierarchy probe: mixed hit/miss stream.
+    {
+        let mut h = Hierarchy::new(SystemConfig::default().mem);
+        let addrs: Vec<u64> = (0..4096u64).map(|i| 0x100000 + (i * 2377) % 65536 * 64).collect();
+        bench_util::bench_ns("hierarchy access_line (mixed)", || {
+            for &a in &addrs {
+                std::hint::black_box(h.access_line(a >> 6, AccessKind::Read));
+            }
+            addrs.len() as u64
+        });
+    }
+
+    // PE-level array zip (validation path).
+    {
+        let a: Vec<(u32, f32)> = (0..16).map(|i| (i * 3, 1.0)).collect();
+        let b: Vec<(u32, f32)> = (0..16).map(|i| (i * 2 + 1, 1.0)).collect();
+        bench_util::bench_ns("PE-array run_zip 16x16", || {
+            std::hint::black_box(array::run_zip(16, &a, &b));
+            1
+        });
+    }
+
+    // End-to-end small spz run (machine accounting + engine).
+    {
+        use sparsezipper::sim::Machine;
+        use sparsezipper::spgemm::{spz::Spz, SpGemm};
+        let a = sparsezipper::matrix::gen::powerlaw_clustered(2000, 12000, 1.0, 0.4, 5);
+        bench_util::bench_ns("spz end-to-end (2k rows, 12k nnz)", || {
+            let mut m = Machine::new(SystemConfig::default());
+            let c = Spz::native().multiply(&mut m, &a, &a).unwrap();
+            std::hint::black_box(c.nnz()) as u64
+        });
+    }
+}

@@ -1,0 +1,29 @@
+//! Bench: Table III regeneration — dataset synthesis + characterization
+//! cost per matrix, plus the rendered paper-vs-measured table.
+//!
+//! `SPZ_BENCH_SCALE=1.0 cargo bench --bench table3_datasets` reproduces the
+//! full-size table.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use sparsezipper::matrix::{registry, stats};
+
+fn main() {
+    let scale = bench_util::scale();
+    println!("== Table III dataset suite (scale {scale}) ==");
+    let mut total_nnz = 0usize;
+    for d in registry::DATASETS {
+        let mut built = None;
+        bench_util::bench(&format!("build {}", d.name), bench_util::reps(), || {
+            built = Some(d.build(scale));
+        });
+        let m = built.unwrap();
+        total_nnz += m.nnz();
+        bench_util::bench(&format!("characterize {}", d.name), 1, || {
+            let st = stats::characterize(&m, 16);
+            assert!(st.nnz > 0);
+        });
+    }
+    println!("total nnz across suite: {total_nnz}");
+}

@@ -1,0 +1,25 @@
+//! Bench: Table IV regeneration — component-level area model at the paper's
+//! design point plus a design-space sweep over array sizes.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use sparsezipper::area::AreaModel;
+
+fn main() {
+    println!("{}", AreaModel::paper().table4());
+    println!("Design-space sweep (baseline vs SparseZipper, k um^2):");
+    for n in [4usize, 8, 16, 32, 64] {
+        let m = AreaModel { n, num_regs: 16 };
+        println!(
+            "  N={n:<3} baseline {:>10.2}   spz {:>10.2}   overhead {:>6.2}%",
+            m.baseline_total(),
+            m.spz_total(),
+            m.overhead_pct()
+        );
+    }
+    bench_util::bench("area model eval (paper point)", 3, || {
+        let m = AreaModel::paper();
+        assert!(m.overhead_pct() > 0.0);
+    });
+}

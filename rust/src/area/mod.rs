@@ -1,0 +1,5 @@
+//! First-order component-level area model (paper §VI-B, Table IV).
+
+pub mod model;
+
+pub use model::{AreaModel, Component};

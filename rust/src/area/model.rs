@@ -1,0 +1,192 @@
+//! Post-synthesis component-level area model (Table IV).
+//!
+//! Seeded with the paper's 12nm per-component numbers and composed exactly
+//! the way the paper composes them: per-PE area x N^2, skew/deskew shift
+//! register buffers, SRAM matrix registers, and the popcount/counter logic
+//! SparseZipper adds. Parameterized over array size and register count so
+//! `spz table4 --sweep` can explore the design space.
+
+/// One synthesizable component with its 12nm area estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct Component {
+    pub name: &'static str,
+    /// Area of one instance, in k-um^2.
+    pub area_kum2: f64,
+    /// Instances in the baseline dense-GEMM design.
+    pub count_baseline: usize,
+    /// Instances in the SparseZipper design.
+    pub count_spz: usize,
+}
+
+/// Area model for an N x N systolic array with `num_regs` matrix registers.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel {
+    pub n: usize,
+    pub num_regs: usize,
+}
+
+/// Paper Table IV per-component areas for the 16x16 / 512-bit design point.
+const PE_BASE: f64 = 0.45;
+const PE_SPZ: f64 = 0.51;
+const SKEW_16: f64 = 3.16;
+const MATREG_16X512: f64 = 0.96;
+const POPCOUNT_16: f64 = 0.45;
+
+impl AreaModel {
+    pub fn paper() -> Self {
+        AreaModel { n: 16, num_regs: 16 }
+    }
+
+    /// Scale a 16-lane buffer-ish component to n lanes. Skew/deskew buffers
+    /// are arrays of n shift registers of average depth n/2 -> quadratic.
+    fn skew_area(&self) -> f64 {
+        let s = self.n as f64 / 16.0;
+        SKEW_16 * s * s
+    }
+
+    /// SRAM matrix register: n rows x (n * 32) bits -> quadratic in n.
+    fn matreg_area(&self) -> f64 {
+        let s = self.n as f64 / 16.0;
+        MATREG_16X512 * s * s
+    }
+
+    /// Popcount logic: n counters of (log2 n + 1) bits plus counter vectors.
+    fn popcount_area(&self) -> f64 {
+        let bits16 = 16.0 * 5.0;
+        let bits = self.n as f64 * ((self.n as f64).log2() + 1.0);
+        POPCOUNT_16 * bits / bits16
+    }
+
+    /// Component table for this design point.
+    pub fn components(&self) -> Vec<Component> {
+        let pes = self.n * self.n;
+        vec![
+            Component {
+                name: "Baseline PE (32-bit MAC)",
+                area_kum2: PE_BASE,
+                count_baseline: pes,
+                count_spz: 0,
+            },
+            Component {
+                name: "SparseZipper PE (MAC + compare/route ctl)",
+                area_kum2: PE_SPZ,
+                count_baseline: 0,
+                count_spz: pes,
+            },
+            Component {
+                name: "Skew buffer",
+                area_kum2: self.skew_area(),
+                count_baseline: 2,
+                count_spz: 2,
+            },
+            Component {
+                name: "Deskew buffer",
+                area_kum2: self.skew_area(),
+                count_baseline: 1,
+                count_spz: 2, // second write port needs a second deskew (§IV-D)
+            },
+            Component {
+                name: "Matrix register (SRAM)",
+                area_kum2: self.matreg_area(),
+                count_baseline: self.num_regs,
+                count_spz: self.num_regs,
+            },
+            Component {
+                name: "Popcount + counter vectors",
+                area_kum2: self.popcount_area(),
+                count_baseline: 0,
+                count_spz: 1,
+            },
+        ]
+    }
+
+    pub fn baseline_total(&self) -> f64 {
+        self.components()
+            .iter()
+            .map(|c| c.area_kum2 * c.count_baseline as f64)
+            .sum()
+    }
+
+    pub fn spz_total(&self) -> f64 {
+        self.components()
+            .iter()
+            .map(|c| c.area_kum2 * c.count_spz as f64)
+            .sum()
+    }
+
+    /// SparseZipper area overhead over the baseline array (paper: 12.72%).
+    pub fn overhead_pct(&self) -> f64 {
+        100.0 * (self.spz_total() - self.baseline_total()) / self.baseline_total()
+    }
+
+    /// Render Table IV.
+    pub fn table4(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "Table IV. Post-synthesis area estimates, {0}x{0} systolic array ({1} matrix regs)\n",
+            self.n, self.num_regs
+        ));
+        s.push_str(&format!(
+            "{:<46} {:>9} {:>10} {:>12}\n",
+            "Component", "k um^2", "Baseline", "SparseZipper"
+        ));
+        for c in self.components() {
+            let fmt_count = |k: usize| {
+                if k == 0 {
+                    String::new()
+                } else {
+                    format!("x {k}")
+                }
+            };
+            s.push_str(&format!(
+                "{:<46} {:>9.2} {:>10} {:>12}\n",
+                c.name,
+                c.area_kum2,
+                fmt_count(c.count_baseline),
+                fmt_count(c.count_spz)
+            ));
+        }
+        s.push_str(&format!(
+            "{:<46} {:>9} {:>10.2} {:>12.2}\n",
+            "Total", "", self.baseline_total(), self.spz_total()
+        ));
+        s.push_str(&format!(
+            "SparseZipper vs. baseline overhead: {:.2}%  (paper: 12.72%)\n",
+            self.overhead_pct()
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_design_point_matches_table4() {
+        let m = AreaModel::paper();
+        // Paper totals: 140.16 baseline, 158.00 spz, 12.72% overhead
+        // (component values are rounded in print; allow ~1%).
+        assert!((m.baseline_total() - 140.16).abs() < 1.5, "{}", m.baseline_total());
+        assert!((m.spz_total() - 158.00).abs() < 1.5, "{}", m.spz_total());
+        assert!((m.overhead_pct() - 12.72).abs() < 1.0, "{}", m.overhead_pct());
+    }
+
+    #[test]
+    fn overhead_shrinks_relative_for_smaller_popcount_share() {
+        // At larger N the PE delta dominates; overhead approaches
+        // (0.51-0.45)/0.45 of the PE share and stays in a sane band.
+        for n in [8usize, 16, 32] {
+            let m = AreaModel { n, num_regs: 16 };
+            let o = m.overhead_pct();
+            assert!(o > 5.0 && o < 25.0, "n={n} overhead {o}");
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = AreaModel::paper().table4();
+        assert!(t.contains("SparseZipper"));
+        assert!(t.contains("Skew buffer"));
+    }
+}

@@ -1,0 +1,194 @@
+//! System configuration mirroring Table II of the paper plus the first-order
+//! timing-model constants (documented calibration knobs; see DESIGN.md §6).
+//!
+//! The simulated machine is an aggressive 8-way out-of-order core with two
+//! 512-bit SIMD units and a 16x16 systolic matrix unit, fronted by a
+//! 32KB L1D / 256KB L2 / 512KB LLC hierarchy over DDR4-2400.
+
+/// One cache level's geometry and hit latency (Table II).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheConfig {
+    pub size_bytes: usize,
+    pub ways: usize,
+    pub line_bytes: usize,
+    pub hit_latency: u32,
+}
+
+impl CacheConfig {
+    pub fn sets(&self) -> usize {
+        self.size_bytes / (self.ways * self.line_bytes)
+    }
+}
+
+/// Full memory-hierarchy configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MemConfig {
+    pub l1d: CacheConfig,
+    pub l2: CacheConfig,
+    pub llc: CacheConfig,
+    /// DRAM access latency in CPU cycles (DDR4-2400 at ~3 GHz core clock).
+    pub dram_latency: u32,
+}
+
+/// Matrix-unit (systolic array) configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MatrixUnitConfig {
+    /// PEs per row/column; also elements per matrix-register row (R = N = 16).
+    pub n: usize,
+    /// Number of physical matrix registers.
+    pub num_regs: usize,
+    /// MAC latency in CPU cycles (dense GEMM path; unused by sort/zip).
+    pub mac_latency: u32,
+    /// Fixed overhead for non-speculative issue of a sort/zip *pair* at the
+    /// head of the ROB (drain + dispatch), in cycles.
+    pub issue_overhead: u32,
+    /// Pass turn-around stalls per micro-op batch (east/south -> west/north
+    /// loop-back registers), in cycles.
+    pub pass_stalls: u32,
+}
+
+/// Out-of-order core model constants (Table II) and first-order overlap
+/// factors used by `sim::cost`. These are the *calibration knobs*: absolute
+/// cycles are not gem5's, but relative behaviour tracks operation mix, cache
+/// behaviour and matrix-unit occupancy (DESIGN.md "Substitutions").
+#[derive(Clone, Copy, Debug)]
+pub struct CoreConfig {
+    /// Maximum scalar ops committed per cycle (8-way issue, dependency-limited).
+    pub scalar_ipc: f64,
+    /// 512-bit vector ops per cycle (two SIMD units).
+    pub vector_ipc: f64,
+    /// Loads/stores issued per cycle (two AGUs).
+    pub mem_issue_per_cycle: f64,
+    /// Memory-level parallelism divisor for scalar-miss latency overlap.
+    pub mlp_scalar: f64,
+    /// MLP divisor for vector unit-stride accesses.
+    pub mlp_vector: f64,
+    /// MLP divisor for vector gather/scatter accesses.
+    pub mlp_gather: f64,
+    /// Branch cost in cycles (amortized, incl. occasional mispredictions).
+    pub branch_cost: f64,
+}
+
+/// Whole simulated system (Table II).
+#[derive(Clone, Copy, Debug)]
+pub struct SystemConfig {
+    pub core: CoreConfig,
+    pub mem: MemConfig,
+    pub unit: MatrixUnitConfig,
+    /// Elements per 512-bit vector register (ELEN=32 -> 16).
+    pub vlen_elems: usize,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            core: CoreConfig {
+                scalar_ipc: 4.0,
+                vector_ipc: 2.0,
+                mem_issue_per_cycle: 2.0,
+                mlp_scalar: 4.0,
+                mlp_vector: 6.0,
+                mlp_gather: 4.0,
+                branch_cost: 0.75,
+            },
+            mem: MemConfig {
+                l1d: CacheConfig {
+                    size_bytes: 32 * 1024,
+                    ways: 8,
+                    line_bytes: 64,
+                    hit_latency: 2,
+                },
+                l2: CacheConfig {
+                    size_bytes: 256 * 1024,
+                    ways: 4,
+                    line_bytes: 64,
+                    hit_latency: 8,
+                },
+                llc: CacheConfig {
+                    size_bytes: 512 * 1024,
+                    ways: 8,
+                    line_bytes: 64,
+                    hit_latency: 8,
+                },
+                dram_latency: 160,
+            },
+            unit: MatrixUnitConfig {
+                n: 16,
+                num_regs: 16,
+                mac_latency: 4,
+                issue_overhead: 4,
+                pass_stalls: 2,
+            },
+            vlen_elems: 16,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Pretty-print the configuration (reproduces Table II).
+    pub fn table2(&self) -> String {
+        let m = &self.mem;
+        let u = &self.unit;
+        format!(
+            "Table II. Baseline System Configuration (simulated)\n\
+             CPU        | 8-way out-of-order issue (first-order model: {:.1} scalar IPC,\n\
+             \x20          | {:.1} 512b vector IPC, {:.1} mem ops/cycle)\n\
+             Matrix Unit| {}x{} PE systolic array, {} physical matrix registers,\n\
+             \x20          | {}-cycle MAC, non-speculative sort/zip issue (+{} cycles)\n\
+             L1D        | {}-way, {}KB, {}-cycle hit\n\
+             L2         | {}-way, {}KB, {}-cycle hit\n\
+             LLC        | {}-way, {}KB, {}-cycle hit\n\
+             Memory     | DDR4-2400 ({} CPU cycles)\n",
+            self.core.scalar_ipc,
+            self.core.vector_ipc,
+            self.core.mem_issue_per_cycle,
+            u.n,
+            u.n,
+            u.num_regs,
+            u.mac_latency,
+            u.issue_overhead,
+            m.l1d.ways,
+            m.l1d.size_bytes / 1024,
+            m.l1d.hit_latency,
+            m.l2.ways,
+            m.l2.size_bytes / 1024,
+            m.l2.hit_latency,
+            m.llc.ways,
+            m.llc.size_bytes / 1024,
+            m.llc.hit_latency,
+            m.dram_latency,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_table2() {
+        let c = SystemConfig::default();
+        assert_eq!(c.mem.l1d.size_bytes, 32 * 1024);
+        assert_eq!(c.mem.l1d.ways, 8);
+        assert_eq!(c.mem.l2.size_bytes, 256 * 1024);
+        assert_eq!(c.mem.l2.ways, 4);
+        assert_eq!(c.mem.llc.size_bytes, 512 * 1024);
+        assert_eq!(c.unit.n, 16);
+        assert_eq!(c.unit.num_regs, 16);
+        assert_eq!(c.vlen_elems, 16);
+    }
+
+    #[test]
+    fn cache_sets() {
+        let c = SystemConfig::default();
+        assert_eq!(c.mem.l1d.sets(), 64);
+        assert_eq!(c.mem.l2.sets(), 1024);
+    }
+
+    #[test]
+    fn table2_renders() {
+        let s = SystemConfig::default().table2();
+        assert!(s.contains("16x16"));
+        assert!(s.contains("32KB"));
+    }
+}

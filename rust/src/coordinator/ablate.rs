@@ -1,0 +1,133 @@
+//! Ablation studies over the design choices DESIGN.md calls out:
+//!
+//! * systolic array size N (chunk size = stream count per group): the
+//!   paper's future-work question of wider matrix registers;
+//! * non-speculative issue overhead of sort/zip pairs;
+//! * the vec-radix ESC block-size sweep (the paper's own tuning knob).
+
+use crate::config::SystemConfig;
+use crate::matrix::Csr;
+use crate::runtime::NativeEngine;
+use crate::sim::Machine;
+use crate::spgemm::{self, SpGemm};
+use anyhow::Result;
+
+/// One ablation point.
+#[derive(Clone, Debug)]
+pub struct AblationPoint {
+    pub label: String,
+    pub cycles: f64,
+    pub kv_pairs: u64,
+    pub l1d_accesses: u64,
+}
+
+/// Sweep the systolic array size for spz (N = 4..64). Larger arrays merge
+/// longer chunks per instruction but waste occupancy on short streams.
+pub fn array_size_sweep(a: &Csr, sizes: &[usize]) -> Result<Vec<AblationPoint>> {
+    let mut out = Vec::new();
+    for &n in sizes {
+        let mut cfg = SystemConfig::default();
+        cfg.unit.n = n;
+        let mut m = Machine::new(cfg);
+        let mut im = spgemm::spz::Spz::with_engine(Box::new(NativeEngine::new(n)));
+        let c = im.multiply(&mut m, a, a)?;
+        let r = m.metrics();
+        anyhow::ensure!(c.validate().is_ok());
+        out.push(AblationPoint {
+            label: format!("N={n}"),
+            cycles: r.cycles,
+            kv_pairs: r.total_matrix_kv_pairs(),
+            l1d_accesses: r.mem.l1d_accesses,
+        });
+    }
+    Ok(out)
+}
+
+/// Sweep the non-speculative issue overhead (how much the ROB-head
+/// serialization of §V-A costs end to end).
+pub fn issue_overhead_sweep(a: &Csr, overheads: &[u32]) -> Result<Vec<AblationPoint>> {
+    let mut out = Vec::new();
+    for &ov in overheads {
+        let mut cfg = SystemConfig::default();
+        cfg.unit.issue_overhead = ov;
+        let mut m = Machine::new(cfg);
+        let mut im = spgemm::spz::Spz::native();
+        im.multiply(&mut m, a, a)?;
+        let r = m.metrics();
+        out.push(AblationPoint {
+            label: format!("issue+{ov}"),
+            cycles: r.cycles,
+            kv_pairs: r.total_matrix_kv_pairs(),
+            l1d_accesses: r.mem.l1d_accesses,
+        });
+    }
+    Ok(out)
+}
+
+/// Sweep the vec-radix block size explicitly (paper §V-B).
+pub fn block_size_sweep(a: &Csr, blocks: &[usize]) -> Result<Vec<AblationPoint>> {
+    let mut out = Vec::new();
+    for &be in blocks {
+        let mut m = Machine::new(SystemConfig::default());
+        let mut im = spgemm::vec_radix::VecRadix { block_elems: be };
+        im.multiply(&mut m, a, a)?;
+        let r = m.metrics();
+        out.push(AblationPoint {
+            label: format!("block={be}"),
+            cycles: r.cycles,
+            kv_pairs: 0,
+            l1d_accesses: r.mem.l1d_accesses,
+        });
+    }
+    Ok(out)
+}
+
+/// Render a sweep as an aligned table.
+pub fn render(title: &str, points: &[AblationPoint]) -> String {
+    let mut s = format!("{title}\n");
+    let best = points
+        .iter()
+        .map(|p| p.cycles)
+        .fold(f64::INFINITY, f64::min);
+    for p in points {
+        s.push_str(&format!(
+            "  {:<12} {:>14.0} cycles ({:>5.2}x best)  {:>10} kv-pairs  {:>12} L1D\n",
+            p.label,
+            p.cycles,
+            p.cycles / best,
+            p.kv_pairs,
+            p.l1d_accesses
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn array_size_sweep_runs_and_shrinks_pairs() {
+        let a = gen::powerlaw_clustered(300, 2400, 1.0, 0.4, 9);
+        let pts = array_size_sweep(&a, &[8, 16, 32]).unwrap();
+        assert_eq!(pts.len(), 3);
+        // Bigger arrays need fewer k/v pairs (more elements per pair).
+        assert!(pts[2].kv_pairs < pts[0].kv_pairs);
+    }
+
+    #[test]
+    fn issue_overhead_monotone() {
+        let a = gen::powerlaw_clustered(200, 1600, 1.0, 0.4, 10);
+        let pts = issue_overhead_sweep(&a, &[0, 16, 64]).unwrap();
+        assert!(pts[0].cycles < pts[2].cycles);
+    }
+
+    #[test]
+    fn render_has_rows() {
+        let a = gen::erdos_renyi(100, 100, 500, 11);
+        let pts = block_size_sweep(&a, &[256, 4096]).unwrap();
+        let s = render("t", &pts);
+        assert!(s.contains("block=256"));
+    }
+}

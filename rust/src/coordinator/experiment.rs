@@ -1,0 +1,135 @@
+//! One experiment = one implementation on one dataset (A * A), with
+//! verification against the reference product.
+
+use crate::config::SystemConfig;
+use crate::matrix::Csr;
+use crate::runtime::Engine;
+use crate::sim::{Machine, RunMetrics};
+use crate::spgemm::{self, SpGemm};
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// Result of one simulated run.
+#[derive(Clone, Debug)]
+pub struct ExperimentResult {
+    pub impl_name: String,
+    pub dataset: String,
+    pub metrics: RunMetrics,
+    pub out_nnz: usize,
+    pub verified: bool,
+    /// Host wall-clock seconds for the simulation itself (§Perf data).
+    pub wall_secs: f64,
+    /// Block size chosen for vec-radix (after the sweep), if applicable.
+    pub block_elems: Option<usize>,
+}
+
+/// Run `impl_name` on `a * a`, verifying the product against `reference`
+/// when `verify` is set (skippable for the big sweeps; the integration
+/// suite always verifies).
+pub fn run_one(
+    impl_name: &str,
+    dataset: &str,
+    a: &Csr,
+    cfg: SystemConfig,
+    engine: Engine,
+    artifact_dir: &Path,
+    verify: Option<&Csr>,
+) -> Result<ExperimentResult> {
+    let t0 = Instant::now();
+    let mut block = None;
+
+    let (metrics, product) = if impl_name == "vec-radix" {
+        // The paper sweeps the ESC block size per matrix and reports the
+        // best configuration (§V-B).
+        let mut best: Option<(RunMetrics, Csr, usize)> = None;
+        for be in [4 * 1024usize, 16 * 1024, 64 * 1024] {
+            let mut m = Machine::new(cfg);
+            let mut im = spgemm::vec_radix::VecRadix { block_elems: be };
+            let c = im
+                .multiply(&mut m, a, a)
+                .with_context(|| format!("vec-radix block={be}"))?;
+            let met = m.metrics();
+            if best.as_ref().map(|(b, _, _)| met.cycles < b.cycles).unwrap_or(true) {
+                best = Some((met, c, be));
+            }
+        }
+        let (met, c, be) = best.unwrap();
+        block = Some(be);
+        (met, c)
+    } else {
+        let mut m = Machine::new(cfg);
+        let mut im = spgemm::by_name(impl_name, engine, artifact_dir)?;
+        let c = im
+            .multiply(&mut m, a, a)
+            .with_context(|| format!("{impl_name} on {dataset}"))?;
+        (m.metrics(), c)
+    };
+
+    let verified = match verify {
+        Some(r) => {
+            ensure!(
+                spgemm::same_product(&product, r, 1e-2),
+                "{impl_name} on {dataset}: product mismatch ({} vs {} nnz)",
+                product.nnz(),
+                r.nnz()
+            );
+            true
+        }
+        None => false,
+    };
+
+    Ok(ExperimentResult {
+        impl_name: impl_name.to_string(),
+        dataset: dataset.to_string(),
+        out_nnz: product.nnz(),
+        metrics,
+        verified,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        block_elems: block,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::runtime::client::artifact_dir;
+
+    #[test]
+    fn run_one_verifies() {
+        let a = gen::erdos_renyi(60, 60, 300, 81);
+        let r = spgemm::reference(&a, &a);
+        for name in spgemm::IMPL_NAMES {
+            let res = run_one(
+                name,
+                "test",
+                &a,
+                SystemConfig::default(),
+                Engine::Native,
+                &artifact_dir(),
+                Some(&r),
+            )
+            .unwrap();
+            assert!(res.verified, "{name}");
+            assert!(res.metrics.cycles > 0.0, "{name}");
+            assert_eq!(res.out_nnz, r.nnz(), "{name}");
+        }
+    }
+
+    #[test]
+    fn vec_radix_reports_block() {
+        let a = gen::erdos_renyi(60, 60, 300, 82);
+        let res = run_one(
+            "vec-radix",
+            "test",
+            &a,
+            SystemConfig::default(),
+            Engine::Native,
+            &artifact_dir(),
+            None,
+        )
+        .unwrap();
+        assert!(res.block_elems.is_some());
+    }
+}

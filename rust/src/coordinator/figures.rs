@@ -1,0 +1,329 @@
+//! Emitters that regenerate each table/figure of the paper from a
+//! [`SuiteResult`]: aligned-text rendering (stdout) plus TSV series
+//! (reports/ directory) for plotting.
+
+use crate::coordinator::runner::SuiteResult;
+use crate::matrix::registry;
+use crate::sim::machine::{Phase, NUM_PHASES, PHASE_NAMES};
+use crate::util::stats::geomean;
+use std::fmt::Write as _;
+
+/// Order datasets as Table III (descending work variance), filtered to the
+/// ones present in the result.
+fn ordered_datasets(r: &SuiteResult) -> Vec<&'static str> {
+    registry::DATASETS
+        .iter()
+        .map(|d| d.name)
+        .filter(|n| r.dataset_stats.contains_key(*n))
+        .collect()
+}
+
+/// Table III: dataset characterization — paper value vs measured stand-in.
+pub fn table3(r: &SuiteResult) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Table III. Evaluated datasets (paper -> measured synthetic stand-in)"
+    );
+    let _ = writeln!(
+        s,
+        "{:<10} {:>12} {:>12} {:>11} {:>16} {:>16} {:>14} {:>14}",
+        "Matrix", "Rows", "NNZ", "Density", "AvgWork/row", "AvgOutNNZ/row", "Work/16rows", "WorkVar"
+    );
+    for name in ordered_datasets(r) {
+        let st = &r.dataset_stats[name];
+        let p = registry::find(name).unwrap().paper;
+        let _ = writeln!(
+            s,
+            "{:<10} {:>5.0}K/{:>5.0}K {:>5.0}K/{:>5.0}K {:>5.0e}/{:>4.0e} {:>7.2}/{:>7.2} {:>7.2}/{:>7.2} {:>6.2}K/{:>5.2}K {:>6.2}/{:>6.2}",
+            name,
+            p.rows / 1e3,
+            st.nrows as f64 / 1e3,
+            p.nnz / 1e3,
+            st.nnz as f64 / 1e3,
+            p.density,
+            st.density,
+            p.avg_work,
+            st.avg_work_per_row,
+            p.avg_out_nnz,
+            st.avg_out_nnz_per_row,
+            p.group_work / 1e3,
+            st.avg_work_per_group / 1e3,
+            p.work_var,
+            st.work_var,
+        );
+    }
+    s
+}
+
+/// Figure 8: speedup over scl-hash per dataset, plus the paper's headline
+/// geomean ratios.
+pub fn fig8(r: &SuiteResult) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Figure 8. Speedup over scalar baseline using hash table (scl-hash = 1.0)");
+    let impls = ["scl-array", "scl-hash", "vec-radix", "spz", "spz-rsort"];
+    let _ = write!(s, "{:<10}", "Matrix");
+    for i in impls {
+        let _ = write!(s, " {i:>10}");
+    }
+    let _ = writeln!(s);
+    let mut per_impl: Vec<Vec<f64>> = vec![Vec::new(); impls.len()];
+    for name in ordered_datasets(r) {
+        let _ = write!(s, "{name:<10}");
+        for (k, i) in impls.iter().enumerate() {
+            match r.speedup(i, "scl-hash", name) {
+                Some(x) => {
+                    per_impl[k].push(x);
+                    let _ = write!(s, " {x:>10.2}");
+                }
+                None => {
+                    let _ = write!(s, " {:>10}", "-");
+                }
+            }
+        }
+        let _ = writeln!(s);
+    }
+    let _ = write!(s, "{:<10}", "geomean");
+    for v in &per_impl {
+        if v.is_empty() {
+            let _ = write!(s, " {:>10}", "-");
+        } else {
+            let _ = write!(s, " {:>10.2}", geomean(v));
+        }
+    }
+    let _ = writeln!(s);
+    // Headline ratios (paper: 12.13x / 5.98x / 2.61x for spz, 2.60x spz/vec-radix).
+    let ratio = |num: &str, den: &str| -> Option<f64> {
+        let xs: Vec<f64> = ordered_datasets(r)
+            .iter()
+            .filter_map(|d| r.speedup(num, den, d))
+            .collect();
+        if xs.is_empty() {
+            None
+        } else {
+            Some(geomean(&xs))
+        }
+    };
+    for (num, den, paper) in [
+        ("spz", "scl-array", 12.13),
+        ("spz", "scl-hash", 5.98),
+        ("spz", "vec-radix", 2.61),
+        ("scl-hash", "scl-array", 2.03),
+        ("vec-radix", "scl-hash", 2.29),
+    ] {
+        if let Some(x) = ratio(num, den) {
+            let _ = writeln!(s, "  {num} vs {den}: {x:.2}x  (paper: {paper:.2}x)");
+        }
+    }
+    s
+}
+
+/// Figure 9: execution-time breakdown, normalized to each dataset's
+/// scl-hash total (the paper normalizes within each matrix).
+pub fn fig9(r: &SuiteResult) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Figure 9. Execution time breakdown (fraction of each impl's own total)"
+    );
+    let impls = ["vec-radix", "spz", "spz-rsort"];
+    let _ = writeln!(
+        s,
+        "{:<10} {:<10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>14}",
+        "Matrix", "Impl", PHASE_NAMES[0], PHASE_NAMES[1], PHASE_NAMES[2], PHASE_NAMES[3], PHASE_NAMES[4], "cycles"
+    );
+    for name in ordered_datasets(r) {
+        for i in impls {
+            if let Some(e) = r.get(i, name) {
+                let tot: f64 = e.metrics.cycles.max(1e-9);
+                let _ = write!(s, "{name:<10} {i:<10}");
+                for p in 0..NUM_PHASES {
+                    let _ = write!(s, " {:>8.1}%", 100.0 * e.metrics.phase_cycles[p] / tot);
+                }
+                let _ = writeln!(s, " {:>14.0}", e.metrics.cycles);
+            }
+        }
+    }
+    s
+}
+
+/// Figure 10: L1 data-cache accesses, vec-radix vs spz (normalized to spz).
+pub fn fig10(r: &SuiteResult) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Figure 10. L1D accesses (relative to spz = 1.0)");
+    let _ = writeln!(
+        s,
+        "{:<10} {:>14} {:>14} {:>10}",
+        "Matrix", "vec-radix", "spz", "ratio"
+    );
+    let mut ratios = Vec::new();
+    for name in ordered_datasets(r) {
+        if let (Some(v), Some(z)) = (r.get("vec-radix", name), r.get("spz", name)) {
+            let ratio = v.metrics.mem.l1d_accesses as f64 / z.metrics.mem.l1d_accesses.max(1) as f64;
+            ratios.push(ratio);
+            let _ = writeln!(
+                s,
+                "{:<10} {:>14} {:>14} {:>9.2}x",
+                name, v.metrics.mem.l1d_accesses, z.metrics.mem.l1d_accesses, ratio
+            );
+        }
+    }
+    if !ratios.is_empty() {
+        let _ = writeln!(s, "geomean vec-radix/spz: {:.2}x (paper: >1 across all matrices)", geomean(&ratios));
+    }
+    s
+}
+
+/// Figure 11: dynamic mssortk+mszipk instruction counts, spz vs spz-rsort.
+pub fn fig11(r: &SuiteResult) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Figure 11. Dynamic mssortk & mszipk instruction counts");
+    let _ = writeln!(
+        s,
+        "{:<10} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "Matrix", "spz sortk", "spz zipk", "rsort sortk", "rsort zipk", "reduction"
+    );
+    for name in ordered_datasets(r) {
+        if let (Some(z), Some(rs)) = (r.get("spz", name), r.get("spz-rsort", name)) {
+            let t1 = z.metrics.total_matrix_kv_pairs();
+            let t2 = rs.metrics.total_matrix_kv_pairs();
+            let _ = writeln!(
+                s,
+                "{:<10} {:>12} {:>12} {:>12} {:>12} {:>9.1}%",
+                name,
+                z.metrics.ops.mssortk,
+                z.metrics.ops.mszipk,
+                rs.metrics.ops.mssortk,
+                rs.metrics.ops.mszipk,
+                100.0 * (1.0 - t2 as f64 / t1.max(1) as f64)
+            );
+        }
+    }
+    s
+}
+
+/// TSV exports for plotting (one file per figure).
+pub fn tsv_exports(r: &SuiteResult) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    // fig8.tsv
+    let mut t = String::from("matrix\timpl\tspeedup_over_sclhash\tcycles\n");
+    for name in ordered_datasets(r) {
+        for e in r.results.iter().filter(|e| e.dataset == name) {
+            let sp = r.speedup(&e.impl_name, "scl-hash", name).unwrap_or(f64::NAN);
+            let _ = writeln!(t, "{name}\t{}\t{sp:.6}\t{:.1}", e.impl_name, e.metrics.cycles);
+        }
+    }
+    out.push(("fig8.tsv".to_string(), t));
+    // fig9.tsv
+    let mut t = String::from("matrix\timpl\tphase\tcycles\n");
+    for name in ordered_datasets(r) {
+        for e in r.results.iter().filter(|e| e.dataset == name) {
+            for p in 0..NUM_PHASES {
+                let _ = writeln!(
+                    t,
+                    "{name}\t{}\t{}\t{:.1}",
+                    e.impl_name, PHASE_NAMES[p], e.metrics.phase_cycles[p]
+                );
+            }
+        }
+    }
+    out.push(("fig9.tsv".to_string(), t));
+    // fig10.tsv
+    let mut t = String::from("matrix\timpl\tl1d_accesses\tl1d_hit_rate\n");
+    for name in ordered_datasets(r) {
+        for e in r.results.iter().filter(|e| e.dataset == name) {
+            let _ = writeln!(
+                t,
+                "{name}\t{}\t{}\t{:.4}",
+                e.impl_name,
+                e.metrics.mem.l1d_accesses,
+                e.metrics.mem.l1d_hit_rate()
+            );
+        }
+    }
+    out.push(("fig10.tsv".to_string(), t));
+    // fig11.tsv
+    let mut t = String::from("matrix\timpl\tmssortk\tmszipk\n");
+    for name in ordered_datasets(r) {
+        for e in r.results.iter().filter(|e| e.dataset == name) {
+            let _ = writeln!(
+                t,
+                "{name}\t{}\t{}\t{}",
+                e.impl_name, e.metrics.ops.mssortk, e.metrics.ops.mszipk
+            );
+        }
+    }
+    out.push(("fig11.tsv".to_string(), t));
+    out
+}
+
+/// Sanity assertion helpers used by tests and the e2e example: does the
+/// sweep reproduce the paper's qualitative shape?
+pub fn shape_checks(r: &SuiteResult) -> Vec<(String, bool)> {
+    let mut checks = Vec::new();
+    let ds = ordered_datasets(r);
+    let geo = |num: &str, den: &str| {
+        let xs: Vec<f64> = ds.iter().filter_map(|d| r.speedup(num, den, d)).collect();
+        geomean(&xs)
+    };
+    checks.push((
+        "spz beats scl-hash (geomean > 2x)".into(),
+        geo("spz", "scl-hash") > 2.0,
+    ));
+    checks.push((
+        "spz beats vec-radix (geomean > 1.5x)".into(),
+        geo("spz", "vec-radix") > 1.5,
+    ));
+    // The scalar crossover is a cache-capacity effect: scl-array's dense
+    // accumulator (~8B x ncols) must overflow the LLC for its scattered
+    // accesses to hurt. Only assert it over datasets where that holds
+    // (at small --scale no dataset qualifies and the check is skipped).
+    let big: Vec<&str> = ds
+        .iter()
+        .filter(|d| {
+            r.dataset_stats
+                .get(**d)
+                .map(|st| st.nrows * 8 > 512 * 1024)
+                .unwrap_or(false)
+        })
+        .copied()
+        .collect();
+    if !big.is_empty() {
+        let xs: Vec<f64> = big
+            .iter()
+            .filter_map(|d| r.speedup("scl-hash", "scl-array", d))
+            .collect();
+        checks.push((
+            format!("scl-hash beats scl-array on LLC-overflow matrices ({})", big.join(",")),
+            geomean(&xs) > 1.2,
+        ));
+    }
+    checks.push((
+        "vec-radix beats scl-hash (geomean > 1.2x)".into(),
+        geo("vec-radix", "scl-hash") > 1.2,
+    ));
+    // Fig 10 shape: vec-radix touches L1D more than spz on every matrix.
+    let fig10_ok = ds.iter().all(|d| {
+        match (r.get("vec-radix", d), r.get("spz", d)) {
+            (Some(v), Some(z)) => v.metrics.mem.l1d_accesses > z.metrics.mem.l1d_accesses,
+            _ => true,
+        }
+    });
+    checks.push(("vec-radix L1D accesses > spz on all matrices".into(), fig10_ok));
+    // Fig 11 shape: rsort reduces k/v pairs on the high-variance matrices.
+    for d in ["wiki", "soc", "ndwww", "ca-cm"] {
+        if let (Some(z), Some(rs)) = (r.get("spz", d), r.get("spz-rsort", d)) {
+            checks.push((
+                format!("rsort cuts kv-pairs on {d}"),
+                rs.metrics.total_matrix_kv_pairs() < z.metrics.total_matrix_kv_pairs(),
+            ));
+        }
+    }
+    checks
+}
+
+/// Execution-phase share of the sort phase (used in tests).
+pub fn sort_share(r: &SuiteResult, impl_name: &str, dataset: &str) -> Option<f64> {
+    let e = r.get(impl_name, dataset)?;
+    Some(e.metrics.phase_cycles[Phase::Sort as usize] / e.metrics.cycles.max(1e-9))
+}

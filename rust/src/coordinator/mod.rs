@@ -1,0 +1,12 @@
+//! Experiment coordinator: runs (implementation x dataset) grids on worker
+//! threads, collects [`crate::sim::RunMetrics`], and regenerates every table
+//! and figure of the paper's evaluation (Tables I–IV, Figures 8–11).
+
+pub mod experiment;
+pub mod figures;
+pub mod report;
+pub mod runner;
+
+pub use experiment::{run_one, ExperimentResult};
+pub use runner::{run_suite, SuiteConfig, SuiteResult};
+pub mod ablate;

@@ -1,0 +1,31 @@
+//! Report writing: persists rendered tables/figures and TSV series under a
+//! reports/ directory, and appends run records for EXPERIMENTS.md.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Write a rendered artifact (and echo it to stdout).
+pub fn emit(out_dir: &Path, name: &str, content: &str, quiet: bool) -> Result<()> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("create {}", out_dir.display()))?;
+    let p = out_dir.join(name);
+    std::fs::write(&p, content).with_context(|| format!("write {}", p.display()))?;
+    if !quiet {
+        println!("{content}");
+        println!("[written to {}]", p.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_writes_file() {
+        let dir = std::env::temp_dir().join(format!("spz_report_{}", std::process::id()));
+        emit(&dir, "t.txt", "hello", true).unwrap();
+        assert_eq!(std::fs::read_to_string(dir.join("t.txt")).unwrap(), "hello");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

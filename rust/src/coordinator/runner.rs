@@ -1,0 +1,196 @@
+//! Multi-threaded sweep executor: builds each dataset once, computes the
+//! reference product once, then fans (implementation x dataset) runs out to
+//! a scoped thread pool. Simulations are independent (one `Machine` each),
+//! so this parallelism does not perturb the simulated metrics.
+
+use crate::config::SystemConfig;
+use crate::coordinator::experiment::{run_one, ExperimentResult};
+use crate::matrix::{registry, stats, Csr};
+use crate::runtime::Engine;
+use crate::spgemm;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// Sweep configuration.
+#[derive(Clone, Debug)]
+pub struct SuiteConfig {
+    /// Dataset names (default: all 14 of Table III).
+    pub datasets: Vec<String>,
+    /// Implementations (default: the five of Figure 8).
+    pub impls: Vec<String>,
+    /// Dataset scale in (0, 1].
+    pub scale: f64,
+    /// Worker threads.
+    pub threads: usize,
+    /// Verify every product against the reference oracle.
+    pub verify: bool,
+    pub engine: Engine,
+    pub artifact_dir: PathBuf,
+    /// Optional directory of real `.mtx` files overriding the synthetics.
+    pub mtx_dir: Option<PathBuf>,
+    pub sys: SystemConfig,
+}
+
+impl Default for SuiteConfig {
+    fn default() -> Self {
+        SuiteConfig {
+            datasets: registry::DATASETS.iter().map(|d| d.name.to_string()).collect(),
+            impls: spgemm::IMPL_NAMES.iter().map(|s| s.to_string()).collect(),
+            scale: 1.0,
+            threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+            verify: false,
+            engine: Engine::Native,
+            artifact_dir: crate::runtime::client::artifact_dir(),
+            mtx_dir: None,
+            sys: SystemConfig::default(),
+        }
+    }
+}
+
+/// All results of a sweep, with the per-dataset Table III characterization.
+#[derive(Debug, Default)]
+pub struct SuiteResult {
+    pub results: Vec<ExperimentResult>,
+    pub dataset_stats: HashMap<String, stats::MatrixStats>,
+}
+
+impl SuiteResult {
+    pub fn get(&self, impl_name: &str, dataset: &str) -> Option<&ExperimentResult> {
+        self.results
+            .iter()
+            .find(|r| r.impl_name == impl_name && r.dataset == dataset)
+    }
+
+    /// Speedup of `num` over `den` on `dataset` (cycles ratio).
+    pub fn speedup(&self, num: &str, den: &str, dataset: &str) -> Option<f64> {
+        let n = self.get(num, dataset)?;
+        let d = self.get(den, dataset)?;
+        Some(d.metrics.cycles / n.metrics.cycles)
+    }
+}
+
+/// Build one dataset (synthetic stand-in or user-provided `.mtx`).
+pub fn build_dataset(cfg: &SuiteConfig, name: &str) -> Result<Csr> {
+    if let Some(dir) = &cfg.mtx_dir {
+        let p = dir.join(format!("{name}.mtx"));
+        if p.exists() {
+            return crate::matrix::mm::read_mtx(&p);
+        }
+    }
+    let d = registry::find(name).with_context(|| format!("unknown dataset '{name}'"))?;
+    Ok(d.build(cfg.scale))
+}
+
+/// Run the full sweep.
+pub fn run_suite(cfg: &SuiteConfig) -> Result<SuiteResult> {
+    // Phase 1: build datasets (parallel across datasets).
+    let built: Mutex<HashMap<String, (Csr, Option<Csr>)>> = Mutex::new(HashMap::new());
+    let stats_map: Mutex<HashMap<String, stats::MatrixStats>> = Mutex::new(HashMap::new());
+    let errs: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for name in &cfg.datasets {
+            let built = &built;
+            let stats_map = &stats_map;
+            let errs = &errs;
+            handles.push(scope.spawn(move || {
+                match build_dataset(cfg, name) {
+                    Ok(a) => {
+                        let st = stats::characterize(&a, 16);
+                        let reference = if cfg.verify {
+                            Some(spgemm::reference(&a, &a))
+                        } else {
+                            None
+                        };
+                        stats_map.lock().unwrap().insert(name.clone(), st);
+                        built.lock().unwrap().insert(name.clone(), (a, reference));
+                    }
+                    Err(e) => errs.lock().unwrap().push(format!("{name}: {e:#}")),
+                }
+            }));
+            // Bound build parallelism to the thread budget.
+            if handles.len() >= cfg.threads {
+                handles.drain(..).for_each(|h| h.join().unwrap());
+            }
+        }
+        handles.drain(..).for_each(|h| h.join().unwrap());
+    });
+    let errv = errs.into_inner().unwrap();
+    anyhow::ensure!(errv.is_empty(), "dataset build failures: {errv:?}");
+    let built = built.into_inner().unwrap();
+
+    // Phase 2: run the grid.
+    let jobs: Vec<(String, String)> = cfg
+        .datasets
+        .iter()
+        .flat_map(|d| cfg.impls.iter().map(move |i| (i.clone(), d.clone())))
+        .collect();
+    let results: Mutex<Vec<ExperimentResult>> = Mutex::new(Vec::new());
+    let job_errs: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let next: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..cfg.threads.max(1) {
+            let jobs = &jobs;
+            let built = &built;
+            let results = &results;
+            let job_errs = &job_errs;
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let (impl_name, dataset) = &jobs[i];
+                let (a, reference) = &built[dataset];
+                match run_one(
+                    impl_name,
+                    dataset,
+                    a,
+                    cfg.sys,
+                    cfg.engine,
+                    &cfg.artifact_dir,
+                    reference.as_ref(),
+                ) {
+                    Ok(r) => results.lock().unwrap().push(r),
+                    Err(e) => job_errs
+                        .lock()
+                        .unwrap()
+                        .push(format!("{impl_name}/{dataset}: {e:#}")),
+                }
+            });
+        }
+    });
+    let errv = job_errs.into_inner().unwrap();
+    anyhow::ensure!(errv.is_empty(), "experiment failures: {errv:?}");
+
+    Ok(SuiteResult {
+        results: results.into_inner().unwrap(),
+        dataset_stats: stats_map.into_inner().unwrap(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_suite_runs_and_verifies() {
+        let cfg = SuiteConfig {
+            datasets: vec!["p2p".into(), "m133-b3".into()],
+            impls: vec!["scl-hash".into(), "spz".into()],
+            scale: 0.01,
+            threads: 2,
+            verify: true,
+            ..Default::default()
+        };
+        let r = run_suite(&cfg).unwrap();
+        assert_eq!(r.results.len(), 4);
+        assert!(r.results.iter().all(|x| x.verified));
+        assert!(r.speedup("spz", "scl-hash", "p2p").unwrap() > 0.0);
+        assert!(r.dataset_stats.contains_key("m133-b3"));
+    }
+}

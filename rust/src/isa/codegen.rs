@@ -1,0 +1,80 @@
+//! Figure 4 reproduction: the RISC-V assembly kernels for sorting and
+//! merging key-value chunks across VLEN streams, emitted from the same
+//! `Instr` structures the simulator accounts — the listing stays consistent
+//! with the ISA definition by construction.
+
+use crate::isa::instr::{CounterSel, Instr};
+
+fn line(out: &mut String, n: usize, asm: &str, comment: &str) {
+    out.push_str(&format!("{n:>2}  {asm:<42} # {comment}\n"));
+}
+
+/// Figure 4(a): sorting key-value chunks from VLEN streams.
+pub fn fig4a_sort_kernel() -> String {
+    let mut s = String::from(
+        "Figure 4(a). Sorting key-value chunks across VLEN streams\n\
+         #  a0=key base  a1=val base  v0/v1=chunk offsets  v2/v3=chunk lengths\n",
+    );
+    line(&mut s, 8, &Instr::MlxeT { td1: 0, rs1: 10, vs2: 0, vs3: 2 }.to_string(), "load keys, chunk set 0");
+    line(&mut s, 9, &Instr::MlxeT { td1: 1, rs1: 11, vs2: 0, vs3: 2 }.to_string(), "load values, chunk set 0");
+    line(&mut s, 10, &Instr::MlxeT { td1: 2, rs1: 10, vs2: 1, vs3: 3 }.to_string(), "load keys, chunk set 1");
+    line(&mut s, 11, &Instr::MlxeT { td1: 3, rs1: 11, vs2: 1, vs3: 3 }.to_string(), "load values, chunk set 1");
+    line(&mut s, 13, &Instr::MssortK { td1: 0, td2: 2, vs1: 2, vs2: 3 }.to_string(), "sort keys (both chunk sets)");
+    line(&mut s, 14, &Instr::MssortV { td1: 1, td2: 3, vs1: 2, vs2: 3 }.to_string(), "shuffle+accumulate values");
+    line(&mut s, 16, &Instr::MmvVo { vd: 4, which: CounterSel::Oc0 }.to_string(), "output chunk lengths (set 0)");
+    line(&mut s, 17, &Instr::MmvVo { vd: 5, which: CounterSel::Oc1 }.to_string(), "output chunk lengths (set 1)");
+    line(&mut s, 19, &Instr::MsxeT { ts1: 0, rs1: 10, vs2: 0, vs3: 4 }.to_string(), "store sorted keys, set 0");
+    line(&mut s, 20, &Instr::MsxeT { ts1: 1, rs1: 11, vs2: 0, vs3: 4 }.to_string(), "store values, set 0");
+    line(&mut s, 21, &Instr::MsxeT { ts1: 2, rs1: 10, vs2: 1, vs3: 5 }.to_string(), "store sorted keys, set 1");
+    line(&mut s, 22, &Instr::MsxeT { ts1: 3, rs1: 11, vs2: 1, vs3: 5 }.to_string(), "store values, set 1");
+    s
+}
+
+/// Figure 4(b): merging key-value chunks from adjacent partitions.
+pub fn fig4b_merge_kernel() -> String {
+    let mut s = String::from(
+        "Figure 4(b). Merging key-value chunks from adjacent partitions\n\
+         #  a0=key base  a1=val base  v0/v1=partition offsets  v2/v3=remaining lengths\n",
+    );
+    line(&mut s, 8, &Instr::MlxeT { td1: 0, rs1: 10, vs2: 0, vs3: 2 }.to_string(), "load keys, partition A");
+    line(&mut s, 9, &Instr::MlxeT { td1: 1, rs1: 11, vs2: 0, vs3: 2 }.to_string(), "load values, partition A");
+    line(&mut s, 10, &Instr::MlxeT { td1: 2, rs1: 10, vs2: 1, vs3: 3 }.to_string(), "load keys, partition B");
+    line(&mut s, 11, &Instr::MlxeT { td1: 3, rs1: 11, vs2: 1, vs3: 3 }.to_string(), "load values, partition B");
+    line(&mut s, 13, &Instr::MszipK { td1: 0, td2: 2, vs1: 2, vs2: 3 }.to_string(), "merge sorted keys");
+    line(&mut s, 14, &Instr::MszipV { td1: 1, td2: 3, vs1: 2, vs2: 3 }.to_string(), "shuffle+accumulate values");
+    line(&mut s, 16, &Instr::MmvVi { vd: 6, which: CounterSel::Ic0 }.to_string(), "merged counts, partition A");
+    line(&mut s, 17, &Instr::MmvVi { vd: 7, which: CounterSel::Ic1 }.to_string(), "merged counts, partition B");
+    line(&mut s, 19, &Instr::MmvVo { vd: 8, which: CounterSel::Oc0 }.to_string(), "east output lengths");
+    line(&mut s, 20, &Instr::MmvVo { vd: 9, which: CounterSel::Oc1 }.to_string(), "south output lengths");
+    line(&mut s, 22, &Instr::MsxeT { ts1: 0, rs1: 10, vs2: 4, vs3: 8 }.to_string(), "store east keys");
+    line(&mut s, 23, &Instr::MsxeT { ts1: 1, rs1: 11, vs2: 4, vs3: 8 }.to_string(), "store east values");
+    line(&mut s, 24, &Instr::MsxeT { ts1: 2, rs1: 10, vs2: 5, vs3: 9 }.to_string(), "store south keys");
+    line(&mut s, 25, &Instr::MsxeT { ts1: 3, rs1: 11, vs2: 5, vs3: 9 }.to_string(), "store south values");
+    line(&mut s, 27, "vadd.vv v0, v0, v6 / v1, v1, v7", "advance partition pointers by IC");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4a_structure() {
+        let s = fig4a_sort_kernel();
+        assert_eq!(s.matches("mlxe.t").count(), 4);
+        assert_eq!(s.matches("msxe.t").count(), 4);
+        assert!(s.contains("mssortk.tt tr0, tr2"));
+        assert!(s.contains("mssortv.tt tr1, tr3"));
+        assert_eq!(s.matches("mmv.vo").count(), 2);
+    }
+
+    #[test]
+    fn fig4b_structure() {
+        let s = fig4b_merge_kernel();
+        assert!(s.contains("mszipk.tt tr0, tr2"));
+        assert!(s.contains("mszipv.tt tr1, tr3"));
+        assert_eq!(s.matches("mmv.vi").count(), 2);
+        assert_eq!(s.matches("mmv.vo").count(), 2);
+        assert_eq!(s.matches("msxe.t").count(), 4);
+    }
+}

@@ -1,0 +1,140 @@
+//! SparseZipper instructions (Table I) plus the base scalar/vector operation
+//! classes the simulator accounts. The `Display` impl reproduces Table I's
+//! assembly syntax for `spz isa`.
+
+use std::fmt;
+
+/// Which special-purpose counter vector an `mmv` reads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CounterSel {
+    Ic0,
+    Ic1,
+    Oc0,
+    Oc1,
+}
+
+/// SparseZipper ISA extension instructions (register indices are
+/// architectural numbers: td/ts = matrix regs, vs/vd = vector regs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Instr {
+    /// mlxe.t td1, 0(rs1), vs2, vs3 — indexed matrix load (row-wise
+    /// unit-stride micro-ops; vs2 = byte offsets, vs3 = stream lengths).
+    MlxeT { td1: u8, rs1: u8, vs2: u8, vs3: u8 },
+    /// msxe.t ts1, 0(rs1), vs2, vs3 — indexed matrix store.
+    MsxeT { ts1: u8, rs1: u8, vs2: u8, vs3: u8 },
+    /// mssortk.tt td1, td2, vs1, vs2 — sort keys in both registers.
+    MssortK { td1: u8, td2: u8, vs1: u8, vs2: u8 },
+    /// mssortv.tt — shuffle & accumulate values per last key sort.
+    MssortV { td1: u8, td2: u8, vs1: u8, vs2: u8 },
+    /// mszipk.tt — merge sorted keys across the two registers.
+    MszipK { td1: u8, td2: u8, vs1: u8, vs2: u8 },
+    /// mszipv.tt — shuffle & accumulate values per last key merge.
+    MszipV { td1: u8, td2: u8, vs1: u8, vs2: u8 },
+    /// mmv.vi vd, cimm — move input counter vector into vd.
+    MmvVi { vd: u8, which: CounterSel },
+    /// mmv.vo vd, cimm — move output counter vector into vd.
+    MmvVo { vd: u8, which: CounterSel },
+}
+
+impl Instr {
+    /// Table I description string.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Instr::MlxeT { .. } => "Load data into td1 using indices in vs2; rs1 is the base address; vs3 are stream lengths.",
+            Instr::MsxeT { .. } => "Store data from ts1 using indices in vs2; rs1 is the base address; vs3 are stream lengths.",
+            Instr::MssortK { .. } => "Sort keys in td1 and td2; vs1 and vs2 are input lengths.",
+            Instr::MssortV { .. } => "Shuffle & accumulate values in td1 and td2 based on last key sorting results.",
+            Instr::MszipK { .. } => "Merge keys in td1 and td2; vs1 and vs2 are input lengths.",
+            Instr::MszipV { .. } => "Shuffle & accumulate values in td1 and td2 based on last key merging results.",
+            Instr::MmvVi { .. } => "Move values from an input counter vector IC[cimm] to vd.",
+            Instr::MmvVo { .. } => "Move values from an output counter vector OC[cimm] to vd.",
+        }
+    }
+
+    /// Does this instruction execute on the systolic array?
+    pub fn uses_matrix_unit(&self) -> bool {
+        matches!(
+            self,
+            Instr::MssortK { .. } | Instr::MssortV { .. } | Instr::MszipK { .. } | Instr::MszipV { .. }
+        )
+    }
+}
+
+impl fmt::Display for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Instr::MlxeT { td1, rs1, vs2, vs3 } => {
+                write!(f, "mlxe.t tr{td1}, 0(x{rs1}), v{vs2}, v{vs3}")
+            }
+            Instr::MsxeT { ts1, rs1, vs2, vs3 } => {
+                write!(f, "msxe.t tr{ts1}, 0(x{rs1}), v{vs2}, v{vs3}")
+            }
+            Instr::MssortK { td1, td2, vs1, vs2 } => {
+                write!(f, "mssortk.tt tr{td1}, tr{td2}, v{vs1}, v{vs2}")
+            }
+            Instr::MssortV { td1, td2, vs1, vs2 } => {
+                write!(f, "mssortv.tt tr{td1}, tr{td2}, v{vs1}, v{vs2}")
+            }
+            Instr::MszipK { td1, td2, vs1, vs2 } => {
+                write!(f, "mszipk.tt tr{td1}, tr{td2}, v{vs1}, v{vs2}")
+            }
+            Instr::MszipV { td1, td2, vs1, vs2 } => {
+                write!(f, "mszipv.tt tr{td1}, tr{td2}, v{vs1}, v{vs2}")
+            }
+            Instr::MmvVi { vd, which } => write!(f, "mmv.vi v{vd}, {}", sel_imm(*which)),
+            Instr::MmvVo { vd, which } => write!(f, "mmv.vo v{vd}, {}", sel_imm(*which)),
+        }
+    }
+}
+
+fn sel_imm(s: CounterSel) -> u8 {
+    match s {
+        CounterSel::Ic0 | CounterSel::Oc0 => 0,
+        CounterSel::Ic1 | CounterSel::Oc1 => 1,
+    }
+}
+
+/// Render the full Table I listing.
+pub fn table1() -> String {
+    let rows: Vec<Instr> = vec![
+        Instr::MlxeT { td1: 1, rs1: 1, vs2: 2, vs3: 3 },
+        Instr::MsxeT { ts1: 1, rs1: 1, vs2: 2, vs3: 3 },
+        Instr::MssortK { td1: 1, td2: 2, vs1: 1, vs2: 2 },
+        Instr::MssortV { td1: 1, td2: 2, vs1: 1, vs2: 2 },
+        Instr::MszipK { td1: 1, td2: 2, vs1: 1, vs2: 2 },
+        Instr::MszipV { td1: 1, td2: 2, vs1: 1, vs2: 2 },
+        Instr::MmvVi { vd: 1, which: CounterSel::Ic0 },
+        Instr::MmvVo { vd: 1, which: CounterSel::Oc0 },
+    ];
+    let mut s = String::from("Table I. SparseZipper instructions\n");
+    for r in rows {
+        s.push_str(&format!("  {:<38} {}\n", r.to_string(), r.describe()));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_table1_syntax() {
+        let i = Instr::MssortK { td1: 0, td2: 2, vs1: 4, vs2: 5 };
+        assert_eq!(i.to_string(), "mssortk.tt tr0, tr2, v4, v5");
+    }
+
+    #[test]
+    fn matrix_unit_classification() {
+        assert!(Instr::MszipK { td1: 0, td2: 1, vs1: 0, vs2: 1 }.uses_matrix_unit());
+        assert!(!Instr::MlxeT { td1: 0, rs1: 1, vs2: 2, vs3: 3 }.uses_matrix_unit());
+        assert!(!Instr::MmvVi { vd: 0, which: CounterSel::Ic0 }.uses_matrix_unit());
+    }
+
+    #[test]
+    fn table1_has_eight_instructions() {
+        let t = table1();
+        assert_eq!(t.lines().count(), 9); // header + 8
+        assert!(t.contains("mszipv.tt"));
+        assert!(t.contains("mmv.vo"));
+    }
+}

@@ -1,0 +1,10 @@
+//! The SparseZipper instruction-set extension (paper §III): instruction
+//! definitions (Table I) and the architectural state they operate on
+//! (matrix registers, counter vector registers).
+
+pub mod codegen;
+pub mod instr;
+pub mod regfile;
+
+pub use instr::{CounterSel, Instr};
+pub use regfile::{CounterVec, MatReg, RegFile};

@@ -1,0 +1,110 @@
+//! Architectural state: matrix (tile) registers and the four special-purpose
+//! counter vector registers (paper §III-B).
+
+/// One R x R matrix register of 32-bit elements. Row `s` holds the current
+/// chunk of key-value stream `s`. Stored as raw u32 bits; value registers
+/// reinterpret them as f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatReg {
+    pub n: usize,
+    pub data: Vec<u32>, // row-major n*n
+}
+
+impl MatReg {
+    pub fn new(n: usize) -> Self {
+        MatReg { n, data: vec![0; n * n] }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u32] {
+        &self.data[r * self.n..(r + 1) * self.n]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [u32] {
+        &mut self.data[r * self.n..(r + 1) * self.n]
+    }
+
+    pub fn row_f32(&self, r: usize) -> Vec<f32> {
+        self.row(r).iter().map(|&b| f32::from_bits(b)).collect()
+    }
+
+    pub fn set_row_u32(&mut self, r: usize, xs: &[u32]) {
+        let n = self.n;
+        let row = self.row_mut(r);
+        row[..xs.len().min(n)].copy_from_slice(&xs[..xs.len().min(n)]);
+        for x in row[xs.len().min(n)..].iter_mut() {
+            *x = 0;
+        }
+    }
+
+    pub fn set_row_f32(&mut self, r: usize, xs: &[f32]) {
+        let bits: Vec<u32> = xs.iter().map(|v| v.to_bits()).collect();
+        self.set_row_u32(r, &bits);
+    }
+}
+
+/// A counter vector register: R counters of ceil(log2(R))+1 bits
+/// (stored widened; the bit-width matters only for the area model).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CounterVec(pub Vec<u8>);
+
+impl CounterVec {
+    pub fn new(n: usize) -> Self {
+        CounterVec(vec![0; n])
+    }
+}
+
+/// The full SparseZipper register file: `num_regs` matrix registers plus
+/// IC0/IC1/OC0/OC1 counter vectors.
+#[derive(Clone, Debug)]
+pub struct RegFile {
+    pub n: usize,
+    pub tr: Vec<MatReg>,
+    pub ic0: CounterVec,
+    pub ic1: CounterVec,
+    pub oc0: CounterVec,
+    pub oc1: CounterVec,
+}
+
+impl RegFile {
+    pub fn new(n: usize, num_regs: usize) -> Self {
+        RegFile {
+            n,
+            tr: (0..num_regs).map(|_| MatReg::new(n)).collect(),
+            ic0: CounterVec::new(n),
+            ic1: CounterVec::new(n),
+            oc0: CounterVec::new(n),
+            oc1: CounterVec::new(n),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_roundtrip() {
+        let mut m = MatReg::new(4);
+        m.set_row_u32(1, &[9, 8, 7]);
+        assert_eq!(m.row(1), &[9, 8, 7, 0]);
+    }
+
+    #[test]
+    fn f32_bits_roundtrip() {
+        let mut m = MatReg::new(4);
+        m.set_row_f32(0, &[1.5, -2.25]);
+        let back = m.row_f32(0);
+        assert_eq!(back[0], 1.5);
+        assert_eq!(back[1], -2.25);
+    }
+
+    #[test]
+    fn regfile_shape() {
+        let rf = RegFile::new(16, 16);
+        assert_eq!(rf.tr.len(), 16);
+        assert_eq!(rf.tr[0].data.len(), 256);
+        assert_eq!(rf.oc0.0.len(), 16);
+    }
+}

@@ -1,0 +1,33 @@
+//! # SparseZipper — full-system reproduction
+//!
+//! Reproduction of *SparseZipper: Enhancing Matrix Extensions to Accelerate
+//! SpGEMM on CPUs* (Ta, Randall, Batten) as a three-layer Rust + JAX/Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the cycle-level simulation substrate (instrumented
+//!   machine + cache hierarchy + systolic-array model), the SparseZipper ISA,
+//!   all five SpGEMM implementations from the paper's evaluation, the
+//!   experiment coordinator that regenerates every table and figure, and the
+//!   Table IV area model.
+//! * **L2/L1 (python/compile, build-time only)** — the matrix unit's
+//!   functional datapath (sort/zip steps) as a JAX graph over Pallas kernels,
+//!   AOT-lowered to HLO text and executed from Rust through the PJRT CPU
+//!   client ([`runtime`]).
+//!
+//! Quick start: see `examples/quickstart.rs`; figures: `spz all`.
+
+pub mod area;
+pub mod config;
+pub mod coordinator;
+pub mod isa;
+pub mod matrix;
+pub mod mem;
+pub mod runtime;
+pub mod sim;
+pub mod spgemm;
+pub mod systolic;
+pub mod util;
+
+pub use config::SystemConfig;
+pub use matrix::Csr;
+pub use sim::Machine;

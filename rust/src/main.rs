@@ -1,0 +1,248 @@
+//! `spz` — SparseZipper reproduction CLI (hand-rolled arg parsing; the
+//! offline vendor set has no clap).
+//!
+//! ```text
+//! spz table3|fig8|fig9|fig10|fig11|table4|all [--scale F] [--threads N]
+//!     [--datasets a,b,...] [--impls a,b,...] [--engine native|xla]
+//!     [--verify] [--out-dir DIR] [--mtx-dir DIR]
+//! spz run --dataset NAME --impl NAME [--scale F] [--engine native|xla]
+//! spz isa | config | gen --dataset NAME --out FILE.mtx [--scale F]
+//! ```
+
+use anyhow::{bail, Context, Result};
+use sparsezipper::area::AreaModel;
+use sparsezipper::coordinator::{figures, report, run_suite, SuiteConfig};
+use sparsezipper::matrix::registry;
+use sparsezipper::runtime::Engine;
+use sparsezipper::spgemm;
+use std::path::PathBuf;
+
+struct Args {
+    cmd: String,
+    opts: std::collections::HashMap<String, String>,
+    flags: std::collections::HashSet<String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut opts = std::collections::HashMap::new();
+    let mut flags = std::collections::HashSet::new();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            // Peek: flag or key-value?
+            match key {
+                "verify" | "quiet" | "sweep" => {
+                    flags.insert(key.to_string());
+                }
+                _ => {
+                    let v = it.next().with_context(|| format!("--{key} needs a value"))?;
+                    opts.insert(key.to_string(), v);
+                }
+            }
+        } else {
+            bail!("unexpected argument '{a}'");
+        }
+    }
+    Ok(Args { cmd, opts, flags })
+}
+
+fn suite_config(a: &Args) -> Result<SuiteConfig> {
+    let mut cfg = SuiteConfig::default();
+    if let Some(s) = a.opts.get("scale") {
+        cfg.scale = s.parse().context("--scale")?;
+    }
+    if let Some(t) = a.opts.get("threads") {
+        cfg.threads = t.parse().context("--threads")?;
+    }
+    if let Some(d) = a.opts.get("datasets") {
+        cfg.datasets = d.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if let Some(i) = a.opts.get("impls") {
+        cfg.impls = i.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if let Some(e) = a.opts.get("engine") {
+        cfg.engine = e.parse::<Engine>().map_err(anyhow::Error::msg)?;
+    }
+    if let Some(m) = a.opts.get("mtx-dir") {
+        cfg.mtx_dir = Some(PathBuf::from(m));
+    }
+    if let Some(ad) = a.opts.get("artifacts") {
+        cfg.artifact_dir = PathBuf::from(ad);
+    }
+    cfg.verify = a.flags.contains("verify");
+    Ok(cfg)
+}
+
+fn out_dir(a: &Args) -> PathBuf {
+    a.opts
+        .get("out-dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("reports"))
+}
+
+fn main() -> Result<()> {
+    let a = parse_args()?;
+    let quiet = a.flags.contains("quiet");
+    match a.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            println!(
+                "spz — SparseZipper reproduction\n\
+                 commands: table3 fig4 fig8 fig9 fig10 fig11 table4 all run ablate isa config gen help\n\
+                 common options: --scale F --threads N --datasets a,b --impls a,b\n\
+                 \x20                --engine native|xla --verify --out-dir DIR --mtx-dir DIR"
+            );
+        }
+        "isa" => {
+            print!("{}", sparsezipper::isa::instr::table1());
+        }
+        "fig4" => {
+            println!("{}", sparsezipper::isa::codegen::fig4a_sort_kernel());
+            println!("{}", sparsezipper::isa::codegen::fig4b_merge_kernel());
+        }
+        "config" => {
+            print!("{}", sparsezipper::SystemConfig::default().table2());
+        }
+        "table4" => {
+            let od = out_dir(&a);
+            if a.flags.contains("sweep") {
+                let mut s = String::new();
+                for n in [4usize, 8, 16, 32] {
+                    let m = AreaModel { n, num_regs: 16 };
+                    s.push_str(&format!(
+                        "N={n:<3} baseline {:>8.2} k um^2, spz {:>8.2} k um^2, overhead {:>5.2}%\n",
+                        m.baseline_total(),
+                        m.spz_total(),
+                        m.overhead_pct()
+                    ));
+                }
+                report::emit(&od, "table4_sweep.txt", &s, quiet)?;
+            } else {
+                report::emit(&od, "table4.txt", &AreaModel::paper().table4(), quiet)?;
+            }
+        }
+        "table3" | "fig8" | "fig9" | "fig10" | "fig11" | "all" => {
+            let mut cfg = suite_config(&a)?;
+            // table3 needs no simulation runs, only dataset characterization.
+            if a.cmd == "table3" {
+                cfg.impls = vec![];
+            } else if a.cmd == "fig10" {
+                cfg.impls = vec!["vec-radix".into(), "spz".into()];
+            } else if a.cmd == "fig11" {
+                cfg.impls = vec!["spz".into(), "spz-rsort".into()];
+            } else if a.cmd == "fig9" {
+                cfg.impls = vec!["vec-radix".into(), "spz".into(), "spz-rsort".into()];
+            }
+            eprintln!(
+                "[spz] running suite: {} datasets x {} impls, scale {}, {} threads, engine {:?}",
+                cfg.datasets.len(),
+                cfg.impls.len(),
+                cfg.scale,
+                cfg.threads,
+                cfg.engine
+            );
+            let t0 = std::time::Instant::now();
+            let r = run_suite(&cfg)?;
+            eprintln!("[spz] suite done in {:.1}s", t0.elapsed().as_secs_f64());
+            let od = out_dir(&a);
+            match a.cmd.as_str() {
+                "table3" => report::emit(&od, "table3.txt", &figures::table3(&r), quiet)?,
+                "fig8" => report::emit(&od, "fig8.txt", &figures::fig8(&r), quiet)?,
+                "fig9" => report::emit(&od, "fig9.txt", &figures::fig9(&r), quiet)?,
+                "fig10" => report::emit(&od, "fig10.txt", &figures::fig10(&r), quiet)?,
+                "fig11" => report::emit(&od, "fig11.txt", &figures::fig11(&r), quiet)?,
+                "all" => {
+                    report::emit(&od, "table3.txt", &figures::table3(&r), quiet)?;
+                    report::emit(&od, "fig8.txt", &figures::fig8(&r), quiet)?;
+                    report::emit(&od, "fig9.txt", &figures::fig9(&r), quiet)?;
+                    report::emit(&od, "fig10.txt", &figures::fig10(&r), quiet)?;
+                    report::emit(&od, "fig11.txt", &figures::fig11(&r), quiet)?;
+                    report::emit(&od, "table4.txt", &AreaModel::paper().table4(), quiet)?;
+                    let mut shape = String::from("Qualitative shape checks (paper vs measured):\n");
+                    for (name, ok) in figures::shape_checks(&r) {
+                        shape.push_str(&format!("  [{}] {}\n", if ok { "ok" } else { "FAIL" }, name));
+                    }
+                    report::emit(&od, "shape_checks.txt", &shape, quiet)?;
+                }
+                _ => unreachable!(),
+            }
+            for (name, content) in figures::tsv_exports(&r) {
+                report::emit(&od, &name, &content, true)?;
+            }
+        }
+        "run" => {
+            let cfg = suite_config(&a)?;
+            let dataset = a.opts.get("dataset").context("--dataset required")?;
+            let impl_name = a
+                .opts
+                .get("impl")
+                .map(|s| s.as_str())
+                .unwrap_or("spz");
+            let m = sparsezipper::coordinator::runner::build_dataset(&cfg, dataset)?;
+            eprintln!(
+                "[spz] {dataset}: {} rows, {} nnz; running {impl_name} (engine {:?})",
+                m.nrows,
+                m.nnz(),
+                cfg.engine
+            );
+            let reference = if cfg.verify {
+                Some(spgemm::reference(&m, &m))
+            } else {
+                None
+            };
+            let res = sparsezipper::coordinator::run_one(
+                impl_name,
+                dataset,
+                &m,
+                cfg.sys,
+                cfg.engine,
+                &cfg.artifact_dir,
+                reference.as_ref(),
+            )?;
+            println!(
+                "impl={} dataset={} cycles={:.0} l1d_accesses={} l1d_hit={:.1}% kv_pairs={} out_nnz={} verified={} wall={:.2}s",
+                res.impl_name,
+                res.dataset,
+                res.metrics.cycles,
+                res.metrics.mem.l1d_accesses,
+                100.0 * res.metrics.mem.l1d_hit_rate(),
+                res.metrics.total_matrix_kv_pairs(),
+                res.out_nnz,
+                res.verified,
+                res.wall_secs
+            );
+        }
+        "ablate" => {
+            use sparsezipper::coordinator::ablate;
+            let cfg = suite_config(&a)?;
+            let dataset = a.opts.get("dataset").map(|s| s.as_str()).unwrap_or("p2p");
+            let m = sparsezipper::coordinator::runner::build_dataset(&cfg, dataset)?;
+            eprintln!("[spz] ablations on {dataset} ({} rows, {} nnz)", m.nrows, m.nnz());
+            let mut s = String::new();
+            s.push_str(&ablate::render(
+                &format!("Systolic array size sweep ({dataset})"),
+                &ablate::array_size_sweep(&m, &[4, 8, 16, 32])?,
+            ));
+            s.push_str(&ablate::render(
+                &format!("Non-speculative issue overhead sweep ({dataset})"),
+                &ablate::issue_overhead_sweep(&m, &[0, 4, 16, 64])?,
+            ));
+            s.push_str(&ablate::render(
+                &format!("vec-radix ESC block-size sweep ({dataset})"),
+                &ablate::block_size_sweep(&m, &[1024, 4096, 16384, 65536, 262144])?,
+            ));
+            report::emit(&out_dir(&a), &format!("ablate_{dataset}.txt"), &s, quiet)?;
+        }
+        "gen" => {
+            let cfg = suite_config(&a)?;
+            let dataset = a.opts.get("dataset").context("--dataset required")?;
+            let out = a.opts.get("out").context("--out required")?;
+            let d = registry::find(dataset).context("unknown dataset")?;
+            let m = d.build(cfg.scale);
+            sparsezipper::matrix::mm::write_mtx(std::path::Path::new(out), &m)?;
+            println!("wrote {} ({} rows, {} nnz)", out, m.nrows, m.nnz());
+        }
+        other => bail!("unknown command '{other}' (try: spz help)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! Coordinate-format sparse matrix (builder format for the generators).
+
+use crate::matrix::csr::Csr;
+
+/// COO triplets; duplicates allowed until conversion (summed in `to_csr`).
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo {
+            nrows,
+            ncols,
+            rows: Vec::new(),
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Self {
+        Coo {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, r: u32, c: u32, v: f32) {
+        debug_assert!((r as usize) < self.nrows && (c as usize) < self.ncols);
+        self.rows.push(r);
+        self.cols.push(c);
+        self.vals.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Convert to CSR; duplicate (r,c) entries are summed, columns sorted.
+    pub fn to_csr(&self) -> Csr {
+        // Counting sort by row.
+        let mut counts = vec![0usize; self.nrows + 1];
+        for &r in &self.rows {
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            counts[i + 1] += counts[i];
+        }
+        let mut order = vec![0u32; self.nnz()];
+        {
+            let mut next = counts.clone();
+            for (i, &r) in self.rows.iter().enumerate() {
+                order[next[r as usize]] = i as u32;
+                next[r as usize] += 1;
+            }
+        }
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        let mut indices: Vec<u32> = Vec::with_capacity(self.nnz());
+        let mut data: Vec<f32> = Vec::with_capacity(self.nnz());
+        indptr.push(0usize);
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
+        for r in 0..self.nrows {
+            scratch.clear();
+            for &oi in &order[counts[r]..counts[r + 1]] {
+                scratch.push((self.cols[oi as usize], self.vals[oi as usize]));
+            }
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            // merge duplicates
+            let mut i = 0;
+            while i < scratch.len() {
+                let (c, mut v) = scratch[i];
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == c {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                indices.push(c);
+                data.push(v);
+                i = j;
+            }
+            indptr.push(indices.len());
+        }
+        Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            indptr,
+            indices,
+            data,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_csr_sorts_and_sums_duplicates() {
+        let mut m = Coo::new(2, 4);
+        m.push(0, 3, 1.0);
+        m.push(0, 1, 2.0);
+        m.push(0, 3, 0.5);
+        m.push(1, 0, 4.0);
+        let c = m.to_csr();
+        assert_eq!(c.indptr, vec![0, 2, 3]);
+        assert_eq!(c.indices, vec![1, 3, 0]);
+        assert_eq!(c.data, vec![2.0, 1.5, 4.0]);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let mut m = Coo::new(3, 3);
+        m.push(2, 2, 1.0);
+        let c = m.to_csr();
+        assert_eq!(c.indptr, vec![0, 0, 0, 1]);
+        assert_eq!(c.nnz(), 1);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Coo::new(2, 2);
+        let c = m.to_csr();
+        assert_eq!(c.nnz(), 0);
+        assert_eq!(c.indptr, vec![0, 0, 0]);
+    }
+}

@@ -1,0 +1,253 @@
+//! Compressed Sparse Row matrix — the format all SpGEMM implementations
+//! consume and produce (the row-wise dataflow needs no CSC conversion,
+//! paper §II-B).
+
+/// CSR sparse matrix with u32 column indices and f32 values (ELEN=32).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// len nrows+1; row r occupies indices[indptr[r]..indptr[r+1]].
+    pub indptr: Vec<usize>,
+    /// column indices, sorted ascending within each row, unique.
+    pub indices: Vec<u32>,
+    pub data: Vec<f32>,
+}
+
+impl Csr {
+    pub fn empty(nrows: usize, ncols: usize) -> Self {
+        Csr {
+            nrows,
+            ncols,
+            indptr: vec![0; nrows + 1],
+            indices: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    /// Identity matrix (useful for tests and AMG example).
+    pub fn identity(n: usize) -> Self {
+        Csr {
+            nrows: n,
+            ncols: n,
+            indptr: (0..=n).collect(),
+            indices: (0..n as u32).collect(),
+            data: vec![1.0; n],
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.nrows == 0 || self.ncols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.nrows as f64 * self.ncols as f64)
+    }
+
+    #[inline]
+    pub fn row_range(&self, r: usize) -> std::ops::Range<usize> {
+        self.indptr[r]..self.indptr[r + 1]
+    }
+
+    #[inline]
+    pub fn row_len(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let rng = self.row_range(r);
+        (&self.indices[rng.clone()], &self.data[rng])
+    }
+
+    /// Build from per-row (already sorted, unique) key/value lists.
+    pub fn from_rows(nrows: usize, ncols: usize, rows: Vec<(Vec<u32>, Vec<f32>)>) -> Self {
+        assert_eq!(rows.len(), nrows);
+        let nnz: usize = rows.iter().map(|(k, _)| k.len()).sum();
+        let mut indptr = Vec::with_capacity(nrows + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut data = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for (k, v) in rows {
+            debug_assert_eq!(k.len(), v.len());
+            debug_assert!(k.windows(2).all(|w| w[0] < w[1]), "rows must be sorted unique");
+            indices.extend_from_slice(&k);
+            data.extend_from_slice(&v);
+            indptr.push(indices.len());
+        }
+        Csr {
+            nrows,
+            ncols,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// Structural + numeric validation (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.nrows + 1 {
+            return Err("indptr length".into());
+        }
+        if self.indptr[0] != 0 || *self.indptr.last().unwrap() != self.indices.len() {
+            return Err("indptr endpoints".into());
+        }
+        if self.indices.len() != self.data.len() {
+            return Err("indices/data length mismatch".into());
+        }
+        for r in 0..self.nrows {
+            if self.indptr[r] > self.indptr[r + 1] {
+                return Err(format!("indptr not monotone at row {r}"));
+            }
+            let (k, _) = self.row(r);
+            for w in k.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {r} not sorted-unique"));
+                }
+            }
+            if let Some(&max) = k.last() {
+                if max as usize >= self.ncols {
+                    return Err(format!("row {r} column out of range"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Transpose (CSR of A^T). Counting-sort based, O(nnz).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.ncols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            counts[i + 1] += counts[i];
+        }
+        let mut indices = vec![0u32; self.nnz()];
+        let mut data = vec![0f32; self.nnz()];
+        let mut next = counts.clone();
+        for r in 0..self.nrows {
+            for i in self.row_range(r) {
+                let c = self.indices[i] as usize;
+                indices[next[c]] = r as u32;
+                data[next[c]] = self.data[i];
+                next[c] += 1;
+            }
+        }
+        Csr {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            indptr: counts,
+            indices,
+            data,
+        }
+    }
+
+    /// Dense representation (small matrices / oracles only).
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        let mut d = vec![vec![0f32; self.ncols]; self.nrows];
+        for r in 0..self.nrows {
+            for i in self.row_range(r) {
+                d[r][self.indices[i] as usize] = self.data[i];
+            }
+        }
+        d
+    }
+
+    /// Approximate numeric equality with identical structure.
+    pub fn approx_eq(&self, other: &Csr, rel: f32) -> bool {
+        if self.nrows != other.nrows
+            || self.ncols != other.ncols
+            || self.indptr != other.indptr
+            || self.indices != other.indices
+        {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= rel * a.abs().max(b.abs()).max(1.0))
+    }
+
+    /// Sum of |values| (quick fingerprint for tests).
+    pub fn abs_sum(&self) -> f64 {
+        self.data.iter().map(|v| v.abs() as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [[1 0 2], [0 0 0], [3 4 0]]
+        Csr {
+            nrows: 3,
+            ncols: 3,
+            indptr: vec![0, 2, 2, 4],
+            indices: vec![0, 2, 0, 1],
+            data: vec![1.0, 2.0, 3.0, 4.0],
+        }
+    }
+
+    #[test]
+    fn validate_good() {
+        assert!(sample().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_unsorted() {
+        let mut m = sample();
+        m.indices.swap(0, 1);
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        let mut m = sample();
+        m.indices[0] = 17;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = sample();
+        let t = m.transpose().transpose();
+        assert_eq!(m, t);
+    }
+
+    #[test]
+    fn transpose_correct() {
+        let t = sample().transpose();
+        let d = t.to_dense();
+        assert_eq!(d[0], vec![1.0, 0.0, 3.0]);
+        assert_eq!(d[1], vec![0.0, 0.0, 4.0]);
+        assert_eq!(d[2], vec![2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn identity_validates() {
+        let i = Csr::identity(5);
+        assert!(i.validate().is_ok());
+        assert_eq!(i.nnz(), 5);
+    }
+
+    #[test]
+    fn from_rows_matches() {
+        let m = Csr::from_rows(
+            2,
+            3,
+            vec![(vec![0, 2], vec![1.0, 2.0]), (vec![1], vec![5.0])],
+        );
+        assert!(m.validate().is_ok());
+        assert_eq!(m.row(1), (&[1u32][..], &[5.0f32][..]));
+    }
+
+    #[test]
+    fn density() {
+        assert!((sample().density() - 4.0 / 9.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,486 @@
+//! Synthetic sparse-matrix generators.
+//!
+//! Each generator targets the degree distribution / structure of one family
+//! in Table III (DESIGN.md "Substitutions"): RMAT for social/web graphs,
+//! stencils for PDE meshes, banded for FEM stiffness matrices,
+//! union-of-permutations for the perfectly regular `m133-b3`, and grid-ish
+//! chains for road networks. Values are uniform in [0.5, 1.5) — SpGEMM
+//! performance is structure-driven, values only flow through the datapath.
+
+use crate::matrix::{Coo, Csr};
+use crate::util::Pcg32;
+
+fn rand_val(rng: &mut Pcg32) -> f32 {
+    rng.gen_f32_range(0.5, 1.5)
+}
+
+/// Erdős–Rényi-ish: `nnz` entries thrown uniformly (duplicates collapse,
+/// so the realized nnz is slightly lower at high densities).
+pub fn erdos_renyi(nrows: usize, ncols: usize, nnz: usize, seed: u64) -> Csr {
+    let mut rng = Pcg32::new(seed);
+    let mut coo = Coo::with_capacity(nrows, ncols, nnz);
+    for _ in 0..nnz {
+        let r = rng.gen_usize(nrows) as u32;
+        let c = rng.gen_usize(ncols) as u32;
+        let v = rand_val(&mut rng);
+        coo.push(r, c, v);
+    }
+    dedup_value_fix(coo.to_csr())
+}
+
+/// R-MAT / Kronecker-style power-law graph over a 2^scale vertex square,
+/// truncated to `nrows` x `ncols`. (a,b,c,d) sum to 1; larger `a` = more
+/// skew (hubbier degree distribution, higher work variance).
+#[allow(clippy::too_many_arguments)]
+pub fn rmat(
+    nrows: usize,
+    ncols: usize,
+    nnz: usize,
+    a: f64,
+    b: f64,
+    c: f64,
+    seed: u64,
+) -> Csr {
+    let scale_r = (nrows as f64).log2().ceil() as u32;
+    let scale_c = (ncols as f64).log2().ceil() as u32;
+    let scale = scale_r.max(scale_c);
+    let mut rng = Pcg32::new(seed);
+    let mut coo = Coo::with_capacity(nrows, ncols, nnz);
+    let mut placed = 0usize;
+    let mut attempts = 0usize;
+    let max_attempts = nnz * 8 + 1024;
+    while placed < nnz && attempts < max_attempts {
+        attempts += 1;
+        let (mut r, mut cc) = (0u64, 0u64);
+        // Add per-level noise so the quadrant probabilities wobble (standard
+        // "smoothed" R-MAT: avoids exactly self-similar artifacts).
+        for lvl in 0..scale {
+            let u = rng.gen_f64();
+            let (qa, qb, qc) = (a, a + b, a + b + c);
+            let (dr, dc) = if u < qa {
+                (0, 0)
+            } else if u < qb {
+                (0, 1)
+            } else if u < qc {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            r |= (dr as u64) << (scale - 1 - lvl);
+            cc |= (dc as u64) << (scale - 1 - lvl);
+        }
+        if (r as usize) < nrows && (cc as usize) < ncols {
+            let v = rand_val(&mut rng);
+            coo.push(r as u32, cc as u32, v);
+            placed += 1;
+        }
+    }
+    dedup_value_fix(coo.to_csr())
+}
+
+/// 5-point 2-D Laplacian stencil on an nx x ny grid.
+pub fn grid2d(nx: usize, ny: usize, seed: u64) -> Csr {
+    let mut rng = Pcg32::new(seed);
+    let n = nx * ny;
+    let mut coo = Coo::with_capacity(n, n, n * 5);
+    let idx = |x: usize, y: usize| (y * nx + x) as u32;
+    for y in 0..ny {
+        for x in 0..nx {
+            let me = idx(x, y);
+            coo.push(me, me, 4.0 + rand_val(&mut rng));
+            if x > 0 {
+                coo.push(me, idx(x - 1, y), -rand_val(&mut rng));
+            }
+            if x + 1 < nx {
+                coo.push(me, idx(x + 1, y), -rand_val(&mut rng));
+            }
+            if y > 0 {
+                coo.push(me, idx(x, y - 1), -rand_val(&mut rng));
+            }
+            if y + 1 < ny {
+                coo.push(me, idx(x, y + 1), -rand_val(&mut rng));
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Road-network-like planar graph: 2-D grid where each edge exists with
+/// probability `p_edge` — degree ~2.5, low work variance like `usroads`.
+/// Vertex ids are randomly permuted: SuiteSparse road networks are not
+/// geometrically ordered, so accumulator accesses scatter (the <20% L1 hit
+/// rate the paper reports for scl-array on usroads depends on this).
+pub fn road(nx: usize, ny: usize, p_edge: f64, seed: u64) -> Csr {
+    let mut rng = Pcg32::new(seed);
+    let n = nx * ny;
+    let perm = rng.permutation(n);
+    let mut coo = Coo::with_capacity(n, n, (n as f64 * 4.0 * p_edge) as usize);
+    let idx = |x: usize, y: usize| perm[y * nx + x];
+    for y in 0..ny {
+        for x in 0..nx {
+            let me = idx(x, y);
+            if x + 1 < nx && rng.gen_bool(p_edge) {
+                let v = rand_val(&mut rng);
+                coo.push(me, idx(x + 1, y), v);
+                coo.push(idx(x + 1, y), me, v);
+            }
+            if y + 1 < ny && rng.gen_bool(p_edge) {
+                let v = rand_val(&mut rng);
+                coo.push(me, idx(x, y + 1), v);
+                coo.push(idx(x, y + 1), me, v);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// 27-point 3-D stencil on an n^3 cube (`p3d`-like Poisson problem).
+pub fn grid3d_27pt(n: usize, seed: u64) -> Csr {
+    let mut rng = Pcg32::new(seed);
+    let total = n * n * n;
+    let mut coo = Coo::with_capacity(total, total, total * 27);
+    let idx = |x: usize, y: usize, z: usize| ((z * n + y) * n + x) as u32;
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                let me = idx(x, y, z);
+                for dz in -1isize..=1 {
+                    for dy in -1isize..=1 {
+                        for dx in -1isize..=1 {
+                            let (nx_, ny_, nz_) = (
+                                x as isize + dx,
+                                y as isize + dy,
+                                z as isize + dz,
+                            );
+                            if nx_ < 0
+                                || ny_ < 0
+                                || nz_ < 0
+                                || nx_ >= n as isize
+                                || ny_ >= n as isize
+                                || nz_ >= n as isize
+                            {
+                                continue;
+                            }
+                            let v = if dx == 0 && dy == 0 && dz == 0 {
+                                26.0 + rand_val(&mut rng)
+                            } else {
+                                -rand_val(&mut rng)
+                            };
+                            coo.push(me, idx(nx_ as usize, ny_ as usize, nz_ as usize), v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Power-law graph with *controlled* degree dispersion: every vertex gets a
+/// lognormal weight (sigma chosen from the target work/deg^2 ratio of
+/// Table III) that drives both its out-degree and its popularity as a
+/// destination. Because the same weight controls in- and out-degree,
+/// E[work/row] = deg^2 * (1 + cv^2) exactly as in real scale-free graphs —
+/// this is the knob the R-MAT recursion lacks (its tails overshoot Table
+/// III's work columns by 10-25x).
+pub fn powerlaw(n: usize, nnz: usize, sigma: f64, seed: u64) -> Csr {
+    powerlaw_clustered(n, nnz, sigma, 0.0, seed)
+}
+
+/// `powerlaw` plus triangle closure: with probability `p_tri` an edge is
+/// redirected to a random out-neighbour of its original target, so
+/// neighbourhoods of related rows overlap. This is the knob for Table III's
+/// work : out-nnz compression ratio (real social/web graphs are clustered;
+/// independent sampling would give out-nnz ~= work).
+pub fn powerlaw_clustered(n: usize, nnz: usize, sigma: f64, p_tri: f64, seed: u64) -> Csr {
+    let mut rng = Pcg32::new(seed);
+    // Lognormal weights, normalized later via the cumulative table.
+    let mut w: Vec<f64> = (0..n)
+        .map(|_| (sigma * rng.gen_normal() - 0.5 * sigma * sigma).exp())
+        .collect();
+    let total: f64 = w.iter().sum();
+    // Cumulative table for destination sampling (binary search).
+    let mut cum: Vec<f64> = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for x in &w {
+        acc += x;
+        cum.push(acc);
+    }
+    let cap = (n / 4).max(8) as f64;
+    // Base targets, row-major so triangle closure can look up neighbours.
+    let mut adj: Vec<Vec<u32>> = Vec::with_capacity(n);
+    for r in 0..n {
+        // Expected out-degree proportional to the vertex weight.
+        let mean_deg = (nnz as f64) * w[r] / total;
+        let d = (rng.gen_poisson(mean_deg.min(cap)) as usize).min(n - 1);
+        let mut row = Vec::with_capacity(d);
+        for _ in 0..d {
+            let u = rng.gen_f64() * acc;
+            let c = cum.partition_point(|&x| x < u).min(n - 1);
+            row.push(c as u32);
+        }
+        let _ = r;
+        adj.push(row);
+    }
+    // Triangle closure: redirect edges to neighbours-of-neighbours.
+    let mut coo = Coo::with_capacity(n, n, nnz + nnz / 8);
+    for r in 0..n {
+        for i in 0..adj[r].len() {
+            let mut c = adj[r][i];
+            if p_tri > 0.0 && rng.gen_bool(p_tri) {
+                let tgt = &adj[c as usize];
+                if !tgt.is_empty() {
+                    c = tgt[rng.gen_usize(tgt.len())];
+                }
+            }
+            coo.push(r as u32, c, rand_val(&mut rng));
+        }
+    }
+    w.clear();
+    dedup_value_fix(coo.to_csr())
+}
+
+/// Block-banded FEM-like matrix (`bcsstk17`, `cage11`): rows come in blocks
+/// of `block` consecutive rows sharing the same column clusters (element
+/// coupling), so neighbouring rows reference overlapping column sets and
+/// the A*A output row is much denser-compressed than the work count
+/// (Table III's high work : out-nnz ratio). Per-block degree jitter sets a
+/// moderate work variance.
+pub fn block_banded(
+    n: usize,
+    half_band: usize,
+    per_row: usize,
+    block: usize,
+    jitter: f64,
+    seed: u64,
+) -> Csr {
+    let mut rng = Pcg32::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n * per_row + n);
+    let mut b0 = 0usize;
+    while b0 < n {
+        let bsize = block.min(n - b0);
+        // Per-block degree scale (lognormal-ish jitter).
+        let scale = (jitter * rng.gen_normal()).exp();
+        let deg = ((per_row as f64 * scale).round() as usize).clamp(2, 4 * per_row);
+        // Shared clusters for this block.
+        let nclusters = (deg / 6).max(1);
+        let clen = deg / nclusters;
+        let center = b0 + bsize / 2;
+        let lo = center.saturating_sub(half_band);
+        let hi = (center + half_band).min(n - 1);
+        let width = hi - lo + 1;
+        let clusters: Vec<usize> = (0..nclusters).map(|_| lo + rng.gen_usize(width)).collect();
+        for r in b0..b0 + bsize {
+            coo.push(r as u32, r as u32, 10.0 + rand_val(&mut rng));
+            for &cs in &clusters {
+                for c in cs..(cs + clen).min(n) {
+                    if c != r {
+                        coo.push(r as u32, c as u32, -rand_val(&mut rng));
+                    }
+                }
+            }
+        }
+        b0 += bsize;
+    }
+    dedup_value_fix(coo.to_csr())
+}
+
+/// Banded FEM-like matrix (`bcsstk17`): each row has ~`per_row` entries
+/// inside a ±`half_band` band around the diagonal, in contiguous clusters.
+pub fn banded(n: usize, half_band: usize, per_row: usize, seed: u64) -> Csr {
+    let mut rng = Pcg32::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n * per_row);
+    for r in 0..n {
+        let lo = r.saturating_sub(half_band);
+        let hi = (r + half_band).min(n - 1);
+        let width = hi - lo + 1;
+        coo.push(r as u32, r as u32, 10.0 + rand_val(&mut rng));
+        // Contiguous cluster starts (FEM element coupling blocks).
+        let clusters = (per_row / 6).max(1);
+        for _ in 0..clusters {
+            let start = lo + rng.gen_usize(width);
+            let len = (per_row / clusters).max(1);
+            for c in start..(start + len).min(hi + 1) {
+                if c != r {
+                    coo.push(r as u32, c as u32, -rand_val(&mut rng));
+                }
+            }
+        }
+    }
+    dedup_value_fix(coo.to_csr())
+}
+
+/// Union of `k` random permutation matrices: every row AND column has
+/// exactly `k` nonzeros (up to collisions, retried) — the `m133-b3`
+/// simplicial-boundary stand-in with zero work variance.
+pub fn kregular(n: usize, k: usize, seed: u64) -> Csr {
+    let mut rng = Pcg32::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n * k);
+    let mut used: Vec<Vec<u32>> = vec![Vec::with_capacity(k); n];
+    for _ in 0..k {
+        let perm = rng.permutation(n);
+        for (r, &c) in perm.iter().enumerate() {
+            // Avoid duplicate (r,c) from earlier permutations by linear probing
+            // the column space (keeps row/col degree exactly k in expectation;
+            // collisions are vanishingly rare for n >> k).
+            let mut c = c;
+            while used[r].contains(&c) {
+                c = (c + 1) % n as u32;
+            }
+            used[r].push(c);
+            coo.push(r as u32, c, if rng.gen_bool(0.5) { 1.0 } else { -1.0 });
+        }
+    }
+    coo.to_csr()
+}
+
+/// Near-uniform-degree random matrix (`cage11`-like): row degree uniform in
+/// [k_lo, k_hi], columns uniform — tiny work variance.
+pub fn uniform_degree(n: usize, k_lo: usize, k_hi: usize, seed: u64) -> Csr {
+    let mut rng = Pcg32::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n * (k_lo + k_hi) / 2);
+    for r in 0..n {
+        let k = k_lo + rng.gen_usize(k_hi - k_lo + 1);
+        for _ in 0..k {
+            coo.push(r as u32, rng.gen_usize(n) as u32, rand_val(&mut rng));
+        }
+    }
+    dedup_value_fix(coo.to_csr())
+}
+
+/// Circuit-like matrix (`scircuit`): mostly near-diagonal couplings plus a
+/// few long-range "nets"; moderate, low-variance degrees.
+pub fn circuit(n: usize, mean_deg: f64, p_longrange: f64, seed: u64) -> Csr {
+    let mut rng = Pcg32::new(seed);
+    let mut coo = Coo::with_capacity(n, n, (n as f64 * mean_deg) as usize);
+    for r in 0..n {
+        coo.push(r as u32, r as u32, rand_val(&mut rng));
+        let k = rng.gen_poisson(mean_deg - 1.0);
+        for _ in 0..k {
+            let c = if rng.gen_bool(p_longrange) {
+                rng.gen_usize(n) as u32
+            } else {
+                // local coupling within +-64
+                let off = rng.gen_usize(129) as i64 - 64;
+                (r as i64 + off).clamp(0, n as i64 - 1) as u32
+            };
+            coo.push(r as u32, c, rand_val(&mut rng));
+        }
+    }
+    dedup_value_fix(coo.to_csr())
+}
+
+/// COO->CSR collapses duplicate coordinates by summing; re-randomize values
+/// so sums don't drift outside [0.5, 1.5) (keeps numerics tame for f32
+/// accumulation checks).
+fn dedup_value_fix(mut m: Csr) -> Csr {
+    let mut rng = Pcg32::new(0xC0FFEE);
+    for v in &mut m.data {
+        if *v < 0.5 || *v >= 1.5 {
+            *v = rng.gen_f32_range(0.5, 1.5);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn er_shape_and_validity() {
+        let m = erdos_renyi(100, 80, 500, 1);
+        assert!(m.validate().is_ok());
+        assert_eq!(m.nrows, 100);
+        assert_eq!(m.ncols, 80);
+        assert!(m.nnz() > 400 && m.nnz() <= 500);
+    }
+
+    #[test]
+    fn er_deterministic() {
+        let a = erdos_renyi(50, 50, 100, 7);
+        let b = erdos_renyi(50, 50, 100, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let m = rmat(1024, 1024, 8192, 0.57, 0.19, 0.19, 3);
+        assert!(m.validate().is_ok());
+        let degs: Vec<f64> = (0..m.nrows).map(|r| m.row_len(r) as f64).collect();
+        let cv = crate::util::stats::cv(&degs);
+        assert!(cv > 0.8, "rmat should be skewed, cv={cv}");
+    }
+
+    #[test]
+    fn grid2d_degrees() {
+        let m = grid2d(10, 10, 0);
+        assert!(m.validate().is_ok());
+        assert_eq!(m.nrows, 100);
+        // interior rows have 5 entries
+        assert_eq!(m.row_len(55), 5);
+        // corner has 3
+        assert_eq!(m.row_len(0), 3);
+    }
+
+    #[test]
+    fn grid3d_27pt_interior() {
+        let m = grid3d_27pt(5, 0);
+        assert!(m.validate().is_ok());
+        // interior point (2,2,2) has full 27 neighbours
+        let center = (2 * 5 + 2) * 5 + 2;
+        assert_eq!(m.row_len(center), 27);
+    }
+
+    #[test]
+    fn kregular_exact_degree() {
+        let m = kregular(200, 4, 9);
+        assert!(m.validate().is_ok());
+        for r in 0..m.nrows {
+            assert_eq!(m.row_len(r), 4, "row {r}");
+        }
+        assert_eq!(m.nnz(), 800);
+    }
+
+    #[test]
+    fn uniform_degree_bounds() {
+        let m = uniform_degree(500, 12, 17, 11);
+        assert!(m.validate().is_ok());
+        let avg = m.nnz() as f64 / m.nrows as f64;
+        assert!(avg > 11.0 && avg < 17.5, "avg degree {avg}");
+    }
+
+    #[test]
+    fn banded_stays_in_band() {
+        let m = banded(100, 10, 8, 2);
+        assert!(m.validate().is_ok());
+        for r in 0..m.nrows {
+            let (k, _) = m.row(r);
+            for &c in k {
+                assert!((c as i64 - r as i64).abs() <= 10);
+            }
+        }
+    }
+
+    #[test]
+    fn road_sparse_low_degree() {
+        let m = road(30, 30, 0.64, 4);
+        assert!(m.validate().is_ok());
+        let avg = m.nnz() as f64 / m.nrows as f64;
+        assert!(avg > 1.5 && avg < 3.5, "avg {avg}");
+    }
+
+    #[test]
+    fn circuit_validates() {
+        let m = circuit(1000, 5.6, 0.1, 5);
+        assert!(m.validate().is_ok());
+        let avg = m.nnz() as f64 / m.nrows as f64;
+        assert!(avg > 4.0 && avg < 7.0, "avg {avg}");
+    }
+
+    #[test]
+    fn values_in_range() {
+        let m = erdos_renyi(100, 100, 400, 13);
+        assert!(m.data.iter().all(|&v| (0.5..1.5).contains(&v)));
+    }
+}

@@ -1,0 +1,15 @@
+//! Sparse-matrix substrate: CSR/COO formats, MatrixMarket I/O, synthetic
+//! dataset generators, the calibrated Table III dataset registry, and the
+//! statistics the paper characterizes datasets with.
+
+pub mod coo;
+pub mod csr;
+pub mod gen;
+pub mod mm;
+pub mod registry;
+pub mod stats;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use registry::{Dataset, DATASETS};
+pub use stats::MatrixStats;

@@ -1,0 +1,240 @@
+//! The 14-dataset evaluation suite of Table III.
+//!
+//! SuiteSparse downloads are unavailable in this environment, so each matrix
+//! is replaced by a calibrated synthetic stand-in whose Table III statistics
+//! (rows, nnz, work/row, output density, within-16-row work CV) approximate
+//! the original (DESIGN.md "Substitutions"). `spz table3` prints paper vs
+//! measured side by side. Real `.mtx` files can be substituted via
+//! `spz ... --mtx-dir DIR` (files named `<name>.mtx`).
+
+use crate::matrix::{gen, Csr};
+
+/// Statistics as printed in Table III of the paper.
+#[derive(Clone, Copy, Debug)]
+pub struct PaperRow {
+    pub rows: f64,
+    pub nnz: f64,
+    pub density: f64,
+    pub avg_work: f64,
+    pub avg_out_nnz: f64,
+    pub group_work: f64,
+    pub work_var: f64,
+}
+
+/// Generator recipe for the synthetic stand-in.
+#[derive(Clone, Copy, Debug)]
+pub enum GenSpec {
+    /// R-MAT power-law graph (a, b, c quadrant probabilities).
+    Rmat { rows: usize, nnz: usize, a: f64, b: f64, c: f64 },
+    /// Lognormal-weight power-law graph with controlled degree CV
+    /// (sigma derived from Table III's work/deg^2 ratio).
+    Powerlaw { rows: usize, nnz: usize, sigma: f64, p_tri: f64 },
+    /// Block-banded FEM matrix (shared column clusters per row block).
+    BlockBanded { n: usize, half_band: usize, per_row: usize, block: usize, jitter: f64 },
+    /// Road-like partial 2-D grid.
+    Road { nx: usize, ny: usize, p_edge: f64 },
+    /// 27-point 3-D stencil on n^3.
+    Grid3d { n: usize },
+    /// Banded FEM-like matrix.
+    Banded { n: usize, half_band: usize, per_row: usize },
+    /// Union of k permutations (exactly k nnz/row and /col).
+    KRegular { n: usize, k: usize },
+    /// Uniform row degree in [k_lo, k_hi].
+    UniformDeg { n: usize, k_lo: usize, k_hi: usize },
+    /// Circuit-like local + long-range couplings.
+    Circuit { n: usize, mean_deg: f64, p_long: f64 },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Dataset {
+    pub name: &'static str,
+    pub family: &'static str,
+    pub paper: PaperRow,
+    pub spec: GenSpec,
+    pub seed: u64,
+}
+
+impl Dataset {
+    /// Instantiate the synthetic stand-in, optionally scaled down
+    /// (`scale` in (0, 1]; rows and nnz shrink together so the densities and
+    /// per-row work statistics are approximately preserved).
+    pub fn build(&self, scale: f64) -> Csr {
+        let s = scale.clamp(1e-3, 1.0);
+        let sc = |x: usize| ((x as f64 * s).round() as usize).max(64);
+        match self.spec {
+            GenSpec::Rmat { rows, nnz, a, b, c } => {
+                gen::rmat(sc(rows), sc(rows), sc(nnz), a, b, c, self.seed)
+            }
+            GenSpec::Powerlaw { rows, nnz, sigma, p_tri } => {
+                gen::powerlaw_clustered(sc(rows), sc(nnz), sigma, p_tri, self.seed)
+            }
+            GenSpec::BlockBanded { n, half_band, per_row, block, jitter } => {
+                gen::block_banded(sc(n), half_band, per_row, block, jitter, self.seed)
+            }
+            GenSpec::Road { nx, ny, p_edge } => {
+                let f = s.sqrt();
+                let scx = |x: usize| ((x as f64 * f).round() as usize).max(8);
+                gen::road(scx(nx), scx(ny), p_edge, self.seed)
+            }
+            GenSpec::Grid3d { n } => {
+                let f = s.cbrt();
+                gen::grid3d_27pt(((n as f64 * f).round() as usize).max(4), self.seed)
+            }
+            GenSpec::Banded { n, half_band, per_row } => {
+                gen::banded(sc(n), half_band, per_row, self.seed)
+            }
+            GenSpec::KRegular { n, k } => gen::kregular(sc(n), k, self.seed),
+            GenSpec::UniformDeg { n, k_lo, k_hi } => gen::uniform_degree(sc(n), k_lo, k_hi, self.seed),
+            GenSpec::Circuit { n, mean_deg, p_long } => gen::circuit(sc(n), mean_deg, p_long, self.seed),
+        }
+    }
+}
+
+/// The evaluation suite, ordered as in Table III (by decreasing work var).
+pub const DATASETS: &[Dataset] = &[
+    Dataset {
+        name: "p2p",
+        family: "p2p network",
+        paper: PaperRow { rows: 63e3, nnz: 148e3, density: 3.78e-5, avg_work: 8.60, avg_out_nnz: 8.59, group_work: 0.14e3, work_var: 2.26 },
+        spec: GenSpec::Powerlaw { rows: 63_000, nnz: 148_000, sigma: 0.67, p_tri: 0.00 },
+        seed: 0xA001,
+    },
+    Dataset {
+        name: "wiki",
+        family: "social graph",
+        paper: PaperRow { rows: 8e3, nnz: 104e3, density: 1.51e-3, avg_work: 547.52, avg_out_nnz: 220.70, group_work: 8.76e3, work_var: 2.06 },
+        spec: GenSpec::Powerlaw { rows: 8_300, nnz: 104_000, sigma: 1.12, p_tri: 0.70 },
+        seed: 0xA002,
+    },
+    Dataset {
+        name: "soc",
+        family: "social graph",
+        paper: PaperRow { rows: 76e3, nnz: 509e3, density: 8.84e-5, avg_work: 526.09, avg_out_nnz: 271.20, group_work: 8.48e3, work_var: 1.43 },
+        spec: GenSpec::Powerlaw { rows: 76_000, nnz: 509_000, sigma: 1.50, p_tri: 0.60 },
+        seed: 0xA003,
+    },
+    Dataset {
+        name: "ca-cm",
+        family: "collaboration",
+        paper: PaperRow { rows: 23e3, nnz: 187e3, density: 3.49e-4, avg_work: 178.66, avg_out_nnz: 101.82, group_work: 2.86e3, work_var: 1.35 },
+        spec: GenSpec::Powerlaw { rows: 23_000, nnz: 187_000, sigma: 1.00, p_tri: 0.55 },
+        seed: 0xA004,
+    },
+    Dataset {
+        name: "ndwww",
+        family: "web graph",
+        paper: PaperRow { rows: 326e3, nnz: 930e3, density: 8.76e-6, avg_work: 29.42, avg_out_nnz: 12.63, group_work: 0.78e3, work_var: 1.30 },
+        spec: GenSpec::Powerlaw { rows: 326_000, nnz: 930_000, sigma: 1.13, p_tri: 0.65 },
+        seed: 0xA005,
+    },
+    Dataset {
+        name: "patents",
+        family: "citation graph",
+        paper: PaperRow { rows: 241e3, nnz: 561e3, density: 9.69e-6, avg_work: 10.83, avg_out_nnz: 9.48, group_work: 0.20e3, work_var: 1.29 },
+        spec: GenSpec::Powerlaw { rows: 241_000, nnz: 561_000, sigma: 0.83, p_tri: 0.15 },
+        seed: 0xA006,
+    },
+    Dataset {
+        name: "ca-cs",
+        family: "collaboration",
+        paper: PaperRow { rows: 227e3, nnz: 1628e3, density: 3.15e-5, avg_work: 164.38, avg_out_nnz: 72.68, group_work: 2.63e3, work_var: 0.98 },
+        spec: GenSpec::Powerlaw { rows: 227_000, nnz: 1_628_000, sigma: 1.08, p_tri: 0.65 },
+        seed: 0xA007,
+    },
+    Dataset {
+        name: "email",
+        family: "email graph",
+        paper: PaperRow { rows: 37e3, nnz: 184e3, density: 1.37e-4, avg_work: 163.04, avg_out_nnz: 89.30, group_work: 2.64e3, work_var: 0.88 },
+        spec: GenSpec::Powerlaw { rows: 37_000, nnz: 184_000, sigma: 1.30, p_tri: 0.60 },
+        seed: 0xA008,
+    },
+    Dataset {
+        name: "scircuit",
+        family: "circuit",
+        paper: PaperRow { rows: 171e3, nnz: 959e3, density: 3.28e-5, avg_work: 50.74, avg_out_nnz: 30.54, group_work: 0.81e3, work_var: 0.48 },
+        spec: GenSpec::Circuit { n: 171_000, mean_deg: 5.6, p_long: 0.06 },
+        seed: 0xA009,
+    },
+    Dataset {
+        name: "bcsstk17",
+        family: "FEM stiffness",
+        paper: PaperRow { rows: 11e3, nnz: 220e3, density: 1.83e-3, avg_work: 445.71, avg_out_nnz: 56.58, group_work: 7.13e3, work_var: 0.38 },
+        spec: GenSpec::BlockBanded { n: 11_000, half_band: 120, per_row: 19, block: 8, jitter: 0.35 },
+        seed: 0xA00A,
+    },
+    Dataset {
+        name: "usroads",
+        family: "road network",
+        paper: PaperRow { rows: 129e3, nnz: 331e3, density: 1.98e-5, avg_work: 7.18, avg_out_nnz: 5.45, group_work: 0.11e3, work_var: 0.31 },
+        spec: GenSpec::Road { nx: 360, ny: 360, p_edge: 0.64 },
+        seed: 0xA00B,
+    },
+    Dataset {
+        name: "p3d",
+        family: "3-D Poisson",
+        paper: PaperRow { rows: 14e3, nnz: 353e3, density: 1.93e-3, avg_work: 870.85, avg_out_nnz: 218.85, group_work: 13.93e3, work_var: 0.24 },
+        spec: GenSpec::Grid3d { n: 24 },
+        seed: 0xA00C,
+    },
+    Dataset {
+        name: "cage11",
+        family: "DNA electrophoresis",
+        paper: PaperRow { rows: 39e3, nnz: 560e3, density: 3.66e-4, avg_work: 225.13, avg_out_nnz: 97.59, group_work: 3.60e3, work_var: 0.08 },
+        spec: GenSpec::BlockBanded { n: 39_000, half_band: 500, per_row: 14, block: 4, jitter: 0.10 },
+        seed: 0xA00D,
+    },
+    Dataset {
+        name: "m133-b3",
+        family: "simplicial complex",
+        paper: PaperRow { rows: 200e3, nnz: 800e3, density: 2.00e-5, avg_work: 16.00, avg_out_nnz: 15.90, group_work: 0.26e3, work_var: 0.00 },
+        spec: GenSpec::KRegular { n: 200_000, k: 4 },
+        seed: 0xA00E,
+    },
+];
+
+/// Look a dataset up by name.
+pub fn find(name: &str) -> Option<&'static Dataset> {
+    DATASETS.iter().find(|d| d.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fourteen_datasets() {
+        assert_eq!(DATASETS.len(), 14);
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<_> = DATASETS.iter().map(|d| d.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 14);
+    }
+
+    #[test]
+    fn find_works() {
+        assert!(find("wiki").is_some());
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn small_scale_builds_validate() {
+        for d in DATASETS {
+            let m = d.build(0.02);
+            assert!(m.validate().is_ok(), "{} invalid", d.name);
+            assert!(m.nnz() > 0, "{} empty", d.name);
+        }
+    }
+
+    #[test]
+    fn m133_regular_at_scale() {
+        let d = find("m133-b3").unwrap();
+        let m = d.build(0.01);
+        for r in 0..m.nrows {
+            assert_eq!(m.row_len(r), 4);
+        }
+    }
+}

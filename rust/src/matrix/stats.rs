@@ -1,0 +1,134 @@
+//! Table III statistics: per-row work (multiplications to compute one output
+//! row of A*A), average output nnz per row (symbolic SpGEMM), per-16-row
+//! group work, and the within-group work coefficient of variation that
+//! drives spz's lockstep-imbalance story (§VI-A).
+
+use crate::matrix::Csr;
+use crate::util::stats::{cv, mean};
+
+/// The statistics reported in Table III for one matrix (self-multiply A*A).
+#[derive(Clone, Debug)]
+pub struct MatrixStats {
+    pub nrows: usize,
+    pub nnz: usize,
+    pub density: f64,
+    /// Avg multiplications per output row: mean_r sum_{j in A(r,:)} nnz(A(j,:)).
+    pub avg_work_per_row: f64,
+    /// Avg nonzeros per output row of A*A (symbolic).
+    pub avg_out_nnz_per_row: f64,
+    /// Avg work per group of `group` consecutive rows (in thousands in the paper).
+    pub avg_work_per_group: f64,
+    /// Mean within-group CV of per-row work ("Work Var" column).
+    pub work_var: f64,
+}
+
+/// Per-row work for C = A*B (number of multiplications, Gustavson).
+pub fn row_work(a: &Csr, b: &Csr) -> Vec<u64> {
+    (0..a.nrows)
+        .map(|r| {
+            a.row(r)
+                .0
+                .iter()
+                .map(|&j| b.row_len(j as usize) as u64)
+                .sum()
+        })
+        .collect()
+}
+
+/// Symbolic SpGEMM: nnz per output row of A*B (dense-bitmap per row, fast
+/// enough for our dataset sizes; used only for characterization).
+pub fn symbolic_out_nnz(a: &Csr, b: &Csr) -> Vec<u32> {
+    let mut mark = vec![u32::MAX; b.ncols];
+    let mut out = Vec::with_capacity(a.nrows);
+    for r in 0..a.nrows {
+        let stamp = r as u32;
+        let mut cnt = 0u32;
+        for &j in a.row(r).0 {
+            for &k in b.row(j as usize).0 {
+                if mark[k as usize] != stamp {
+                    mark[k as usize] = stamp;
+                    cnt += 1;
+                }
+            }
+        }
+        out.push(cnt);
+    }
+    out
+}
+
+/// Compute the full Table III row for `a * a` with 16-row groups.
+pub fn characterize(a: &Csr, group: usize) -> MatrixStats {
+    let work = row_work(a, a);
+    let out_nnz = symbolic_out_nnz(a, a);
+    let workf: Vec<f64> = work.iter().map(|&w| w as f64).collect();
+    let mut group_works = Vec::new();
+    let mut group_cvs = Vec::new();
+    for chunk in workf.chunks(group) {
+        let s: f64 = chunk.iter().sum();
+        group_works.push(s);
+        // Paper's "Work Var": CV of per-row work within a 16-row group,
+        // averaged over groups with non-trivial work.
+        if s > 0.0 {
+            group_cvs.push(cv(chunk));
+        }
+    }
+    MatrixStats {
+        nrows: a.nrows,
+        nnz: a.nnz(),
+        density: a.density(),
+        avg_work_per_row: mean(&workf),
+        avg_out_nnz_per_row: mean(&out_nnz.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+        avg_work_per_group: mean(&group_works),
+        work_var: mean(&group_cvs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn row_work_identity() {
+        let i = Csr::identity(8);
+        assert_eq!(row_work(&i, &i), vec![1; 8]);
+    }
+
+    #[test]
+    fn symbolic_identity() {
+        let i = Csr::identity(8);
+        assert_eq!(symbolic_out_nnz(&i, &i), vec![1; 8]);
+    }
+
+    #[test]
+    fn symbolic_matches_reference_spgemm() {
+        let a = gen::erdos_renyi(60, 60, 300, 21);
+        let c = crate::spgemm::reference(&a, &a);
+        let sym = symbolic_out_nnz(&a, &a);
+        for r in 0..a.nrows {
+            assert_eq!(sym[r] as usize, c.row_len(r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn kregular_work_var_zero() {
+        let m = gen::kregular(256, 4, 1);
+        let st = characterize(&m, 16);
+        assert!((st.avg_work_per_row - 16.0).abs() < 1e-9);
+        assert!(st.work_var < 1e-9, "work var {}", st.work_var);
+    }
+
+    #[test]
+    fn rmat_work_var_high() {
+        let m = gen::rmat(2048, 2048, 16384, 0.57, 0.19, 0.19, 2);
+        let st = characterize(&m, 16);
+        assert!(st.work_var > 0.7, "work var {}", st.work_var);
+    }
+
+    #[test]
+    fn density_consistent() {
+        let m = gen::erdos_renyi(100, 100, 400, 5);
+        let st = characterize(&m, 16);
+        assert!((st.density - m.density()).abs() < 1e-12);
+    }
+}

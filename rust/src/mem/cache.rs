@@ -1,0 +1,213 @@
+//! Set-associative, write-back, write-allocate cache with true-LRU
+//! replacement. Tag-only: no data is stored, only residency is tracked.
+//! Hot-path code — keep allocation-free after construction.
+
+use crate::config::CacheConfig;
+
+/// One cache level. Ways are kept in LRU order within each set
+/// (index 0 = MRU) — sets are small (4–8 ways) so rotation is cheap.
+#[derive(Debug, Clone)]
+pub struct Cache {
+    cfg: CacheConfig,
+    line_shift: u32,
+    set_mask: u64,
+    /// tags[set * ways + way]; u64::MAX = invalid.
+    tags: Vec<u64>,
+    /// dirty bit per way (parallel to `tags`).
+    dirty: Vec<bool>,
+    pub accesses: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub writebacks: u64,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let sets = cfg.sets();
+        assert!(sets.is_power_of_two(), "sets must be a power of two");
+        assert!(cfg.line_bytes.is_power_of_two());
+        Cache {
+            cfg,
+            line_shift: cfg.line_bytes.trailing_zeros(),
+            set_mask: (sets - 1) as u64,
+            tags: vec![u64::MAX; sets * cfg.ways],
+            dirty: vec![false; sets * cfg.ways],
+            accesses: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            writebacks: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    #[inline]
+    fn set_of(&self, line: u64) -> usize {
+        (line & self.set_mask) as usize
+    }
+
+    /// Access one *line address* (addr >> line_shift already applied by the
+    /// hierarchy). Returns `(hit, evicted_dirty_line)`.
+    #[inline]
+    pub fn access_line(&mut self, line: u64, write: bool) -> (bool, Option<u64>) {
+        self.accesses += 1;
+        let set = self.set_of(line);
+        let ways = self.cfg.ways;
+        let base = set * ways;
+        let tags = &mut self.tags[base..base + ways];
+        // Search for hit.
+        for w in 0..ways {
+            if tags[w] == line {
+                self.hits += 1;
+                // Move to MRU position.
+                let d = self.dirty[base + w] || write;
+                tags.copy_within(0..w, 1);
+                tags[0] = line;
+                self.dirty.copy_within(base..base + w, base + 1);
+                self.dirty[base] = d;
+                return (true, None);
+            }
+        }
+        // Miss: evict LRU (last way).
+        self.misses += 1;
+        let victim_tag = tags[ways - 1];
+        let victim_dirty = self.dirty[base + ways - 1];
+        let evicted = if victim_tag != u64::MAX {
+            self.evictions += 1;
+            if victim_dirty {
+                self.writebacks += 1;
+                Some(victim_tag)
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        tags.copy_within(0..ways - 1, 1);
+        tags[0] = line;
+        self.dirty.copy_within(base..base + ways - 1, base + 1);
+        self.dirty[base] = write;
+        (false, evicted)
+    }
+
+    /// Number of lines currently resident (test/introspection only).
+    pub fn resident_lines(&self) -> usize {
+        self.tags.iter().filter(|&&t| t != u64::MAX).count()
+    }
+
+    pub fn line_shift(&self) -> u32 {
+        self.line_shift
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.accesses = 0;
+        self.hits = 0;
+        self.misses = 0;
+        self.evictions = 0;
+        self.writebacks = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CacheConfig;
+
+    fn tiny() -> Cache {
+        // 4 sets x 2 ways x 64B lines = 512B cache.
+        Cache::new(CacheConfig {
+            size_bytes: 512,
+            ways: 2,
+            line_bytes: 64,
+            hit_latency: 2,
+        })
+    }
+
+    #[test]
+    fn cold_miss_then_hit() {
+        let mut c = tiny();
+        let (hit, _) = c.access_line(5, false);
+        assert!(!hit);
+        let (hit, _) = c.access_line(5, false);
+        assert!(hit);
+        assert_eq!(c.accesses, 2);
+        assert_eq!(c.hits, 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = tiny();
+        // Lines 0, 4, 8 all map to set 0 (4 sets).
+        c.access_line(0, false);
+        c.access_line(4, false);
+        c.access_line(0, false); // 0 becomes MRU, 4 is LRU
+        let (hit, _) = c.access_line(8, false); // evicts 4
+        assert!(!hit);
+        let (hit, _) = c.access_line(0, false);
+        assert!(hit, "0 must survive (was MRU)");
+        let (hit, _) = c.access_line(4, false);
+        assert!(!hit, "4 must have been evicted");
+    }
+
+    #[test]
+    fn dirty_writeback() {
+        let mut c = tiny();
+        c.access_line(0, true); // dirty
+        c.access_line(4, false);
+        let (_, wb) = c.access_line(8, false); // evicts 0 (LRU, dirty)
+        assert_eq!(wb, Some(0));
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn clean_eviction_no_writeback() {
+        let mut c = tiny();
+        c.access_line(0, false);
+        c.access_line(4, false);
+        let (_, wb) = c.access_line(8, false);
+        assert_eq!(wb, None);
+    }
+
+    #[test]
+    fn write_hit_marks_dirty() {
+        let mut c = tiny();
+        c.access_line(0, false);
+        c.access_line(0, true); // now dirty via write hit
+        c.access_line(4, false);
+        let (_, wb) = c.access_line(8, false);
+        assert_eq!(wb, Some(0));
+    }
+
+    #[test]
+    fn different_sets_dont_conflict() {
+        let mut c = tiny();
+        for line in 0..4 {
+            c.access_line(line, false);
+        }
+        for line in 0..4 {
+            let (hit, _) = c.access_line(line, false);
+            assert!(hit);
+        }
+    }
+
+    #[test]
+    fn resident_count() {
+        let mut c = tiny();
+        assert_eq!(c.resident_lines(), 0);
+        c.access_line(1, false);
+        c.access_line(2, false);
+        assert_eq!(c.resident_lines(), 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! Simulated memory subsystem: a bump allocator for the *simulated* address
+//! space, set-associative write-back caches, and the three-level hierarchy
+//! from Table II. This substrate replaces gem5's Ruby/CHI model with a
+//! tag-only timing simulation (DESIGN.md "Substitutions").
+
+pub mod alloc;
+pub mod cache;
+pub mod hierarchy;
+
+pub use alloc::SimAlloc;
+pub use cache::Cache;
+pub use hierarchy::{AccessKind, Hierarchy, MemStats};

@@ -1,0 +1,79 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO *text*
+//! artifacts, compile once, execute many times.
+//!
+//! HLO text (not a serialized `HloModuleProto`) is the interchange format:
+//! jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+//! (see /opt/xla-example/README.md and python/compile/aot.py).
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU client plus a set of named compiled executables.
+pub struct XlaRunner {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRunner {
+    /// Create the CPU client.
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(XlaRunner {
+            client,
+            exes: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact under `name`.
+    pub fn load_hlo_text(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact. The L2 model lowers with
+    /// `return_tuple=True`, so the single output literal is a tuple that is
+    /// decomposed into its elements here.
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        let result = exe.execute::<xla::Literal>(inputs).context("execute")?;
+        let lit = result[0][0].to_literal_sync().context("fetch result")?;
+        lit.to_tuple().context("decompose result tuple")
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.exes.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Default artifact directory: `$SPZ_ARTIFACTS` or `<repo>/artifacts`.
+pub fn artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("SPZ_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    // Relative to the crate root when run via cargo, else cwd.
+    let cargo = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    PathBuf::from(cargo).join("artifacts")
+}
+
+/// True if both AOT artifacts exist (tests skip gracefully otherwise).
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("sort_step.hlo.txt").exists() && dir.join("zip_step.hlo.txt").exists()
+}

@@ -1,0 +1,334 @@
+//! The matrix unit's *functional datapath* behind a trait, with two
+//! interchangeable engines:
+//!
+//! * [`NativeEngine`] — bit-equivalent Rust implementation of the normative
+//!   semantics (`systolic::functional`); default for large sweeps.
+//! * [`XlaEngine`] — executes the AOT-compiled L2 JAX model (which wraps the
+//!   L1 Pallas kernels) through PJRT; proves the three layers compose and is
+//!   cross-checked against the native engine in the integration tests.
+//!
+//! Timing is engine-independent: the `Machine` charges the systolic
+//! occupancy model either way; the engine only produces the data.
+
+use crate::runtime::client::XlaRunner;
+use crate::systolic::functional;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// Key sentinel for padded lanes (i32::MAX on the XLA side).
+pub const KEY_PAD: u32 = i32::MAX as u32;
+
+/// Output of one sort/zip step over a group of S streams.
+#[derive(Clone, Debug, Default)]
+pub struct StepOut {
+    /// Per-stream primary output chunk (sort: sorted A; zip: east part).
+    pub k0: Vec<Vec<u32>>,
+    pub v0: Vec<Vec<f32>>,
+    /// Per-stream secondary output chunk (sort: sorted B; zip: south part).
+    pub k1: Vec<Vec<u32>>,
+    pub v1: Vec<Vec<f32>>,
+    /// IC0/IC1: consumed-per-input-chunk counters (zip); echo of input
+    /// lengths for sort.
+    pub ic0: Vec<usize>,
+    pub ic1: Vec<usize>,
+    /// OC0/OC1: output chunk lengths.
+    pub oc0: Vec<usize>,
+    pub oc1: Vec<usize>,
+}
+
+/// A group-level functional unit for `mssort`/`mszip` pairs.
+pub trait ZipUnit {
+    /// Hardware chunk size N (= matrix register row length).
+    fn n(&self) -> usize;
+
+    /// `mssortk`+`mssortv` over a group of streams; chunk `i` of stream `s`
+    /// is `keys_i[s]` / `vals_i[s]` (len <= N each).
+    fn sort_step(
+        &mut self,
+        keys0: &[Vec<u32>],
+        vals0: &[Vec<f32>],
+        keys1: &[Vec<u32>],
+        vals1: &[Vec<f32>],
+    ) -> Result<StepOut>;
+
+    /// `mszipk`+`mszipv` over a group of streams (inputs sorted-unique).
+    fn zip_step(
+        &mut self,
+        keys0: &[Vec<u32>],
+        vals0: &[Vec<f32>],
+        keys1: &[Vec<u32>],
+        vals1: &[Vec<f32>],
+    ) -> Result<StepOut>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Engine selection for CLI / examples.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    Native,
+    Xla,
+}
+
+impl std::str::FromStr for Engine {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "native" => Ok(Engine::Native),
+            "xla" => Ok(Engine::Xla),
+            other => Err(format!("unknown engine '{other}' (native|xla)")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native engine
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust normative semantics.
+pub struct NativeEngine {
+    n: usize,
+}
+
+impl NativeEngine {
+    pub fn new(n: usize) -> Self {
+        NativeEngine { n }
+    }
+}
+
+impl ZipUnit for NativeEngine {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn sort_step(
+        &mut self,
+        keys0: &[Vec<u32>],
+        vals0: &[Vec<f32>],
+        keys1: &[Vec<u32>],
+        vals1: &[Vec<f32>],
+    ) -> Result<StepOut> {
+        let s = keys0.len();
+        let mut out = StepOut::default();
+        for i in 0..s {
+            let r = functional::sort_step(&keys0[i], &vals0[i], &keys1[i], &vals1[i]);
+            out.ic0.push(keys0[i].len());
+            out.ic1.push(keys1[i].len());
+            out.oc0.push(r.a_keys.len());
+            out.oc1.push(r.b_keys.len());
+            out.k0.push(r.a_keys);
+            out.v0.push(r.a_vals);
+            out.k1.push(r.b_keys);
+            out.v1.push(r.b_vals);
+        }
+        Ok(out)
+    }
+
+    fn zip_step(
+        &mut self,
+        keys0: &[Vec<u32>],
+        vals0: &[Vec<f32>],
+        keys1: &[Vec<u32>],
+        vals1: &[Vec<f32>],
+    ) -> Result<StepOut> {
+        let s = keys0.len();
+        let mut out = StepOut::default();
+        for i in 0..s {
+            let r = functional::zip_step(self.n, &keys0[i], &vals0[i], &keys1[i], &vals1[i]);
+            out.ic0.push(r.consumed_a);
+            out.ic1.push(r.consumed_b);
+            out.oc0.push(r.east_keys.len());
+            out.oc1.push(r.south_keys.len());
+            out.k0.push(r.east_keys);
+            out.v0.push(r.east_vals);
+            out.k1.push(r.south_keys);
+            out.v1.push(r.south_vals);
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA engine
+// ---------------------------------------------------------------------------
+
+/// Executes the AOT artifacts (L2 JAX model wrapping the L1 Pallas kernels)
+/// through the PJRT CPU client. Fixed group shape [S, N] per compilation
+/// (S = N = 16 by default, matching the matrix registers).
+pub struct XlaEngine {
+    runner: XlaRunner,
+    n: usize,
+    s: usize,
+}
+
+impl XlaEngine {
+    /// Load `sort_step.hlo.txt` and `zip_step.hlo.txt` from `dir`.
+    pub fn load(dir: &Path, s: usize, n: usize) -> Result<Self> {
+        let mut runner = XlaRunner::new()?;
+        runner
+            .load_hlo_text("sort_step", &dir.join("sort_step.hlo.txt"))
+            .context("load sort_step artifact")?;
+        runner
+            .load_hlo_text("zip_step", &dir.join("zip_step.hlo.txt"))
+            .context("load zip_step artifact")?;
+        Ok(XlaEngine { runner, n, s })
+    }
+
+    /// Pack a ragged group into padded [S, N] literals (keys i32 with
+    /// KEY_PAD sentinel, values f32 zero-padded) plus an i32[S] length vec.
+    fn pack(
+        &self,
+        keys: &[Vec<u32>],
+        vals: &[Vec<f32>],
+    ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+        ensure!(keys.len() <= self.s, "group larger than engine S");
+        let (s, n) = (self.s, self.n);
+        let mut k = vec![KEY_PAD as i32; s * n];
+        let mut v = vec![0f32; s * n];
+        let mut lens = vec![0i32; s];
+        for (i, (ks, vs)) in keys.iter().zip(vals).enumerate() {
+            ensure!(ks.len() <= n, "chunk longer than N");
+            for (j, (&kk, &vv)) in ks.iter().zip(vs).enumerate() {
+                k[i * n + j] = kk as i32;
+                v[i * n + j] = vv;
+            }
+            lens[i] = ks.len() as i32;
+        }
+        let kl = xla::Literal::vec1(&k).reshape(&[s as i64, n as i64])?;
+        let vl = xla::Literal::vec1(&v).reshape(&[s as i64, n as i64])?;
+        let ll = xla::Literal::vec1(&lens);
+        Ok((kl, vl, ll))
+    }
+
+    /// Unpack padded [S, N] outputs back into ragged vectors using `lens`.
+    fn unpack(
+        group: usize,
+        n: usize,
+        k: &xla::Literal,
+        v: &xla::Literal,
+        lens: &[i32],
+    ) -> Result<(Vec<Vec<u32>>, Vec<Vec<f32>>)> {
+        let kd = k.to_vec::<i32>()?;
+        let vd = v.to_vec::<f32>()?;
+        let mut ks = Vec::with_capacity(group);
+        let mut vs = Vec::with_capacity(group);
+        for i in 0..group {
+            let l = lens[i] as usize;
+            ks.push(kd[i * n..i * n + l].iter().map(|&x| x as u32).collect());
+            vs.push(vd[i * n..i * n + l].to_vec());
+        }
+        Ok((ks, vs))
+    }
+
+    fn run_step(
+        &mut self,
+        which: &str,
+        keys0: &[Vec<u32>],
+        vals0: &[Vec<f32>],
+        keys1: &[Vec<u32>],
+        vals1: &[Vec<f32>],
+    ) -> Result<StepOut> {
+        let group = keys0.len();
+        let (k0, v0, l0) = self.pack(keys0, vals0)?;
+        let (k1, v1, l1) = self.pack(keys1, vals1)?;
+        let outs = self.runner.run(which, &[k0, v0, k1, v1, l0, l1])?;
+        ensure!(outs.len() == 8, "expected 8 outputs, got {}", outs.len());
+        let ic0: Vec<i32> = outs[4].to_vec()?;
+        let ic1: Vec<i32> = outs[5].to_vec()?;
+        let oc0: Vec<i32> = outs[6].to_vec()?;
+        let oc1: Vec<i32> = outs[7].to_vec()?;
+        let (k0o, v0o) = Self::unpack(group, self.n, &outs[0], &outs[1], &oc0)?;
+        let (k1o, v1o) = Self::unpack(group, self.n, &outs[2], &outs[3], &oc1)?;
+        Ok(StepOut {
+            k0: k0o,
+            v0: v0o,
+            k1: k1o,
+            v1: v1o,
+            ic0: ic0[..group].iter().map(|&x| x as usize).collect(),
+            ic1: ic1[..group].iter().map(|&x| x as usize).collect(),
+            oc0: oc0[..group].iter().map(|&x| x as usize).collect(),
+            oc1: oc1[..group].iter().map(|&x| x as usize).collect(),
+        })
+    }
+}
+
+impl ZipUnit for XlaEngine {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn sort_step(
+        &mut self,
+        keys0: &[Vec<u32>],
+        vals0: &[Vec<f32>],
+        keys1: &[Vec<u32>],
+        vals1: &[Vec<f32>],
+    ) -> Result<StepOut> {
+        self.run_step("sort_step", keys0, vals0, keys1, vals1)
+    }
+
+    fn zip_step(
+        &mut self,
+        keys0: &[Vec<u32>],
+        vals0: &[Vec<f32>],
+        keys1: &[Vec<u32>],
+        vals1: &[Vec<f32>],
+    ) -> Result<StepOut> {
+        self.run_step("zip_step", keys0, vals0, keys1, vals1)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_sort_step_group() {
+        let mut e = NativeEngine::new(4);
+        let out = e
+            .sort_step(
+                &[vec![5, 8, 5], vec![]],
+                &[vec![1.0, 3.0, 7.0], vec![]],
+                &[vec![2, 1], vec![9]],
+                &[vec![1.0, 1.0], vec![2.0]],
+            )
+            .unwrap();
+        assert_eq!(out.k0[0], vec![5, 8]);
+        assert_eq!(out.v0[0], vec![8.0, 3.0]);
+        assert_eq!(out.k1[0], vec![1, 2]);
+        assert_eq!(out.oc0, vec![2, 0]);
+        assert_eq!(out.k1[1], vec![9]);
+    }
+
+    #[test]
+    fn native_zip_step_group() {
+        let mut e = NativeEngine::new(3);
+        let out = e
+            .zip_step(
+                &[vec![2, 5, 9]],
+                &[vec![1.0, 2.0, 3.0]],
+                &[vec![3, 8]],
+                &[vec![4.0, 5.0]],
+            )
+            .unwrap();
+        assert_eq!(out.k0[0], vec![2, 3, 5]);
+        assert_eq!(out.k1[0], vec![8]);
+        assert_eq!(out.ic0, vec![2]);
+        assert_eq!(out.ic1, vec![2]);
+    }
+
+    #[test]
+    fn engine_parse() {
+        assert_eq!("native".parse::<Engine>().unwrap(), Engine::Native);
+        assert_eq!("xla".parse::<Engine>().unwrap(), Engine::Xla);
+        assert!("tpu".parse::<Engine>().is_err());
+    }
+}

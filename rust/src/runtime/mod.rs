@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts` from the L2 JAX model + L1 Pallas kernels) and
+//! executes them from the Rust request path through the `xla` crate's CPU
+//! client. Python is never on the request path.
+
+pub mod client;
+pub mod engine;
+
+pub use client::XlaRunner;
+pub use engine::{Engine, NativeEngine, StepOut, XlaEngine, ZipUnit};

@@ -1,0 +1,362 @@
+//! The instrumented machine: functional execution + architectural event
+//! accounting. Every SpGEMM implementation takes `&mut Machine` and charges
+//! its scalar/vector/matrix/memory activity here; the coordinator snapshots
+//! [`RunMetrics`] afterwards to build Figures 8–11.
+
+use crate::config::SystemConfig;
+use crate::mem::{AccessKind, Hierarchy, MemStats, SimAlloc};
+use crate::sim::cost::CostModel;
+use crate::systolic::SystolicTiming;
+
+/// Execution-time breakdown phases (Figure 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Per-row work estimation, block sizing, temp allocation.
+    Preprocess = 0,
+    /// All multiplications; intermediate (key, value) generation.
+    Expand = 1,
+    /// Stream sorting/merging (incl. radix sort in vec-radix).
+    Sort = 2,
+    /// Final output row generation / compression.
+    Output = 3,
+    /// Row-index sorting + output shuffling (spz-rsort only).
+    RowSort = 4,
+}
+
+pub const NUM_PHASES: usize = 5;
+pub const PHASE_NAMES: [&str; NUM_PHASES] =
+    ["preprocess", "expand", "sort", "output", "rowsort"];
+
+/// Dynamic instruction / event counters (Figure 10 & 11 inputs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpCounters {
+    pub scalar_ops: u64,
+    pub branches: u64,
+    pub vector_ops: u64,
+    pub scalar_loads: u64,
+    pub scalar_stores: u64,
+    pub vector_loads: u64,
+    pub vector_stores: u64,
+    pub gather_elems: u64,
+    pub scatter_elems: u64,
+    pub mssortk: u64,
+    pub mszipk: u64,
+    pub mlxe: u64,
+    pub msxe: u64,
+    pub mmv: u64,
+    pub mmul: u64,
+    pub matrix_busy_cycles: u64,
+}
+
+/// Snapshot of one run, consumed by the coordinator.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub cycles: f64,
+    pub phase_cycles: [f64; NUM_PHASES],
+    pub ops: OpCounters,
+    pub mem: MemStats,
+    pub sim_footprint_bytes: u64,
+}
+
+impl RunMetrics {
+    pub fn total_matrix_kv_pairs(&self) -> u64 {
+        self.ops.mssortk + self.ops.mszipk
+    }
+}
+
+/// The simulated machine.
+pub struct Machine {
+    pub cfg: SystemConfig,
+    pub cost: CostModel,
+    pub mem: Hierarchy,
+    pub alloc: SimAlloc,
+    pub unit: SystolicTiming,
+    pub ops: OpCounters,
+    cycles: f64,
+    phase_cycles: [f64; NUM_PHASES],
+    phase: Phase,
+}
+
+impl Machine {
+    pub fn new(cfg: SystemConfig) -> Self {
+        Machine {
+            cost: CostModel::new(cfg.core, &cfg.mem),
+            mem: Hierarchy::new(cfg.mem),
+            alloc: SimAlloc::new(),
+            unit: SystolicTiming::new(cfg.unit),
+            ops: OpCounters::default(),
+            cycles: 0.0,
+            phase_cycles: [0.0; NUM_PHASES],
+            phase: Phase::Preprocess,
+            cfg,
+        }
+    }
+
+    #[inline]
+    fn charge(&mut self, c: f64) {
+        self.cycles += c;
+        self.phase_cycles[self.phase as usize] += c;
+    }
+
+    /// Switch the current Figure 9 breakdown phase.
+    pub fn phase(&mut self, p: Phase) {
+        self.phase = p;
+    }
+
+    pub fn cycles(&self) -> f64 {
+        self.cycles
+    }
+
+    /// Allocate simulated address space.
+    pub fn salloc(&mut self, bytes: usize) -> u64 {
+        self.alloc.alloc(bytes)
+    }
+
+    // ---- scalar / vector compute ------------------------------------------
+
+    pub fn scalar_ops(&mut self, n: u64) {
+        self.ops.scalar_ops += n;
+        let c = self.cost.scalar_ops(n);
+        self.charge(c);
+    }
+
+    pub fn branches(&mut self, n: u64) {
+        self.ops.branches += n;
+        let c = self.cost.branches(n);
+        self.charge(c);
+    }
+
+    pub fn vector_ops(&mut self, n: u64) {
+        self.ops.vector_ops += n;
+        let c = self.cost.vector_ops(n);
+        self.charge(c);
+    }
+
+    // ---- scalar memory -----------------------------------------------------
+
+    pub fn load(&mut self, addr: u64, bytes: usize) {
+        self.ops.scalar_loads += 1;
+        let (raw, _) = self.mem.access(addr, bytes, AccessKind::Read);
+        let c = self.cost.mem_issue(1) + self.cost.scalar_miss(raw) + self.cost.dram_bw(raw);
+        self.charge(c);
+    }
+
+    /// Dependent scalar load (hash probe, accumulator RMW, pointer chase):
+    /// the hit latency is on the critical path.
+    pub fn load_dep(&mut self, addr: u64, bytes: usize) {
+        self.ops.scalar_loads += 1;
+        let (raw, _) = self.mem.access(addr, bytes, AccessKind::Read);
+        let c = self.cost.mem_issue(1) + self.cost.dep_load(raw) + self.cost.dram_bw(raw);
+        self.charge(c);
+    }
+
+    /// Data-dependent compare-and-branch (sorting networks, probe loops).
+    pub fn branches_unpredictable(&mut self, n: u64) {
+        self.ops.branches += n;
+        let c = self.cost.branch_unpredictable(n);
+        self.charge(c);
+    }
+
+    pub fn store(&mut self, addr: u64, bytes: usize) {
+        self.ops.scalar_stores += 1;
+        let (raw, _) = self.mem.access(addr, bytes, AccessKind::Write);
+        // Stores retire through the store buffer; expose only a fraction.
+        let c = self.cost.mem_issue(1) + 0.25 * self.cost.scalar_miss(raw) + self.cost.dram_bw(raw);
+        self.charge(c);
+    }
+
+    // ---- vector memory -----------------------------------------------------
+
+    /// Unit-stride vector load of `bytes` starting at `addr`.
+    pub fn vload(&mut self, addr: u64, bytes: usize) {
+        self.ops.vector_loads += 1;
+        let (raw, lines) = self.mem.access(addr, bytes, AccessKind::Read);
+        let c = self.cost.mem_issue(lines as u64) + self.cost.vector_miss(raw) + self.cost.dram_bw(raw);
+        self.charge(c);
+    }
+
+    /// Unit-stride vector store.
+    pub fn vstore(&mut self, addr: u64, bytes: usize) {
+        self.ops.vector_stores += 1;
+        let (raw, lines) = self.mem.access(addr, bytes, AccessKind::Write);
+        let c = self.cost.mem_issue(lines as u64) + 0.25 * self.cost.vector_miss(raw) + self.cost.dram_bw(raw);
+        self.charge(c);
+    }
+
+    /// Indexed vector load (gather): one lane per address.
+    pub fn vgather<I: IntoIterator<Item = u64>>(&mut self, addrs: I, elem_bytes: usize) {
+        self.ops.vector_loads += 1;
+        let mut c = 0.0;
+        for a in addrs {
+            self.ops.gather_elems += 1;
+            let (raw, _) = self.mem.access(a, elem_bytes, AccessKind::Read);
+            // Gathers sustain ~1 lane/cycle on wide SIMD machines.
+            c += self.cost.mem_issue(2) + self.cost.gather_miss(raw) + self.cost.dram_bw(raw);
+        }
+        self.charge(c);
+    }
+
+    /// Indexed vector store (scatter).
+    pub fn vscatter<I: IntoIterator<Item = u64>>(&mut self, addrs: I, elem_bytes: usize) {
+        self.ops.vector_stores += 1;
+        let mut c = 0.0;
+        for a in addrs {
+            self.ops.scatter_elems += 1;
+            let (raw, _) = self.mem.access(a, elem_bytes, AccessKind::Write);
+            c += self.cost.mem_issue(2) + 0.25 * self.cost.gather_miss(raw) + self.cost.dram_bw(raw);
+        }
+        self.charge(c);
+    }
+
+    // ---- matrix unit -------------------------------------------------------
+
+    /// `mlxe.t`: R row-wise unit-stride load micro-ops
+    /// (`rows` = (sim_addr, elems) per active stream).
+    pub fn mlxe<'a, I: IntoIterator<Item = &'a (u64, usize)>>(&mut self, rows: I) {
+        self.ops.mlxe += 1;
+        let mut c = 0.0;
+        for &(addr, elems) in rows {
+            if elems == 0 {
+                continue;
+            }
+            let (raw, lines) = self.mem.access(addr, elems * 4, AccessKind::Read);
+            c += self.cost.mem_issue(lines as u64) + self.cost.vector_miss(raw) + self.cost.dram_bw(raw);
+        }
+        self.charge(c);
+    }
+
+    /// `msxe.t`: row-wise unit-stride store micro-ops.
+    pub fn msxe<'a, I: IntoIterator<Item = &'a (u64, usize)>>(&mut self, rows: I) {
+        self.ops.msxe += 1;
+        let mut c = 0.0;
+        for &(addr, elems) in rows {
+            if elems == 0 {
+                continue;
+            }
+            let (raw, lines) = self.mem.access(addr, elems * 4, AccessKind::Write);
+            c += self.cost.mem_issue(lines as u64) + 0.25 * self.cost.vector_miss(raw) + self.cost.dram_bw(raw);
+        }
+        self.charge(c);
+    }
+
+    /// One `mssortk`+`mssortv` pair over `rows` active streams.
+    pub fn sort_pair(&mut self, rows: usize) {
+        self.ops.mssortk += 1;
+        let c = self.unit.pair_cycles(rows);
+        self.ops.matrix_busy_cycles += c;
+        self.charge(c as f64);
+    }
+
+    /// One `mszipk`+`mszipv` pair over `rows` active streams.
+    pub fn zip_pair(&mut self, rows: usize) {
+        self.ops.mszipk += 1;
+        let c = self.unit.pair_cycles(rows);
+        self.ops.matrix_busy_cycles += c;
+        self.charge(c as f64);
+    }
+
+    /// Baseline dense-GEMM tile multiply (`mmul`-style instruction).
+    pub fn mmul_tile(&mut self) {
+        self.ops.mmul += 1;
+        let c = self.unit.dense_gemm_cycles();
+        self.ops.matrix_busy_cycles += c;
+        self.charge(c as f64);
+    }
+
+    /// `mmv.vi`/`mmv.vo` counter moves (cheap vector move).
+    pub fn mmv(&mut self, n: u64) {
+        self.ops.mmv += n;
+        let c = self.cost.vector_ops(n);
+        self.charge(c);
+    }
+
+    /// Final metrics snapshot.
+    pub fn metrics(&self) -> RunMetrics {
+        RunMetrics {
+            cycles: self.cycles,
+            phase_cycles: self.phase_cycles,
+            ops: self.ops,
+            mem: self.mem.stats(),
+            sim_footprint_bytes: self.alloc.footprint(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> Machine {
+        Machine::new(SystemConfig::default())
+    }
+
+    #[test]
+    fn phases_accumulate_separately() {
+        let mut mc = m();
+        mc.phase(Phase::Expand);
+        mc.scalar_ops(400);
+        mc.phase(Phase::Sort);
+        mc.zip_pair(16);
+        let r = mc.metrics();
+        assert!(r.phase_cycles[Phase::Expand as usize] > 0.0);
+        assert!(r.phase_cycles[Phase::Sort as usize] > 0.0);
+        assert_eq!(r.phase_cycles[Phase::Output as usize], 0.0);
+        let total: f64 = r.phase_cycles.iter().sum();
+        assert!((total - r.cycles).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cached_loads_cheaper_than_cold() {
+        let mut mc = m();
+        let a = mc.salloc(4096);
+        mc.load(a, 4);
+        let cold = mc.cycles();
+        mc.load(a, 4);
+        let warm = mc.cycles() - cold;
+        assert!(warm < cold, "warm {warm} cold {cold}");
+    }
+
+    #[test]
+    fn zip_pair_counts_and_busy() {
+        let mut mc = m();
+        mc.zip_pair(16);
+        mc.sort_pair(8);
+        let r = mc.metrics();
+        assert_eq!(r.ops.mszipk, 1);
+        assert_eq!(r.ops.mssortk, 1);
+        assert_eq!(r.total_matrix_kv_pairs(), 2);
+        assert!(r.ops.matrix_busy_cycles > 0);
+    }
+
+    #[test]
+    fn mlxe_unit_stride_is_few_lines() {
+        let mut mc = m();
+        let a = mc.salloc(4096);
+        let rows: Vec<(u64, usize)> = (0..16).map(|i| (a + i * 64, 16)).collect();
+        mc.mlxe(rows.iter());
+        let s = mc.metrics().mem;
+        // 16 rows x 64B aligned = exactly 16 line accesses.
+        assert_eq!(s.l1d_accesses, 16);
+    }
+
+    #[test]
+    fn gather_touches_more_lines_than_unit_stride() {
+        let mut mc = m();
+        let a = mc.salloc(1 << 20);
+        let addrs: Vec<u64> = (0..16u64).map(|i| a + i * 4096).collect();
+        mc.vgather(addrs.iter().copied(), 4);
+        let scattered = mc.metrics().mem.l1d_accesses;
+        let mut mc2 = m();
+        let b = mc2.salloc(1 << 20);
+        mc2.vload(b, 64);
+        let unit = mc2.metrics().mem.l1d_accesses;
+        assert!(scattered > unit * 8);
+    }
+
+    #[test]
+    fn footprint_tracked() {
+        let mut mc = m();
+        mc.salloc(1000);
+        assert_eq!(mc.metrics().sim_footprint_bytes, 1000);
+    }
+}

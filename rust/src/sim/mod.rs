@@ -1,0 +1,14 @@
+//! First-order cycle simulation substrate.
+//!
+//! SpGEMM implementations execute *functionally* in ordinary Rust while
+//! charging every architectural event (scalar/vector ops, memory accesses
+//! through the cache hierarchy, matrix-unit instruction pairs) to a
+//! [`Machine`]. This replaces gem5's detailed OoO model with an
+//! instrumented-execution model (DESIGN.md "Substitutions"): event *counts*
+//! are exact; cycles are first-order effective costs from [`cost`].
+
+pub mod cost;
+pub mod machine;
+
+pub use cost::CostModel;
+pub use machine::{Machine, Phase, RunMetrics};

@@ -1,0 +1,160 @@
+//! The five SpGEMM implementations of the paper's evaluation (§V-B):
+//!
+//! | name        | module        | paper description                         |
+//! |-------------|---------------|-------------------------------------------|
+//! | `scl-array` | [`scl_array`] | scalar row-wise, dense accumulator [19]   |
+//! | `scl-hash`  | [`scl_hash`]  | scalar row-wise, hash accumulator [1,15]  |
+//! | `vec-radix` | [`vec_radix`] | vectorized Expand-Sort-Compress [16]      |
+//! | `spz`       | [`spz`]       | SparseZipper merge-based row-wise         |
+//! | `spz-rsort` | [`spz_rsort`] | spz + work-sorted row scheduling          |
+//!
+//! Every implementation computes the *real* product (verified against
+//! [`reference`]) while charging its architectural events to a
+//! [`crate::sim::Machine`].
+
+pub mod prep;
+pub mod scl_array;
+pub mod scl_hash;
+pub mod spz;
+pub mod spz_rsort;
+pub mod vec_radix;
+
+use crate::matrix::Csr;
+use crate::sim::Machine;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// A simulated SpGEMM implementation.
+pub trait SpGemm {
+    fn name(&self) -> &'static str;
+    /// Compute C = A * B, charging events to `m`.
+    fn multiply(&mut self, m: &mut Machine, a: &Csr, b: &Csr) -> Result<Csr>;
+}
+
+/// Independent correctness oracle (BTreeMap accumulation; no shared code
+/// with any simulated implementation).
+pub fn reference(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!(a.ncols, b.nrows);
+    let mut rows = Vec::with_capacity(a.nrows);
+    for r in 0..a.nrows {
+        let mut acc: BTreeMap<u32, f32> = BTreeMap::new();
+        let (ak, av) = a.row(r);
+        for (&j, &aval) in ak.iter().zip(av) {
+            let (bk, bv) = b.row(j as usize);
+            for (&k, &bval) in bk.iter().zip(bv) {
+                *acc.entry(k).or_insert(0.0) += aval * bval;
+            }
+        }
+        let keys: Vec<u32> = acc.keys().copied().collect();
+        let vals: Vec<f32> = acc.values().copied().collect();
+        rows.push((keys, vals));
+    }
+    Csr::from_rows(a.nrows, b.ncols, rows)
+}
+
+/// Structural equality + relative numeric tolerance (accumulation order
+/// differs between implementations; f32 is not associative).
+pub fn same_product(x: &Csr, y: &Csr, rel: f32) -> bool {
+    x.approx_eq(y, rel)
+}
+
+/// Simulated addresses of a CSR's three arrays.
+#[derive(Clone, Copy, Debug)]
+pub struct CsrAddrs {
+    pub indptr: u64,
+    pub indices: u64,
+    pub data: u64,
+}
+
+impl CsrAddrs {
+    /// Register `m`'s arrays in the simulated address space.
+    pub fn register(mach: &mut Machine, m: &Csr) -> CsrAddrs {
+        CsrAddrs {
+            indptr: mach.salloc((m.nrows + 1) * 8),
+            indices: mach.salloc(m.nnz().max(1) * 4),
+            data: mach.salloc(m.nnz().max(1) * 4),
+        }
+    }
+
+    #[inline]
+    pub fn indptr_at(&self, r: usize) -> u64 {
+        self.indptr + (r as u64) * 8
+    }
+
+    #[inline]
+    pub fn idx_at(&self, i: usize) -> u64 {
+        self.indices + (i as u64) * 4
+    }
+
+    #[inline]
+    pub fn val_at(&self, i: usize) -> u64 {
+        self.data + (i as u64) * 4
+    }
+}
+
+/// Construct an implementation by name (engine applies to spz variants).
+pub fn by_name(
+    name: &str,
+    engine: crate::runtime::Engine,
+    artifact_dir: &std::path::Path,
+) -> Result<Box<dyn SpGemm>> {
+    use crate::runtime::Engine;
+    Ok(match name {
+        "scl-array" => Box::new(scl_array::SclArray),
+        "scl-hash" => Box::new(scl_hash::SclHash),
+        "vec-radix" => Box::new(vec_radix::VecRadix::default()),
+        "spz" => match engine {
+            Engine::Native => Box::new(spz::Spz::native()),
+            Engine::Xla => Box::new(spz::Spz::xla(artifact_dir)?),
+        },
+        "spz-rsort" => match engine {
+            Engine::Native => Box::new(spz_rsort::SpzRsort::native()),
+            Engine::Xla => Box::new(spz_rsort::SpzRsort::xla(artifact_dir)?),
+        },
+        other => anyhow::bail!("unknown implementation '{other}'"),
+    })
+}
+
+/// All implementation names in the paper's Figure 8 order.
+pub const IMPL_NAMES: [&str; 5] = ["scl-array", "scl-hash", "vec-radix", "spz", "spz-rsort"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn reference_identity() {
+        let i = Csr::identity(6);
+        let c = reference(&i, &i);
+        assert_eq!(c, i);
+    }
+
+    #[test]
+    fn reference_matches_dense() {
+        let a = gen::erdos_renyi(20, 20, 60, 3);
+        let b = gen::erdos_renyi(20, 20, 60, 4);
+        let c = reference(&a, &b);
+        let (da, db, dc) = (a.to_dense(), b.to_dense(), c.to_dense());
+        for r in 0..20 {
+            for k in 0..20 {
+                let mut s = 0f32;
+                for j in 0..20 {
+                    s += da[r][j] * db[j][k];
+                }
+                assert!((s - dc[r][k]).abs() < 1e-4, "({r},{k}): {s} vs {}", dc[r][k]);
+            }
+        }
+    }
+
+    #[test]
+    fn reference_empty_rows() {
+        let mut a = Csr::identity(4);
+        a.indptr = vec![0, 0, 1, 2, 3];
+        a.indices = vec![1, 2, 3];
+        a.data = vec![1.0; 3];
+        let c = reference(&a, &Csr::identity(4));
+        assert_eq!(c.row_len(0), 0);
+        assert_eq!(c.row_len(1), 1);
+    }
+}

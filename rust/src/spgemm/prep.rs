@@ -1,0 +1,84 @@
+//! Shared preprocessing: per-row work estimation (the "amount of work"
+//! pre-pass every implementation in §V-B performs) with its simulation
+//! accounting.
+
+use crate::matrix::Csr;
+use crate::sim::{Machine, Phase};
+use crate::spgemm::CsrAddrs;
+
+/// Compute per-row multiplication counts for C = A*B, charging the scan to
+/// the `Preprocess` phase: sequential reads of A.indptr/A.indices plus a
+/// gather of B.indptr[j] per nonzero.
+pub fn row_work(
+    m: &mut Machine,
+    a: &Csr,
+    b: &Csr,
+    aa: &CsrAddrs,
+    ba: &CsrAddrs,
+) -> Vec<u64> {
+    m.phase(Phase::Preprocess);
+    let mut work = Vec::with_capacity(a.nrows);
+    let vl = m.cfg.vlen_elems;
+    for r in 0..a.nrows {
+        m.load(aa.indptr_at(r + 1), 8);
+        let (ak, _) = a.row(r);
+        let mut w = 0u64;
+        // Vectorized gather of B.indptr[j] for the row's column indices.
+        for chunk in ak.chunks(vl) {
+            m.vload(aa.idx_at(a.indptr[r]), chunk.len() * 4);
+            m.vgather(
+                chunk.iter().map(|&j| ba.indptr_at(j as usize)),
+                8,
+            );
+            m.vector_ops(2); // length diff + horizontal add
+            for &j in chunk {
+                w += b.row_len(j as usize) as u64;
+            }
+        }
+        m.scalar_ops(2);
+        work.push(w);
+    }
+    work
+}
+
+/// Exclusive prefix sum (charged as a vector pass) used for temp-buffer
+/// offsets; returns offsets and the total.
+pub fn prefix_sum(m: &mut Machine, xs: &[u64]) -> (Vec<u64>, u64) {
+    let vl = m.cfg.vlen_elems as u64;
+    m.vector_ops(xs.len() as u64 / vl + 1);
+    m.scalar_ops(xs.len() as u64 / 4 + 1);
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = 0u64;
+    for &x in xs {
+        out.push(acc);
+        acc += x;
+    }
+    (out, acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::matrix::gen;
+
+    #[test]
+    fn work_matches_stats_module() {
+        let a = gen::erdos_renyi(50, 50, 200, 17);
+        let mut m = Machine::new(SystemConfig::default());
+        let aa = CsrAddrs::register(&mut m, &a);
+        let ba = CsrAddrs::register(&mut m, &a);
+        let w = row_work(&mut m, &a, &a, &aa, &ba);
+        let expect = crate::matrix::stats::row_work(&a, &a);
+        assert_eq!(w, expect);
+        assert!(m.metrics().phase_cycles[Phase::Preprocess as usize] > 0.0);
+    }
+
+    #[test]
+    fn prefix_sum_correct() {
+        let mut m = Machine::new(SystemConfig::default());
+        let (offs, total) = prefix_sum(&mut m, &[3, 0, 5, 2]);
+        assert_eq!(offs, vec![0, 3, 3, 8]);
+        assert_eq!(total, 10);
+    }
+}

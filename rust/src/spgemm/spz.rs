@@ -1,0 +1,576 @@
+//! `spz`: merge-based row-wise SpGEMM using the SparseZipper ISA (§III-D).
+//!
+//! Sixteen output rows (one per matrix-register row) are processed as a
+//! lockstep *group* of key-value streams:
+//!
+//! 1. **Expansion** (RISC-V vector): partial products appended per stream
+//!    with unit-stride vector stores.
+//! 2. **Chunk sort** (`mlxe` + `mssortk/mssortv` + `mmv` + `msxe`): every
+//!    16-element chunk becomes a sorted-unique partition.
+//! 3. **Merge rounds** (`mlxe` + `mszipk/mszipv` + `mmv` + `msxe`):
+//!    adjacent partitions merge chunk-at-a-time (Figure 2) until one
+//!    sorted-unique partition per stream remains. Consumed counts come from
+//!    IC0/IC1; east+south output chunks are streamed out per OC0/OC1.
+//! 4. **Output generation**: the final partition is copied into the output
+//!    CSR with unit-stride vector ops.
+//!
+//! The functional datapath runs through a [`ZipUnit`] engine — native Rust
+//! or the AOT-compiled XLA artifacts — while the `Machine` charges identical
+//! timing either way.
+
+use crate::matrix::Csr;
+use crate::runtime::{NativeEngine, StepOut, XlaEngine, ZipUnit};
+use crate::sim::{Machine, Phase};
+use crate::spgemm::{CsrAddrs, SpGemm};
+use crate::util::ceil_div;
+use anyhow::Result;
+use std::path::Path;
+
+/// One sorted-unique partition of a stream (functional mirror + its
+/// simulated element offset within the current arena).
+#[derive(Clone, Debug, Default)]
+struct Part {
+    keys: Vec<u32>,
+    vals: Vec<f32>,
+    sim_off: u64,
+}
+
+pub struct Spz {
+    engine: Box<dyn ZipUnit>,
+}
+
+impl Spz {
+    pub fn native() -> Self {
+        Spz {
+            engine: Box::new(NativeEngine::new(16)),
+        }
+    }
+
+    pub fn xla(artifact_dir: &Path) -> Result<Self> {
+        Ok(Spz {
+            engine: Box::new(XlaEngine::load(artifact_dir, 16, 16)?),
+        })
+    }
+
+    pub fn with_engine(engine: Box<dyn ZipUnit>) -> Self {
+        Spz { engine }
+    }
+
+    /// Core row-wise merge SpGEMM over groups of N streams. `order` remaps
+    /// the processing order of rows (spz-rsort); output stays in row order.
+    pub(crate) fn run(
+        &mut self,
+        m: &mut Machine,
+        a: &Csr,
+        b: &Csr,
+        order: Option<&[u32]>,
+    ) -> Result<Csr> {
+        let n = self.engine.n(); // chunk size = matrix register rows
+        let vl = m.cfg.vlen_elems;
+        let aa = CsrAddrs::register(m, a);
+        let ba = CsrAddrs::register(m, b);
+
+        // --- Preprocess: work + padded temp offsets (§V-B). ---------------
+        let work = crate::spgemm::prep::row_work(m, a, b, &aa, &ba);
+        let padded: Vec<u64> = work.iter().map(|&w| w.div_ceil(n as u64) * n as u64).collect();
+        let total_work: u64 = work.iter().sum();
+
+        // Max group footprint so the ping-pong arenas are allocated once.
+        let row_at = |g: usize, s: usize| -> Option<usize> {
+            let i = g * n + s;
+            if i >= a.nrows {
+                return None;
+            }
+            Some(match order {
+                Some(o) => o[i] as usize,
+                None => i,
+            })
+        };
+        let ngroups = ceil_div(a.nrows, n);
+        let mut max_group_work = 0u64;
+        for g in 0..ngroups {
+            let w: u64 = (0..n).filter_map(|s| row_at(g, s)).map(|r| padded[r]).sum();
+            max_group_work = max_group_work.max(w);
+        }
+        m.phase(Phase::Preprocess);
+        let arena_k = [
+            m.salloc((max_group_work.max(1) as usize) * 4),
+            m.salloc((max_group_work.max(1) as usize) * 4),
+        ];
+        let arena_v = [
+            m.salloc((max_group_work.max(1) as usize) * 4),
+            m.salloc((max_group_work.max(1) as usize) * 4),
+        ];
+        let out_idx_addr = m.salloc((total_work.max(1) as usize) * 4);
+        let out_val_addr = m.salloc((total_work.max(1) as usize) * 4);
+        let out_ptr_addr = m.salloc((a.nrows + 1) * 8);
+
+        let mut rows_out: Vec<(Vec<u32>, Vec<f32>)> = vec![(Vec::new(), Vec::new()); a.nrows];
+        let mut out_cursor = 0u64;
+
+        for g in 0..ngroups {
+            let streams: Vec<usize> = (0..n).filter_map(|s| row_at(g, s)).collect();
+            let gsize = streams.len();
+            // Per-stream element offsets in the arenas.
+            let mut offs = Vec::with_capacity(gsize);
+            {
+                let mut acc = 0u64;
+                for &r in &streams {
+                    offs.push(acc);
+                    acc += padded[r];
+                }
+            }
+
+            // --- 1. Expansion (vectorized, unit-stride stores). ------------
+            m.phase(Phase::Expand);
+            let mut exp_k: Vec<Vec<u32>> = vec![Vec::new(); gsize];
+            let mut exp_v: Vec<Vec<f32>> = vec![Vec::new(); gsize];
+            for (s, &r) in streams.iter().enumerate() {
+                let (ak, av) = a.row(r);
+                m.load(aa.indptr_at(r + 1), 8);
+                // A-side streamed with vector loads; B row extents gathered
+                // (vectorized RVV expansion, paper SS V-B).
+                for (ci, chunk) in ak.chunks(vl).enumerate() {
+                    m.vload(aa.idx_at(a.indptr[r] + ci * vl), chunk.len() * 4);
+                    m.vload(aa.val_at(a.indptr[r] + ci * vl), chunk.len() * 4);
+                    m.vgather(chunk.iter().map(|&j| ba.indptr_at(j as usize)), 8);
+                    m.vector_ops(2);
+                }
+                for (&j, &aval) in ak.iter().zip(av) {
+                    let (bk, bv) = b.row(j as usize);
+                    let b_base = b.indptr[j as usize];
+                    let mut bi = 0;
+                    while bi < bk.len() {
+                        let c = (bk.len() - bi).min(vl);
+                        m.vload(ba.idx_at(b_base + bi), c * 4);
+                        m.vload(ba.val_at(b_base + bi), c * 4);
+                        m.vector_ops(1); // broadcast-multiply
+                        let pos = offs[s] + exp_k[s].len() as u64;
+                        m.vstore(arena_k[0] + pos * 4, c * 4);
+                        m.vstore(arena_v[0] + pos * 4, c * 4);
+                        for t in 0..c {
+                            exp_k[s].push(bk[bi + t]);
+                            exp_v[s].push(aval * bv[bi + t]);
+                        }
+                        bi += c;
+                    }
+                    m.scalar_ops(1);
+                }
+            }
+
+            // --- 2. Chunk sort: every chunk -> sorted-unique partition. ----
+            m.phase(Phase::Sort);
+            let mut parts: Vec<Vec<Part>> = vec![Vec::new(); gsize];
+            let max_chunks = streams
+                .iter()
+                .enumerate()
+                .map(|(s, _)| ceil_div(exp_k[s].len(), n))
+                .max()
+                .unwrap_or(0);
+            let mut c0 = 0usize;
+            while c0 < max_chunks {
+                // Gather chunk c0 (-> td0/td1) and c0+1 (-> td2/td3) per stream.
+                let mut k0 = Vec::with_capacity(gsize);
+                let mut v0 = Vec::with_capacity(gsize);
+                let mut k1 = Vec::with_capacity(gsize);
+                let mut v1 = Vec::with_capacity(gsize);
+                let mut rows0: Vec<(u64, usize)> = Vec::with_capacity(gsize);
+                let mut rows1: Vec<(u64, usize)> = Vec::with_capacity(gsize);
+                for s in 0..gsize {
+                    let len = exp_k[s].len();
+                    let chunk = |c: usize| -> (usize, usize) {
+                        let lo = (c * n).min(len);
+                        let hi = ((c + 1) * n).min(len);
+                        (lo, hi)
+                    };
+                    let (lo0, hi0) = chunk(c0);
+                    let (lo1, hi1) = chunk(c0 + 1);
+                    k0.push(exp_k[s][lo0..hi0].to_vec());
+                    v0.push(exp_v[s][lo0..hi0].to_vec());
+                    k1.push(exp_k[s][lo1..hi1].to_vec());
+                    v1.push(exp_v[s][lo1..hi1].to_vec());
+                    rows0.push((arena_k[0] + (offs[s] + lo0 as u64) * 4, hi0 - lo0));
+                    rows1.push((arena_k[0] + (offs[s] + lo1 as u64) * 4, hi1 - lo1));
+                }
+                let active = rows0.iter().chain(&rows1).filter(|r| r.1 > 0).count();
+                if active == 0 {
+                    break;
+                }
+                // mlxe x4 (keys+vals for both chunk sets).
+                m.mlxe(rows0.iter());
+                m.mlxe(rows0.iter()); // values (same addresses in arena_v)
+                m.mlxe(rows1.iter());
+                m.mlxe(rows1.iter());
+                m.sort_pair(gsize);
+                m.mmv(2); // OC0, OC1
+                m.vector_ops(2); // length bookkeeping
+                let step = self.engine.sort_step(&k0, &v0, &k1, &v1)?;
+                // msxe x4: sorted chunks written back in place.
+                let st0: Vec<(u64, usize)> = (0..gsize)
+                    .map(|s| (rows0[s].0, step.oc0[s]))
+                    .collect();
+                let st1: Vec<(u64, usize)> = (0..gsize)
+                    .map(|s| (rows1[s].0, step.oc1[s]))
+                    .collect();
+                m.msxe(st0.iter());
+                m.msxe(st0.iter());
+                m.msxe(st1.iter());
+                m.msxe(st1.iter());
+                for s in 0..gsize {
+                    if !step.k0[s].is_empty() || rows0[s].1 > 0 {
+                        parts[s].push(Part {
+                            keys: step.k0[s].clone(),
+                            vals: step.v0[s].clone(),
+                            sim_off: offs[s] + (c0 * n) as u64,
+                        });
+                    }
+                    if !step.k1[s].is_empty() || rows1[s].1 > 0 {
+                        parts[s].push(Part {
+                            keys: step.k1[s].clone(),
+                            vals: step.v1[s].clone(),
+                            sim_off: offs[s] + ((c0 + 1) * n) as u64,
+                        });
+                    }
+                }
+                c0 += 2;
+            }
+
+            // --- 3. Merge rounds: pairwise zip until one partition. --------
+            let mut src_arena = 0usize;
+            loop {
+                let max_parts = parts.iter().map(|p| p.len()).max().unwrap_or(0);
+                if max_parts <= 1 {
+                    break;
+                }
+                let dst_arena = 1 - src_arena;
+                let pairs = ceil_div(max_parts, 2);
+                let mut new_parts: Vec<Vec<Part>> = vec![Vec::new(); gsize];
+                // Running output offset per stream in the destination arena.
+                let mut dst_off: Vec<u64> = offs.clone();
+                for q in 0..pairs {
+                    // Per-stream merge state for partition pair (2q, 2q+1).
+                    struct St {
+                        ia: usize,
+                        ib: usize,
+                        out: Part,
+                    }
+                    let mut sts: Vec<Option<St>> = Vec::with_capacity(gsize);
+                    for s in 0..gsize {
+                        let pa = parts[s].get(2 * q);
+                        let pb = parts[s].get(2 * q + 1);
+                        match (pa, pb) {
+                            (None, None) => sts.push(None),
+                            (Some(_), None) => {
+                                // Odd partition passes through (no merge work).
+                                let p = parts[s][2 * q].clone();
+                                // Copy to dest arena (vector memcpy).
+                                let moved = copy_part(
+                                    m,
+                                    &p,
+                                    arena_k[src_arena],
+                                    arena_v[src_arena],
+                                    arena_k[dst_arena],
+                                    arena_v[dst_arena],
+                                    dst_off[s],
+                                    vl,
+                                );
+                                dst_off[s] += moved.keys.len().max(1) as u64;
+                                new_parts[s].push(moved);
+                                sts.push(None);
+                            }
+                            (Some(_), Some(_)) => {
+                                sts.push(Some(St {
+                                    ia: 0,
+                                    ib: 0,
+                                    out: Part {
+                                        keys: Vec::new(),
+                                        vals: Vec::new(),
+                                        sim_off: dst_off[s],
+                                    },
+                                }));
+                            }
+                            (None, Some(_)) => unreachable!("parts are packed"),
+                        }
+                    }
+                    // Lockstep chunk-at-a-time zip loop (Figure 2 / Fig 4b).
+                    loop {
+                        let mut k0 = Vec::with_capacity(gsize);
+                        let mut v0 = Vec::with_capacity(gsize);
+                        let mut k1 = Vec::with_capacity(gsize);
+                        let mut v1 = Vec::with_capacity(gsize);
+                        let mut rows0: Vec<(u64, usize)> = Vec::with_capacity(gsize);
+                        let mut rows1: Vec<(u64, usize)> = Vec::with_capacity(gsize);
+                        let mut active = 0usize;
+                        for s in 0..gsize {
+                            let (ca, va2, cb, vb2, ra, rb) = match &sts[s] {
+                                Some(st) => {
+                                    let pa = &parts[s][2 * q];
+                                    let pb = &parts[s][2 * q + 1];
+                                    let ra = pa.keys.len() - st.ia;
+                                    let rb = pb.keys.len() - st.ib;
+                                    if ra > 0 && rb > 0 {
+                                        active += 1;
+                                        let ea = (st.ia + n.min(ra)).min(pa.keys.len());
+                                        let eb = (st.ib + n.min(rb)).min(pb.keys.len());
+                                        (
+                                            pa.keys[st.ia..ea].to_vec(),
+                                            pa.vals[st.ia..ea].to_vec(),
+                                            pb.keys[st.ib..eb].to_vec(),
+                                            pb.vals[st.ib..eb].to_vec(),
+                                            (arena_k[src_arena] + (pa.sim_off + st.ia as u64) * 4, ea - st.ia),
+                                            (arena_k[src_arena] + (pb.sim_off + st.ib as u64) * 4, eb - st.ib),
+                                        )
+                                    } else {
+                                        (Vec::new(), Vec::new(), Vec::new(), Vec::new(), (0, 0), (0, 0))
+                                    }
+                                }
+                                None => (Vec::new(), Vec::new(), Vec::new(), Vec::new(), (0, 0), (0, 0)),
+                            };
+                            k0.push(ca);
+                            v0.push(va2);
+                            k1.push(cb);
+                            v1.push(vb2);
+                            rows0.push(ra);
+                            rows1.push(rb);
+                        }
+                        if active == 0 {
+                            break;
+                        }
+                        m.mlxe(rows0.iter());
+                        m.mlxe(rows0.iter());
+                        m.mlxe(rows1.iter());
+                        m.mlxe(rows1.iter());
+                        m.zip_pair(active);
+                        m.mmv(4); // IC0, IC1, OC0, OC1
+                        m.vector_ops(4); // pointer/length updates
+                        m.branches(2);
+                        let step: StepOut = self.engine.zip_step(&k0, &v0, &k1, &v1)?;
+                        // Store east (+ south when present) chunks.
+                        let east_rows: Vec<(u64, usize)> = (0..gsize)
+                            .map(|s| match &sts[s] {
+                                Some(st) if rows0[s].1 > 0 || rows1[s].1 > 0 => (
+                                    arena_k[dst_arena]
+                                        + (st.out.sim_off + st.out.keys.len() as u64) * 4,
+                                    step.oc0[s],
+                                ),
+                                _ => (0, 0),
+                            })
+                            .collect();
+                        m.msxe(east_rows.iter());
+                        m.msxe(east_rows.iter());
+                        let any_south = step.oc1.iter().any(|&x| x > 0);
+                        if any_south {
+                            let south_rows: Vec<(u64, usize)> = (0..gsize)
+                                .map(|s| match &sts[s] {
+                                    Some(st) if step.oc1[s] > 0 => (
+                                        arena_k[dst_arena]
+                                            + (st.out.sim_off
+                                                + (st.out.keys.len() + step.oc0[s]) as u64)
+                                                * 4,
+                                        step.oc1[s],
+                                    ),
+                                    _ => (0, 0),
+                                })
+                                .collect();
+                            m.msxe(south_rows.iter());
+                            m.msxe(south_rows.iter());
+                        }
+                        for s in 0..gsize {
+                            if let Some(st) = &mut sts[s] {
+                                if rows0[s].1 == 0 && rows1[s].1 == 0 {
+                                    continue;
+                                }
+                                st.ia += step.ic0[s];
+                                st.ib += step.ic1[s];
+                                st.out.keys.extend_from_slice(&step.k0[s]);
+                                st.out.vals.extend_from_slice(&step.v0[s]);
+                                st.out.keys.extend_from_slice(&step.k1[s]);
+                                st.out.vals.extend_from_slice(&step.v1[s]);
+                            }
+                        }
+                    }
+                    // Tail copy: one side exhausted -> vector memcpy of the rest.
+                    for s in 0..gsize {
+                        if let Some(st) = sts[s].take() {
+                            let mut out = st.out;
+                            let pa = &parts[s][2 * q];
+                            let pb = &parts[s][2 * q + 1];
+                            for (part, i0) in [(pa, st.ia), (pb, st.ib)] {
+                                let rem = part.keys.len() - i0;
+                                if rem > 0 {
+                                    let mut i = i0;
+                                    while i < part.keys.len() {
+                                        let c = (part.keys.len() - i).min(vl);
+                                        m.vload(arena_k[src_arena] + (part.sim_off + i as u64) * 4, c * 4);
+                                        m.vload(arena_v[src_arena] + (part.sim_off + i as u64) * 4, c * 4);
+                                        m.vstore(
+                                            arena_k[dst_arena]
+                                                + (out.sim_off + out.keys.len() as u64) * 4,
+                                            c * 4,
+                                        );
+                                        m.vstore(
+                                            arena_v[dst_arena]
+                                                + (out.sim_off + out.keys.len() as u64) * 4,
+                                            c * 4,
+                                        );
+                                        out.keys.extend_from_slice(&part.keys[i..i + c]);
+                                        out.vals.extend_from_slice(&part.vals[i..i + c]);
+                                        i += c;
+                                    }
+                                }
+                            }
+                            dst_off[s] += out.keys.len().max(1) as u64;
+                            new_parts[s].push(out);
+                        }
+                    }
+                }
+                parts = new_parts;
+                src_arena = dst_arena;
+            }
+
+            // --- 4. Output generation: final partition -> output CSR. ------
+            m.phase(Phase::Output);
+            for (s, &r) in streams.iter().enumerate() {
+                let part = parts[s].first().cloned().unwrap_or_default();
+                let len = part.keys.len();
+                let mut i = 0usize;
+                while i < len {
+                    let c = (len - i).min(vl);
+                    m.vload(arena_k[src_arena] + (part.sim_off + i as u64) * 4, c * 4);
+                    m.vload(arena_v[src_arena] + (part.sim_off + i as u64) * 4, c * 4);
+                    m.vstore(out_idx_addr + (out_cursor + i as u64) * 4, c * 4);
+                    m.vstore(out_val_addr + (out_cursor + i as u64) * 4, c * 4);
+                    i += c;
+                }
+                out_cursor += len as u64;
+                m.store(out_ptr_addr + (r as u64 + 1) * 8, 8);
+                m.scalar_ops(2);
+                rows_out[r] = (part.keys, part.vals);
+            }
+        }
+
+        Ok(Csr::from_rows(a.nrows, b.ncols, rows_out))
+    }
+}
+
+/// Vector memcpy of a pass-through partition into the destination arena.
+#[allow(clippy::too_many_arguments)]
+fn copy_part(
+    m: &mut Machine,
+    p: &Part,
+    src_k: u64,
+    src_v: u64,
+    dst_k: u64,
+    dst_v: u64,
+    dst_off: u64,
+    vl: usize,
+) -> Part {
+    let len = p.keys.len();
+    let mut i = 0usize;
+    while i < len {
+        let c = (len - i).min(vl);
+        m.vload(src_k + (p.sim_off + i as u64) * 4, c * 4);
+        m.vstore(dst_k + (dst_off + i as u64) * 4, c * 4);
+        m.vload(src_v + (p.sim_off + i as u64) * 4, c * 4);
+        m.vstore(dst_v + (dst_off + i as u64) * 4, c * 4);
+        i += c;
+    }
+    Part {
+        keys: p.keys.clone(),
+        vals: p.vals.clone(),
+        sim_off: dst_off,
+    }
+}
+
+impl SpGemm for Spz {
+    fn name(&self) -> &'static str {
+        "spz"
+    }
+
+    fn multiply(&mut self, m: &mut Machine, a: &Csr, b: &Csr) -> Result<Csr> {
+        self.run(m, a, b, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::matrix::gen;
+    use crate::spgemm::{reference, same_product};
+
+    fn check(a: &Csr) {
+        let mut m = Machine::new(SystemConfig::default());
+        let c = Spz::native().multiply(&mut m, a, a).unwrap();
+        let r = reference(a, a);
+        assert!(
+            same_product(&c, &r, 1e-3),
+            "mismatch: got {} nnz, want {} nnz",
+            c.nnz(),
+            r.nnz()
+        );
+    }
+
+    #[test]
+    fn correct_on_random() {
+        check(&gen::erdos_renyi(100, 100, 600, 61));
+    }
+
+    #[test]
+    fn correct_on_skewed() {
+        check(&gen::rmat(128, 128, 1200, 0.6, 0.18, 0.14, 62));
+    }
+
+    #[test]
+    fn correct_on_regular() {
+        check(&gen::kregular(96, 4, 63));
+    }
+
+    #[test]
+    fn correct_on_banded() {
+        check(&gen::banded(120, 12, 8, 64));
+    }
+
+    #[test]
+    fn correct_on_identity() {
+        check(&Csr::identity(40));
+    }
+
+    #[test]
+    fn correct_on_empty() {
+        check(&Csr::empty(20, 20));
+    }
+
+    #[test]
+    fn correct_single_dense_row_matrix() {
+        // One hub row -> long stream exercising many merge rounds.
+        let mut rows = vec![(Vec::new(), Vec::new()); 17];
+        rows[0] = ((0..17u32).collect(), vec![1.0; 17]);
+        for r in 1..17 {
+            rows[r] = (vec![(r as u32 * 7) % 17], vec![1.0]);
+        }
+        check(&Csr::from_rows(17, 17, rows));
+    }
+
+    #[test]
+    fn uses_matrix_unit() {
+        let a = gen::erdos_renyi(64, 64, 400, 65);
+        let mut m = Machine::new(SystemConfig::default());
+        Spz::native().multiply(&mut m, &a, &a).unwrap();
+        let r = m.metrics();
+        assert!(r.ops.mssortk > 0, "must execute mssortk");
+        assert!(r.ops.mszipk > 0, "must execute mszipk");
+        assert!(r.ops.mlxe > 0 && r.ops.msxe > 0);
+    }
+
+    #[test]
+    fn processing_order_does_not_change_result() {
+        let a = gen::rmat(80, 80, 700, 0.58, 0.2, 0.14, 66);
+        let mut m1 = Machine::new(SystemConfig::default());
+        let c1 = Spz::native().run(&mut m1, &a, &a, None).unwrap();
+        let order: Vec<u32> = (0..80u32).rev().collect();
+        let mut m2 = Machine::new(SystemConfig::default());
+        let c2 = Spz::native().run(&mut m2, &a, &a, Some(&order)).unwrap();
+        assert!(same_product(&c1, &c2, 1e-3));
+    }
+}

@@ -1,0 +1,298 @@
+//! `vec-radix`: vectorized Expand-Sort-Compress SpGEMM [16] — the paper's
+//! state-of-the-art vector baseline (§V-B).
+//!
+//! Multiple output rows are processed per block. Expansion produces
+//! (row, col, value) triples; an LSD radix sort (8-bit digits, vectorized
+//! per Zagha–Blelloch [56]) sorts triples by (row, col); a vectorized
+//! compress pass combines duplicate keys and emits the block's rows.
+//!
+//! The cache behaviour the paper highlights (Figure 10): the radix
+//! histogram/scatter passes perform long-stride and indexed accesses that
+//! touch a different cache line per element, so vec-radix's L1 access count
+//! dwarfs spz's unit-stride matrix loads. Block size is swept externally
+//! (the coordinator picks the best-performing configuration per matrix,
+//! exactly as the paper does).
+
+use crate::matrix::Csr;
+use crate::sim::{Machine, Phase};
+use crate::spgemm::{CsrAddrs, SpGemm};
+use anyhow::Result;
+
+pub struct VecRadix {
+    /// Target intermediate-triple count per row block.
+    pub block_elems: usize,
+}
+
+impl Default for VecRadix {
+    fn default() -> Self {
+        // Default chosen by the calibration sweep (see EXPERIMENTS.md);
+        // the coordinator still sweeps per matrix for Figure 8.
+        VecRadix { block_elems: 16 * 1024 }
+    }
+}
+
+impl SpGemm for VecRadix {
+    fn name(&self) -> &'static str {
+        "vec-radix"
+    }
+
+    fn multiply(&mut self, m: &mut Machine, a: &Csr, b: &Csr) -> Result<Csr> {
+        let vl = m.cfg.vlen_elems;
+        let aa = CsrAddrs::register(m, a);
+        let ba = CsrAddrs::register(m, b);
+
+        // --- Preprocess: per-row work, block partitioning, allocation. ----
+        let work = crate::spgemm::prep::row_work(m, a, b, &aa, &ba);
+        let total_work: u64 = work.iter().sum();
+        let mut blocks: Vec<(usize, usize, u64)> = Vec::new(); // (row_lo, row_hi, work)
+        {
+            let mut lo = 0usize;
+            while lo < a.nrows {
+                let mut hi = lo;
+                let mut w = 0u64;
+                while hi < a.nrows && (w == 0 || w + work[hi] <= self.block_elems as u64) {
+                    w += work[hi];
+                    hi += 1;
+                }
+                blocks.push((lo, hi, w));
+                lo = hi;
+            }
+            m.scalar_ops(2 * a.nrows as u64); // block partition scan
+        }
+        let max_block: u64 = blocks.iter().map(|b| b.2).max().unwrap_or(0);
+
+        // Ping-pong triple buffers (key: u64 = row<<32|col, val: f32).
+        let kbuf = [m.salloc((max_block.max(1) as usize) * 8), m.salloc((max_block.max(1) as usize) * 8)];
+        let vbuf = [m.salloc((max_block.max(1) as usize) * 4), m.salloc((max_block.max(1) as usize) * 4)];
+        // Per-lane histogram counters: vl lanes x 256 buckets x 4B.
+        let hist_addr = m.salloc(vl * 256 * 4);
+        let out_idx_addr = m.salloc((total_work.max(1) as usize) * 4);
+        let out_val_addr = m.salloc((total_work.max(1) as usize) * 4);
+        let out_ptr_addr = m.salloc((a.nrows + 1) * 8);
+
+        let col_bits = (64 - (b.ncols.max(2) as u64 - 1).leading_zeros()) as usize;
+
+        let mut rows_out: Vec<(Vec<u32>, Vec<f32>)> = Vec::with_capacity(a.nrows);
+        let mut out_cursor = 0u64;
+
+        for &(lo, hi, bwork) in &blocks {
+            // --- Expand (vectorized): emit (row<<32|col, val) triples. -----
+            m.phase(Phase::Expand);
+            let mut keys: Vec<u64> = Vec::with_capacity(bwork as usize);
+            let mut vals: Vec<f32> = Vec::with_capacity(bwork as usize);
+            for r in lo..hi {
+                let (ak, av) = a.row(r);
+                m.load(aa.indptr_at(r + 1), 8);
+                // Vectorized A-side streaming, as in the spz expansion.
+                for (ci, chunk) in ak.chunks(vl).enumerate() {
+                    m.vload(aa.idx_at(a.indptr[r] + ci * vl), chunk.len() * 4);
+                    m.vload(aa.val_at(a.indptr[r] + ci * vl), chunk.len() * 4);
+                    m.vgather(chunk.iter().map(|&j| ba.indptr_at(j as usize)), 8);
+                    m.vector_ops(2);
+                }
+                for (&j, &aval) in ak.iter().zip(av) {
+                    let (bk, bv) = b.row(j as usize);
+                    let b_base = b.indptr[j as usize];
+                    let lr = (r - lo) as u64;
+                    let mut bi = 0;
+                    while bi < bk.len() {
+                        let c = (bk.len() - bi).min(vl);
+                        m.vload(ba.idx_at(b_base + bi), c * 4);
+                        m.vload(ba.val_at(b_base + bi), c * 4);
+                        m.vector_ops(3); // widen+pack key, multiply
+                        m.vstore(kbuf[0] + keys.len() as u64 * 8, c * 8);
+                        m.vstore(vbuf[0] + vals.len() as u64 * 4, c * 4);
+                        for t in 0..c {
+                            keys.push((lr << 32) | bk[bi + t] as u64);
+                            vals.push(aval * bv[bi + t]);
+                        }
+                        bi += c;
+                    }
+                    m.scalar_ops(1);
+                }
+            }
+
+            // --- Sort: LSD radix over (row, col) bits. ---------------------
+            m.phase(Phase::Sort);
+            let row_bits = (64 - ((hi - lo).max(2) as u64 - 1).leading_zeros()) as usize;
+            let bits = col_bits + row_bits;
+            let passes = bits.div_ceil(8);
+            let n_elems = keys.len();
+            let mut src_k = keys;
+            let mut src_v = vals;
+            let mut cur = 0usize;
+            for p in 0..passes {
+                let shift = p * 8;
+                // Histogram pass: sequential key reads + per-lane counter
+                // increments (gather/scatter into the 16x256 table).
+                let mut hist = [0u32; 256];
+                let mut i = 0;
+                while i < n_elems {
+                    let c = (n_elems - i).min(vl);
+                    m.vload(kbuf[cur] + i as u64 * 8, c * 8);
+                    m.vector_ops(2); // shift + mask digit extract
+                    m.vgather(
+                        (0..c).map(|t| {
+                            let d = ((src_k[i + t] >> shift) & 0xFF) as u64;
+                            hist_addr + (t as u64 * 256 + d) * 4
+                        }),
+                        4,
+                    );
+                    m.vscatter(
+                        (0..c).map(|t| {
+                            let d = ((src_k[i + t] >> shift) & 0xFF) as u64;
+                            hist_addr + (t as u64 * 256 + d) * 4
+                        }),
+                        4,
+                    );
+                    for t in 0..c {
+                        hist[((src_k[i + t] >> shift) & 0xFF) as usize] += 1;
+                    }
+                    i += c;
+                }
+                // Prefix sum across lanes and buckets.
+                m.vector_ops(256);
+                m.scalar_ops(256);
+                let mut offs = [0u32; 256];
+                let mut accum = 0u32;
+                for d in 0..256 {
+                    offs[d] = accum;
+                    accum += hist[d];
+                }
+                // Scatter pass: read sequential, write scattered.
+                let dst = 1 - cur;
+                let mut dst_k = vec![0u64; n_elems];
+                let mut dst_v = vec![0f32; n_elems];
+                let mut i = 0;
+                while i < n_elems {
+                    let c = (n_elems - i).min(vl);
+                    m.vload(kbuf[cur] + i as u64 * 8, c * 8);
+                    m.vload(vbuf[cur] + i as u64 * 4, c * 4);
+                    m.vector_ops(3);
+                    // Destination offsets via the counter table again.
+                    m.vgather(
+                        (0..c).map(|t| {
+                            let d = ((src_k[i + t] >> shift) & 0xFF) as u64;
+                            hist_addr + (t as u64 * 256 + d) * 4
+                        }),
+                        4,
+                    );
+                    let mut kaddrs = Vec::with_capacity(c);
+                    let mut vaddrs = Vec::with_capacity(c);
+                    for t in 0..c {
+                        let d = ((src_k[i + t] >> shift) & 0xFF) as usize;
+                        let pos = offs[d] as usize;
+                        offs[d] += 1;
+                        dst_k[pos] = src_k[i + t];
+                        dst_v[pos] = src_v[i + t];
+                        kaddrs.push(kbuf[dst] + pos as u64 * 8);
+                        vaddrs.push(vbuf[dst] + pos as u64 * 4);
+                    }
+                    m.vscatter(kaddrs, 8);
+                    m.vscatter(vaddrs, 4);
+                    i += c;
+                }
+                src_k = dst_k;
+                src_v = dst_v;
+                cur = dst;
+            }
+
+            // --- Compress + output generation. -----------------------------
+            m.phase(Phase::Output);
+            let mut i = 0usize;
+            let mut block_rows: Vec<(Vec<u32>, Vec<f32>)> =
+                (lo..hi).map(|_| (Vec::new(), Vec::new())).collect();
+            while i < n_elems {
+                let c = (n_elems - i).min(vl);
+                m.vload(kbuf[cur] + i as u64 * 8, c * 8);
+                m.vload(vbuf[cur] + i as u64 * 4, c * 4);
+                m.vector_ops(4); // shifted compare, segment mask, segment sum
+                i += c;
+            }
+            let mut i = 0usize;
+            let mut uniques_in_block = 0u64;
+            while i < n_elems {
+                let key = src_k[i];
+                let mut v = src_v[i];
+                let mut j = i + 1;
+                while j < n_elems && src_k[j] == key {
+                    v += src_v[j];
+                    j += 1;
+                }
+                let lr = (key >> 32) as usize;
+                let col = (key & 0xFFFF_FFFF) as u32;
+                block_rows[lr].0.push(col);
+                block_rows[lr].1.push(v);
+                uniques_in_block += 1;
+                i = j;
+            }
+            // Compact unique entries to the output arrays (unit-stride).
+            let mut written = 0u64;
+            while written < uniques_in_block {
+                let c = ((uniques_in_block - written) as usize).min(vl);
+                m.vstore(out_idx_addr + (out_cursor + written) * 4, c * 4);
+                m.vstore(out_val_addr + (out_cursor + written) * 4, c * 4);
+                written += c as u64;
+            }
+            out_cursor += uniques_in_block;
+            for (r, row) in block_rows.into_iter().enumerate() {
+                m.store(out_ptr_addr + (lo + r + 1) as u64 * 8, 8);
+                rows_out.push(row);
+            }
+        }
+
+        Ok(Csr::from_rows(a.nrows, b.ncols, rows_out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::matrix::gen;
+    use crate::spgemm::{reference, same_product};
+
+    #[test]
+    fn correct_on_random() {
+        let a = gen::erdos_renyi(100, 100, 600, 51);
+        let mut m = Machine::new(SystemConfig::default());
+        let c = VecRadix::default().multiply(&mut m, &a, &a).unwrap();
+        assert!(same_product(&c, &reference(&a, &a), 1e-3));
+    }
+
+    #[test]
+    fn correct_with_tiny_blocks() {
+        let a = gen::rmat(64, 64, 400, 0.55, 0.2, 0.15, 52);
+        let mut m = Machine::new(SystemConfig::default());
+        let c = VecRadix { block_elems: 64 }.multiply(&mut m, &a, &a).unwrap();
+        assert!(same_product(&c, &reference(&a, &a), 1e-3));
+    }
+
+    #[test]
+    fn correct_single_giant_block() {
+        let a = gen::erdos_renyi(50, 50, 300, 53);
+        let mut m = Machine::new(SystemConfig::default());
+        let c = VecRadix { block_elems: usize::MAX }.multiply(&mut m, &a, &a).unwrap();
+        assert!(same_product(&c, &reference(&a, &a), 1e-3));
+    }
+
+    #[test]
+    fn sort_phase_dominates() {
+        // Paper Figure 9: stream sorting dominates vec-radix.
+        let a = gen::rmat(512, 512, 4096, 0.57, 0.19, 0.19, 54);
+        let mut m = Machine::new(SystemConfig::default());
+        VecRadix::default().multiply(&mut m, &a, &a).unwrap();
+        let r = m.metrics();
+        let sort = r.phase_cycles[Phase::Sort as usize];
+        let expand = r.phase_cycles[Phase::Expand as usize];
+        assert!(sort > expand, "sort {sort} <= expand {expand}");
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let a = Csr::empty(10, 10);
+        let mut m = Machine::new(SystemConfig::default());
+        let c = VecRadix::default().multiply(&mut m, &a, &a).unwrap();
+        assert_eq!(c.nnz(), 0);
+    }
+}

@@ -1,0 +1,395 @@
+//! Cycle-by-cycle simulation of the N x N SparseZipper systolic array
+//! executing one sorting (`mssortk`) or merging (`mszipk`) micro-operation
+//! on a single stream (paper Figures 5a/5b), including the compressing pass
+//! and the four counters (W_IC, N_IC, E_OC, S_OC).
+//!
+//! Values ride along with their keys through the comparator decisions, so
+//! the same simulation yields the paired v-instruction result. The array
+//! outputs are checked against `systolic::functional` (the normative
+//! semantics) by unit and property tests — the cross-model agreement is the
+//! evidence that the micro-architecture implements the ISA.
+//!
+//! ## The compressing pass and the abstract merge state
+//!
+//! The paper deliberately leaves the key-reordering/merge architectural
+//! state abstract (§III-C). Our concretization: the first pass through the
+//! array does the comparator work (route larger east / smaller south,
+//! combine equal keys, set merge bits on direct cross-chunk meetings); the
+//! compressing pass — which sweeps every surviving datum anyway — packs
+//! valid outputs, combines stragglers that crossed without meeting, and
+//! *finalizes* the merge bits with a running seen-other-chunk flag. The
+//! final bits are exactly the ISA-level rule ("x is mergeable iff the other
+//! chunk contains a key >= x"), which the software merge loop depends on
+//! for its pointer arithmetic (Fig. 4b): a direct-meeting-only bit would
+//! under-merge and break the prefix-consumption invariant.
+
+use crate::systolic::functional::{self, SortChunkOut, ZipChunkOut};
+use crate::systolic::pe::{compare_route, hard_switch, Datum, SRC_NORTH, SRC_WEST};
+
+/// What kind of micro-op the array executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Diagonal PEs hard-switch; the two chunks sort independently.
+    Sort,
+    /// All PEs compare; the two sorted chunks merge.
+    Zip,
+}
+
+/// Raw result of one micro-op through the array.
+#[derive(Clone, Debug)]
+pub struct ArrayOut {
+    /// Valid (key, value) pairs on the east side after compressing.
+    pub east: Vec<(u32, f32)>,
+    /// Valid pairs on the south side.
+    pub south: Vec<(u32, f32)>,
+    /// Excluded (merge-bit == false) keys per side: west-chunk, north-chunk.
+    pub excluded_west: usize,
+    pub excluded_north: usize,
+    /// Total cycles for the two passes (sorting/merging + compressing).
+    pub cycles: u32,
+}
+
+/// One pass through the array: `west[i]` enters row i staggered (cycle i),
+/// `north[j]` enters column j staggered. Runs until drained. Returns every
+/// non-bubble datum that left through the east and south edges, in arrival
+/// order, plus the architectural pass latency.
+fn run_pass(n: usize, op: Op, west: &[Datum], north: &[Datum]) -> (Vec<Datum>, Vec<Datum>, u32) {
+    assert!(west.len() <= n && north.len() <= n);
+    // h[i][j] = datum on the wire entering PE(i,j) from the west
+    // (column n = the east edge); v[i][j] = entering from the north
+    // (row n = the south edge). Double-buffered: next-state computed from
+    // current-state, so every wire has exactly one writer per cycle.
+    let mut h = vec![vec![Datum::BUBBLE; n + 1]; n];
+    let mut v = vec![vec![Datum::BUBBLE; n]; n + 1];
+    let mut east: Vec<Datum> = Vec::new();
+    let mut south: Vec<Datum> = Vec::new();
+    // Generous drain bound; the architectural latency reported to the
+    // timing model is the paper's 2N+1 per pass regardless.
+    let max_cycles = 4 * n + 8;
+    for cycle in 0..max_cycles {
+        // Inject staggered inputs: west[i] enters row i at cycle i,
+        // north[j] enters column j at cycle j.
+        if cycle < west.len() {
+            h[cycle][0] = west[cycle];
+        }
+        if cycle < north.len() {
+            v[0][cycle] = north[cycle];
+        }
+        let mut nh = vec![vec![Datum::BUBBLE; n + 1]; n];
+        let mut nv = vec![vec![Datum::BUBBLE; n]; n + 1];
+        let mut any_data = false;
+        for i in 0..n {
+            for j in 0..n {
+                let w_in = h[i][j];
+                let n_in = v[i][j];
+                if !w_in.valid && !n_in.valid && !w_in.dup && !n_in.dup {
+                    continue;
+                }
+                any_data = true;
+                let (e, s, _route) = if op == Op::Sort && i == j {
+                    hard_switch(w_in, n_in)
+                } else {
+                    compare_route(w_in, n_in)
+                };
+                nh[i][j + 1] = e;
+                nv[i + 1][j] = s;
+            }
+        }
+        for i in 0..n {
+            let d = nh[i][n];
+            if d.valid || d.dup {
+                east.push(d);
+            }
+        }
+        for j in 0..n {
+            let d = nv[n][j];
+            if d.valid || d.dup {
+                south.push(d);
+            }
+        }
+        h = nh;
+        v = nv;
+        if !any_data && cycle >= west.len().max(north.len()) {
+            break; // fully drained
+        }
+    }
+    debug_assert!(
+        h.iter().flatten().chain(v.iter().flatten()).all(|d| !d.valid),
+        "systolic array failed to drain"
+    );
+    (east, south, (2 * n + 1) as u32)
+}
+
+/// Compressing pass over the surviving data of one side or of the merged
+/// stream: stable pack by key (the hardware pushes valid data through the
+/// array again; functionally a sort-by-key with duplicate combining).
+fn compress(mut data: Vec<Datum>) -> Vec<Datum> {
+    data.retain(|d| d.valid);
+    data.sort_by_key(|d| d.key);
+    let mut out: Vec<Datum> = Vec::with_capacity(data.len());
+    for d in data {
+        if let Some(last) = out.last_mut() {
+            if last.key == d.key {
+                // Stragglers that crossed without meeting combine here.
+                last.val += d.val;
+                let cross = (last.src | d.src) != last.src || (last.src | d.src) != d.src;
+                last.src |= d.src;
+                last.merge = last.merge || d.merge || cross;
+                continue;
+            }
+        }
+        out.push(d);
+    }
+    out
+}
+
+/// Execute a full sorting micro-op (`mssortk`+`mssortv` for one stream):
+/// sorting pass + compressing pass.
+pub fn run_sort(n: usize, west_chunk: &[(u32, f32)], north_chunk: &[(u32, f32)]) -> ArrayOut {
+    let west: Vec<Datum> = west_chunk
+        .iter()
+        .map(|&(k, v)| Datum::new(k, v, SRC_WEST))
+        .collect();
+    let north: Vec<Datum> = north_chunk
+        .iter()
+        .map(|&(k, v)| Datum::new(k, v, SRC_NORTH))
+        .collect();
+    let (east_raw, south_raw, c1) = run_pass(n, Op::Sort, &west, &north);
+    // Partition check: the diagonal hard-switch confines each chunk.
+    debug_assert!(east_raw.iter().all(|d| !d.valid || d.src == SRC_NORTH));
+    debug_assert!(south_raw.iter().all(|d| !d.valid || d.src == SRC_WEST));
+    let east = compress(east_raw)
+        .into_iter()
+        .map(|d| (d.key, d.val))
+        .collect();
+    let south = compress(south_raw)
+        .into_iter()
+        .map(|d| (d.key, d.val))
+        .collect();
+    ArrayOut {
+        east,
+        south,
+        excluded_west: 0,
+        excluded_north: 0,
+        cycles: c1 + 1 + c1, // pass + turn-around + compress pass
+    }
+}
+
+/// Execute a full merging micro-op (`mszipk`+`mszipv` for one stream).
+/// Both chunks must be sorted ascending (unique within each chunk).
+pub fn run_zip(n: usize, west_chunk: &[(u32, f32)], north_chunk: &[(u32, f32)]) -> ArrayOut {
+    // West keys ordered bottom-to-top ascending (paper Fig. 5b): the largest
+    // west key enters row 0 first, meeting north keys in opposing order.
+    let mut west: Vec<Datum> = west_chunk
+        .iter()
+        .map(|&(k, v)| Datum::new(k, v, SRC_WEST))
+        .collect();
+    west.reverse();
+    let north: Vec<Datum> = north_chunk
+        .iter()
+        .map(|&(k, v)| Datum::new(k, v, SRC_NORTH))
+        .collect();
+    let (east_raw, south_raw, c1) = run_pass(n, Op::Zip, &west, &north);
+
+    // Compressing pass: pack + combine + finalize merge bits with the
+    // running seen-other-chunk sweep (right-to-left over the sorted stream).
+    let mut all: Vec<Datum> = east_raw;
+    all.extend(south_raw);
+    let mut merged = compress(all);
+    let mut seen: u8 = 0;
+    for d in merged.iter_mut().rev() {
+        if seen & !d.src != 0 {
+            d.merge = true; // a key >= d.key exists in the other chunk
+        }
+        seen |= d.src;
+    }
+
+    let mut excluded_west = 0usize;
+    let mut excluded_north = 0usize;
+    let mut out: Vec<(u32, f32)> = Vec::with_capacity(merged.len());
+    for d in &merged {
+        if d.merge {
+            out.push((d.key, d.val));
+        } else if d.src == SRC_WEST {
+            excluded_west += 1;
+        } else {
+            excluded_north += 1;
+        }
+    }
+    let split = out.len().min(n);
+    let south = out.split_off(split);
+    ArrayOut {
+        east: out,
+        south,
+        excluded_west,
+        excluded_north,
+        cycles: c1 + 1 + c1,
+    }
+}
+
+/// Convenience: run the array sort and package as the functional type.
+pub fn sort_as_functional(n: usize, a: &[(u32, f32)], b: &[(u32, f32)]) -> SortChunkOut {
+    let out = run_sort(n, a, b);
+    // West chunk exits south, north chunk exits east (diagonal bounce).
+    SortChunkOut {
+        a_keys: out.south.iter().map(|p| p.0).collect(),
+        a_vals: out.south.iter().map(|p| p.1).collect(),
+        b_keys: out.east.iter().map(|p| p.0).collect(),
+        b_vals: out.east.iter().map(|p| p.1).collect(),
+    }
+}
+
+/// Convenience: run the array zip and package as the functional type.
+pub fn zip_as_functional(n: usize, a: &[(u32, f32)], b: &[(u32, f32)]) -> ZipChunkOut {
+    let out = run_zip(n, a, b);
+    ZipChunkOut {
+        east_keys: out.east.iter().map(|p| p.0).collect(),
+        east_vals: out.east.iter().map(|p| p.1).collect(),
+        south_keys: out.south.iter().map(|p| p.0).collect(),
+        south_vals: out.south.iter().map(|p| p.1).collect(),
+        consumed_a: a.len() - out.excluded_west,
+        consumed_b: b.len() - out.excluded_north,
+    }
+}
+
+/// Check the array simulation against the normative functional model for a
+/// single (a, b) chunk pair. Returns Err with a description on divergence.
+pub fn crosscheck_zip(n: usize, a: &[(u32, f32)], b: &[(u32, f32)]) -> Result<(), String> {
+    let arr = zip_as_functional(n, a, b);
+    let ak: Vec<u32> = a.iter().map(|p| p.0).collect();
+    let av: Vec<f32> = a.iter().map(|p| p.1).collect();
+    let bk: Vec<u32> = b.iter().map(|p| p.0).collect();
+    let bv: Vec<f32> = b.iter().map(|p| p.1).collect();
+    let f = functional::zip_step(n, &ak, &av, &bk, &bv);
+    if arr.east_keys != f.east_keys || arr.south_keys != f.south_keys {
+        return Err(format!(
+            "keys diverge: array east={:?} south={:?}, functional east={:?} south={:?}",
+            arr.east_keys, arr.south_keys, f.east_keys, f.south_keys
+        ));
+    }
+    if arr.consumed_a != f.consumed_a || arr.consumed_b != f.consumed_b {
+        return Err(format!(
+            "counters diverge: array ({}, {}), functional ({}, {})",
+            arr.consumed_a, arr.consumed_b, f.consumed_a, f.consumed_b
+        ));
+    }
+    let close = |x: &[f32], y: &[f32]| {
+        x.len() == y.len() && x.iter().zip(y).all(|(p, q)| (p - q).abs() < 1e-4)
+    };
+    if !close(&arr.east_vals, &f.east_vals) || !close(&arr.south_vals, &f.south_vals) {
+        return Err("values diverge".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    /// Figure 5(a): north inputs {5, 8, 5} sort to {5, 8} with the duplicate
+    /// combined; west inputs sort independently.
+    #[test]
+    fn fig5a_sort_example() {
+        let west = [(4u32, 1.0f32), (1, 2.0), (6, 3.0)];
+        let north = [(5u32, 1.0f32), (8, 2.0), (5, 4.0)];
+        let out = sort_as_functional(3, &west, &north);
+        assert_eq!(out.a_keys, vec![1, 4, 6]);
+        assert_eq!(out.b_keys, vec![5, 8]);
+        assert_eq!(out.b_vals, vec![5.0, 2.0]); // 1.0 + 4.0 combined
+    }
+
+    /// Figure 5(b): west {2,5,9}, north {3,8}: east {2,3,5}, south {8},
+    /// 9 excluded (unmergeable), W_IC=2, N_IC=2.
+    #[test]
+    fn fig5b_zip_example() {
+        let west = [(2u32, 1.0f32), (5, 2.0), (9, 3.0)];
+        let north = [(3u32, 4.0f32), (8, 5.0)];
+        let out = run_zip(3, &west, &north);
+        assert_eq!(out.east.iter().map(|p| p.0).collect::<Vec<_>>(), vec![2, 3, 5]);
+        assert_eq!(out.south.iter().map(|p| p.0).collect::<Vec<_>>(), vec![8]);
+        assert_eq!(out.excluded_west, 1);
+        assert_eq!(out.excluded_north, 0);
+    }
+
+    #[test]
+    fn pass_latency_is_2n_plus_1_per_pass() {
+        let out = run_sort(3, &[(1, 1.0)], &[(2, 1.0)]);
+        assert_eq!(out.cycles, 7 + 1 + 7);
+        let out16 = run_sort(16, &[(1, 1.0)], &[(2, 1.0)]);
+        assert_eq!(out16.cycles, 33 + 1 + 33);
+    }
+
+    #[test]
+    fn sort_matches_functional_random() {
+        let mut rng = Pcg32::new(4242);
+        for trial in 0..200 {
+            let n = [3usize, 4, 8][trial % 3];
+            let la = rng.gen_usize(n + 1);
+            let lb = rng.gen_usize(n + 1);
+            let a: Vec<(u32, f32)> = (0..la)
+                .map(|_| (rng.gen_range(20), rng.gen_f32_range(0.5, 1.5)))
+                .collect();
+            let b: Vec<(u32, f32)> = (0..lb)
+                .map(|_| (rng.gen_range(20), rng.gen_f32_range(0.5, 1.5)))
+                .collect();
+            let arr = sort_as_functional(n, &a, &b);
+            let f = functional::sort_step(
+                &a.iter().map(|p| p.0).collect::<Vec<_>>(),
+                &a.iter().map(|p| p.1).collect::<Vec<_>>(),
+                &b.iter().map(|p| p.0).collect::<Vec<_>>(),
+                &b.iter().map(|p| p.1).collect::<Vec<_>>(),
+            );
+            assert_eq!(arr.a_keys, f.a_keys, "trial {trial} a={a:?} b={b:?}");
+            assert_eq!(arr.b_keys, f.b_keys, "trial {trial}");
+            for (x, y) in arr.a_vals.iter().zip(&f.a_vals) {
+                assert!((x - y).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn zip_matches_functional_random() {
+        let mut rng = Pcg32::new(777);
+        for trial in 0..300 {
+            let n = [3usize, 4, 8, 16][trial % 4];
+            let mk_sorted = |rng: &mut Pcg32, len: usize| {
+                let mut ks: Vec<u32> = (0..len).map(|_| rng.gen_range(30)).collect();
+                ks.sort_unstable();
+                ks.dedup();
+                ks.iter()
+                    .map(|&k| (k, rng.gen_f32_range(0.5, 1.5)))
+                    .collect::<Vec<_>>()
+            };
+            let la = rng.gen_usize(n + 1);
+            let a = mk_sorted(&mut rng, la);
+            let lb = rng.gen_usize(n + 1);
+            let b = mk_sorted(&mut rng, lb);
+            crosscheck_zip(n, &a, &b).unwrap_or_else(|e| panic!("trial {trial}: {e}\na={a:?}\nb={b:?}"));
+        }
+    }
+
+    /// No datum may be lost or duplicated by the network: total input value
+    /// mass equals total output value mass (valid outputs only).
+    #[test]
+    fn zip_conserves_value_mass() {
+        let mut rng = Pcg32::new(31337);
+        for _ in 0..100 {
+            let n = 8;
+            let mk = |rng: &mut Pcg32, len: usize| {
+                let mut ks: Vec<u32> = (0..len).map(|_| rng.gen_range(25)).collect();
+                ks.sort_unstable();
+                ks.dedup();
+                ks.iter().map(|&k| (k, 1.0f32)).collect::<Vec<_>>()
+            };
+            let la = rng.gen_usize(n + 1);
+            let a = mk(&mut rng, la);
+            let lb = rng.gen_usize(n + 1);
+            let b = mk(&mut rng, lb);
+            let out = run_zip(n, &a, &b);
+            let mass: f32 = out.east.iter().chain(&out.south).map(|p| p.1).sum();
+            let expect = (a.len() + b.len() - out.excluded_west - out.excluded_north) as f32;
+            assert!((mass - expect).abs() < 1e-3, "mass {mass} expect {expect}");
+        }
+    }
+}

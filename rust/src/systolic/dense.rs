@@ -1,0 +1,168 @@
+//! Baseline dense-dense GEMM on the same systolic array (paper §II-A).
+//!
+//! SparseZipper's pitch is that it *minimally extends* a dense-GEMM matrix
+//! unit — the dense path must keep working, unchanged. This module models
+//! the baseline: weight-stationary N x N tile MACs with the Table II
+//! latency, plus a tiled GEMM driver accounted on the `Machine`. The area
+//! model (Table IV) and the timing regression test pin "unchanged".
+
+use crate::matrix::Csr;
+use crate::sim::{Machine, Phase};
+
+/// Functional N x N tile multiply-accumulate: acc += a * b.
+pub fn tile_mac(n: usize, a: &[f32], b: &[f32], acc: &mut [f32]) {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert_eq!(b.len(), n * n);
+    debug_assert_eq!(acc.len(), n * n);
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if aik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                acc[i * n + j] += aik * b[k * n + j];
+            }
+        }
+    }
+}
+
+/// Dense GEMM C = A * B over the simulated matrix unit: tiles of N x N,
+/// one `mmul` per (i, k, j) tile triple; A/B tiles loaded with row-wise
+/// unit-stride micro-ops, C tiles kept accumulator-stationary.
+pub fn dense_gemm(m: &mut Machine, a: &[f32], b: &[f32], rows: usize, inner: usize, cols: usize) -> Vec<f32> {
+    let n = m.cfg.unit.n;
+    m.phase(Phase::Expand);
+    let a_addr = m.salloc(rows * inner * 4);
+    let b_addr = m.salloc(inner * cols * 4);
+    let c_addr = m.salloc(rows * cols * 4);
+    let mut c = vec![0f32; rows * cols];
+    let tiles_i = rows.div_ceil(n);
+    let tiles_k = inner.div_ceil(n);
+    let tiles_j = cols.div_ceil(n);
+    // Gather a zero-padded n x n tile.
+    let tile_of = |src: &[f32], r0: usize, c0: usize, h: usize, w: usize, ld: usize| {
+        let mut t = vec![0f32; n * n];
+        for i in 0..h.min(n) {
+            for j in 0..w.min(n) {
+                t[i * n + j] = src[(r0 + i) * ld + c0 + j];
+            }
+        }
+        t
+    };
+    for ti in 0..tiles_i {
+        for tj in 0..tiles_j {
+            let mut acc = vec![0f32; n * n];
+            for tk in 0..tiles_k {
+                let (r0, k0, c0) = (ti * n, tk * n, tj * n);
+                let at = tile_of(a, r0, k0, rows - r0, inner - k0, inner);
+                let bt = tile_of(b, k0, c0, inner - k0, cols - c0, cols);
+                // Tile loads: n unit-stride rows each.
+                let a_rows: Vec<(u64, usize)> = (0..n.min(rows - r0))
+                    .map(|i| (a_addr + (((r0 + i) * inner + k0) * 4) as u64, n.min(inner - k0)))
+                    .collect();
+                let b_rows: Vec<(u64, usize)> = (0..n.min(inner - k0))
+                    .map(|i| (b_addr + (((k0 + i) * cols + c0) * 4) as u64, n.min(cols - c0)))
+                    .collect();
+                m.mlxe(a_rows.iter());
+                m.mlxe(b_rows.iter());
+                m.mmul_tile();
+                tile_mac(n, &at, &bt, &mut acc);
+            }
+            // Write back the C tile.
+            let (r0, c0) = (ti * n, tj * n);
+            let c_rows: Vec<(u64, usize)> = (0..n.min(rows - r0))
+                .map(|i| (c_addr + (((r0 + i) * cols + c0) * 4) as u64, n.min(cols - c0)))
+                .collect();
+            m.msxe(c_rows.iter());
+            for i in 0..n.min(rows - r0) {
+                for j in 0..n.min(cols - c0) {
+                    c[(r0 + i) * cols + c0 + j] = acc[i * n + j];
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Dense GEMM of two sparse operands (densified) — the "what if you ran
+/// SpGEMM on the dense unit" strawman of §I: correct but wasteful.
+pub fn dense_gemm_of_sparse(m: &mut Machine, a: &Csr, b: &Csr) -> Vec<f32> {
+    let ad: Vec<f32> = a.to_dense().into_iter().flatten().collect();
+    let bd: Vec<f32> = b.to_dense().into_iter().flatten().collect();
+    dense_gemm(m, &ad, &bd, a.nrows, a.ncols, b.ncols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::matrix::gen;
+
+    fn naive(a: &[f32], b: &[f32], rows: usize, inner: usize, cols: usize) -> Vec<f32> {
+        let mut c = vec![0f32; rows * cols];
+        for i in 0..rows {
+            for k in 0..inner {
+                for j in 0..cols {
+                    c[i * cols + j] += a[i * inner + k] * b[k * cols + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn tile_mac_matches_naive() {
+        let n = 4;
+        let a: Vec<f32> = (0..16).map(|x| x as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..16).map(|x| (x % 5) as f32).collect();
+        let mut acc = vec![0f32; 16];
+        tile_mac(n, &a, &b, &mut acc);
+        assert_eq!(acc, naive(&a, &b, 4, 4, 4));
+    }
+
+    #[test]
+    fn dense_gemm_non_square_matches_naive() {
+        let (rows, inner, cols) = (37, 22, 45);
+        let a: Vec<f32> = (0..rows * inner).map(|x| ((x * 7) % 11) as f32 * 0.25).collect();
+        let b: Vec<f32> = (0..inner * cols).map(|x| ((x * 3) % 13) as f32 * 0.5).collect();
+        let mut m = Machine::new(SystemConfig::default());
+        let c = dense_gemm(&mut m, &a, &b, rows, inner, cols);
+        let want = naive(&a, &b, rows, inner, cols);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-2, "{x} vs {y}");
+        }
+        assert!(m.metrics().ops.mmul > 0);
+    }
+
+    #[test]
+    fn dense_path_timing_is_unchanged_by_extension() {
+        // The dense tile latency depends only on baseline parameters —
+        // SparseZipper's additions (issue overhead, pass stalls) must not
+        // leak into the dense path.
+        let mut cfg1 = SystemConfig::default();
+        cfg1.unit.issue_overhead = 0;
+        cfg1.unit.pass_stalls = 0;
+        let t1 = crate::systolic::SystolicTiming::new(cfg1.unit).dense_gemm_cycles();
+        let t2 = crate::systolic::SystolicTiming::new(SystemConfig::default().unit).dense_gemm_cycles();
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn spgemm_beats_dense_strawman_on_sparse_input() {
+        // §I motivation: highly sparse inputs on the dense unit waste
+        // almost every MAC. Even our small case shows a large gap.
+        use crate::spgemm::{spz::Spz, SpGemm};
+        let a = gen::powerlaw_clustered(256, 1280, 0.9, 0.3, 12);
+        let mut md = Machine::new(SystemConfig::default());
+        dense_gemm_of_sparse(&mut md, &a, &a);
+        let mut ms = Machine::new(SystemConfig::default());
+        Spz::native().multiply(&mut ms, &a, &a).unwrap();
+        assert!(
+            md.metrics().cycles > 3.0 * ms.metrics().cycles,
+            "dense {} !>> spz {}",
+            md.metrics().cycles,
+            ms.metrics().cycles
+        );
+    }
+}

@@ -1,0 +1,305 @@
+//! Normative semantics of `mssortk/mssortv` and `mszipk/mszipv`
+//! (DESIGN.md §2). This is the model the SpGEMM implementations execute,
+//! the oracle the PE-level array simulation is checked against, and the
+//! semantics the L1 Pallas kernel reproduces (python/compile/kernels).
+
+/// Result of sorting one pair of chunks (one stream) — `mssortk`+`mssortv`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SortChunkOut {
+    /// Sorted-unique chunk A (duplicates combined, values accumulated).
+    pub a_keys: Vec<u32>,
+    pub a_vals: Vec<f32>,
+    /// Sorted-unique chunk B.
+    pub b_keys: Vec<u32>,
+    pub b_vals: Vec<f32>,
+}
+
+/// Result of merging one pair of sorted chunks (one stream) — `mszipk`+`mszipv`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ZipChunkOut {
+    /// "East" part: the first min(|m|, N) merged keys (smaller keys).
+    pub east_keys: Vec<u32>,
+    pub east_vals: Vec<f32>,
+    /// "South" part: the remainder (larger keys).
+    pub south_keys: Vec<u32>,
+    pub south_vals: Vec<f32>,
+    /// Elements consumed from chunk A (IC0) / chunk B (IC1).
+    pub consumed_a: usize,
+    pub consumed_b: usize,
+}
+
+/// Sort one chunk ascending and combine duplicate keys (values summed).
+/// This is what one stream's micro-op does in the sorting + compressing
+/// passes of `mssortk`/`mssortv`.
+pub fn sort_chunk(keys: &[u32], vals: &[f32]) -> (Vec<u32>, Vec<f32>) {
+    debug_assert_eq!(keys.len(), vals.len());
+    let mut idx: Vec<usize> = (0..keys.len()).collect();
+    idx.sort_by_key(|&i| keys[i]);
+    let mut out_k: Vec<u32> = Vec::with_capacity(keys.len());
+    let mut out_v: Vec<f32> = Vec::with_capacity(keys.len());
+    for &i in &idx {
+        if let Some(&last) = out_k.last() {
+            if last == keys[i] {
+                *out_v.last_mut().unwrap() += vals[i];
+                continue;
+            }
+        }
+        out_k.push(keys[i]);
+        out_v.push(vals[i]);
+    }
+    (out_k, out_v)
+}
+
+/// `mssortk`+`mssortv` on one stream: chunks A and B sorted independently
+/// (diagonal PEs hard-switch, so they never mix).
+pub fn sort_step(
+    a_keys: &[u32],
+    a_vals: &[f32],
+    b_keys: &[u32],
+    b_vals: &[f32],
+) -> SortChunkOut {
+    let (ak, av) = sort_chunk(a_keys, a_vals);
+    let (bk, bv) = sort_chunk(b_keys, b_vals);
+    SortChunkOut {
+        a_keys: ak,
+        a_vals: av,
+        b_keys: bk,
+        b_vals: bv,
+    }
+}
+
+/// `mszipk`+`mszipv` on one stream (DESIGN.md §2):
+///
+/// * element `x` of A is mergeable iff `x <= max(B)` (merge-bit rule);
+///   symmetric for B; nothing is mergeable against an empty chunk;
+/// * mergeable elements are merged ascending, equal keys combined
+///   (A's value + B's value);
+/// * the merged sequence `m` is split into east = `m[0..min(|m|,n)]` and
+///   south = the rest, with `n` the hardware chunk size.
+///
+/// Inputs must be sorted; duplicate keys *within* a chunk are not expected
+/// from well-formed software (they are pre-combined by `mssort`), but the
+/// hardware would combine them too, so we combine them here for totality.
+pub fn zip_step(
+    n: usize,
+    a_keys: &[u32],
+    a_vals: &[f32],
+    b_keys: &[u32],
+    b_vals: &[f32],
+) -> ZipChunkOut {
+    debug_assert_eq!(a_keys.len(), a_vals.len());
+    debug_assert_eq!(b_keys.len(), b_vals.len());
+    debug_assert!(a_keys.windows(2).all(|w| w[0] <= w[1]), "A not sorted");
+    debug_assert!(b_keys.windows(2).all(|w| w[0] <= w[1]), "B not sorted");
+
+    let max_a = a_keys.last().copied();
+    let max_b = b_keys.last().copied();
+
+    // Mergeable prefixes (sorted inputs => mergeable set is a prefix).
+    let la = match max_b {
+        None => 0,
+        Some(mb) => a_keys.partition_point(|&k| k <= mb),
+    };
+    let lb = match max_a {
+        None => 0,
+        Some(ma) => b_keys.partition_point(|&k| k <= ma),
+    };
+
+    // Two-pointer merge with cross-chunk (and defensive in-chunk) combining.
+    let mut mk: Vec<u32> = Vec::with_capacity(la + lb);
+    let mut mv: Vec<f32> = Vec::with_capacity(la + lb);
+    let (mut i, mut j) = (0usize, 0usize);
+    let push = |mk: &mut Vec<u32>, mv: &mut Vec<f32>, k: u32, v: f32| {
+        if let Some(&last) = mk.last() {
+            if last == k {
+                *mv.last_mut().unwrap() += v;
+                return;
+            }
+        }
+        mk.push(k);
+        mv.push(v);
+    };
+    while i < la && j < lb {
+        if a_keys[i] <= b_keys[j] {
+            push(&mut mk, &mut mv, a_keys[i], a_vals[i]);
+            i += 1;
+        } else {
+            push(&mut mk, &mut mv, b_keys[j], b_vals[j]);
+            j += 1;
+        }
+    }
+    while i < la {
+        push(&mut mk, &mut mv, a_keys[i], a_vals[i]);
+        i += 1;
+    }
+    while j < lb {
+        push(&mut mk, &mut mv, b_keys[j], b_vals[j]);
+        j += 1;
+    }
+
+    let east_len = mk.len().min(n);
+    let south_k = mk.split_off(east_len);
+    let south_v = mv.split_off(east_len);
+    ZipChunkOut {
+        east_keys: mk,
+        east_vals: mv,
+        south_keys: south_k,
+        south_vals: south_v,
+        consumed_a: la,
+        consumed_b: lb,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sort_chunk_basic() {
+        let (k, v) = sort_chunk(&[5, 8, 5], &[1.0, 3.0, 7.0]);
+        assert_eq!(k, vec![5, 8]);
+        assert_eq!(v, vec![8.0, 3.0]); // duplicates combined per Fig. 5(a)
+    }
+
+    #[test]
+    fn sort_chunk_empty() {
+        let (k, v) = sort_chunk(&[], &[]);
+        assert!(k.is_empty() && v.is_empty());
+    }
+
+    #[test]
+    fn sort_chunk_all_duplicates() {
+        let (k, v) = sort_chunk(&[3, 3, 3, 3], &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(k, vec![3]);
+        assert_eq!(v, vec![4.0]);
+    }
+
+    #[test]
+    fn sort_step_keeps_chunks_separate() {
+        let out = sort_step(&[9, 1], &[1.0, 2.0], &[5, 5], &[3.0, 4.0]);
+        assert_eq!(out.a_keys, vec![1, 9]);
+        assert_eq!(out.b_keys, vec![5]);
+        assert_eq!(out.b_vals, vec![7.0]);
+    }
+
+    // --- zip_step: the Figure 5(b) example ---------------------------------
+    // West chunk {2,5,9}, north chunk {3,8} (sorted). 9 > max(north)=8 is
+    // unmergeable; output east {2,3,5}, south {8}.
+    #[test]
+    fn zip_fig5b_example() {
+        let out = zip_step(
+            3,
+            &[2, 5, 9],
+            &[1.0, 2.0, 3.0],
+            &[3, 8],
+            &[4.0, 5.0],
+        );
+        assert_eq!(out.east_keys, vec![2, 3, 5]);
+        assert_eq!(out.south_keys, vec![8]);
+        assert_eq!(out.consumed_a, 2); // {2,5}; 9 excluded
+        assert_eq!(out.consumed_b, 2); // {3,8}
+    }
+
+    #[test]
+    fn zip_combines_cross_duplicates() {
+        let out = zip_step(4, &[1, 4, 7], &[1.0, 2.0, 3.0], &[4, 9], &[10.0, 20.0]);
+        // max_a=7 => 9 not mergeable from B; max_b=9 => all of A mergeable.
+        assert_eq!(out.east_keys, vec![1, 4, 7]);
+        assert_eq!(out.east_vals, vec![1.0, 12.0, 3.0]);
+        assert_eq!(out.consumed_a, 3);
+        assert_eq!(out.consumed_b, 1);
+    }
+
+    #[test]
+    fn zip_empty_b_merges_nothing() {
+        let out = zip_step(4, &[1, 2], &[1.0, 1.0], &[], &[]);
+        assert_eq!(out.consumed_a, 0);
+        assert_eq!(out.consumed_b, 0);
+        assert!(out.east_keys.is_empty());
+    }
+
+    #[test]
+    fn zip_equal_maxes_consume_everything() {
+        let out = zip_step(4, &[1, 5], &[1.0, 2.0], &[3, 5], &[3.0, 4.0]);
+        assert_eq!(out.consumed_a, 2);
+        assert_eq!(out.consumed_b, 2);
+        assert_eq!(out.east_keys, vec![1, 3, 5]);
+        assert_eq!(out.east_vals, vec![1.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn zip_overflow_to_south() {
+        // maxA = 5, so B's 6 is unmergeable this step; everything else merges.
+        let out = zip_step(
+            3,
+            &[1, 3, 5],
+            &[1.0; 3],
+            &[2, 4, 6],
+            &[1.0; 3],
+        );
+        assert_eq!(out.east_keys, vec![1, 2, 3]);
+        assert_eq!(out.south_keys, vec![4, 5]);
+        assert_eq!(out.consumed_a, 3);
+        assert_eq!(out.consumed_b, 2);
+    }
+
+    #[test]
+    fn zip_full_two_chunks_interleaved() {
+        // Equal maxes: everything merges; 2N-1 outputs split N east, rest south.
+        let out = zip_step(
+            3,
+            &[1, 3, 6],
+            &[1.0; 3],
+            &[2, 4, 6],
+            &[1.0; 3],
+        );
+        assert_eq!(out.east_keys, vec![1, 2, 3]);
+        assert_eq!(out.south_keys, vec![4, 6]);
+        assert_eq!(out.east_vals, vec![1.0, 1.0, 1.0]);
+        assert_eq!(out.south_vals, vec![1.0, 2.0]);
+        assert_eq!(out.consumed_a, 3);
+        assert_eq!(out.consumed_b, 3);
+    }
+
+    #[test]
+    fn zip_identical_chunks_fully_combine() {
+        let out = zip_step(4, &[2, 4], &[1.0, 1.0], &[2, 4], &[2.0, 2.0]);
+        assert_eq!(out.east_keys, vec![2, 4]);
+        assert_eq!(out.east_vals, vec![3.0, 3.0]);
+        assert_eq!(out.consumed_a, 2);
+        assert_eq!(out.consumed_b, 2);
+    }
+
+    /// Invariant used by the software merge loop: every emitted key is
+    /// strictly less than every unconsumed key (so east/south can be stored
+    /// to the output stream immediately).
+    #[test]
+    fn zip_emitted_less_than_unconsumed() {
+        let mut rng = crate::util::Pcg32::new(99);
+        for _ in 0..500 {
+            let n = 8;
+            let mut a: Vec<u32> = (0..rng.gen_usize(n + 1)).map(|_| rng.gen_range(40)).collect();
+            let mut b: Vec<u32> = (0..rng.gen_usize(n + 1)).map(|_| rng.gen_range(40)).collect();
+            a.sort_unstable();
+            a.dedup();
+            b.sort_unstable();
+            b.dedup();
+            let av = vec![1.0f32; a.len()];
+            let bv = vec![1.0f32; b.len()];
+            let out = zip_step(n, &a, &av, &b, &bv);
+            let emitted_max = out
+                .south_keys
+                .last()
+                .or(out.east_keys.last())
+                .copied();
+            if let Some(em) = emitted_max {
+                for &k in &a[out.consumed_a..] {
+                    assert!(k > em, "unconsumed A key {k} <= emitted max {em}");
+                }
+                for &k in &b[out.consumed_b..] {
+                    assert!(k > em, "unconsumed B key {k} <= emitted max {em}");
+                }
+            }
+        }
+    }
+}

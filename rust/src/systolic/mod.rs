@@ -1,0 +1,20 @@
+//! SparseZipper systolic-array micro-architecture (paper §IV).
+//!
+//! Three models of the same hardware, used at different fidelities:
+//!
+//! * [`functional`] — the normative instruction semantics (fast; drives the
+//!   SpGEMM implementations and the XLA-engine cross-check).
+//! * [`array`] — PE-level cycle-by-cycle simulation of the sorting/merging
+//!   and compressing passes (validates Figure 5 traces and the functional
+//!   model on random inputs).
+//! * [`timing`] — the occupancy model (§IV-C) that converts instruction
+//!   issue into cycles for the big simulations.
+
+pub mod array;
+pub mod dense;
+pub mod functional;
+pub mod pe;
+pub mod timing;
+
+pub use functional::{sort_step, zip_step, SortChunkOut, ZipChunkOut};
+pub use timing::SystolicTiming;

@@ -1,0 +1,203 @@
+//! A single processing element of the SparseZipper systolic array
+//! (paper §IV-A/§IV-B/§IV-D).
+//!
+//! Each PE repurposes the dense-GEMM MAC datapath: the adder compares keys,
+//! a small control unit routes the inputs (forward / switch / combine), and
+//! three control bits (source, duplicate, merge) travel with every datum.
+
+/// One datum flowing through the array: a key (or value bits) plus the
+/// control bits of §IV-B. `valid=false` is a pipeline bubble or an excluded
+/// duplicate ("d" in Figure 5).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Datum {
+    pub key: u32,
+    /// f32 bits of the paired value (carried so the v-pass can be simulated
+    /// with the same comparator decisions).
+    pub val: f32,
+    pub valid: bool,
+    /// Source mask: bit 0 = west chunk, bit 1 = north chunk. Combined
+    /// duplicates carry both bits.
+    pub src: u8,
+    /// Set when this key has met a larger-or-equal key from the other chunk
+    /// *inside the array*. The compressing pass completes the rule (see
+    /// `array::run_zip`): the paper leaves this state abstract (§III-C);
+    /// direct meetings alone cannot realize the ISA-level merge rule, so the
+    /// compress sweep finalizes it.
+    pub merge: bool,
+    /// Marks an invalidated duplicate slot ("d").
+    pub dup: bool,
+}
+
+pub const SRC_WEST: u8 = 0b01;
+pub const SRC_NORTH: u8 = 0b10;
+
+impl Datum {
+    pub const BUBBLE: Datum = Datum {
+        key: 0,
+        val: 0.0,
+        valid: false,
+        src: 0,
+        merge: false,
+        dup: false,
+    };
+
+    pub fn new(key: u32, val: f32, src: u8) -> Self {
+        Datum {
+            key,
+            val,
+            valid: true,
+            src,
+            merge: false,
+            dup: false,
+        }
+    }
+}
+
+/// Routing decision a PE makes in one cycle (stored in the repurposed
+/// weight register so the v-instruction can replay it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// west->east, north->south
+    Forward,
+    /// west->south, north->east
+    Switch,
+    /// duplicate keys combined; combined datum goes south, east gets "d"
+    Combine,
+}
+
+/// Compare-and-route: the core PE operation for `mssortk`/`mszipk`.
+///
+/// * both invalid: forward bubbles;
+/// * one invalid: the invalid datum is "larger than any valid key" and is
+///   routed east, the valid one south;
+/// * equal keys: combine (values accumulate; east output is an invalid dup);
+/// * otherwise: larger key east, smaller key south. When the larger datum
+///   carries a source bit the smaller one lacks, the smaller key has now
+///   met a >= key from the other chunk: its merge bit is set.
+///
+/// Returns (east, south, route).
+pub fn compare_route(w: Datum, n: Datum) -> (Datum, Datum, Route) {
+    match (w.valid, n.valid) {
+        (false, false) => (w, n, Route::Forward),
+        (false, true) => (w, n, Route::Forward),  // invalid west -> east
+        (true, false) => (n, w, Route::Switch),   // invalid north -> east (via switch)
+        (true, true) => {
+            if w.key == n.key {
+                let cross = (w.src | n.src) != w.src || (w.src | n.src) != n.src;
+                let s = Datum {
+                    key: w.key,
+                    val: w.val + n.val,
+                    valid: true,
+                    src: w.src | n.src,
+                    // A cross combine satisfies the merge rule for both
+                    // constituents; a same-chunk combine inherits.
+                    merge: cross || w.merge || n.merge,
+                    dup: false,
+                };
+                let e = Datum {
+                    key: w.key,
+                    val: 0.0,
+                    valid: false,
+                    src: w.src,
+                    merge: false,
+                    dup: true,
+                };
+                (e, s, Route::Combine)
+            } else if w.key > n.key {
+                let mut n2 = n;
+                if w.src & !n.src != 0 {
+                    n2.merge = true; // n met a larger key from the other side
+                }
+                (w, n2, Route::Forward)
+            } else {
+                let mut w2 = w;
+                if n.src & !w.src != 0 {
+                    w2.merge = true;
+                }
+                (n, w2, Route::Switch)
+            }
+        }
+    }
+}
+
+/// Hard-switch for diagonal PEs during `mssortk` (keeps the two chunks from
+/// intermixing, paper §IV-A).
+pub fn hard_switch(w: Datum, n: Datum) -> (Datum, Datum, Route) {
+    (n, w, Route::Switch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn larger_goes_east() {
+        let (e, s, r) = compare_route(Datum::new(7, 1.0, SRC_WEST), Datum::new(3, 2.0, SRC_NORTH));
+        assert_eq!(e.key, 7);
+        assert_eq!(s.key, 3);
+        assert_eq!(r, Route::Forward);
+        assert!(s.merge, "smaller key met >= key from other side");
+    }
+
+    #[test]
+    fn smaller_west_switches() {
+        let (e, s, r) = compare_route(Datum::new(2, 1.0, SRC_WEST), Datum::new(9, 2.0, SRC_NORTH));
+        assert_eq!(e.key, 9);
+        assert_eq!(s.key, 2);
+        assert_eq!(r, Route::Switch);
+        assert!(s.merge);
+        assert!(!e.merge);
+    }
+
+    #[test]
+    fn equal_keys_combine_values() {
+        let (e, s, r) = compare_route(Datum::new(5, 1.5, SRC_WEST), Datum::new(5, 2.5, SRC_NORTH));
+        assert_eq!(r, Route::Combine);
+        assert!(!e.valid && e.dup);
+        assert!(s.valid);
+        assert_eq!(s.val, 4.0);
+        assert!(s.merge);
+        assert_eq!(s.src, SRC_WEST | SRC_NORTH);
+    }
+
+    #[test]
+    fn same_chunk_equal_combines_without_merge_bit() {
+        let (_, s, r) = compare_route(Datum::new(5, 1.0, SRC_NORTH), Datum::new(5, 1.0, SRC_NORTH));
+        assert_eq!(r, Route::Combine);
+        assert!(!s.merge);
+        assert_eq!(s.src, SRC_NORTH);
+    }
+
+    #[test]
+    fn combined_datum_sets_cross_bit_of_smaller() {
+        // Smaller pure-west key meeting a combined (west|north) larger key
+        // counts as meeting the other chunk.
+        let mut big = Datum::new(9, 1.0, SRC_WEST | SRC_NORTH);
+        big.merge = true;
+        let (_, s, _) = compare_route(big, Datum::new(3, 1.0, SRC_WEST));
+        assert!(s.merge);
+    }
+
+    #[test]
+    fn invalid_is_larger_than_valid() {
+        let inv = Datum { valid: false, dup: true, ..Datum::BUBBLE };
+        let (e, s, _) = compare_route(inv, Datum::new(1, 1.0, SRC_NORTH));
+        assert!(!e.valid);
+        assert_eq!(s.key, 1);
+        let (e, s, _) = compare_route(Datum::new(1, 1.0, SRC_WEST), inv);
+        assert!(!e.valid);
+        assert_eq!(s.key, 1);
+    }
+
+    #[test]
+    fn bubbles_pass_through() {
+        let (e, s, _) = compare_route(Datum::BUBBLE, Datum::BUBBLE);
+        assert!(!e.valid && !s.valid);
+    }
+
+    #[test]
+    fn merge_bit_not_set_within_chunk() {
+        let (_, s, _) = compare_route(Datum::new(7, 1.0, SRC_WEST), Datum::new(3, 2.0, SRC_WEST));
+        assert!(!s.merge, "same-chunk comparison must not set merge bit");
+    }
+}

@@ -1,0 +1,117 @@
+//! Occupancy model of the matrix unit executing sort/zip instruction pairs
+//! (paper §IV-C, Figure 6).
+//!
+//! A k-instruction processes R row micro-ops, each flowing through the array
+//! in two passes (sorting/merging + compressing) of 2N+1 cycles each, with
+//! row micro-ops issued back-to-back (one per cycle) and a 1-cycle stall at
+//! each pass turn-around. The paired v-instruction overlaps: it may start as
+//! soon as the top-left PE finishes its last compressing operation. Pairs do
+//! *not* overlap each other (the output counters must be drained first), and
+//! the instructions issue non-speculatively from the head of the ROB.
+
+use crate::config::MatrixUnitConfig;
+
+/// Occupancy/latency calculator for the SparseZipper systolic array.
+#[derive(Clone, Copy, Debug)]
+pub struct SystolicTiming {
+    pub cfg: MatrixUnitConfig,
+}
+
+impl SystolicTiming {
+    pub fn new(cfg: MatrixUnitConfig) -> Self {
+        SystolicTiming { cfg }
+    }
+
+    /// Latency of a single micro-op through the array (one pass).
+    pub fn pass_latency(&self) -> u64 {
+        (2 * self.cfg.n + 1) as u64
+    }
+
+    /// Cycles one k-instruction occupies the array for `rows` micro-ops:
+    /// fill/drain of the two passes + back-to-back row issue + turn-around
+    /// stalls (Figure 6 shows the 1-cycle stalls at each pass boundary).
+    pub fn k_instr_cycles(&self, rows: usize) -> u64 {
+        if rows == 0 {
+            return 0;
+        }
+        2 * self.pass_latency() + rows as u64 - 1 + self.cfg.pass_stalls as u64
+    }
+
+    /// Cycles for a full k/v pair over `rows` active streams. The
+    /// v-instruction starts once the k-instruction's last compress op clears
+    /// the top-left PE, hiding all but its tail (~one pass + the row drain).
+    pub fn pair_cycles(&self, rows: usize) -> u64 {
+        if rows == 0 {
+            return self.cfg.issue_overhead as u64;
+        }
+        let k = self.k_instr_cycles(rows);
+        let v_tail = self.pass_latency() + rows as u64 - 1 + self.cfg.pass_stalls as u64;
+        k + v_tail + self.cfg.issue_overhead as u64
+    }
+
+    /// Dense-GEMM occupancy for an R x R x R tile (baseline matrix unit,
+    /// used by the dense-path regression test): weights preloaded, R cycles
+    /// of streaming + 2N fill/drain + MAC latency.
+    pub fn dense_gemm_cycles(&self) -> u64 {
+        let n = self.cfg.n as u64;
+        2 * n + n + self.cfg.mac_latency as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn t() -> SystolicTiming {
+        SystolicTiming::new(SystemConfig::default().unit)
+    }
+
+    #[test]
+    fn pass_latency_16() {
+        assert_eq!(t().pass_latency(), 33);
+    }
+
+    #[test]
+    fn k_instr_full_group() {
+        // 2*33 + 15 + 2 = 83
+        assert_eq!(t().k_instr_cycles(16), 83);
+    }
+
+    #[test]
+    fn pair_adds_v_tail_and_issue() {
+        let tm = t();
+        // 83 + (33 + 15 + 2) + 4 = 137
+        assert_eq!(tm.pair_cycles(16), 137);
+        assert!(tm.pair_cycles(1) < tm.pair_cycles(16));
+    }
+
+    #[test]
+    fn zero_rows_costs_only_issue() {
+        assert_eq!(t().pair_cycles(0), 4);
+    }
+
+    /// Figure 6 sanity: a 3x3 array sorting 3 streams. Pass latency 7,
+    /// k-instr = 14 + 2 + 2 = 18 cycles — matches the figure's scale
+    /// (first output appears around cycle 8, last around cycle 18).
+    #[test]
+    fn fig6_scale_3x3() {
+        let tm = SystolicTiming::new(MatrixUnitConfig {
+            n: 3,
+            num_regs: 16,
+            mac_latency: 4,
+            issue_overhead: 0,
+            pass_stalls: 2,
+        });
+        assert_eq!(tm.pass_latency(), 7);
+        assert_eq!(tm.k_instr_cycles(3), 18);
+    }
+
+    #[test]
+    fn monotone_in_rows() {
+        let tm = t();
+        for r in 1..16 {
+            assert!(tm.pair_cycles(r) < tm.pair_cycles(r + 1));
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Small self-contained utilities (the offline vendor set has no `rand`,
+//! `serde`, or `itertools`, so we carry our own PRNG and helpers).
+
+pub mod prng;
+pub mod stats;
+
+pub use prng::Pcg32;
+pub use stats::{geomean, mean, stddev};
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Next power of two >= x (x >= 1).
+#[inline]
+pub fn next_pow2(x: usize) -> usize {
+    x.next_power_of_two()
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// log2 of a power of two.
+#[inline]
+pub fn log2_pow2(x: usize) -> u32 {
+    debug_assert!(x.is_power_of_two());
+    x.trailing_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 16), 0);
+        assert_eq!(round_up(1, 16), 16);
+        assert_eq!(round_up(16, 16), 16);
+        assert_eq!(round_up(17, 16), 32);
+    }
+
+    #[test]
+    fn next_pow2_basic() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(16), 16);
+        assert_eq!(next_pow2(17), 32);
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(8, 4), 2);
+        assert_eq!(ceil_div(9, 4), 3);
+    }
+
+    #[test]
+    fn log2_basic() {
+        assert_eq!(log2_pow2(1), 0);
+        assert_eq!(log2_pow2(16), 4);
+        assert_eq!(log2_pow2(1024), 10);
+    }
+}

@@ -1,0 +1,85 @@
+//! Figure/table harness integration: a small-scale sweep must reproduce the
+//! paper's qualitative shape (who wins, where, why) and render every
+//! report. This is the fast CI version of examples/paper_pipeline.rs.
+
+use sparsezipper::area::AreaModel;
+use sparsezipper::coordinator::{figures, run_suite, SuiteConfig};
+
+fn small_suite() -> sparsezipper::coordinator::SuiteResult {
+    let cfg = SuiteConfig {
+        datasets: vec![
+            "p2p".into(),
+            "wiki".into(),
+            "usroads".into(),
+            "m133-b3".into(),
+            "bcsstk17".into(),
+        ],
+        scale: 0.05,
+        verify: true,
+        threads: 1,
+        ..Default::default()
+    };
+    run_suite(&cfg).expect("suite")
+}
+
+#[test]
+fn suite_verifies_and_renders_everything() {
+    let suite = small_suite();
+    assert_eq!(suite.results.len(), 25);
+    assert!(suite.results.iter().all(|r| r.verified));
+
+    for (name, content) in [
+        ("table3", figures::table3(&suite)),
+        ("fig8", figures::fig8(&suite)),
+        ("fig9", figures::fig9(&suite)),
+        ("fig10", figures::fig10(&suite)),
+        ("fig11", figures::fig11(&suite)),
+        ("table4", AreaModel::paper().table4()),
+    ] {
+        assert!(!content.is_empty(), "{name} empty");
+        assert!(content.lines().count() > 3, "{name} too short");
+    }
+    let tsv = figures::tsv_exports(&suite);
+    assert_eq!(tsv.len(), 4);
+    for (name, content) in &tsv {
+        assert!(content.lines().count() > 5, "{name} too short");
+    }
+}
+
+#[test]
+fn qualitative_shape_small_scale() {
+    let suite = small_suite();
+    // Matrix-unit implementations beat the vector baseline even at small
+    // scale (cache effects shrink, but the sort-phase advantage remains).
+    for d in ["p2p", "wiki", "m133-b3"] {
+        let sp = suite.speedup("spz", "vec-radix", d).unwrap();
+        assert!(sp > 1.0, "spz !> vec-radix on {d} ({sp:.2}x)");
+    }
+    // vec-radix always touches L1D more than spz (Figure 10's claim).
+    for r in &suite.results {
+        if r.impl_name == "vec-radix" {
+            let z = suite.get("spz", &r.dataset).unwrap();
+            assert!(
+                r.metrics.mem.l1d_accesses > z.metrics.mem.l1d_accesses,
+                "fig10 shape broken on {}",
+                r.dataset
+            );
+        }
+    }
+}
+
+#[test]
+fn area_model_reproduces_table4() {
+    let m = AreaModel::paper();
+    assert!((m.overhead_pct() - 12.72).abs() < 1.0);
+}
+
+#[test]
+fn vec_radix_block_sweep_recorded() {
+    let suite = small_suite();
+    for r in &suite.results {
+        if r.impl_name == "vec-radix" {
+            assert!(r.block_elems.is_some(), "block sweep missing on {}", r.dataset);
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Runtime integration: load the AOT artifacts through PJRT and cross-check
+//! the XLA engine against the native engine (and therefore against the
+//! normative functional model and the PE-level array simulation).
+//!
+//! Requires `make artifacts`; tests skip (with a notice) when the artifacts
+//! are missing so `cargo test` works in a fresh checkout.
+
+use sparsezipper::runtime::client::{artifact_dir, artifacts_available};
+use sparsezipper::runtime::{NativeEngine, XlaEngine, ZipUnit};
+use sparsezipper::util::Pcg32;
+
+fn engines() -> Option<(NativeEngine, XlaEngine)> {
+    let dir = artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("[skip] artifacts not found in {} — run `make artifacts`", dir.display());
+        return None;
+    }
+    let xla = XlaEngine::load(&dir, 16, 16).expect("load artifacts");
+    Some((NativeEngine::new(16), xla))
+}
+
+fn random_chunk(rng: &mut Pcg32, max_len: usize, key_range: u32) -> (Vec<u32>, Vec<f32>) {
+    let len = rng.gen_usize(max_len + 1);
+    let ks: Vec<u32> = (0..len).map(|_| rng.gen_range(key_range)).collect();
+    let vs: Vec<f32> = ks.iter().map(|_| rng.gen_f32_range(0.5, 1.5)).collect();
+    (ks, vs)
+}
+
+fn sorted_unique_chunk(rng: &mut Pcg32, max_len: usize, key_range: u32) -> (Vec<u32>, Vec<f32>) {
+    let (mut ks, _) = random_chunk(rng, max_len, key_range);
+    ks.sort_unstable();
+    ks.dedup();
+    let vs: Vec<f32> = ks.iter().map(|_| rng.gen_f32_range(0.5, 1.5)).collect();
+    (ks, vs)
+}
+
+fn assert_steps_match(
+    native: &sparsezipper::runtime::StepOut,
+    xla: &sparsezipper::runtime::StepOut,
+    ctx: &str,
+) {
+    assert_eq!(native.k0, xla.k0, "{ctx}: k0");
+    assert_eq!(native.k1, xla.k1, "{ctx}: k1");
+    assert_eq!(native.ic0, xla.ic0, "{ctx}: ic0");
+    assert_eq!(native.ic1, xla.ic1, "{ctx}: ic1");
+    assert_eq!(native.oc0, xla.oc0, "{ctx}: oc0");
+    assert_eq!(native.oc1, xla.oc1, "{ctx}: oc1");
+    for (a, b) in [(&native.v0, &xla.v0), (&native.v1, &xla.v1)] {
+        assert_eq!(a.len(), b.len(), "{ctx}: value group size");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.len(), y.len(), "{ctx}: value row len");
+            for (p, q) in x.iter().zip(y) {
+                assert!((p - q).abs() < 1e-4, "{ctx}: value {p} vs {q}");
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_sort_step_matches_native_random() {
+    let Some((mut native, mut xla)) = engines() else { return };
+    let mut rng = Pcg32::new(2024);
+    for trial in 0..25 {
+        let group = 1 + rng.gen_usize(16);
+        let mut k0 = Vec::new();
+        let mut v0 = Vec::new();
+        let mut k1 = Vec::new();
+        let mut v1 = Vec::new();
+        for _ in 0..group {
+            let (k, v) = random_chunk(&mut rng, 16, 50);
+            k0.push(k);
+            v0.push(v);
+            let (k, v) = random_chunk(&mut rng, 16, 50);
+            k1.push(k);
+            v1.push(v);
+        }
+        let a = native.sort_step(&k0, &v0, &k1, &v1).unwrap();
+        let b = xla.sort_step(&k0, &v0, &k1, &v1).unwrap();
+        assert_steps_match(&a, &b, &format!("sort trial {trial}"));
+    }
+}
+
+#[test]
+fn xla_zip_step_matches_native_random() {
+    let Some((mut native, mut xla)) = engines() else { return };
+    let mut rng = Pcg32::new(777);
+    for trial in 0..25 {
+        let group = 1 + rng.gen_usize(16);
+        let mut k0 = Vec::new();
+        let mut v0 = Vec::new();
+        let mut k1 = Vec::new();
+        let mut v1 = Vec::new();
+        for _ in 0..group {
+            let (k, v) = sorted_unique_chunk(&mut rng, 16, 60);
+            k0.push(k);
+            v0.push(v);
+            let (k, v) = sorted_unique_chunk(&mut rng, 16, 60);
+            k1.push(k);
+            v1.push(v);
+        }
+        let a = native.zip_step(&k0, &v0, &k1, &v1).unwrap();
+        let b = xla.zip_step(&k0, &v0, &k1, &v1).unwrap();
+        assert_steps_match(&a, &b, &format!("zip trial {trial}"));
+    }
+}
+
+#[test]
+fn xla_fig5b_golden() {
+    let Some((_, mut xla)) = engines() else { return };
+    let out = xla
+        .zip_step(
+            &[vec![2, 5, 9]],
+            &[vec![1.0, 2.0, 3.0]],
+            &[vec![3, 8]],
+            &[vec![4.0, 5.0]],
+        )
+        .unwrap();
+    // N=16 here, so the whole merged stream {2,3,5,8} lands east; 9 excluded.
+    assert_eq!(out.k0[0], vec![2, 3, 5, 8]);
+    assert_eq!(out.ic0[0], 2);
+    assert_eq!(out.ic1[0], 2);
+}
+
+#[test]
+fn spz_end_to_end_with_xla_engine_matches_native() {
+    let Some(_) = engines() else { return };
+    use sparsezipper::config::SystemConfig;
+    use sparsezipper::matrix::gen;
+    use sparsezipper::sim::Machine;
+    use sparsezipper::spgemm::{reference, same_product, spz::Spz, SpGemm};
+
+    let a = gen::rmat(80, 80, 700, 0.58, 0.2, 0.14, 99);
+    let r = reference(&a, &a);
+
+    let mut m1 = Machine::new(SystemConfig::default());
+    let c_native = Spz::native().multiply(&mut m1, &a, &a).unwrap();
+    assert!(same_product(&c_native, &r, 1e-3));
+
+    let mut m2 = Machine::new(SystemConfig::default());
+    let mut spz_xla = Spz::xla(&artifact_dir()).unwrap();
+    let c_xla = spz_xla.multiply(&mut m2, &a, &a).unwrap();
+    assert!(same_product(&c_xla, &r, 1e-3), "XLA-engine product wrong");
+
+    // Engine choice must not change simulated timing/counters.
+    assert_eq!(m1.metrics().ops.mszipk, m2.metrics().ops.mszipk);
+    assert_eq!(m1.metrics().ops.mssortk, m2.metrics().ops.mssortk);
+    assert!((m1.metrics().cycles - m2.metrics().cycles).abs() < 1e-6);
+}
+
+#[test]
+fn runner_reports_platform() {
+    let mut r = sparsezipper::runtime::XlaRunner::new().unwrap();
+    assert!(!r.platform().is_empty());
+    let dir = artifact_dir();
+    if artifacts_available(&dir) {
+        r.load_hlo_text("sort_step", &dir.join("sort_step.hlo.txt")).unwrap();
+        assert!(r.loaded().contains(&"sort_step"));
+    }
+}
+
+#[test]
+fn missing_artifact_is_an_error() {
+    let mut r = sparsezipper::runtime::XlaRunner::new().unwrap();
+    assert!(r
+        .load_hlo_text("nope", std::path::Path::new("/nonexistent/nope.hlo.txt"))
+        .is_err());
+    assert!(r.run("nope", &[]).is_err());
+}

@@ -1,0 +1,127 @@
+//! Cross-implementation integration: all five SpGEMM implementations must
+//! produce the same product on every dataset family, under one simulated
+//! machine each, including non-square and rectangular chains.
+
+use sparsezipper::config::SystemConfig;
+use sparsezipper::matrix::{gen, Csr};
+use sparsezipper::runtime::Engine;
+use sparsezipper::sim::Machine;
+use sparsezipper::spgemm::{self, SpGemm};
+
+fn all_impls() -> Vec<Box<dyn SpGemm>> {
+    spgemm::IMPL_NAMES
+        .iter()
+        .map(|n| {
+            spgemm::by_name(n, Engine::Native, std::path::Path::new("artifacts")).unwrap()
+        })
+        .collect()
+}
+
+fn check_all(a: &Csr, ctx: &str) {
+    let r = spgemm::reference(a, a);
+    for mut im in all_impls() {
+        let mut m = Machine::new(SystemConfig::default());
+        let c = im.multiply(&mut m, a, a).unwrap();
+        assert!(
+            spgemm::same_product(&c, &r, 1e-2),
+            "{} wrong on {ctx}: {} vs {} nnz",
+            im.name(),
+            c.nnz(),
+            r.nnz()
+        );
+        assert!(m.metrics().cycles > 0.0, "{} charged no cycles", im.name());
+    }
+}
+
+#[test]
+fn all_impls_agree_on_every_family() {
+    check_all(&gen::powerlaw_clustered(300, 2400, 1.1, 0.5, 1), "powerlaw");
+    check_all(&gen::kregular(256, 4, 2), "kregular");
+    check_all(&gen::grid2d(18, 18, 3), "grid2d");
+    check_all(&gen::banded(200, 16, 10, 4), "banded");
+    check_all(&gen::block_banded(240, 24, 10, 6, 0.3, 5), "block_banded");
+    check_all(&gen::road(18, 18, 0.64, 6), "road");
+    check_all(&gen::circuit(300, 5.0, 0.1, 7), "circuit");
+}
+
+#[test]
+fn all_impls_agree_on_degenerate_inputs() {
+    check_all(&Csr::identity(33), "identity");
+    check_all(&Csr::empty(40, 40), "empty");
+    // Single non-empty row.
+    let mut rows = vec![(Vec::new(), Vec::new()); 20];
+    rows[7] = ((0..20u32).step_by(2).collect(), vec![1.0; 10]);
+    check_all(&Csr::from_rows(20, 20, rows), "single-row");
+    // Fully dense tiny matrix (max duplicate pressure).
+    let dense = Csr::from_rows(
+        9,
+        9,
+        (0..9)
+            .map(|_| ((0..9u32).collect::<Vec<_>>(), vec![0.7f32; 9]))
+            .collect(),
+    );
+    check_all(&dense, "dense9");
+}
+
+#[test]
+fn rectangular_products() {
+    // (30x50) * (50x20) through spz vs reference.
+    let a = gen::erdos_renyi(30, 50, 200, 11);
+    let b = gen::erdos_renyi(50, 20, 180, 12);
+    let mut m = Machine::new(SystemConfig::default());
+    let c = spgemm::spz::Spz::native().multiply(&mut m, &a, &b).unwrap();
+    let r = spgemm::reference(&a, &b);
+    assert!(spgemm::same_product(&c, &r, 1e-3));
+    assert_eq!(c.nrows, 30);
+    assert_eq!(c.ncols, 20);
+}
+
+#[test]
+fn power_iteration_chain() {
+    // A^4 via repeated simulated SpGEMM stays correct (error accumulation
+    // across chained products).
+    let a = gen::kregular(128, 3, 13);
+    let mut m = Machine::new(SystemConfig::default());
+    let mut spz = spgemm::spz::Spz::native();
+    let a2 = spz.multiply(&mut m, &a, &a).unwrap();
+    let a4 = spz.multiply(&mut m, &a2, &a2).unwrap();
+    let r2 = spgemm::reference(&a, &a);
+    let r4 = spgemm::reference(&r2, &r2);
+    assert!(spgemm::same_product(&a4, &r4, 1e-2));
+}
+
+#[test]
+fn metrics_are_sane_across_impls() {
+    let a = gen::powerlaw_clustered(400, 3000, 1.0, 0.4, 21);
+    for mut im in all_impls() {
+        let mut m = Machine::new(SystemConfig::default());
+        im.multiply(&mut m, &a, &a).unwrap();
+        let r = m.metrics();
+        // phases sum to total
+        let phase_sum: f64 = r.phase_cycles.iter().sum();
+        assert!(
+            (phase_sum - r.cycles).abs() < 1e-6 * r.cycles.max(1.0),
+            "{}: phase sum mismatch",
+            im.name()
+        );
+        // L1 accesses >= L2 accesses >= LLC accesses
+        assert!(r.mem.l1d_accesses >= r.mem.l2_accesses);
+        assert!(r.mem.l2_accesses >= r.mem.llc_accesses);
+        // matrix unit used iff spz variant
+        let uses_unit = r.ops.mssortk + r.ops.mszipk > 0;
+        assert_eq!(uses_unit, im.name().starts_with("spz"), "{}", im.name());
+    }
+}
+
+#[test]
+fn vec_radix_block_size_does_not_change_result() {
+    let a = gen::powerlaw_clustered(300, 2000, 1.0, 0.4, 31);
+    let r = spgemm::reference(&a, &a);
+    for be in [128usize, 1024, 1 << 20] {
+        let mut m = Machine::new(SystemConfig::default());
+        let c = spgemm::vec_radix::VecRadix { block_elems: be }
+            .multiply(&mut m, &a, &a)
+            .unwrap();
+        assert!(spgemm::same_product(&c, &r, 1e-2), "block {be}");
+    }
+}

@@ -1,0 +1,135 @@
+//! Systolic micro-architecture integration: the PE-level cycle simulation,
+//! the functional ISA model, and the timing model agree with each other and
+//! with the paper's Figure 5/6 descriptions.
+
+use sparsezipper::config::{MatrixUnitConfig, SystemConfig};
+use sparsezipper::systolic::array::{self, run_sort, run_zip};
+use sparsezipper::systolic::functional;
+use sparsezipper::systolic::SystolicTiming;
+use sparsezipper::util::Pcg32;
+
+#[test]
+fn fig5_and_fig6_cycle_counts() {
+    // One micro-op = two passes of 2N+1 plus the turn-around (Fig. 5/6).
+    for n in [3usize, 8, 16] {
+        let out = run_sort(n, &[(1, 1.0)], &[(2, 1.0)]);
+        assert_eq!(out.cycles as usize, 2 * (2 * n + 1) + 1);
+    }
+    // Fig. 6 scale: 3x3 array, 3 streams back-to-back.
+    let t = SystolicTiming::new(MatrixUnitConfig {
+        n: 3,
+        num_regs: 16,
+        mac_latency: 4,
+        issue_overhead: 0,
+        pass_stalls: 2,
+    });
+    assert_eq!(t.k_instr_cycles(3), 18);
+}
+
+#[test]
+fn array_vs_functional_exhaustive_small() {
+    // Exhaustive over all sorted-unique chunk pairs from a small key
+    // universe at n=3 — stronger than random sampling.
+    let universe = [0u32, 1, 2, 3];
+    let mut subsets: Vec<Vec<u32>> = Vec::new();
+    for mask in 0u32..16 {
+        let mut s = Vec::new();
+        for (bit, &k) in universe.iter().enumerate() {
+            if mask & (1 << bit) != 0 {
+                s.push(k);
+            }
+        }
+        if s.len() <= 3 {
+            subsets.push(s);
+        }
+    }
+    for a in &subsets {
+        for b in &subsets {
+            let ap: Vec<(u32, f32)> = a.iter().map(|&k| (k, 1.0 + k as f32)).collect();
+            let bp: Vec<(u32, f32)> = b.iter().map(|&k| (k, 2.0 + k as f32)).collect();
+            array::crosscheck_zip(3, &ap, &bp)
+                .unwrap_or_else(|e| panic!("a={a:?} b={b:?}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn array_handles_full_16x16_chunks() {
+    let a: Vec<(u32, f32)> = (0..16).map(|i| (2 * i, 1.0)).collect();
+    let b: Vec<(u32, f32)> = (0..16).map(|i| (2 * i + 1, 1.0)).collect();
+    let out = run_zip(16, &a, &b);
+    // b's 31 > max(a) = 30 is unmergeable; the other 31 elements merge.
+    assert_eq!(out.east.len(), 16);
+    assert_eq!(out.south.len(), 15);
+    assert_eq!(out.excluded_west, 0);
+    assert_eq!(out.excluded_north, 1);
+}
+
+#[test]
+fn sort_stress_random_shapes() {
+    let mut rng = Pcg32::new(5150);
+    for _ in 0..100 {
+        let n = 16;
+        let la = rng.gen_usize(n + 1);
+        let lb = rng.gen_usize(n + 1);
+        let a: Vec<(u32, f32)> = (0..la).map(|_| (rng.gen_range(64), 1.0)).collect();
+        let b: Vec<(u32, f32)> = (0..lb).map(|_| (rng.gen_range(64), 1.0)).collect();
+        let arr = array::sort_as_functional(n, &a, &b);
+        let f = functional::sort_step(
+            &a.iter().map(|p| p.0).collect::<Vec<_>>(),
+            &a.iter().map(|p| p.1).collect::<Vec<_>>(),
+            &b.iter().map(|p| p.0).collect::<Vec<_>>(),
+            &b.iter().map(|p| p.1).collect::<Vec<_>>(),
+        );
+        assert_eq!(arr.a_keys, f.a_keys);
+        assert_eq!(arr.b_keys, f.b_keys);
+    }
+}
+
+#[test]
+fn timing_model_scales_with_array_size() {
+    let cfg = SystemConfig::default().unit;
+    let t16 = SystolicTiming::new(cfg);
+    let t32 = SystolicTiming::new(MatrixUnitConfig { n: 32, ..cfg });
+    assert!(t32.pair_cycles(16) > t16.pair_cycles(16));
+    assert_eq!(t16.pass_latency(), 33);
+    assert_eq!(t32.pass_latency(), 65);
+}
+
+#[test]
+fn counters_match_consumption_invariants() {
+    // IC0+IC1 >= 1 whenever both chunks are non-empty (progress guarantee
+    // the software merge loop depends on), and OC0+OC1 counts merged
+    // uniques exactly.
+    let mut rng = Pcg32::new(99);
+    for _ in 0..500 {
+        let n = 8;
+        let mk = |rng: &mut Pcg32| {
+            let mut k: Vec<u32> = (0..1 + rng.gen_usize(n)).map(|_| rng.gen_range(40)).collect();
+            k.sort_unstable();
+            k.dedup();
+            k
+        };
+        let a = mk(&mut rng);
+        let b = mk(&mut rng);
+        let av = vec![1.0f32; a.len()];
+        let bv = vec![1.0f32; b.len()];
+        let out = functional::zip_step(n, &a, &av, &b, &bv);
+        assert!(
+            out.consumed_a + out.consumed_b >= 1,
+            "no progress on a={a:?} b={b:?}"
+        );
+        let mut merged: Vec<u32> = a[..out.consumed_a]
+            .iter()
+            .chain(&b[..out.consumed_b])
+            .copied()
+            .collect();
+        merged.sort_unstable();
+        merged.dedup();
+        assert_eq!(
+            merged.len(),
+            out.east_keys.len() + out.south_keys.len(),
+            "unique count mismatch"
+        );
+    }
+}

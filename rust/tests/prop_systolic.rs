@@ -1,0 +1,150 @@
+//! Property tests over the systolic functional model — the invariants the
+//! SpGEMM software and the micro-architecture both rely on. (Hand-rolled
+//! generators: proptest is not in the offline vendor set.)
+
+use sparsezipper::systolic::functional::{sort_chunk, sort_step, zip_step};
+use sparsezipper::util::Pcg32;
+
+fn sorted_unique(rng: &mut Pcg32, max_len: usize, range: u32) -> (Vec<u32>, Vec<f32>) {
+    let mut k: Vec<u32> = (0..rng.gen_usize(max_len + 1)).map(|_| rng.gen_range(range)).collect();
+    k.sort_unstable();
+    k.dedup();
+    let v: Vec<f32> = k.iter().map(|_| rng.gen_f32_range(0.5, 1.5)).collect();
+    (k, v)
+}
+
+/// sort_chunk output is sorted, unique, value-mass-preserving.
+#[test]
+fn prop_sort_chunk_invariants() {
+    let mut rng = Pcg32::new(1);
+    for _ in 0..2000 {
+        let len = rng.gen_usize(33);
+        let k: Vec<u32> = (0..len).map(|_| rng.gen_range(20)).collect();
+        let v: Vec<f32> = (0..len).map(|_| 1.0).collect();
+        let (ok, ov) = sort_chunk(&k, &v);
+        assert!(ok.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+        let mass: f32 = ov.iter().sum();
+        assert!((mass - len as f32).abs() < 1e-3, "value mass");
+        let mut uniq = k.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(ok, uniq, "key set preserved");
+    }
+}
+
+/// zip_step invariants: sorted-unique output, prefix consumption, the
+/// emitted<unconsumed ordering the software merge loop needs, and exact
+/// value conservation over consumed elements.
+#[test]
+fn prop_zip_step_invariants() {
+    let mut rng = Pcg32::new(2);
+    for trial in 0..3000 {
+        let n = [4usize, 8, 16][trial % 3];
+        let (a, av) = sorted_unique(&mut rng, n, 50);
+        let (b, bv) = sorted_unique(&mut rng, n, 50);
+        let out = zip_step(n, &a, &av, &b, &bv);
+
+        // 1. consumption counts are prefixes within bounds
+        assert!(out.consumed_a <= a.len() && out.consumed_b <= b.len());
+        // 2. outputs sorted-unique and east < south
+        let all: Vec<u32> = out.east_keys.iter().chain(&out.south_keys).copied().collect();
+        assert!(all.windows(2).all(|w| w[0] < w[1]), "merged sorted unique");
+        assert!(out.east_keys.len() <= n);
+        // 3. emitted keys < all unconsumed keys
+        if let Some(&emax) = all.last() {
+            assert!(a[out.consumed_a..].iter().all(|&k| k > emax));
+            assert!(b[out.consumed_b..].iter().all(|&k| k > emax));
+        }
+        // 4. value conservation over consumed prefixes
+        let consumed_mass: f32 = av[..out.consumed_a].iter().chain(&bv[..out.consumed_b]).sum();
+        let out_mass: f32 = out.east_vals.iter().chain(&out.south_vals).sum();
+        assert!(
+            (consumed_mass - out_mass).abs() < 1e-3,
+            "mass {consumed_mass} vs {out_mass}"
+        );
+        // 5. progress whenever both sides non-empty
+        if !a.is_empty() && !b.is_empty() {
+            assert!(out.consumed_a + out.consumed_b >= 1);
+        }
+        // 6. merged key set == union of consumed prefixes
+        let mut expect: Vec<u32> = a[..out.consumed_a]
+            .iter()
+            .chain(&b[..out.consumed_b])
+            .copied()
+            .collect();
+        expect.sort_unstable();
+        expect.dedup();
+        assert_eq!(all, expect);
+    }
+}
+
+/// Iterated zip (the software merge loop) fully merges two partitions for
+/// any input — termination + completeness, the Figure 2 algorithm.
+#[test]
+fn prop_zip_loop_merges_fully() {
+    let mut rng = Pcg32::new(3);
+    for trial in 0..300 {
+        let n = 8;
+        let (a, av) = sorted_unique(&mut rng, 40, 100);
+        let (b, bv) = sorted_unique(&mut rng, 40, 100);
+        let (mut ia, mut ib) = (0usize, 0usize);
+        let mut out_k: Vec<u32> = Vec::new();
+        let mut out_v: Vec<f32> = Vec::new();
+        let mut steps = 0;
+        while ia < a.len() && ib < b.len() {
+            steps += 1;
+            assert!(steps < 200, "merge loop did not terminate (trial {trial})");
+            let ea = (ia + n).min(a.len());
+            let eb = (ib + n).min(b.len());
+            let st = zip_step(n, &a[ia..ea], &av[ia..ea], &b[ib..eb], &bv[ib..eb]);
+            out_k.extend(&st.east_keys);
+            out_k.extend(&st.south_keys);
+            out_v.extend(&st.east_vals);
+            out_v.extend(&st.south_vals);
+            ia += st.consumed_a;
+            ib += st.consumed_b;
+        }
+        // tail copy
+        for (k, v) in a[ia..].iter().zip(&av[ia..]) {
+            out_k.push(*k);
+            out_v.push(*v);
+        }
+        for (k, v) in b[ib..].iter().zip(&bv[ib..]) {
+            out_k.push(*k);
+            out_v.push(*v);
+        }
+        // reference merge
+        let mut expect: std::collections::BTreeMap<u32, f32> = std::collections::BTreeMap::new();
+        for (k, v) in a.iter().zip(&av).chain(b.iter().zip(&bv)) {
+            *expect.entry(*k).or_insert(0.0) += v;
+        }
+        let ek: Vec<u32> = expect.keys().copied().collect();
+        assert_eq!(out_k, ek, "trial {trial}");
+        for (got, want) in out_v.iter().zip(expect.values()) {
+            assert!((got - want).abs() < 1e-3);
+        }
+    }
+}
+
+/// sort_step never mixes the two chunks.
+#[test]
+fn prop_sort_step_partition_isolation() {
+    let mut rng = Pcg32::new(4);
+    for _ in 0..1000 {
+        let la = rng.gen_usize(17);
+        let lb = rng.gen_usize(17);
+        let a: Vec<u32> = (0..la).map(|_| rng.gen_range(100)).collect();
+        let b: Vec<u32> = (0..lb).map(|_| rng.gen_range(100)).collect();
+        let av = vec![1.0f32; a.len()];
+        let bv = vec![1.0f32; b.len()];
+        let out = sort_step(&a, &av, &b, &bv);
+        let mut ua = a.clone();
+        ua.sort_unstable();
+        ua.dedup();
+        let mut ub = b.clone();
+        ub.sort_unstable();
+        ub.dedup();
+        assert_eq!(out.a_keys, ua);
+        assert_eq!(out.b_keys, ub);
+    }
+}
