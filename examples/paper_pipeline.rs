@@ -1,20 +1,23 @@
 //! End-to-end paper pipeline — the repository's E2E validation driver
 //! (EXPERIMENTS.md records its output).
 //!
-//! Runs the full evaluation: builds the Table III dataset suite, executes
-//! all five SpGEMM implementations through the cycle-level simulator with
-//! functional verification on every product, regenerates Figure 8 (the
-//! headline speedups), the Figure 9 breakdown, Figure 10 (L1D accesses)
-//! and Figure 11 (dynamic instruction counts), runs the Table IV area
-//! model, and checks the paper's qualitative claims.
+//! Runs the full evaluation through one [`Session`]: builds the Table III
+//! dataset suite (each matrix and its reference product exactly once, via
+//! the session cache), executes all five SpGEMM implementations through the
+//! cycle-level simulator with functional verification on every product,
+//! regenerates Figure 8 (the headline speedups), the Figure 9 breakdown,
+//! Figure 10 (L1D accesses) and Figure 11 (dynamic instruction counts),
+//! runs the Table IV area model, exports the structured `suite.json`, and
+//! checks the paper's qualitative claims.
 //!
 //! ```bash
 //! cargo run --release --example paper_pipeline -- [scale] [out_dir]
 //! # scale in (0,1]; default 0.25 keeps the run to a few minutes.
 //! ```
 
+use sparsezipper::api::{Session, SuiteSpec};
 use sparsezipper::area::AreaModel;
-use sparsezipper::coordinator::{figures, report, run_suite, SuiteConfig};
+use sparsezipper::coordinator::{figures, report};
 
 fn main() -> anyhow::Result<()> {
     let mut args = std::env::args().skip(1);
@@ -23,23 +26,26 @@ fn main() -> anyhow::Result<()> {
         args.next().unwrap_or_else(|| "reports/pipeline".to_string()),
     );
 
-    let cfg = SuiteConfig {
+    let session = Session::new();
+    let spec = SuiteSpec {
         scale,
         verify: true, // every product checked against the oracle
         ..Default::default()
     };
     println!(
         "[paper_pipeline] {} datasets x {} impls at scale {} (verified)",
-        cfg.datasets.len(),
-        cfg.impls.len(),
+        spec.datasets.len(),
+        spec.impls.len(),
         scale
     );
     let t0 = std::time::Instant::now();
-    let suite = run_suite(&cfg)?;
+    let suite = session.run_suite(&spec)?;
     println!(
-        "[paper_pipeline] suite complete in {:.1}s — all {} products verified",
+        "[paper_pipeline] suite complete in {:.1}s — all {} products verified ({} dataset builds, {} oracles)",
         t0.elapsed().as_secs_f64(),
-        suite.results.len()
+        suite.results.len(),
+        session.dataset_builds(),
+        session.reference_builds()
     );
 
     report::emit(&out_dir, "table3.txt", &figures::table3(&suite), false)?;
@@ -48,6 +54,7 @@ fn main() -> anyhow::Result<()> {
     report::emit(&out_dir, "fig10.txt", &figures::fig10(&suite), false)?;
     report::emit(&out_dir, "fig11.txt", &figures::fig11(&suite), false)?;
     report::emit(&out_dir, "table4.txt", &AreaModel::paper().table4(), false)?;
+    report::emit(&out_dir, "suite.json", &suite.to_json(), true)?;
     for (name, content) in figures::tsv_exports(&suite) {
         report::emit(&out_dir, &name, &content, true)?;
     }

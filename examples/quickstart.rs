@@ -1,17 +1,19 @@
-//! Quickstart: multiply a small sparse matrix by itself with the
-//! SparseZipper implementation, verify against the reference oracle, and
-//! print the simulated speedup over the scalar hash baseline.
+//! Quickstart for the embeddable Session API: one [`Session`], one
+//! in-memory dataset built once, two [`JobSpec`]s (SparseZipper and the
+//! scalar hash baseline) verified against a single cached reference oracle,
+//! and the simulated speedup between them.
 //!
 //! ```bash
-//! cargo run --release --example quickstart            # native engine
-//! SPZ_ENGINE=xla cargo run --release --example quickstart   # AOT/PJRT engine
+//! cargo run --release --example quickstart                  # native engine
+//! SPZ_ENGINE=xla cargo run --release --example quickstart   # AOT/PJRT engine (--features xla)
 //! ```
 
-use sparsezipper::config::SystemConfig;
+use sparsezipper::api::{DatasetSource, JobSpec, Session, SessionConfig};
 use sparsezipper::matrix::gen;
 use sparsezipper::runtime::client::{artifact_dir, artifacts_available};
-use sparsezipper::sim::Machine;
-use sparsezipper::spgemm::{self, SpGemm};
+use sparsezipper::runtime::Engine;
+use sparsezipper::ImplId;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     // A small scale-free graph, the paper's motivating workload shape.
@@ -26,52 +28,44 @@ fn main() -> anyhow::Result<()> {
 
     // Engine selection: native Rust semantics, or the AOT-compiled
     // JAX/Pallas datapath through the PJRT CPU client.
-    let use_xla = std::env::var("SPZ_ENGINE").map(|e| e == "xla").unwrap_or(false);
-    let mut spz: Box<dyn SpGemm> = if use_xla {
-        let dir = artifact_dir();
+    let mut cfg = SessionConfig::default();
+    if std::env::var("SPZ_ENGINE").map(|e| e == "xla").unwrap_or(false) {
         anyhow::ensure!(
-            artifacts_available(&dir),
+            artifacts_available(&artifact_dir()),
             "artifacts missing — run `make artifacts` first"
         );
-        println!("engine: xla (artifacts from {})", dir.display());
-        Box::new(spgemm::spz::Spz::xla(&dir)?)
-    } else {
-        println!("engine: native");
-        Box::new(spgemm::spz::Spz::native())
-    };
+        cfg.engine = Engine::Xla;
+    }
+    println!("engine: {:?}", cfg.engine);
+    let session = Session::with_config(cfg);
 
-    // Run SparseZipper SpGEMM under the cycle model.
-    let mut m_spz = Machine::new(SystemConfig::default());
-    let c = spz.multiply(&mut m_spz, &a, &a)?;
-
-    // Verify against the independent oracle.
-    let reference = spgemm::reference(&a, &a);
-    anyhow::ensure!(
-        spgemm::same_product(&c, &reference, 1e-3),
-        "product mismatch!"
+    // Two verified jobs on the same dataset: the session builds the matrix
+    // and the reference oracle exactly once and shares them.
+    let dataset = DatasetSource::in_memory("powerlaw-2k", Arc::new(a));
+    let spz = session.run(&JobSpec::new(ImplId::Spz, dataset.clone()).with_verify(true))?;
+    let hash = session.run(&JobSpec::new(ImplId::SclHash, dataset).with_verify(true))?;
+    println!(
+        "C = A*A: {} nonzeros — both products verified against the reference oracle",
+        spz.out_nnz
     );
     println!(
-        "C = A*A: {} nonzeros — verified against reference oracle",
-        c.nnz()
+        "(session cache: dataset built {}x, reference computed {}x across 2 jobs)",
+        session.dataset_builds(),
+        session.reference_builds()
     );
 
-    // Compare with the scalar hash baseline.
-    let mut m_hash = Machine::new(SystemConfig::default());
-    spgemm::scl_hash::SclHash.multiply(&mut m_hash, &a, &a)?;
-
-    let spz_m = m_spz.metrics();
-    let hash_m = m_hash.metrics();
     println!("\nsimulated cycles:");
-    println!("  scl-hash : {:>14.0}", hash_m.cycles);
-    println!("  spz      : {:>14.0}", spz_m.cycles);
-    println!("  speedup  : {:>13.2}x", hash_m.cycles / spz_m.cycles);
+    println!("  scl-hash : {:>14.0}", hash.metrics.cycles);
+    println!("  spz      : {:>14.0}", spz.metrics.cycles);
+    println!("  speedup  : {:>13.2}x", hash.metrics.cycles / spz.metrics.cycles);
     println!(
         "\nspz dynamic matrix instructions: {} mssortk + {} mszipk ({} mlxe, {} msxe)",
-        spz_m.ops.mssortk, spz_m.ops.mszipk, spz_m.ops.mlxe, spz_m.ops.msxe
+        spz.metrics.ops.mssortk, spz.metrics.ops.mszipk, spz.metrics.ops.mlxe, spz.metrics.ops.msxe
     );
     println!(
         "L1D accesses: scl-hash {} vs spz {}",
-        hash_m.mem.l1d_accesses, spz_m.mem.l1d_accesses
+        hash.metrics.mem.l1d_accesses, spz.metrics.mem.l1d_accesses
     );
+    println!("\nstructured result:\n{}", spz.to_json());
     Ok(())
 }

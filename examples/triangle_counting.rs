@@ -11,10 +11,9 @@
 //! cargo run --release --example triangle_counting [n] [avg_degree]
 //! ```
 
-use sparsezipper::config::SystemConfig;
+use sparsezipper::api::Session;
 use sparsezipper::matrix::{gen, Csr};
-use sparsezipper::sim::Machine;
-use sparsezipper::spgemm::{self, SpGemm};
+use sparsezipper::ImplId;
 
 /// Make an undirected (symmetric, zero-diagonal) graph.
 fn symmetric_graph(n: usize, nnz: usize, seed: u64) -> Csr {
@@ -73,9 +72,11 @@ fn main() -> anyhow::Result<()> {
         a.nnz() as f64 / a.nrows as f64
     );
 
-    // B = A*A through the simulated SparseZipper pipeline.
-    let mut m = Machine::new(SystemConfig::default());
-    let b = spgemm::spz::Spz::native().multiply(&mut m, &a, &a)?;
+    // B = A*A through the simulated SparseZipper pipeline — the session's
+    // general-product entry point for caller-owned matrices.
+    let session = Session::new();
+    let product = session.spgemm(ImplId::Spz, &a, &a)?;
+    let b = product.csr;
 
     // Masked reduction: sum B[i][j] over edges (i,j) of A. (The mask keeps
     // only wedges that close into triangles; each triangle is counted 6x.)
@@ -98,7 +99,7 @@ fn main() -> anyhow::Result<()> {
     println!("triangles: {triangles} (reference: {expect})");
     anyhow::ensure!(triangles == expect, "triangle count mismatch");
 
-    let met = m.metrics();
+    let met = &product.metrics;
     println!(
         "simulated: {:.2}M cycles, {} mssortk + {} mszipk pairs, {:.1}% L1D hit",
         met.cycles / 1e6,

@@ -7,29 +7,31 @@
 #[path = "bench_util.rs"]
 mod bench_util;
 
-use sparsezipper::coordinator::{figures, run_suite, SuiteConfig};
+use sparsezipper::api::{Session, SuiteSpec};
+use sparsezipper::coordinator::figures;
 
 fn main() {
-    let cfg = SuiteConfig {
+    let session = Session::new();
+    let spec = SuiteSpec {
         scale: bench_util::scale(),
         ..Default::default()
     };
     println!(
         "== Figure 8 ({} datasets x {} impls, scale {}) ==",
-        cfg.datasets.len(),
-        cfg.impls.len(),
-        cfg.scale
+        spec.datasets.len(),
+        spec.impls.len(),
+        spec.scale
     );
     let mut out = None;
     bench_util::bench("fig8 full suite", 1, || {
-        out = Some(run_suite(&cfg).expect("suite"));
+        out = Some(session.run_suite(&spec).expect("suite"));
     });
     let suite = out.unwrap();
     println!("{}", figures::fig8(&suite));
     for r in &suite.results {
         println!(
             "  sim {:<10} {:<10} {:>9.3}s wall  {:>14.0} cycles",
-            r.impl_name, r.dataset, r.wall_secs, r.metrics.cycles
+            r.impl_id, r.dataset, r.wall_secs, r.metrics.cycles
         );
     }
 }

@@ -4,18 +4,21 @@
 #[path = "bench_util.rs"]
 mod bench_util;
 
-use sparsezipper::coordinator::{figures, run_suite, SuiteConfig};
+use sparsezipper::api::{Session, SuiteSpec};
+use sparsezipper::coordinator::figures;
+use sparsezipper::ImplId;
 
 fn main() {
-    let cfg = SuiteConfig {
+    let session = Session::new();
+    let spec = SuiteSpec {
         scale: bench_util::scale(),
-        impls: vec!["vec-radix".into(), "spz".into(), "spz-rsort".into()],
+        impls: vec![ImplId::VecRadix, ImplId::Spz, ImplId::SpzRsort],
         ..Default::default()
     };
-    println!("== Figure 9 (scale {}) ==", cfg.scale);
+    println!("== Figure 9 (scale {}) ==", spec.scale);
     let mut out = None;
     bench_util::bench("fig9 suite", 1, || {
-        out = Some(run_suite(&cfg).expect("suite"));
+        out = Some(session.run_suite(&spec).expect("suite"));
     });
     println!("{}", figures::fig9(&out.unwrap()));
 }

@@ -1,0 +1,173 @@
+//! Stable JSON export for the typed results (the offline vendor set has no
+//! serde, so this is a small purpose-built emitter). The schema is part of
+//! the public API: downstream tooling parses these objects, so field names
+//! only ever grow — they do not change meaning.
+
+use crate::api::session::{JobResult, SuiteRun};
+use crate::matrix::MatrixStats;
+use crate::sim::machine::{NUM_PHASES, PHASE_NAMES};
+use crate::sim::RunMetrics;
+use std::fmt::Write as _;
+
+/// Escape a string for a JSON string literal (without the quotes).
+pub(crate) fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON has no NaN/inf; map them to null.
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn metrics_json(m: &RunMetrics) -> String {
+    let mut phases = String::from("{");
+    for p in 0..NUM_PHASES {
+        if p > 0 {
+            phases.push(',');
+        }
+        let _ = write!(phases, "\"{}\":{}", PHASE_NAMES[p], num(m.phase_cycles[p]));
+    }
+    phases.push('}');
+    let o = &m.ops;
+    let ops = format!(
+        "{{\"scalar_ops\":{},\"branches\":{},\"vector_ops\":{},\"scalar_loads\":{},\
+         \"scalar_stores\":{},\"vector_loads\":{},\"vector_stores\":{},\"gather_elems\":{},\
+         \"scatter_elems\":{},\"mssortk\":{},\"mszipk\":{},\"mlxe\":{},\"msxe\":{},\
+         \"mmv\":{},\"mmul\":{},\"matrix_busy_cycles\":{}}}",
+        o.scalar_ops,
+        o.branches,
+        o.vector_ops,
+        o.scalar_loads,
+        o.scalar_stores,
+        o.vector_loads,
+        o.vector_stores,
+        o.gather_elems,
+        o.scatter_elems,
+        o.mssortk,
+        o.mszipk,
+        o.mlxe,
+        o.msxe,
+        o.mmv,
+        o.mmul,
+        o.matrix_busy_cycles
+    );
+    let mem = format!(
+        "{{\"l1d_accesses\":{},\"l1d_hits\":{},\"l1d_hit_rate\":{},\"l2_accesses\":{},\
+         \"l2_hits\":{},\"llc_accesses\":{},\"llc_hits\":{},\"dram_accesses\":{},\
+         \"writebacks\":{}}}",
+        m.mem.l1d_accesses,
+        m.mem.l1d_hits,
+        num(m.mem.l1d_hit_rate()),
+        m.mem.l2_accesses,
+        m.mem.l2_hits,
+        m.mem.llc_accesses,
+        m.mem.llc_hits,
+        m.mem.dram_accesses,
+        m.mem.writebacks
+    );
+    format!(
+        "{{\"cycles\":{},\"phase_cycles\":{phases},\"total_matrix_kv_pairs\":{},\
+         \"ops\":{ops},\"mem\":{mem},\"sim_footprint_bytes\":{}}}",
+        num(m.cycles),
+        m.total_matrix_kv_pairs(),
+        m.sim_footprint_bytes
+    )
+}
+
+fn stats_json(st: &MatrixStats) -> String {
+    format!(
+        "{{\"nrows\":{},\"nnz\":{},\"density\":{},\"avg_work_per_row\":{},\
+         \"avg_out_nnz_per_row\":{},\"avg_work_per_group\":{},\"work_var\":{}}}",
+        st.nrows,
+        st.nnz,
+        num(st.density),
+        num(st.avg_work_per_row),
+        num(st.avg_out_nnz_per_row),
+        num(st.avg_work_per_group),
+        num(st.work_var)
+    )
+}
+
+impl JobResult {
+    /// One job as a single-line JSON object.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"impl\":\"{}\",\"dataset\":\"{}\",\"out_nnz\":{},\"verified\":{},\
+             \"wall_secs\":{},\"block_elems\":{},\"metrics\":{}}}",
+            self.impl_id.name(),
+            escape(&self.dataset),
+            self.out_nnz,
+            self.verified,
+            num(self.wall_secs),
+            self.block_elems
+                .map(|b| b.to_string())
+                .unwrap_or_else(|| "null".to_string()),
+            metrics_json(&self.metrics)
+        )
+    }
+}
+
+impl SuiteRun {
+    /// The whole sweep as a JSON document: dataset characterization (sorted
+    /// by name for determinism) plus one object per job in suite order.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"datasets\": {\n");
+        let mut names: Vec<&String> = self.dataset_stats.keys().collect();
+        names.sort();
+        for (i, name) in names.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "    \"{}\": {}{}",
+                escape(name),
+                stats_json(&self.dataset_stats[*name]),
+                if i + 1 < names.len() { "," } else { "" }
+            );
+        }
+        s.push_str("  },\n  \"results\": [\n");
+        for (i, r) in self.results.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "    {}{}",
+                r.to_json(),
+                if i + 1 < self.results.len() { "," } else { "" }
+            );
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn nonfinite_numbers_become_null() {
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(1.5), "1.5");
+    }
+}

@@ -1,0 +1,32 @@
+//! The embeddable SpGEMM-simulation service API.
+//!
+//! A long-lived [`Session`] owns the functional engine, the XLA artifact
+//! location, and the simulated [`crate::SystemConfig`], plus a dataset cache
+//! keyed by `(source, scale)` that memoizes built matrices, their Table III
+//! characterization, and reference products across jobs. Experiments are
+//! typed values — [`JobSpec`] / [`SuiteSpec`] in, [`JobResult`] /
+//! [`SuiteRun`] out — with [`ImplId`] and [`DatasetSource`] replacing string
+//! names end-to-end; the `spz` CLI is a thin argv adapter over this module.
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use sparsezipper::api::{DatasetSource, ImplId, JobSpec, Session};
+//!
+//! let session = Session::new();
+//! let dataset = DatasetSource::registry("p2p")?;
+//! let spz = session.run(&JobSpec::new(ImplId::Spz, dataset.clone()).with_verify(true))?;
+//! let hash = session.run(&JobSpec::new(ImplId::SclHash, dataset).with_verify(true))?;
+//! // The dataset and its reference product were each built exactly once.
+//! println!("speedup {:.2}x", hash.metrics.cycles / spz.metrics.cycles);
+//! println!("{}", spz.to_json());
+//! # Ok(())
+//! # }
+//! ```
+
+mod json;
+mod session;
+mod spec;
+
+pub use crate::spgemm::ImplId;
+pub use session::{JobResult, Product, Session, SessionConfig, SuiteRun};
+pub use spec::{DatasetKey, DatasetSource, JobSpec, SuiteSpec};

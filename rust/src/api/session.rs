@@ -1,0 +1,621 @@
+//! The long-lived [`Session`]: owns the engine selection, the XLA artifact
+//! location, the [`SystemConfig`], and a dataset cache keyed by
+//! `(source, scale)` that memoizes built matrices, their Table III
+//! characterization, and reference products across jobs.
+
+use crate::api::spec::{DatasetKey, DatasetSource, JobSpec, SuiteSpec};
+use crate::config::SystemConfig;
+use crate::matrix::{stats, Csr, MatrixStats};
+use crate::runtime::{client, Engine};
+use crate::sim::{Machine, RunMetrics};
+use crate::spgemm::{self, ImplId, SpGemm};
+use anyhow::{ensure, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Session-level configuration (what used to be scattered over
+/// `SuiteConfig` and free-function arguments).
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// Functional datapath for the spz variants.
+    pub engine: Engine,
+    /// Directory holding the AOT HLO artifacts (xla engine only).
+    pub artifact_dir: PathBuf,
+    /// Simulated system (Table II).
+    pub sys: SystemConfig,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            engine: Engine::Native,
+            artifact_dir: client::artifact_dir(),
+            sys: SystemConfig::default(),
+        }
+    }
+}
+
+#[derive(Default)]
+struct CacheEntry {
+    csr: Option<Arc<Csr>>,
+    stats: Option<MatrixStats>,
+    reference: Option<Arc<Csr>>,
+}
+
+/// One lock per cache key: the outer map lock is held only long enough to
+/// fetch the entry handle, and the expensive build/characterize/reference
+/// work happens under the entry lock — concurrent callers on the *same*
+/// `(source, scale)` serialize (second one finds the cached value) while
+/// different datasets proceed in parallel.
+type SharedEntry = Arc<Mutex<CacheEntry>>;
+
+/// A long-lived SpGEMM-simulation service handle.
+///
+/// All experiment entry points hang off a `Session`:
+/// [`Session::run`] for one [`JobSpec`], [`Session::run_suite`] for a
+/// [`SuiteSpec`] sweep, and [`Session::spgemm`] for a general A*B product on
+/// caller-owned matrices. Datasets, their characterization, and reference
+/// products are built at most once per `(source, scale)` and shared across
+/// jobs; `&Session` is `Sync`, so one session can serve concurrent callers.
+pub struct Session {
+    cfg: SessionConfig,
+    cache: Mutex<HashMap<DatasetKey, SharedEntry>>,
+    dataset_builds: AtomicU64,
+    reference_builds: AtomicU64,
+}
+
+/// A general product from [`Session::spgemm`].
+#[derive(Clone, Debug)]
+pub struct Product {
+    pub csr: Csr,
+    pub metrics: RunMetrics,
+}
+
+/// Result of one simulated job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub impl_id: ImplId,
+    pub dataset: String,
+    pub metrics: RunMetrics,
+    pub out_nnz: usize,
+    pub verified: bool,
+    /// Host wall-clock seconds for the simulation itself (§Perf data).
+    pub wall_secs: f64,
+    /// Block size chosen for vec-radix (after the sweep), if applicable.
+    pub block_elems: Option<usize>,
+}
+
+/// All results of a sweep, with the per-dataset Table III characterization.
+#[derive(Debug, Default)]
+pub struct SuiteRun {
+    /// Dataset-major, implementation-minor, in the spec's order.
+    pub results: Vec<JobResult>,
+    pub dataset_stats: HashMap<String, MatrixStats>,
+}
+
+impl SuiteRun {
+    pub fn get(&self, id: ImplId, dataset: &str) -> Option<&JobResult> {
+        self.results
+            .iter()
+            .find(|r| r.impl_id == id && r.dataset == dataset)
+    }
+
+    /// Speedup of `num` over `den` on `dataset` (cycles ratio).
+    pub fn speedup(&self, num: ImplId, den: ImplId, dataset: &str) -> Option<f64> {
+        let n = self.get(num, dataset)?;
+        let d = self.get(den, dataset)?;
+        Some(d.metrics.cycles / n.metrics.cycles)
+    }
+}
+
+impl Session {
+    /// A session with the default configuration (native engine).
+    pub fn new() -> Self {
+        Session::with_config(SessionConfig::default())
+    }
+
+    pub fn with_config(cfg: SessionConfig) -> Self {
+        Session {
+            cfg,
+            cache: Mutex::new(HashMap::new()),
+            dataset_builds: AtomicU64::new(0),
+            reference_builds: AtomicU64::new(0),
+        }
+    }
+
+    pub fn engine(&self) -> Engine {
+        self.cfg.engine
+    }
+
+    pub fn system(&self) -> &SystemConfig {
+        &self.cfg.sys
+    }
+
+    /// How many datasets were materialized (cache misses) so far.
+    pub fn dataset_builds(&self) -> u64 {
+        self.dataset_builds.load(Ordering::Relaxed)
+    }
+
+    /// How many reference products were computed (cache misses) so far.
+    pub fn reference_builds(&self) -> u64 {
+        self.reference_builds.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached `(source, scale)` entries currently held.
+    pub fn cached_datasets(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Evict one `(source, scale)` entry, dropping its matrix, stats, and
+    /// reference product (and releasing any in-memory `Arc` it pinned).
+    /// Returns whether an entry existed. In-flight builds on the entry
+    /// finish on their own handle and are simply not cached.
+    pub fn evict(&self, src: &DatasetSource, scale: f64) -> bool {
+        self.cache.lock().unwrap().remove(&src.cache_key(scale)).is_some()
+    }
+
+    /// Drop every cached entry. The cache is unbounded by design (suites
+    /// revisit datasets), so long-lived services streaming many distinct
+    /// datasets should evict or clear periodically; a bounded/LRU policy is
+    /// left to a future scaling change. Build counters are not reset.
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    /// The per-key entry handle (creating it if absent); the map lock is
+    /// released before any expensive work starts.
+    fn entry(&self, key: DatasetKey) -> SharedEntry {
+        self.cache.lock().unwrap().entry(key).or_default().clone()
+    }
+
+    /// Build-or-fetch the matrix with the entry lock held, so racing
+    /// callers on one key cannot both build.
+    fn csr_locked(
+        &self,
+        src: &DatasetSource,
+        scale: f64,
+        e: &mut CacheEntry,
+    ) -> Result<Arc<Csr>> {
+        if let Some(c) = &e.csr {
+            return Ok(c.clone());
+        }
+        let built = src
+            .build(scale)
+            .with_context(|| format!("build dataset '{}'", src.name()))?;
+        self.dataset_builds.fetch_add(1, Ordering::Relaxed);
+        e.csr = Some(built.clone());
+        Ok(built)
+    }
+
+    /// Drop the map entry again if a failed build left it empty, so retries
+    /// against bad sources don't accumulate dead placeholders. Removes only
+    /// the exact entry this caller holds (a racing retry may already have
+    /// replaced the slot with a successfully-populated one). (Safe lock
+    /// order: nothing takes an entry lock while holding the map lock.)
+    fn forget_if_empty(&self, key: &DatasetKey, entry: &SharedEntry, e: &CacheEntry) {
+        if e.csr.is_none() && e.stats.is_none() && e.reference.is_none() {
+            let mut map = self.cache.lock().unwrap();
+            if map.get(key).is_some_and(|cur| Arc::ptr_eq(cur, entry)) {
+                map.remove(key);
+            }
+        }
+    }
+
+    /// The matrix for `(source, scale)`, built at most once per session —
+    /// including under concurrent callers (they serialize on this key).
+    pub fn dataset(&self, src: &DatasetSource, scale: f64) -> Result<Arc<Csr>> {
+        let key = src.cache_key(scale);
+        let entry = self.entry(key.clone());
+        let mut e = entry.lock().unwrap();
+        match self.csr_locked(src, scale, &mut e) {
+            Ok(c) => Ok(c),
+            Err(err) => {
+                self.forget_if_empty(&key, &entry, &e);
+                Err(err)
+            }
+        }
+    }
+
+    /// Table III characterization for `(source, scale)`, memoized.
+    pub fn dataset_stats(&self, src: &DatasetSource, scale: f64) -> Result<MatrixStats> {
+        let key = src.cache_key(scale);
+        let entry = self.entry(key.clone());
+        let mut e = entry.lock().unwrap();
+        if let Some(st) = &e.stats {
+            return Ok(st.clone());
+        }
+        let a = match self.csr_locked(src, scale, &mut e) {
+            Ok(a) => a,
+            Err(err) => {
+                self.forget_if_empty(&key, &entry, &e);
+                return Err(err);
+            }
+        };
+        let st = stats::characterize(&a, 16);
+        e.stats = Some(st.clone());
+        Ok(st)
+    }
+
+    /// The reference product A*A for `(source, scale)`, memoized (the
+    /// oracle all verified jobs on this dataset share), computed at most
+    /// once even under concurrent callers.
+    pub fn reference_product(&self, src: &DatasetSource, scale: f64) -> Result<Arc<Csr>> {
+        let key = src.cache_key(scale);
+        let entry = self.entry(key.clone());
+        let mut e = entry.lock().unwrap();
+        if let Some(r) = &e.reference {
+            return Ok(r.clone());
+        }
+        let a = match self.csr_locked(src, scale, &mut e) {
+            Ok(a) => a,
+            Err(err) => {
+                self.forget_if_empty(&key, &entry, &e);
+                return Err(err);
+            }
+        };
+        ensure!(
+            a.nrows == a.ncols,
+            "dataset '{}' is {}x{}, but the reference oracle computes A*A; use \
+             Session::spgemm for rectangular products",
+            src.name(),
+            a.nrows,
+            a.ncols
+        );
+        let reference = Arc::new(spgemm::reference(&a, &a));
+        self.reference_builds.fetch_add(1, Ordering::Relaxed);
+        e.reference = Some(reference.clone());
+        Ok(reference)
+    }
+
+    /// General SpGEMM on caller-owned matrices: C = A*B under the cycle
+    /// model, with this session's engine and system configuration.
+    ///
+    /// Unlike [`Session::run`], `ImplId::VecRadix` uses its default ESC
+    /// block size here — the paper's per-matrix block-size sweep is an
+    /// evaluation-pipeline concern and only happens for A*A jobs.
+    pub fn spgemm(&self, id: ImplId, a: &Csr, b: &Csr) -> Result<Product> {
+        ensure!(
+            a.ncols == b.nrows,
+            "dimension mismatch: ({}x{}) * ({}x{})",
+            a.nrows,
+            a.ncols,
+            b.nrows,
+            b.ncols
+        );
+        let mut machine = Machine::new(self.cfg.sys);
+        let mut im = id.instantiate(self.cfg.engine, &self.cfg.artifact_dir)?;
+        let csr = im
+            .multiply(&mut machine, a, b)
+            .with_context(|| format!("{} product", id.name()))?;
+        Ok(Product { csr, metrics: machine.metrics() })
+    }
+
+    /// Run one job (A*A on the job's dataset), reusing the session caches.
+    pub fn run(&self, job: &JobSpec) -> Result<JobResult> {
+        let a = self.dataset(&job.dataset, job.scale)?;
+        let reference = if job.verify {
+            Some(self.reference_product(&job.dataset, job.scale)?)
+        } else {
+            None
+        };
+        self.execute(job.impl_id, &job.dataset.name(), &a, reference.as_deref())
+    }
+
+    /// Run a (datasets x implementations) sweep on worker threads.
+    ///
+    /// Phase 1 builds datasets (plus stats and, when verifying, reference
+    /// products) through the cache with a work-stealing index loop — one
+    /// slow dataset never idles the pool. Phase 2 fans the grid out the same
+    /// way. Simulations are independent (one `Machine` each), so the
+    /// parallelism does not perturb the simulated metrics.
+    pub fn run_suite(&self, spec: &SuiteSpec) -> Result<SuiteRun> {
+        let threads = spec.threads.max(1);
+
+        // Results and stats are keyed by display name; two different
+        // sources with one name would silently collide in `SuiteRun`.
+        let mut seen = std::collections::HashSet::new();
+        for src in &spec.datasets {
+            anyhow::ensure!(
+                seen.insert(src.name()),
+                "duplicate dataset name '{}' in suite (dataset names must be unique)",
+                src.name()
+            );
+        }
+
+        // Reference oracles are only worth building if jobs will verify
+        // against them (table3 runs with no implementations at all).
+        let want_reference = spec.verify && !spec.impls.is_empty();
+
+        // Phase 1: materialize datasets (work-stealing across datasets).
+        let errs: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..threads.min(spec.datasets.len()) {
+                let errs = &errs;
+                let next = &next;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= spec.datasets.len() {
+                        break;
+                    }
+                    let src = &spec.datasets[i];
+                    let prepared = self
+                        .dataset_stats(src, spec.scale)
+                        .map(|_| ())
+                        .and_then(|()| {
+                            if want_reference {
+                                self.reference_product(src, spec.scale).map(|_| ())
+                            } else {
+                                Ok(())
+                            }
+                        });
+                    if let Err(e) = prepared {
+                        errs.lock().unwrap().push(format!("{}: {e:#}", src.name()));
+                    }
+                });
+            }
+        });
+        let errv = errs.into_inner().unwrap();
+        anyhow::ensure!(errv.is_empty(), "dataset build failures: {errv:?}");
+
+        let mut dataset_stats = HashMap::new();
+        for src in &spec.datasets {
+            dataset_stats.insert(src.name(), self.dataset_stats(src, spec.scale)?);
+        }
+
+        // Phase 2: the grid (dataset-major job order, work-stealing).
+        let built: Vec<(String, Arc<Csr>, Option<Arc<Csr>>)> = spec
+            .datasets
+            .iter()
+            .map(|src| {
+                let a = self.dataset(src, spec.scale)?;
+                let r = if want_reference {
+                    Some(self.reference_product(src, spec.scale)?)
+                } else {
+                    None
+                };
+                Ok((src.name(), a, r))
+            })
+            .collect::<Result<_>>()?;
+        let jobs: Vec<(ImplId, usize)> = (0..spec.datasets.len())
+            .flat_map(|di| spec.impls.iter().map(move |&i| (i, di)))
+            .collect();
+
+        let results: Mutex<Vec<(usize, JobResult)>> = Mutex::new(Vec::new());
+        let job_errs: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..threads.min(jobs.len()) {
+                let jobs = &jobs;
+                let built = &built;
+                let results = &results;
+                let job_errs = &job_errs;
+                let next = &next;
+                scope.spawn(move || loop {
+                    let j = next.fetch_add(1, Ordering::Relaxed);
+                    if j >= jobs.len() {
+                        break;
+                    }
+                    let (id, di) = jobs[j];
+                    let (name, a, reference) = &built[di];
+                    match self.execute(id, name, a, reference.as_deref()) {
+                        Ok(r) => results.lock().unwrap().push((j, r)),
+                        Err(e) => job_errs
+                            .lock()
+                            .unwrap()
+                            .push(format!("{}/{name}: {e:#}", id.name())),
+                    }
+                });
+            }
+        });
+        let errv = job_errs.into_inner().unwrap();
+        anyhow::ensure!(errv.is_empty(), "experiment failures: {errv:?}");
+
+        let mut indexed = results.into_inner().unwrap();
+        indexed.sort_by_key(|(j, _)| *j);
+        Ok(SuiteRun {
+            results: indexed.into_iter().map(|(_, r)| r).collect(),
+            dataset_stats,
+        })
+    }
+
+    /// One simulated run of `id` on `a * a`, verifying against `verify`
+    /// when given. vec-radix sweeps the ESC block size per matrix and keeps
+    /// the best configuration, as in the paper (§V-B). The implementation
+    /// (and, under `Engine::Xla`, its compiled artifacts) is instantiated
+    /// per job: `ZipUnit` is `&mut`-stateful, so jobs running on parallel
+    /// workers cannot share one engine.
+    fn execute(
+        &self,
+        id: ImplId,
+        dataset: &str,
+        a: &Csr,
+        verify: Option<&Csr>,
+    ) -> Result<JobResult> {
+        let t0 = Instant::now();
+        let mut block = None;
+        ensure!(
+            a.nrows == a.ncols,
+            "dataset '{dataset}' is {}x{}, but jobs compute A*A; use Session::spgemm for \
+             rectangular products",
+            a.nrows,
+            a.ncols
+        );
+
+        let (metrics, product) = if id == ImplId::VecRadix {
+            let mut best: Option<(RunMetrics, Csr, usize)> = None;
+            for be in [4 * 1024usize, 16 * 1024, 64 * 1024] {
+                let mut m = Machine::new(self.cfg.sys);
+                let mut im = spgemm::vec_radix::VecRadix { block_elems: be };
+                let c = im
+                    .multiply(&mut m, a, a)
+                    .with_context(|| format!("vec-radix block={be}"))?;
+                let met = m.metrics();
+                if best.as_ref().map(|(b, _, _)| met.cycles < b.cycles).unwrap_or(true) {
+                    best = Some((met, c, be));
+                }
+            }
+            let (met, c, be) = best.unwrap();
+            block = Some(be);
+            (met, c)
+        } else {
+            let p = self
+                .spgemm(id, a, a)
+                .with_context(|| format!("{} on {dataset}", id.name()))?;
+            (p.metrics, p.csr)
+        };
+
+        let verified = match verify {
+            Some(r) => {
+                ensure!(
+                    spgemm::same_product(&product, r, 1e-2),
+                    "{} on {dataset}: product mismatch ({} vs {} nnz)",
+                    id.name(),
+                    product.nnz(),
+                    r.nnz()
+                );
+                true
+            }
+            None => false,
+        };
+
+        Ok(JobResult {
+            impl_id: id,
+            dataset: dataset.to_string(),
+            out_nnz: product.nnz(),
+            metrics,
+            verified,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            block_elems: block,
+        })
+    }
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Session::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn small_suite_runs_and_verifies() {
+        let session = Session::new();
+        let spec = SuiteSpec {
+            datasets: vec![
+                DatasetSource::registry("p2p").unwrap(),
+                DatasetSource::registry("m133-b3").unwrap(),
+            ],
+            impls: vec![ImplId::SclHash, ImplId::Spz],
+            scale: 0.01,
+            threads: 2,
+            verify: true,
+        };
+        let r = session.run_suite(&spec).unwrap();
+        assert_eq!(r.results.len(), 4);
+        assert!(r.results.iter().all(|x| x.verified));
+        assert!(r.speedup(ImplId::Spz, ImplId::SclHash, "p2p").unwrap() > 0.0);
+        assert!(r.dataset_stats.contains_key("m133-b3"));
+        // Everything went through the cache exactly once per dataset.
+        assert_eq!(session.dataset_builds(), 2);
+        assert_eq!(session.reference_builds(), 2);
+    }
+
+    #[test]
+    fn suite_results_are_in_spec_order() {
+        let session = Session::new();
+        let spec = SuiteSpec {
+            datasets: vec![
+                DatasetSource::registry("m133-b3").unwrap(),
+                DatasetSource::registry("p2p").unwrap(),
+            ],
+            impls: vec![ImplId::Spz, ImplId::SclHash],
+            scale: 0.01,
+            threads: 4,
+            verify: false,
+        };
+        let r = session.run_suite(&spec).unwrap();
+        let order: Vec<(String, ImplId)> = r
+            .results
+            .iter()
+            .map(|x| (x.dataset.clone(), x.impl_id))
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                ("m133-b3".to_string(), ImplId::Spz),
+                ("m133-b3".to_string(), ImplId::SclHash),
+                ("p2p".to_string(), ImplId::Spz),
+                ("p2p".to_string(), ImplId::SclHash),
+            ]
+        );
+    }
+
+    #[test]
+    fn concurrent_jobs_on_one_key_build_once() {
+        let session = Session::new();
+        let src = DatasetSource::registry("p2p").unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let session = &session;
+                let src = src.clone();
+                s.spawn(move || {
+                    session
+                        .run(&JobSpec::new(ImplId::SclHash, src).with_scale(0.01).with_verify(true))
+                        .unwrap();
+                });
+            }
+        });
+        assert_eq!(session.dataset_builds(), 1);
+        assert_eq!(session.reference_builds(), 1);
+    }
+
+    #[test]
+    fn run_verifies_every_impl() {
+        let a = Arc::new(gen::erdos_renyi(60, 60, 300, 81));
+        let session = Session::new();
+        let src = DatasetSource::in_memory("er60", a);
+        let oracle = session.reference_product(&src, 1.0).unwrap();
+        for id in ImplId::ALL {
+            let res = session
+                .run(&JobSpec::new(id, src.clone()).with_verify(true))
+                .unwrap();
+            assert!(res.verified, "{}", id.name());
+            assert!(res.metrics.cycles > 0.0, "{}", id.name());
+            assert_eq!(res.out_nnz, oracle.nnz(), "{}", id.name());
+        }
+        // One dataset materialization, one oracle, five verified jobs.
+        assert_eq!(session.dataset_builds(), 1);
+        assert_eq!(session.reference_builds(), 1);
+    }
+
+    #[test]
+    fn vec_radix_reports_block() {
+        let a = Arc::new(gen::erdos_renyi(60, 60, 300, 82));
+        let session = Session::new();
+        let res = session
+            .run(&JobSpec::new(
+                ImplId::VecRadix,
+                DatasetSource::in_memory("er60b", a),
+            ))
+            .unwrap();
+        assert!(res.block_elems.is_some());
+    }
+
+    #[test]
+    fn spgemm_matches_reference_on_rectangular_product() {
+        let a = gen::erdos_renyi(30, 50, 200, 11);
+        let b = gen::erdos_renyi(50, 20, 180, 12);
+        let session = Session::new();
+        let p = session.spgemm(ImplId::Spz, &a, &b).unwrap();
+        assert!(spgemm::same_product(&p.csr, &spgemm::reference(&a, &b), 1e-3));
+        assert!(p.metrics.cycles > 0.0);
+    }
+}

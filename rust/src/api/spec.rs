@@ -1,0 +1,231 @@
+//! Typed job/suite specifications: what to run, on which data.
+//!
+//! [`DatasetSource`] replaces stringly-typed dataset names end-to-end: a
+//! dataset is either a calibrated synthetic from the Table III registry, a
+//! user-provided MatrixMarket file, or an in-memory [`Csr`] handed in by an
+//! embedding application. String parsing happens exactly once, at the argv
+//! boundary ([`DatasetSource::parse`]).
+
+use crate::matrix::{mm, registry, Csr};
+use crate::spgemm::ImplId;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Where a dataset comes from.
+#[derive(Clone, Debug)]
+pub enum DatasetSource {
+    /// A calibrated synthetic stand-in from the Table III registry.
+    Registry(&'static registry::Dataset),
+    /// A MatrixMarket file on disk (scale is ignored; the file is read as-is).
+    Mtx(PathBuf),
+    /// A matrix the embedding application already built (scale is ignored).
+    InMemory { name: String, csr: Arc<Csr> },
+}
+
+/// Cache key for a `(source, scale)` pair — see [`crate::api::Session`].
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum DatasetKey {
+    Registry { name: &'static str, scale_bits: u64 },
+    Mtx(PathBuf),
+    /// In-memory matrices are keyed by `Arc` identity.
+    InMemory(usize),
+}
+
+impl DatasetSource {
+    /// Look a registry dataset up by its Table III name.
+    pub fn registry(name: &str) -> Result<Self> {
+        registry::find(name).map(DatasetSource::Registry).with_context(|| {
+            let known: Vec<&str> = registry::DATASETS.iter().map(|d| d.name).collect();
+            format!(
+                "unknown dataset '{name}' (known datasets: {}; or provide a .mtx file instead)",
+                known.join(", ")
+            )
+        })
+    }
+
+    /// A MatrixMarket file.
+    pub fn mtx(path: impl Into<PathBuf>) -> Self {
+        DatasetSource::Mtx(path.into())
+    }
+
+    /// An already-built matrix owned by the embedding application.
+    pub fn in_memory(name: impl Into<String>, csr: Arc<Csr>) -> Self {
+        DatasetSource::InMemory { name: name.into(), csr }
+    }
+
+    /// Resolve a CLI dataset spec: a `<name>.mtx` under `mtx_dir` overrides
+    /// the synthetic registry (as `spz --mtx-dir` always did), an explicit
+    /// `*.mtx` path is read from disk, anything else is a registry name.
+    pub fn parse(spec: &str, mtx_dir: Option<&Path>) -> Result<Self> {
+        if let Some(dir) = mtx_dir {
+            let p = if spec.ends_with(".mtx") {
+                dir.join(spec)
+            } else {
+                dir.join(format!("{spec}.mtx"))
+            };
+            if p.exists() {
+                return Ok(DatasetSource::Mtx(p));
+            }
+        }
+        if spec.ends_with(".mtx") {
+            return Ok(DatasetSource::Mtx(PathBuf::from(spec)));
+        }
+        Self::registry(spec)
+    }
+
+    /// Display/report name ("p2p", the file stem of an `.mtx`, or the name
+    /// given to an in-memory matrix).
+    pub fn name(&self) -> String {
+        match self {
+            DatasetSource::Registry(d) => d.name.to_string(),
+            DatasetSource::Mtx(p) => p
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| p.display().to_string()),
+            DatasetSource::InMemory { name, .. } => name.clone(),
+        }
+    }
+
+    /// Cache key for this source at `scale`. Registry scales are normalized
+    /// with the same clamp [`registry::Dataset::build`] applies, so
+    /// equivalent scales (e.g. 1.0 and 2.0) share one cache entry; file and
+    /// in-memory sources ignore scale entirely.
+    pub fn cache_key(&self, scale: f64) -> DatasetKey {
+        match self {
+            DatasetSource::Registry(d) => DatasetKey::Registry {
+                name: d.name,
+                scale_bits: registry::normalize_scale(scale).to_bits(),
+            },
+            DatasetSource::Mtx(p) => DatasetKey::Mtx(p.clone()),
+            DatasetSource::InMemory { csr, .. } => DatasetKey::InMemory(Arc::as_ptr(csr) as usize),
+        }
+    }
+
+    /// Materialize the matrix (uncached; [`crate::api::Session::dataset`]
+    /// memoizes this per `(source, scale)`).
+    pub fn build(&self, scale: f64) -> Result<Arc<Csr>> {
+        match self {
+            DatasetSource::Registry(d) => Ok(Arc::new(d.build(scale))),
+            DatasetSource::Mtx(p) => Ok(Arc::new(mm::read_mtx(p)?)),
+            DatasetSource::InMemory { csr, .. } => Ok(csr.clone()),
+        }
+    }
+}
+
+impl std::str::FromStr for DatasetSource {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        DatasetSource::parse(s, None)
+    }
+}
+
+impl std::fmt::Display for DatasetSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(&self.name())
+    }
+}
+
+/// One job: one implementation on one dataset (C = A*A, as in the paper's
+/// evaluation; use [`crate::api::Session::spgemm`] for general A*B).
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub impl_id: ImplId,
+    pub dataset: DatasetSource,
+    /// Dataset scale in (0, 1] (registry synthetics only).
+    pub scale: f64,
+    /// Verify the product against the memoized reference oracle.
+    pub verify: bool,
+}
+
+impl JobSpec {
+    pub fn new(impl_id: ImplId, dataset: DatasetSource) -> Self {
+        JobSpec { impl_id, dataset, scale: 1.0, verify: false }
+    }
+
+    pub fn with_scale(mut self, scale: f64) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    pub fn with_verify(mut self, verify: bool) -> Self {
+        self.verify = verify;
+        self
+    }
+}
+
+/// A (datasets x implementations) sweep.
+#[derive(Clone, Debug)]
+pub struct SuiteSpec {
+    /// Datasets (default: all 14 of Table III).
+    pub datasets: Vec<DatasetSource>,
+    /// Implementations (default: the five of Figure 8).
+    pub impls: Vec<ImplId>,
+    /// Dataset scale in (0, 1].
+    pub scale: f64,
+    /// Worker threads.
+    pub threads: usize,
+    /// Verify every product against the reference oracle.
+    pub verify: bool,
+}
+
+impl Default for SuiteSpec {
+    fn default() -> Self {
+        SuiteSpec {
+            datasets: registry::DATASETS.iter().map(DatasetSource::Registry).collect(),
+            impls: ImplId::ALL.to_vec(),
+            scale: 1.0,
+            threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+            verify: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_source_round_trips() {
+        let s = DatasetSource::parse("p2p", None).unwrap();
+        assert_eq!(s.name(), "p2p");
+        assert!(matches!(s, DatasetSource::Registry(_)));
+        let again: DatasetSource = "p2p".parse().unwrap();
+        assert_eq!(again.cache_key(0.5), s.cache_key(0.5));
+    }
+
+    #[test]
+    fn unknown_dataset_is_actionable() {
+        let e = DatasetSource::parse("nope", None).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("unknown dataset 'nope'"), "{msg}");
+        assert!(msg.contains("p2p") && msg.contains(".mtx"), "{msg}");
+    }
+
+    #[test]
+    fn mtx_path_spec_parses() {
+        let s = DatasetSource::parse("some/dir/web.mtx", None).unwrap();
+        assert!(matches!(&s, DatasetSource::Mtx(p) if p.ends_with("web.mtx")));
+        assert_eq!(s.name(), "web");
+    }
+
+    #[test]
+    fn cache_keys_distinguish_scales_and_sources() {
+        let s = DatasetSource::registry("wiki").unwrap();
+        assert_ne!(s.cache_key(1.0), s.cache_key(0.5));
+        // Scales beyond the clamp range alias to the same built matrix.
+        assert_eq!(s.cache_key(1.0), s.cache_key(2.0));
+        assert_eq!(s.cache_key(1e-3), s.cache_key(1e-4));
+        let a = DatasetSource::in_memory("m", Arc::new(Csr::identity(4)));
+        let b = DatasetSource::in_memory("m", Arc::new(Csr::identity(4)));
+        assert_ne!(a.cache_key(1.0), b.cache_key(1.0));
+        assert_eq!(a.cache_key(1.0), a.clone().cache_key(0.25));
+    }
+
+    #[test]
+    fn default_suite_matches_paper() {
+        let s = SuiteSpec::default();
+        assert_eq!(s.datasets.len(), 14);
+        assert_eq!(s.impls, ImplId::ALL.to_vec());
+    }
+}

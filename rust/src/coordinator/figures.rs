@@ -1,25 +1,37 @@
 //! Emitters that regenerate each table/figure of the paper from a
-//! [`SuiteResult`]: aligned-text rendering (stdout) plus TSV series
+//! [`SuiteRun`]: aligned-text rendering (stdout) plus TSV series
 //! (reports/ directory) for plotting.
 
-use crate::coordinator::runner::SuiteResult;
+use crate::api::SuiteRun;
 use crate::matrix::registry;
 use crate::sim::machine::{Phase, NUM_PHASES, PHASE_NAMES};
+use crate::spgemm::ImplId;
 use crate::util::stats::geomean;
 use std::fmt::Write as _;
 
-/// Order datasets as Table III (descending work variance), filtered to the
-/// ones present in the result.
-fn ordered_datasets(r: &SuiteResult) -> Vec<&'static str> {
-    registry::DATASETS
+/// Order datasets as Table III (descending work variance), then any
+/// non-registry datasets (`.mtx` / in-memory sources) in name order so user
+/// data shows up in the figures rather than being silently dropped.
+fn ordered_datasets(r: &SuiteRun) -> Vec<String> {
+    let mut names: Vec<String> = registry::DATASETS
         .iter()
         .map(|d| d.name)
         .filter(|n| r.dataset_stats.contains_key(*n))
-        .collect()
+        .map(str::to_string)
+        .collect();
+    let mut extra: Vec<String> = r
+        .dataset_stats
+        .keys()
+        .filter(|k| registry::find(k).is_none())
+        .cloned()
+        .collect();
+    extra.sort();
+    names.extend(extra);
+    names
 }
 
 /// Table III: dataset characterization — paper value vs measured stand-in.
-pub fn table3(r: &SuiteResult) -> String {
+pub fn table3(r: &SuiteRun) -> String {
     let mut s = String::new();
     let _ = writeln!(
         s,
@@ -31,8 +43,10 @@ pub fn table3(r: &SuiteResult) -> String {
         "Matrix", "Rows", "NNZ", "Density", "AvgWork/row", "AvgOutNNZ/row", "Work/16rows", "WorkVar"
     );
     for name in ordered_datasets(r) {
-        let st = &r.dataset_stats[name];
-        let p = registry::find(name).unwrap().paper;
+        // Non-registry datasets have no paper row to compare against.
+        let Some(d) = registry::find(&name) else { continue };
+        let st = &r.dataset_stats[&name];
+        let p = d.paper;
         let _ = writeln!(
             s,
             "{:<10} {:>5.0}K/{:>5.0}K {:>5.0}K/{:>5.0}K {:>5.0e}/{:>4.0e} {:>7.2}/{:>7.2} {:>7.2}/{:>7.2} {:>6.2}K/{:>5.2}K {:>6.2}/{:>6.2}",
@@ -58,10 +72,10 @@ pub fn table3(r: &SuiteResult) -> String {
 
 /// Figure 8: speedup over scl-hash per dataset, plus the paper's headline
 /// geomean ratios.
-pub fn fig8(r: &SuiteResult) -> String {
+pub fn fig8(r: &SuiteRun) -> String {
     let mut s = String::new();
     let _ = writeln!(s, "Figure 8. Speedup over scalar baseline using hash table (scl-hash = 1.0)");
-    let impls = ["scl-array", "scl-hash", "vec-radix", "spz", "spz-rsort"];
+    let impls = ImplId::ALL;
     let _ = write!(s, "{:<10}", "Matrix");
     for i in impls {
         let _ = write!(s, " {i:>10}");
@@ -71,7 +85,7 @@ pub fn fig8(r: &SuiteResult) -> String {
     for name in ordered_datasets(r) {
         let _ = write!(s, "{name:<10}");
         for (k, i) in impls.iter().enumerate() {
-            match r.speedup(i, "scl-hash", name) {
+            match r.speedup(*i, ImplId::SclHash, &name) {
                 Some(x) => {
                     per_impl[k].push(x);
                     let _ = write!(s, " {x:>10.2}");
@@ -93,7 +107,7 @@ pub fn fig8(r: &SuiteResult) -> String {
     }
     let _ = writeln!(s);
     // Headline ratios (paper: 12.13x / 5.98x / 2.61x for spz, 2.60x spz/vec-radix).
-    let ratio = |num: &str, den: &str| -> Option<f64> {
+    let ratio = |num: ImplId, den: ImplId| -> Option<f64> {
         let xs: Vec<f64> = ordered_datasets(r)
             .iter()
             .filter_map(|d| r.speedup(num, den, d))
@@ -105,11 +119,11 @@ pub fn fig8(r: &SuiteResult) -> String {
         }
     };
     for (num, den, paper) in [
-        ("spz", "scl-array", 12.13),
-        ("spz", "scl-hash", 5.98),
-        ("spz", "vec-radix", 2.61),
-        ("scl-hash", "scl-array", 2.03),
-        ("vec-radix", "scl-hash", 2.29),
+        (ImplId::Spz, ImplId::SclArray, 12.13),
+        (ImplId::Spz, ImplId::SclHash, 5.98),
+        (ImplId::Spz, ImplId::VecRadix, 2.61),
+        (ImplId::SclHash, ImplId::SclArray, 2.03),
+        (ImplId::VecRadix, ImplId::SclHash, 2.29),
     ] {
         if let Some(x) = ratio(num, den) {
             let _ = writeln!(s, "  {num} vs {den}: {x:.2}x  (paper: {paper:.2}x)");
@@ -120,13 +134,13 @@ pub fn fig8(r: &SuiteResult) -> String {
 
 /// Figure 9: execution-time breakdown, normalized to each dataset's
 /// scl-hash total (the paper normalizes within each matrix).
-pub fn fig9(r: &SuiteResult) -> String {
+pub fn fig9(r: &SuiteRun) -> String {
     let mut s = String::new();
     let _ = writeln!(
         s,
         "Figure 9. Execution time breakdown (fraction of each impl's own total)"
     );
-    let impls = ["vec-radix", "spz", "spz-rsort"];
+    let impls = [ImplId::VecRadix, ImplId::Spz, ImplId::SpzRsort];
     let _ = writeln!(
         s,
         "{:<10} {:<10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>14}",
@@ -134,7 +148,7 @@ pub fn fig9(r: &SuiteResult) -> String {
     );
     for name in ordered_datasets(r) {
         for i in impls {
-            if let Some(e) = r.get(i, name) {
+            if let Some(e) = r.get(i, &name) {
                 let tot: f64 = e.metrics.cycles.max(1e-9);
                 let _ = write!(s, "{name:<10} {i:<10}");
                 for p in 0..NUM_PHASES {
@@ -148,7 +162,7 @@ pub fn fig9(r: &SuiteResult) -> String {
 }
 
 /// Figure 10: L1 data-cache accesses, vec-radix vs spz (normalized to spz).
-pub fn fig10(r: &SuiteResult) -> String {
+pub fn fig10(r: &SuiteRun) -> String {
     let mut s = String::new();
     let _ = writeln!(s, "Figure 10. L1D accesses (relative to spz = 1.0)");
     let _ = writeln!(
@@ -158,7 +172,7 @@ pub fn fig10(r: &SuiteResult) -> String {
     );
     let mut ratios = Vec::new();
     for name in ordered_datasets(r) {
-        if let (Some(v), Some(z)) = (r.get("vec-radix", name), r.get("spz", name)) {
+        if let (Some(v), Some(z)) = (r.get(ImplId::VecRadix, &name), r.get(ImplId::Spz, &name)) {
             let ratio = v.metrics.mem.l1d_accesses as f64 / z.metrics.mem.l1d_accesses.max(1) as f64;
             ratios.push(ratio);
             let _ = writeln!(
@@ -175,7 +189,7 @@ pub fn fig10(r: &SuiteResult) -> String {
 }
 
 /// Figure 11: dynamic mssortk+mszipk instruction counts, spz vs spz-rsort.
-pub fn fig11(r: &SuiteResult) -> String {
+pub fn fig11(r: &SuiteRun) -> String {
     let mut s = String::new();
     let _ = writeln!(s, "Figure 11. Dynamic mssortk & mszipk instruction counts");
     let _ = writeln!(
@@ -184,7 +198,7 @@ pub fn fig11(r: &SuiteResult) -> String {
         "Matrix", "spz sortk", "spz zipk", "rsort sortk", "rsort zipk", "reduction"
     );
     for name in ordered_datasets(r) {
-        if let (Some(z), Some(rs)) = (r.get("spz", name), r.get("spz-rsort", name)) {
+        if let (Some(z), Some(rs)) = (r.get(ImplId::Spz, &name), r.get(ImplId::SpzRsort, &name)) {
             let t1 = z.metrics.total_matrix_kv_pairs();
             let t2 = rs.metrics.total_matrix_kv_pairs();
             let _ = writeln!(
@@ -203,14 +217,14 @@ pub fn fig11(r: &SuiteResult) -> String {
 }
 
 /// TSV exports for plotting (one file per figure).
-pub fn tsv_exports(r: &SuiteResult) -> Vec<(String, String)> {
+pub fn tsv_exports(r: &SuiteRun) -> Vec<(String, String)> {
     let mut out = Vec::new();
     // fig8.tsv
     let mut t = String::from("matrix\timpl\tspeedup_over_sclhash\tcycles\n");
     for name in ordered_datasets(r) {
         for e in r.results.iter().filter(|e| e.dataset == name) {
-            let sp = r.speedup(&e.impl_name, "scl-hash", name).unwrap_or(f64::NAN);
-            let _ = writeln!(t, "{name}\t{}\t{sp:.6}\t{:.1}", e.impl_name, e.metrics.cycles);
+            let sp = r.speedup(e.impl_id, ImplId::SclHash, &name).unwrap_or(f64::NAN);
+            let _ = writeln!(t, "{name}\t{}\t{sp:.6}\t{:.1}", e.impl_id, e.metrics.cycles);
         }
     }
     out.push(("fig8.tsv".to_string(), t));
@@ -222,7 +236,7 @@ pub fn tsv_exports(r: &SuiteResult) -> Vec<(String, String)> {
                 let _ = writeln!(
                     t,
                     "{name}\t{}\t{}\t{:.1}",
-                    e.impl_name, PHASE_NAMES[p], e.metrics.phase_cycles[p]
+                    e.impl_id, PHASE_NAMES[p], e.metrics.phase_cycles[p]
                 );
             }
         }
@@ -235,7 +249,7 @@ pub fn tsv_exports(r: &SuiteResult) -> Vec<(String, String)> {
             let _ = writeln!(
                 t,
                 "{name}\t{}\t{}\t{:.4}",
-                e.impl_name,
+                e.impl_id,
                 e.metrics.mem.l1d_accesses,
                 e.metrics.mem.l1d_hit_rate()
             );
@@ -249,7 +263,7 @@ pub fn tsv_exports(r: &SuiteResult) -> Vec<(String, String)> {
             let _ = writeln!(
                 t,
                 "{name}\t{}\t{}\t{}",
-                e.impl_name, e.metrics.ops.mssortk, e.metrics.ops.mszipk
+                e.impl_id, e.metrics.ops.mssortk, e.metrics.ops.mszipk
             );
         }
     }
@@ -259,20 +273,20 @@ pub fn tsv_exports(r: &SuiteResult) -> Vec<(String, String)> {
 
 /// Sanity assertion helpers used by tests and the e2e example: does the
 /// sweep reproduce the paper's qualitative shape?
-pub fn shape_checks(r: &SuiteResult) -> Vec<(String, bool)> {
+pub fn shape_checks(r: &SuiteRun) -> Vec<(String, bool)> {
     let mut checks = Vec::new();
     let ds = ordered_datasets(r);
-    let geo = |num: &str, den: &str| {
+    let geo = |num: ImplId, den: ImplId| {
         let xs: Vec<f64> = ds.iter().filter_map(|d| r.speedup(num, den, d)).collect();
         geomean(&xs)
     };
     checks.push((
         "spz beats scl-hash (geomean > 2x)".into(),
-        geo("spz", "scl-hash") > 2.0,
+        geo(ImplId::Spz, ImplId::SclHash) > 2.0,
     ));
     checks.push((
         "spz beats vec-radix (geomean > 1.5x)".into(),
-        geo("spz", "vec-radix") > 1.5,
+        geo(ImplId::Spz, ImplId::VecRadix) > 1.5,
     ));
     // The scalar crossover is a cache-capacity effect: scl-array's dense
     // accumulator (~8B x ncols) must overflow the LLC for its scattered
@@ -282,16 +296,16 @@ pub fn shape_checks(r: &SuiteResult) -> Vec<(String, bool)> {
         .iter()
         .filter(|d| {
             r.dataset_stats
-                .get(**d)
+                .get(d.as_str())
                 .map(|st| st.nrows * 8 > 512 * 1024)
                 .unwrap_or(false)
         })
-        .copied()
+        .map(|s| s.as_str())
         .collect();
     if !big.is_empty() {
         let xs: Vec<f64> = big
             .iter()
-            .filter_map(|d| r.speedup("scl-hash", "scl-array", d))
+            .filter_map(|d| r.speedup(ImplId::SclHash, ImplId::SclArray, d))
             .collect();
         checks.push((
             format!("scl-hash beats scl-array on LLC-overflow matrices ({})", big.join(",")),
@@ -300,11 +314,11 @@ pub fn shape_checks(r: &SuiteResult) -> Vec<(String, bool)> {
     }
     checks.push((
         "vec-radix beats scl-hash (geomean > 1.2x)".into(),
-        geo("vec-radix", "scl-hash") > 1.2,
+        geo(ImplId::VecRadix, ImplId::SclHash) > 1.2,
     ));
     // Fig 10 shape: vec-radix touches L1D more than spz on every matrix.
     let fig10_ok = ds.iter().all(|d| {
-        match (r.get("vec-radix", d), r.get("spz", d)) {
+        match (r.get(ImplId::VecRadix, d), r.get(ImplId::Spz, d)) {
             (Some(v), Some(z)) => v.metrics.mem.l1d_accesses > z.metrics.mem.l1d_accesses,
             _ => true,
         }
@@ -312,7 +326,7 @@ pub fn shape_checks(r: &SuiteResult) -> Vec<(String, bool)> {
     checks.push(("vec-radix L1D accesses > spz on all matrices".into(), fig10_ok));
     // Fig 11 shape: rsort reduces k/v pairs on the high-variance matrices.
     for d in ["wiki", "soc", "ndwww", "ca-cm"] {
-        if let (Some(z), Some(rs)) = (r.get("spz", d), r.get("spz-rsort", d)) {
+        if let (Some(z), Some(rs)) = (r.get(ImplId::Spz, d), r.get(ImplId::SpzRsort, d)) {
             checks.push((
                 format!("rsort cuts kv-pairs on {d}"),
                 rs.metrics.total_matrix_kv_pairs() < z.metrics.total_matrix_kv_pairs(),
@@ -323,7 +337,7 @@ pub fn shape_checks(r: &SuiteResult) -> Vec<(String, bool)> {
 }
 
 /// Execution-phase share of the sort phase (used in tests).
-pub fn sort_share(r: &SuiteResult, impl_name: &str, dataset: &str) -> Option<f64> {
-    let e = r.get(impl_name, dataset)?;
+pub fn sort_share(r: &SuiteRun, impl_id: ImplId, dataset: &str) -> Option<f64> {
+    let e = r.get(impl_id, dataset)?;
     Some(e.metrics.phase_cycles[Phase::Sort as usize] / e.metrics.cycles.max(1e-9))
 }

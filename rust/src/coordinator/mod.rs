@@ -1,12 +1,11 @@
-//! Experiment coordinator: runs (implementation x dataset) grids on worker
-//! threads, collects [`crate::sim::RunMetrics`], and regenerates every table
-//! and figure of the paper's evaluation (Tables I–IV, Figures 8–11).
+//! Rendering layer over the [`crate::api`] experiment pipeline: regenerates
+//! every table and figure of the paper's evaluation (Tables I–IV,
+//! Figures 8–11) from a [`crate::api::SuiteRun`], plus the ablation sweeps.
+//!
+//! Experiment *execution* lives in [`crate::api`] ([`crate::api::Session`],
+//! [`crate::api::JobSpec`], [`crate::api::SuiteSpec`]); this module only
+//! turns results into reports.
 
-pub mod experiment;
+pub mod ablate;
 pub mod figures;
 pub mod report;
-pub mod runner;
-
-pub use experiment::{run_one, ExperimentResult};
-pub use runner::{run_suite, SuiteConfig, SuiteResult};
-pub mod ablate;

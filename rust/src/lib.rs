@@ -1,4 +1,4 @@
-//! # SparseZipper — full-system reproduction
+//! # SparseZipper — full-system reproduction, as an embeddable service
 //!
 //! Reproduction of *SparseZipper: Enhancing Matrix Extensions to Accelerate
 //! SpGEMM on CPUs* (Ta, Randall, Batten) as a three-layer Rust + JAX/Pallas
@@ -6,16 +6,52 @@
 //!
 //! * **L3 (this crate)** — the cycle-level simulation substrate (instrumented
 //!   machine + cache hierarchy + systolic-array model), the SparseZipper ISA,
-//!   all five SpGEMM implementations from the paper's evaluation, the
-//!   experiment coordinator that regenerates every table and figure, and the
+//!   all five SpGEMM implementations from the paper's evaluation, and the
 //!   Table IV area model.
 //! * **L2/L1 (python/compile, build-time only)** — the matrix unit's
 //!   functional datapath (sort/zip steps) as a JAX graph over Pallas kernels,
 //!   AOT-lowered to HLO text and executed from Rust through the PJRT CPU
-//!   client ([`runtime`]).
+//!   client ([`runtime`], behind the `xla` cargo feature).
 //!
-//! Quick start: see `examples/quickstart.rs`; figures: `spz all`.
+//! ## The [`api`] module is the front door
+//!
+//! Experiments are typed values run against a long-lived [`Session`], which
+//! owns the engine selection, the XLA artifact location, the simulated
+//! [`SystemConfig`], and a dataset cache keyed by `(source, scale)` —
+//! matrices, their Table III
+//! characterization, and reference products are built at most once per
+//! session and shared across jobs:
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use sparsezipper::{DatasetSource, ImplId, JobSpec, Session, SuiteSpec};
+//!
+//! let session = Session::new();
+//!
+//! // One job: spz on the p2p stand-in, verified against the cached oracle.
+//! let job = JobSpec::new(ImplId::Spz, DatasetSource::registry("p2p")?)
+//!     .with_scale(0.05)
+//!     .with_verify(true);
+//! let result = session.run(&job)?;
+//! println!("{:.0} cycles, verified={}", result.metrics.cycles, result.verified);
+//! println!("{}", result.to_json());
+//!
+//! // A sweep: the paper's full (datasets x implementations) grid.
+//! let suite = session.run_suite(&SuiteSpec { scale: 0.05, ..Default::default() })?;
+//! println!("{}", sparsezipper::coordinator::figures::fig8(&suite));
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! [`Session::spgemm`] runs a general `C = A*B` on caller-owned matrices;
+//! [`DatasetSource`] covers registry synthetics, `.mtx` files, and in-memory
+//! [`Csr`]s. The `spz` CLI (`src/main.rs`) is a thin argv adapter over this
+//! API, and [`coordinator`] renders [`api::SuiteRun`]s into the paper's
+//! tables and figures. See `rust/README.md` for a quick start, or
+//! `examples/` (quickstart, paper_pipeline, triangle_counting, amg_galerkin)
+//! for the API in use.
 
+pub mod api;
 pub mod area;
 pub mod config;
 pub mod coordinator;
@@ -28,6 +64,11 @@ pub mod spgemm;
 pub mod systolic;
 pub mod util;
 
+pub use api::{
+    DatasetSource, JobResult, JobSpec, Product, Session, SessionConfig, SuiteRun, SuiteSpec,
+};
 pub use config::SystemConfig;
 pub use matrix::Csr;
+pub use runtime::Engine;
 pub use sim::Machine;
+pub use spgemm::ImplId;

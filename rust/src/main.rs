@@ -1,21 +1,26 @@
-//! `spz` — SparseZipper reproduction CLI (hand-rolled arg parsing; the
-//! offline vendor set has no clap).
+//! `spz` — thin CLI adapter over the typed [`sparsezipper::api`] Session API
+//! (hand-rolled arg parsing; the offline vendor set has no clap).
+//!
+//! All experiment orchestration lives in the library: this binary only
+//! parses argv into [`JobSpec`]/[`SuiteSpec`] values, hands them to a
+//! [`Session`], and renders the results.
 //!
 //! ```text
 //! spz table3|fig8|fig9|fig10|fig11|table4|all [--scale F] [--threads N]
 //!     [--datasets a,b,...] [--impls a,b,...] [--engine native|xla]
-//!     [--verify] [--out-dir DIR] [--mtx-dir DIR]
-//! spz run --dataset NAME --impl NAME [--scale F] [--engine native|xla]
+//!     [--verify] [--json] [--out-dir DIR] [--mtx-dir DIR]
+//! spz run --dataset NAME --impl NAME [--scale F] [--engine native|xla] [--json]
 //! spz isa | config | gen --dataset NAME --out FILE.mtx [--scale F]
 //! ```
 
 use anyhow::{bail, Context, Result};
+use sparsezipper::api::{DatasetSource, JobSpec, Session, SessionConfig, SuiteSpec};
 use sparsezipper::area::AreaModel;
-use sparsezipper::coordinator::{figures, report, run_suite, SuiteConfig};
+use sparsezipper::coordinator::{figures, report};
 use sparsezipper::matrix::registry;
 use sparsezipper::runtime::Engine;
-use sparsezipper::spgemm;
-use std::path::PathBuf;
+use sparsezipper::ImplId;
+use std::path::{Path, PathBuf};
 
 struct Args {
     cmd: String,
@@ -23,55 +28,157 @@ struct Args {
     flags: std::collections::HashSet<String>,
 }
 
-fn parse_args() -> Result<Args> {
-    let mut it = std::env::args().skip(1);
-    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+/// Strict argv parsing for everything after the subcommand. Boolean flags
+/// are listed explicitly; any other `--key` expects a value and may appear
+/// at most once (a duplicate is an error, not a silent overwrite).
+const COMMANDS: &[&str] = &[
+    "table3", "fig4", "fig8", "fig9", "fig10", "fig11", "table4", "all", "run", "ablate", "isa",
+    "config", "gen",
+];
+
+fn parse_argv(args: &[String]) -> Result<Args> {
+    let mut it = args.iter();
+    let cmd = it.next().cloned().unwrap_or_else(|| "help".to_string());
+    // Diagnose a typo'd command before complaining about its options.
+    if !COMMANDS.contains(&cmd.as_str()) {
+        bail!("unknown command '{cmd}' (try: spz help)");
+    }
     let mut opts = std::collections::HashMap::new();
     let mut flags = std::collections::HashSet::new();
     while let Some(a) = it.next() {
         if let Some(key) = a.strip_prefix("--") {
-            // Peek: flag or key-value?
             match key {
-                "verify" | "quiet" | "sweep" => {
+                "verify" | "quiet" | "sweep" | "json" => {
                     flags.insert(key.to_string());
                 }
                 _ => {
                     let v = it.next().with_context(|| format!("--{key} needs a value"))?;
-                    opts.insert(key.to_string(), v);
+                    if opts.insert(key.to_string(), v.clone()).is_some() {
+                        bail!("duplicate option --{key}");
+                    }
                 }
             }
         } else {
             bail!("unexpected argument '{a}'");
         }
     }
+    for key in opts.keys() {
+        if !allowed_opts(&cmd).contains(&key.as_str()) {
+            bail!("unknown option --{key} for '{cmd}' (try: spz help)");
+        }
+    }
+    for flag in &flags {
+        if !allowed_flags(&cmd).contains(&flag.as_str()) {
+            bail!("flag --{flag} does not apply to '{cmd}' (try: spz help)");
+        }
+    }
     Ok(Args { cmd, opts, flags })
 }
 
-fn suite_config(a: &Args) -> Result<SuiteConfig> {
-    let mut cfg = SuiteConfig::default();
-    if let Some(s) = a.opts.get("scale") {
-        cfg.scale = s.parse().context("--scale")?;
+/// Value-taking options each command accepts; a typo'd or misplaced option
+/// is an error rather than a silently ignored map entry.
+fn allowed_opts(cmd: &str) -> &'static [&'static str] {
+    const SUITE: &[&str] = &[
+        "scale", "threads", "datasets", "engine", "artifacts", "mtx-dir", "out-dir",
+    ];
+    match cmd {
+        // Only fig8/all honor --impls; the other figures fix their own
+        // implementation set, so accepting it would silently discard it.
+        "fig8" | "all" => &[
+            "scale", "threads", "datasets", "impls", "engine", "artifacts", "mtx-dir", "out-dir",
+        ],
+        "table3" | "fig9" | "fig10" | "fig11" => SUITE,
+        "run" => &["dataset", "impl", "scale", "engine", "artifacts", "mtx-dir"],
+        // ablate sweeps are engine-independent (hardwired NativeEngine).
+        "ablate" => &["dataset", "scale", "mtx-dir", "out-dir"],
+        "gen" => &["dataset", "out", "scale"],
+        "table4" => &["out-dir"],
+        _ => &[],
     }
-    if let Some(t) = a.opts.get("threads") {
-        cfg.threads = t.parse().context("--threads")?;
+}
+
+/// Boolean flags each command accepts, validated like value options so an
+/// inapplicable flag (e.g. `table4 --json`) errors instead of doing nothing.
+fn allowed_flags(cmd: &str) -> &'static [&'static str] {
+    match cmd {
+        "table3" | "fig8" | "fig9" | "fig10" | "fig11" | "all" => &["verify", "quiet", "json"],
+        "run" => &["verify", "json"],
+        "ablate" => &["quiet"],
+        "table4" => &["sweep", "quiet"],
+        _ => &[],
     }
-    if let Some(d) = a.opts.get("datasets") {
-        cfg.datasets = d.split(',').map(|s| s.trim().to_string()).collect();
-    }
-    if let Some(i) = a.opts.get("impls") {
-        cfg.impls = i.split(',').map(|s| s.trim().to_string()).collect();
-    }
+}
+
+fn print_help() {
+    println!(
+        "spz — SparseZipper reproduction\n\
+         commands: table3 fig4 fig8 fig9 fig10 fig11 table4 all run ablate isa config gen help\n\
+         suite commands (table3 fig8 fig9 fig10 fig11 all):\n\
+         \x20   --scale F --threads N --datasets a,b --engine native|xla\n\
+         \x20   --mtx-dir DIR --out-dir DIR --artifacts DIR --verify --quiet --json\n\
+         \x20   (fig8 and all also take --impls a,b)\n\
+         run:    --dataset NAME [--impl NAME] [--scale F] [--engine native|xla]\n\
+         \x20       [--mtx-dir DIR] [--artifacts DIR] [--verify] [--json]\n\
+         ablate: [--dataset NAME] [--scale F] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
+         gen:    --dataset NAME --out FILE.mtx [--scale F]\n\
+         table4: [--sweep] [--out-dir DIR] [--quiet]"
+    );
+}
+
+fn session_config(a: &Args) -> Result<SessionConfig> {
+    let mut cfg = SessionConfig::default();
     if let Some(e) = a.opts.get("engine") {
         cfg.engine = e.parse::<Engine>().map_err(anyhow::Error::msg)?;
-    }
-    if let Some(m) = a.opts.get("mtx-dir") {
-        cfg.mtx_dir = Some(PathBuf::from(m));
     }
     if let Some(ad) = a.opts.get("artifacts") {
         cfg.artifact_dir = PathBuf::from(ad);
     }
-    cfg.verify = a.flags.contains("verify");
     Ok(cfg)
+}
+
+fn mtx_dir(a: &Args) -> Option<PathBuf> {
+    a.opts.get("mtx-dir").map(PathBuf::from)
+}
+
+fn scale_opt(a: &Args) -> Result<Option<f64>> {
+    a.opts.get("scale").map(|s| s.parse().context("--scale")).transpose()
+}
+
+fn parse_impls(spec: &str) -> Result<Vec<ImplId>> {
+    spec.split(',')
+        .map(|t| t.trim().parse::<ImplId>().map_err(anyhow::Error::msg))
+        .collect()
+}
+
+fn parse_datasets(spec: &str, mtx: Option<&Path>) -> Result<Vec<DatasetSource>> {
+    spec.split(',')
+        .map(|t| DatasetSource::parse(t.trim(), mtx))
+        .collect()
+}
+
+fn suite_spec(a: &Args) -> Result<SuiteSpec> {
+    let mut spec = SuiteSpec::default();
+    if let Some(s) = scale_opt(a)? {
+        spec.scale = s;
+    }
+    if let Some(t) = a.opts.get("threads") {
+        spec.threads = t.parse().context("--threads")?;
+    }
+    let mtx = mtx_dir(a);
+    if let Some(d) = a.opts.get("datasets") {
+        spec.datasets = parse_datasets(d, mtx.as_deref())?;
+    } else if let Some(dir) = &mtx {
+        // Default registry names still honour --mtx-dir overrides.
+        spec.datasets = registry::DATASETS
+            .iter()
+            .map(|d| DatasetSource::parse(d.name, Some(dir.as_path())))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(i) = a.opts.get("impls") {
+        spec.impls = parse_impls(i)?;
+    }
+    spec.verify = a.flags.contains("verify");
+    Ok(spec)
 }
 
 fn out_dir(a: &Args) -> PathBuf {
@@ -82,17 +189,21 @@ fn out_dir(a: &Args) -> PathBuf {
 }
 
 fn main() -> Result<()> {
-    let a = parse_args()?;
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    // `spz help` always prints help and exits 0, even with stray flags —
+    // only unknown *commands* exit non-zero.
+    if argv
+        .first()
+        .map(|c| matches!(c.as_str(), "help" | "--help" | "-h"))
+        .unwrap_or(true)
+    {
+        print_help();
+        return Ok(());
+    }
+    let a = parse_argv(&argv)?;
     let quiet = a.flags.contains("quiet");
+    let json = a.flags.contains("json");
     match a.cmd.as_str() {
-        "help" | "--help" | "-h" => {
-            println!(
-                "spz — SparseZipper reproduction\n\
-                 commands: table3 fig4 fig8 fig9 fig10 fig11 table4 all run ablate isa config gen help\n\
-                 common options: --scale F --threads N --datasets a,b --impls a,b\n\
-                 \x20                --engine native|xla --verify --out-dir DIR --mtx-dir DIR"
-            );
-        }
         "isa" => {
             print!("{}", sparsezipper::isa::instr::table1());
         }
@@ -122,27 +233,28 @@ fn main() -> Result<()> {
             }
         }
         "table3" | "fig8" | "fig9" | "fig10" | "fig11" | "all" => {
-            let mut cfg = suite_config(&a)?;
+            let session = Session::with_config(session_config(&a)?);
+            let mut spec = suite_spec(&a)?;
             // table3 needs no simulation runs, only dataset characterization.
             if a.cmd == "table3" {
-                cfg.impls = vec![];
+                spec.impls = vec![];
             } else if a.cmd == "fig10" {
-                cfg.impls = vec!["vec-radix".into(), "spz".into()];
+                spec.impls = vec![ImplId::VecRadix, ImplId::Spz];
             } else if a.cmd == "fig11" {
-                cfg.impls = vec!["spz".into(), "spz-rsort".into()];
+                spec.impls = vec![ImplId::Spz, ImplId::SpzRsort];
             } else if a.cmd == "fig9" {
-                cfg.impls = vec!["vec-radix".into(), "spz".into(), "spz-rsort".into()];
+                spec.impls = vec![ImplId::VecRadix, ImplId::Spz, ImplId::SpzRsort];
             }
             eprintln!(
                 "[spz] running suite: {} datasets x {} impls, scale {}, {} threads, engine {:?}",
-                cfg.datasets.len(),
-                cfg.impls.len(),
-                cfg.scale,
-                cfg.threads,
-                cfg.engine
+                spec.datasets.len(),
+                spec.impls.len(),
+                spec.scale,
+                spec.threads,
+                session.engine()
             );
             let t0 = std::time::Instant::now();
-            let r = run_suite(&cfg)?;
+            let r = session.run_suite(&spec)?;
             eprintln!("[spz] suite done in {:.1}s", t0.elapsed().as_secs_f64());
             let od = out_dir(&a);
             match a.cmd.as_str() {
@@ -169,80 +281,169 @@ fn main() -> Result<()> {
             for (name, content) in figures::tsv_exports(&r) {
                 report::emit(&od, &name, &content, true)?;
             }
+            if json {
+                report::emit(&od, "suite.json", &r.to_json(), true)?;
+            }
         }
         "run" => {
-            let cfg = suite_config(&a)?;
-            let dataset = a.opts.get("dataset").context("--dataset required")?;
-            let impl_name = a
+            let session = Session::with_config(session_config(&a)?);
+            let name = a.opts.get("dataset").context("--dataset required")?;
+            let dataset = DatasetSource::parse(name, mtx_dir(&a).as_deref())?;
+            let impl_id: ImplId = a
                 .opts
                 .get("impl")
                 .map(|s| s.as_str())
-                .unwrap_or("spz");
-            let m = sparsezipper::coordinator::runner::build_dataset(&cfg, dataset)?;
+                .unwrap_or("spz")
+                .parse()
+                .map_err(anyhow::Error::msg)?;
+            let job = JobSpec::new(impl_id, dataset.clone())
+                .with_scale(scale_opt(&a)?.unwrap_or(1.0))
+                .with_verify(a.flags.contains("verify"));
+            let m = session.dataset(&dataset, job.scale)?;
             eprintln!(
-                "[spz] {dataset}: {} rows, {} nnz; running {impl_name} (engine {:?})",
+                "[spz] {}: {} rows, {} nnz; running {impl_id} (engine {:?})",
+                dataset.name(),
                 m.nrows,
                 m.nnz(),
-                cfg.engine
+                session.engine()
             );
-            let reference = if cfg.verify {
-                Some(spgemm::reference(&m, &m))
+            let res = session.run(&job)?;
+            if json {
+                println!("{}", res.to_json());
             } else {
-                None
-            };
-            let res = sparsezipper::coordinator::run_one(
-                impl_name,
-                dataset,
-                &m,
-                cfg.sys,
-                cfg.engine,
-                &cfg.artifact_dir,
-                reference.as_ref(),
-            )?;
-            println!(
-                "impl={} dataset={} cycles={:.0} l1d_accesses={} l1d_hit={:.1}% kv_pairs={} out_nnz={} verified={} wall={:.2}s",
-                res.impl_name,
-                res.dataset,
-                res.metrics.cycles,
-                res.metrics.mem.l1d_accesses,
-                100.0 * res.metrics.mem.l1d_hit_rate(),
-                res.metrics.total_matrix_kv_pairs(),
-                res.out_nnz,
-                res.verified,
-                res.wall_secs
-            );
+                println!(
+                    "impl={} dataset={} cycles={:.0} l1d_accesses={} l1d_hit={:.1}% kv_pairs={} out_nnz={} verified={} wall={:.2}s",
+                    res.impl_id,
+                    res.dataset,
+                    res.metrics.cycles,
+                    res.metrics.mem.l1d_accesses,
+                    100.0 * res.metrics.mem.l1d_hit_rate(),
+                    res.metrics.total_matrix_kv_pairs(),
+                    res.out_nnz,
+                    res.verified,
+                    res.wall_secs
+                );
+            }
         }
         "ablate" => {
             use sparsezipper::coordinator::ablate;
-            let cfg = suite_config(&a)?;
-            let dataset = a.opts.get("dataset").map(|s| s.as_str()).unwrap_or("p2p");
-            let m = sparsezipper::coordinator::runner::build_dataset(&cfg, dataset)?;
-            eprintln!("[spz] ablations on {dataset} ({} rows, {} nnz)", m.nrows, m.nnz());
+            let session = Session::with_config(session_config(&a)?);
+            let spec = a.opts.get("dataset").map(|s| s.as_str()).unwrap_or("p2p");
+            let dataset = DatasetSource::parse(spec, mtx_dir(&a).as_deref())?;
+            // Report under the dataset's display name (path specs would
+            // otherwise produce a nested, unwritable filename).
+            let name = dataset.name();
+            let m = session.dataset(&dataset, scale_opt(&a)?.unwrap_or(1.0))?;
+            eprintln!("[spz] ablations on {name} ({} rows, {} nnz)", m.nrows, m.nnz());
             let mut s = String::new();
             s.push_str(&ablate::render(
-                &format!("Systolic array size sweep ({dataset})"),
+                &format!("Systolic array size sweep ({name})"),
                 &ablate::array_size_sweep(&m, &[4, 8, 16, 32])?,
             ));
             s.push_str(&ablate::render(
-                &format!("Non-speculative issue overhead sweep ({dataset})"),
+                &format!("Non-speculative issue overhead sweep ({name})"),
                 &ablate::issue_overhead_sweep(&m, &[0, 4, 16, 64])?,
             ));
             s.push_str(&ablate::render(
-                &format!("vec-radix ESC block-size sweep ({dataset})"),
+                &format!("vec-radix ESC block-size sweep ({name})"),
                 &ablate::block_size_sweep(&m, &[1024, 4096, 16384, 65536, 262144])?,
             ));
-            report::emit(&out_dir(&a), &format!("ablate_{dataset}.txt"), &s, quiet)?;
+            report::emit(&out_dir(&a), &format!("ablate_{name}.txt"), &s, quiet)?;
         }
         "gen" => {
-            let cfg = suite_config(&a)?;
-            let dataset = a.opts.get("dataset").context("--dataset required")?;
+            let name = a.opts.get("dataset").context("--dataset required")?;
             let out = a.opts.get("out").context("--out required")?;
-            let d = registry::find(dataset).context("unknown dataset")?;
-            let m = d.build(cfg.scale);
-            sparsezipper::matrix::mm::write_mtx(std::path::Path::new(out), &m)?;
+            let dataset = DatasetSource::registry(name)?;
+            let m = dataset.build(scale_opt(&a)?.unwrap_or(1.0))?;
+            sparsezipper::matrix::mm::write_mtx(Path::new(out), &m)?;
             println!("wrote {} ({} rows, {} nnz)", out, m.nrows, m.nnz());
         }
         other => bail!("unknown command '{other}' (try: spz help)"),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn duplicate_value_opt_rejected() {
+        let e = parse_argv(&v(&["run", "--scale", "0.1", "--scale", "0.2"])).unwrap_err();
+        assert!(e.to_string().contains("duplicate option --scale"), "{e}");
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let e = parse_argv(&v(&["run", "--scale"])).unwrap_err();
+        assert!(e.to_string().contains("--scale needs a value"), "{e}");
+    }
+
+    #[test]
+    fn flags_and_opts_parse() {
+        let a = parse_argv(&v(&["run", "--verify", "--json", "--impl", "spz"])).unwrap();
+        assert_eq!(a.cmd, "run");
+        assert!(a.flags.contains("verify") && a.flags.contains("json"));
+        assert_eq!(a.opts.get("impl").unwrap(), "spz");
+    }
+
+    #[test]
+    fn repeated_boolean_flag_is_idempotent() {
+        let a = parse_argv(&v(&["all", "--verify", "--verify"])).unwrap();
+        assert!(a.flags.contains("verify"));
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(parse_argv(&v(&["run", "stray"])).is_err());
+    }
+
+    #[test]
+    fn unknown_or_misplaced_option_rejected() {
+        let e = parse_argv(&v(&["all", "--scal", "0.01"])).unwrap_err();
+        assert!(e.to_string().contains("unknown option --scal"), "{e}");
+        // `--impl` (singular) is a `run` option, not a suite option.
+        let e = parse_argv(&v(&["fig8", "--impl", "spz"])).unwrap_err();
+        assert!(e.to_string().contains("unknown option --impl for 'fig8'"), "{e}");
+        // ...but is fine where it belongs.
+        assert!(parse_argv(&v(&["run", "--impl", "spz"])).is_ok());
+    }
+
+    #[test]
+    fn typoed_command_reported_as_command_error() {
+        let e = parse_argv(&v(&["tabel3", "--scale", "0.1"])).unwrap_err();
+        assert!(e.to_string().contains("unknown command 'tabel3'"), "{e}");
+    }
+
+    #[test]
+    fn inapplicable_flag_rejected() {
+        let e = parse_argv(&v(&["table4", "--json"])).unwrap_err();
+        assert!(e.to_string().contains("--json does not apply to 'table4'"), "{e}");
+        assert!(parse_argv(&v(&["gen", "--verify", "--dataset", "p2p", "--out", "x.mtx"])).is_err());
+        assert!(parse_argv(&v(&["table4", "--sweep", "--quiet"])).is_ok());
+    }
+
+    #[test]
+    fn suite_spec_parses_typed_lists() {
+        let a = parse_argv(&v(&[
+            "fig8", "--datasets", "p2p,wiki", "--impls", "spz,scl-hash", "--scale", "0.1",
+        ]))
+        .unwrap();
+        let spec = suite_spec(&a).unwrap();
+        assert_eq!(spec.datasets.len(), 2);
+        assert_eq!(spec.impls, vec![ImplId::Spz, ImplId::SclHash]);
+        assert!((spec.scale - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_impl_is_actionable() {
+        let a = parse_argv(&v(&["fig8", "--impls", "warp-drive"])).unwrap();
+        let e = suite_spec(&a).unwrap_err().to_string();
+        assert!(e.contains("unknown implementation 'warp-drive'"), "{e}");
+        assert!(e.contains("scl-array"), "{e}");
+    }
 }

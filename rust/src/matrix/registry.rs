@@ -54,12 +54,19 @@ pub struct Dataset {
     pub seed: u64,
 }
 
+/// The effective scale [`Dataset::build`] uses for any requested scale.
+/// Shared with the API's dataset cache keys so that scales which build the
+/// same matrix also share one cache entry.
+pub fn normalize_scale(scale: f64) -> f64 {
+    scale.clamp(1e-3, 1.0)
+}
+
 impl Dataset {
     /// Instantiate the synthetic stand-in, optionally scaled down
     /// (`scale` in (0, 1]; rows and nnz shrink together so the densities and
     /// per-row work statistics are approximately preserved).
     pub fn build(&self, scale: f64) -> Csr {
-        let s = scale.clamp(1e-3, 1.0);
+        let s = normalize_scale(scale);
         let sc = |x: usize| ((x as f64 * s).round() as usize).max(64);
         match self.spec {
             GenSpec::Rmat { rows, nnz, a, b, c } => {

@@ -6,16 +6,20 @@
 //! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
 //! (see /opt/xla-example/README.md and python/compile/aot.py).
 
+#[cfg(feature = "xla")]
 use anyhow::{Context, Result};
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 /// A PJRT CPU client plus a set of named compiled executables.
+#[cfg(feature = "xla")]
 pub struct XlaRunner {
     client: xla::PjRtClient,
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "xla")]
 impl XlaRunner {
     /// Create the CPU client.
     pub fn new() -> Result<Self> {

@@ -10,9 +10,13 @@
 //! Timing is engine-independent: the `Machine` charges the systolic
 //! occupancy model either way; the engine only produces the data.
 
+#[cfg(feature = "xla")]
 use crate::runtime::client::XlaRunner;
 use crate::systolic::functional;
-use anyhow::{ensure, Context, Result};
+#[cfg(feature = "xla")]
+use anyhow::{ensure, Context};
+use anyhow::Result;
+#[cfg(feature = "xla")]
 use std::path::Path;
 
 /// Key sentinel for padded lanes (i32::MAX on the XLA side).
@@ -159,12 +163,14 @@ impl ZipUnit for NativeEngine {
 /// Executes the AOT artifacts (L2 JAX model wrapping the L1 Pallas kernels)
 /// through the PJRT CPU client. Fixed group shape [S, N] per compilation
 /// (S = N = 16 by default, matching the matrix registers).
+#[cfg(feature = "xla")]
 pub struct XlaEngine {
     runner: XlaRunner,
     n: usize,
     s: usize,
 }
 
+#[cfg(feature = "xla")]
 impl XlaEngine {
     /// Load `sort_step.hlo.txt` and `zip_step.hlo.txt` from `dir`.
     pub fn load(dir: &Path, s: usize, n: usize) -> Result<Self> {
@@ -256,6 +262,7 @@ impl XlaEngine {
     }
 }
 
+#[cfg(feature = "xla")]
 impl ZipUnit for XlaEngine {
     fn n(&self) -> usize {
         self.n

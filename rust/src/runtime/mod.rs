@@ -2,9 +2,17 @@
 //! once by `make artifacts` from the L2 JAX model + L1 Pallas kernels) and
 //! executes them from the Rust request path through the `xla` crate's CPU
 //! client. Python is never on the request path.
+//!
+//! The `xla` crate (and its native xla_extension library) is behind the
+//! off-by-default `xla` cargo feature; without it the [`Engine::Xla`]
+//! variant still parses but fails with an actionable error when a session
+//! tries to instantiate it, and everything else runs on [`NativeEngine`].
 
 pub mod client;
 pub mod engine;
 
+#[cfg(feature = "xla")]
 pub use client::XlaRunner;
-pub use engine::{Engine, NativeEngine, StepOut, XlaEngine, ZipUnit};
+pub use engine::{Engine, NativeEngine, StepOut, ZipUnit};
+#[cfg(feature = "xla")]
+pub use engine::XlaEngine;

@@ -92,31 +92,124 @@ impl CsrAddrs {
     }
 }
 
+/// Typed identifier for the five SpGEMM implementations of the paper's
+/// evaluation, in Figure 8 order. This is the API-level handle: parsing from
+/// a string happens once at the argv boundary (or via [`str::parse`]), and
+/// everything downstream — [`crate::api::JobSpec`], suite sweeps, figure
+/// emitters — carries the enum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ImplId {
+    SclArray,
+    SclHash,
+    VecRadix,
+    Spz,
+    SpzRsort,
+}
+
+impl ImplId {
+    /// All implementations in the paper's Figure 8 order.
+    pub const ALL: [ImplId; 5] = [
+        ImplId::SclArray,
+        ImplId::SclHash,
+        ImplId::VecRadix,
+        ImplId::Spz,
+        ImplId::SpzRsort,
+    ];
+
+    /// The canonical CLI/report name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            ImplId::SclArray => "scl-array",
+            ImplId::SclHash => "scl-hash",
+            ImplId::VecRadix => "vec-radix",
+            ImplId::Spz => "spz",
+            ImplId::SpzRsort => "spz-rsort",
+        }
+    }
+
+    /// Construct the implementation (engine applies to the spz variants; the
+    /// scalar/vector baselines ignore it, as before).
+    pub fn instantiate(
+        self,
+        engine: crate::runtime::Engine,
+        artifact_dir: &std::path::Path,
+    ) -> Result<Box<dyn SpGemm>> {
+        use crate::runtime::Engine;
+        #[cfg(not(feature = "xla"))]
+        let _ = artifact_dir; // only consumed by the xla-gated arms
+        Ok(match self {
+            ImplId::SclArray => Box::new(scl_array::SclArray),
+            ImplId::SclHash => Box::new(scl_hash::SclHash),
+            ImplId::VecRadix => Box::new(vec_radix::VecRadix::default()),
+            ImplId::Spz => match engine {
+                Engine::Native => Box::new(spz::Spz::native()),
+                #[cfg(feature = "xla")]
+                Engine::Xla => Box::new(spz::Spz::xla(artifact_dir)?),
+                #[cfg(not(feature = "xla"))]
+                Engine::Xla => return Err(xla_unavailable()),
+            },
+            ImplId::SpzRsort => match engine {
+                Engine::Native => Box::new(spz_rsort::SpzRsort::native()),
+                #[cfg(feature = "xla")]
+                Engine::Xla => Box::new(spz_rsort::SpzRsort::xla(artifact_dir)?),
+                #[cfg(not(feature = "xla"))]
+                Engine::Xla => return Err(xla_unavailable()),
+            },
+        })
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_unavailable() -> anyhow::Error {
+    anyhow::anyhow!(
+        "engine 'xla' is unavailable in this build: it needs the `xla` cargo feature AND the \
+         vendored `xla` crate added as a dependency first — see the note in rust/Cargo.toml"
+    )
+}
+
+impl std::str::FromStr for ImplId {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        ImplId::ALL
+            .iter()
+            .find(|i| i.name() == s)
+            .copied()
+            .ok_or_else(|| {
+                let known: Vec<&str> = ImplId::ALL.iter().map(|i| i.name()).collect();
+                format!(
+                    "unknown implementation '{s}' (expected one of: {})",
+                    known.join(", ")
+                )
+            })
+    }
+}
+
+impl std::fmt::Display for ImplId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(self.name())
+    }
+}
+
 /// Construct an implementation by name (engine applies to spz variants).
+#[deprecated(note = "parse an `ImplId` and call `ImplId::instantiate` (or use `api::Session`)")]
 pub fn by_name(
     name: &str,
     engine: crate::runtime::Engine,
     artifact_dir: &std::path::Path,
 ) -> Result<Box<dyn SpGemm>> {
-    use crate::runtime::Engine;
-    Ok(match name {
-        "scl-array" => Box::new(scl_array::SclArray),
-        "scl-hash" => Box::new(scl_hash::SclHash),
-        "vec-radix" => Box::new(vec_radix::VecRadix::default()),
-        "spz" => match engine {
-            Engine::Native => Box::new(spz::Spz::native()),
-            Engine::Xla => Box::new(spz::Spz::xla(artifact_dir)?),
-        },
-        "spz-rsort" => match engine {
-            Engine::Native => Box::new(spz_rsort::SpzRsort::native()),
-            Engine::Xla => Box::new(spz_rsort::SpzRsort::xla(artifact_dir)?),
-        },
-        other => anyhow::bail!("unknown implementation '{other}'"),
-    })
+    let id: ImplId = name.parse().map_err(anyhow::Error::msg)?;
+    id.instantiate(engine, artifact_dir)
 }
 
-/// All implementation names in the paper's Figure 8 order.
-pub const IMPL_NAMES: [&str; 5] = ["scl-array", "scl-hash", "vec-radix", "spz", "spz-rsort"];
+/// All implementation names in the paper's Figure 8 order (derived from
+/// [`ImplId`] so the two lists cannot drift).
+pub const IMPL_NAMES: [&str; 5] = [
+    ImplId::ALL[0].name(),
+    ImplId::ALL[1].name(),
+    ImplId::ALL[2].name(),
+    ImplId::ALL[3].name(),
+    ImplId::ALL[4].name(),
+];
 
 #[cfg(test)]
 mod tests {
@@ -145,6 +238,17 @@ mod tests {
                 assert!((s - dc[r][k]).abs() < 1e-4, "({r},{k}): {s} vs {}", dc[r][k]);
             }
         }
+    }
+
+    #[test]
+    fn impl_id_names_round_trip() {
+        for id in ImplId::ALL {
+            assert_eq!(id.name().parse::<ImplId>().unwrap(), id);
+        }
+        let names: Vec<&str> = ImplId::ALL.iter().map(|i| i.name()).collect();
+        assert_eq!(names, IMPL_NAMES);
+        let err = "nope".parse::<ImplId>().unwrap_err();
+        assert!(err.contains("scl-array") && err.contains("nope"), "{err}");
     }
 
     #[test]

@@ -19,11 +19,14 @@
 //! timing either way.
 
 use crate::matrix::Csr;
-use crate::runtime::{NativeEngine, StepOut, XlaEngine, ZipUnit};
+#[cfg(feature = "xla")]
+use crate::runtime::XlaEngine;
+use crate::runtime::{NativeEngine, StepOut, ZipUnit};
 use crate::sim::{Machine, Phase};
 use crate::spgemm::{CsrAddrs, SpGemm};
 use crate::util::ceil_div;
 use anyhow::Result;
+#[cfg(feature = "xla")]
 use std::path::Path;
 
 /// One sorted-unique partition of a stream (functional mirror + its
@@ -46,6 +49,7 @@ impl Spz {
         }
     }
 
+    #[cfg(feature = "xla")]
     pub fn xla(artifact_dir: &Path) -> Result<Self> {
         Ok(Spz {
             engine: Box::new(XlaEngine::load(artifact_dir, 16, 16)?),

@@ -13,6 +13,7 @@ use crate::sim::{Machine, Phase};
 use crate::spgemm::spz::Spz;
 use crate::spgemm::SpGemm;
 use anyhow::Result;
+#[cfg(feature = "xla")]
 use std::path::Path;
 
 pub struct SpzRsort {
@@ -24,6 +25,7 @@ impl SpzRsort {
         SpzRsort { inner: Spz::native() }
     }
 
+    #[cfg(feature = "xla")]
     pub fn xla(artifact_dir: &Path) -> Result<Self> {
         Ok(SpzRsort {
             inner: Spz::xla(artifact_dir)?,

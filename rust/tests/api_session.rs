@@ -1,0 +1,246 @@
+//! Session API integration: dataset-cache memoization across jobs, typed
+//! `ImplId`/`DatasetSource` round-trips, actionable error paths, `.mtx`
+//! sources end-to-end, and the stable JSON export.
+
+use sparsezipper::api::{DatasetSource, JobSpec, Session, SessionConfig, SuiteSpec};
+use sparsezipper::matrix::{gen, mm};
+use sparsezipper::ImplId;
+use std::sync::Arc;
+
+/// Two jobs on the same `(source, scale)` through one session must build
+/// the dataset (and the reference oracle) exactly once.
+#[test]
+fn second_job_on_same_dataset_does_not_rebuild() {
+    let session = Session::new();
+    let src = DatasetSource::registry("p2p").unwrap();
+    let first = session
+        .run(&JobSpec::new(ImplId::SclHash, src.clone()).with_scale(0.01).with_verify(true))
+        .unwrap();
+    assert_eq!(session.dataset_builds(), 1);
+    assert_eq!(session.reference_builds(), 1);
+
+    let second = session
+        .run(&JobSpec::new(ImplId::Spz, src.clone()).with_scale(0.01).with_verify(true))
+        .unwrap();
+    assert_eq!(session.dataset_builds(), 1, "dataset was rebuilt");
+    assert_eq!(session.reference_builds(), 1, "oracle was rebuilt");
+    assert!(first.verified && second.verified);
+    assert_eq!(first.out_nnz, second.out_nnz);
+
+    // A different scale is a different cache entry.
+    session
+        .run(&JobSpec::new(ImplId::SclHash, src).with_scale(0.02))
+        .unwrap();
+    assert_eq!(session.dataset_builds(), 2);
+}
+
+/// A suite after a job reuses the session cache for overlapping datasets.
+#[test]
+fn suite_reuses_job_cache() {
+    let session = Session::new();
+    let p2p = DatasetSource::registry("p2p").unwrap();
+    session
+        .run(&JobSpec::new(ImplId::SclHash, p2p.clone()).with_scale(0.01))
+        .unwrap();
+    assert_eq!(session.dataset_builds(), 1);
+
+    let spec = SuiteSpec {
+        datasets: vec![p2p, DatasetSource::registry("m133-b3").unwrap()],
+        impls: vec![ImplId::SclHash, ImplId::Spz],
+        scale: 0.01,
+        threads: 2,
+        verify: false,
+    };
+    let r = session.run_suite(&spec).unwrap();
+    assert_eq!(r.results.len(), 4);
+    // Only m133-b3 was new; p2p came from the cache.
+    assert_eq!(session.dataset_builds(), 2);
+}
+
+#[test]
+fn impl_and_dataset_round_trip_parsing() {
+    for id in ImplId::ALL {
+        assert_eq!(id.name().parse::<ImplId>().unwrap(), id);
+        assert_eq!(format!("{id}"), id.name());
+    }
+    for name in ["p2p", "wiki", "m133-b3"] {
+        let src: DatasetSource = name.parse().unwrap();
+        assert_eq!(src.name(), name);
+    }
+}
+
+#[test]
+fn unknown_names_produce_actionable_messages() {
+    let impl_err = "warp-drive".parse::<ImplId>().unwrap_err();
+    assert!(impl_err.contains("unknown implementation 'warp-drive'"), "{impl_err}");
+    assert!(impl_err.contains("scl-array") && impl_err.contains("spz-rsort"), "{impl_err}");
+
+    let ds_err = format!("{:#}", "atlantis".parse::<DatasetSource>().unwrap_err());
+    assert!(ds_err.contains("unknown dataset 'atlantis'"), "{ds_err}");
+    assert!(ds_err.contains("p2p") && ds_err.contains(".mtx"), "{ds_err}");
+
+    // A missing .mtx file fails at build time with the path in the message.
+    let session = Session::new();
+    let missing = DatasetSource::mtx("/definitely/not/here.mtx");
+    let e = format!("{:#}", session.run(&JobSpec::new(ImplId::Spz, missing)).unwrap_err());
+    assert!(e.contains("here"), "{e}");
+    // A failed build must not leave a dead placeholder in the cache.
+    assert_eq!(session.cached_datasets(), 0);
+}
+
+#[test]
+fn mtx_source_runs_end_to_end() {
+    let dir = std::env::temp_dir().join(format!("spz_api_mtx_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tiny.mtx");
+    let a = gen::erdos_renyi(50, 50, 250, 7);
+    mm::write_mtx(&path, &a).unwrap();
+
+    let session = Session::new();
+    // Resolved two ways: via --mtx-dir style lookup, and as an explicit path.
+    let by_dir = DatasetSource::parse("tiny", Some(&dir)).unwrap();
+    let by_path = DatasetSource::parse(path.to_str().unwrap(), None).unwrap();
+    assert_eq!(by_dir.name(), "tiny");
+    assert_eq!(by_path.name(), "tiny");
+    // A spec already carrying .mtx still resolves inside --mtx-dir.
+    let by_dir_ext = DatasetSource::parse("tiny.mtx", Some(&dir)).unwrap();
+    assert_eq!(by_dir_ext.cache_key(1.0), by_dir.cache_key(1.0));
+
+    let res = session
+        .run(&JobSpec::new(ImplId::Spz, by_dir).with_verify(true))
+        .unwrap();
+    assert!(res.verified);
+    assert_eq!(res.dataset, "tiny");
+    // Same underlying file, same cache entry.
+    session
+        .run(&JobSpec::new(ImplId::SclHash, by_path.clone()).with_verify(true))
+        .unwrap();
+    assert_eq!(session.dataset_builds(), 1);
+    assert_eq!(session.reference_builds(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn rectangular_inputs_error_instead_of_panicking() {
+    let session = Session::new();
+    let rect = DatasetSource::in_memory("rect", Arc::new(gen::erdos_renyi(30, 50, 100, 1)));
+    let e = format!(
+        "{:#}",
+        session
+            .run(&JobSpec::new(ImplId::SclHash, rect.clone()).with_verify(true))
+            .unwrap_err()
+    );
+    assert!(e.contains("A*A"), "{e}");
+    let e = format!("{:#}", session.run(&JobSpec::new(ImplId::SclHash, rect)).unwrap_err());
+    assert!(e.contains("A*A"), "{e}");
+    // spgemm validates inner dimensions for general products.
+    let a = gen::erdos_renyi(30, 50, 100, 2);
+    let e = format!("{:#}", session.spgemm(ImplId::Spz, &a, &a).unwrap_err());
+    assert!(e.contains("dimension mismatch"), "{e}");
+}
+
+#[test]
+fn in_memory_source_shares_one_build() {
+    let session = Session::new();
+    let src = DatasetSource::in_memory("mine", Arc::new(gen::erdos_renyi(40, 40, 160, 3)));
+    for id in [ImplId::SclArray, ImplId::SclHash, ImplId::VecRadix] {
+        let r = session.run(&JobSpec::new(id, src.clone()).with_verify(true)).unwrap();
+        assert!(r.verified, "{}", id.name());
+        assert_eq!(r.dataset, "mine");
+    }
+    assert_eq!(session.dataset_builds(), 1);
+    assert_eq!(session.reference_builds(), 1);
+}
+
+#[test]
+fn evict_and_clear_release_cache_entries() {
+    let session = Session::new();
+    let src = DatasetSource::registry("p2p").unwrap();
+    session.run(&JobSpec::new(ImplId::SclHash, src.clone()).with_scale(0.01)).unwrap();
+    assert_eq!(session.cached_datasets(), 1);
+    assert!(session.evict(&src, 0.01));
+    assert!(!session.evict(&src, 0.01));
+    assert_eq!(session.cached_datasets(), 0);
+    // Next job rebuilds (counters keep counting across eviction).
+    session.run(&JobSpec::new(ImplId::SclHash, src.clone()).with_scale(0.01)).unwrap();
+    assert_eq!(session.dataset_builds(), 2);
+    session.clear_cache();
+    assert_eq!(session.cached_datasets(), 0);
+}
+
+#[test]
+fn duplicate_dataset_names_rejected() {
+    let session = Session::new();
+    let spec = SuiteSpec {
+        datasets: vec![
+            DatasetSource::in_memory("same", Arc::new(gen::erdos_renyi(30, 30, 90, 1))),
+            DatasetSource::in_memory("same", Arc::new(gen::erdos_renyi(30, 30, 90, 2))),
+        ],
+        impls: vec![ImplId::SclHash],
+        scale: 1.0,
+        threads: 1,
+        verify: false,
+    };
+    let e = format!("{:#}", session.run_suite(&spec).unwrap_err());
+    assert!(e.contains("duplicate dataset name 'same'"), "{e}");
+}
+
+#[test]
+fn non_registry_datasets_appear_in_figures() {
+    use sparsezipper::coordinator::figures;
+    let session = Session::new();
+    let spec = SuiteSpec {
+        datasets: vec![DatasetSource::in_memory(
+            "mygraph",
+            Arc::new(gen::erdos_renyi(60, 60, 300, 9)),
+        )],
+        impls: vec![ImplId::SclHash, ImplId::VecRadix, ImplId::Spz],
+        scale: 1.0,
+        threads: 1,
+        verify: false,
+    };
+    let suite = session.run_suite(&spec).unwrap();
+    assert!(figures::fig8(&suite).contains("mygraph"));
+    assert!(figures::fig10(&suite).contains("mygraph"));
+    for (_, tsv) in figures::tsv_exports(&suite) {
+        assert!(tsv.contains("mygraph"), "{tsv}");
+    }
+    // table3 compares against paper rows, which only registry datasets have.
+    assert!(!figures::table3(&suite).contains("mygraph"));
+}
+
+#[test]
+fn json_export_is_stable_and_parseable_ish() {
+    let session = Session::with_config(SessionConfig::default());
+    let src = DatasetSource::in_memory("jay", Arc::new(gen::erdos_renyi(40, 40, 160, 5)));
+    let res = session.run(&JobSpec::new(ImplId::SclHash, src.clone()).with_verify(true)).unwrap();
+    let j = res.to_json();
+    for key in [
+        "\"impl\":\"scl-hash\"",
+        "\"dataset\":\"jay\"",
+        "\"verified\":true",
+        "\"cycles\":",
+        "\"l1d_accesses\":",
+        "\"mssortk\":",
+        "\"block_elems\":null",
+    ] {
+        assert!(j.contains(key), "missing {key} in {j}");
+    }
+
+    let spec = SuiteSpec {
+        datasets: vec![src],
+        impls: vec![ImplId::SclHash, ImplId::Spz],
+        scale: 1.0,
+        threads: 1,
+        verify: false,
+    };
+    let suite = session.run_suite(&spec).unwrap();
+    let sj = suite.to_json();
+    assert!(sj.contains("\"datasets\""), "{sj}");
+    assert!(sj.contains("\"results\""), "{sj}");
+    assert!(sj.contains("\"impl\":\"spz\""), "{sj}");
+    assert!(sj.contains("\"work_var\":"), "{sj}");
+    // Balanced braces/brackets (cheap well-formedness check, no serde here).
+    assert_eq!(sj.matches('{').count(), sj.matches('}').count(), "{sj}");
+    assert_eq!(sj.matches('[').count(), sj.matches(']').count(), "{sj}");
+}

@@ -2,24 +2,24 @@
 //! paper's qualitative shape (who wins, where, why) and render every
 //! report. This is the fast CI version of examples/paper_pipeline.rs.
 
+use sparsezipper::api::{DatasetSource, Session, SuiteRun, SuiteSpec};
 use sparsezipper::area::AreaModel;
-use sparsezipper::coordinator::{figures, run_suite, SuiteConfig};
+use sparsezipper::coordinator::figures;
+use sparsezipper::ImplId;
 
-fn small_suite() -> sparsezipper::coordinator::SuiteResult {
-    let cfg = SuiteConfig {
-        datasets: vec![
-            "p2p".into(),
-            "wiki".into(),
-            "usroads".into(),
-            "m133-b3".into(),
-            "bcsstk17".into(),
-        ],
+fn small_suite() -> SuiteRun {
+    let session = Session::new();
+    let spec = SuiteSpec {
+        datasets: ["p2p", "wiki", "usroads", "m133-b3", "bcsstk17"]
+            .iter()
+            .map(|n| DatasetSource::registry(n).unwrap())
+            .collect(),
         scale: 0.05,
         verify: true,
         threads: 1,
         ..Default::default()
     };
-    run_suite(&cfg).expect("suite")
+    session.run_suite(&spec).expect("suite")
 }
 
 #[test]
@@ -44,6 +44,12 @@ fn suite_verifies_and_renders_everything() {
     for (name, content) in &tsv {
         assert!(content.lines().count() > 5, "{name} too short");
     }
+    // The structured export covers every job and dataset.
+    let json = suite.to_json();
+    assert!(json.contains("\"results\""), "json missing results");
+    for r in &suite.results {
+        assert!(json.contains(&format!("\"impl\":\"{}\"", r.impl_id)), "{}", r.impl_id);
+    }
 }
 
 #[test]
@@ -52,13 +58,13 @@ fn qualitative_shape_small_scale() {
     // Matrix-unit implementations beat the vector baseline even at small
     // scale (cache effects shrink, but the sort-phase advantage remains).
     for d in ["p2p", "wiki", "m133-b3"] {
-        let sp = suite.speedup("spz", "vec-radix", d).unwrap();
+        let sp = suite.speedup(ImplId::Spz, ImplId::VecRadix, d).unwrap();
         assert!(sp > 1.0, "spz !> vec-radix on {d} ({sp:.2}x)");
     }
     // vec-radix always touches L1D more than spz (Figure 10's claim).
     for r in &suite.results {
-        if r.impl_name == "vec-radix" {
-            let z = suite.get("spz", &r.dataset).unwrap();
+        if r.impl_id == ImplId::VecRadix {
+            let z = suite.get(ImplId::Spz, &r.dataset).unwrap();
             assert!(
                 r.metrics.mem.l1d_accesses > z.metrics.mem.l1d_accesses,
                 "fig10 shape broken on {}",
@@ -78,7 +84,7 @@ fn area_model_reproduces_table4() {
 fn vec_radix_block_sweep_recorded() {
     let suite = small_suite();
     for r in &suite.results {
-        if r.impl_name == "vec-radix" {
+        if r.impl_id == ImplId::VecRadix {
             assert!(r.block_elems.is_some(), "block sweep missing on {}", r.dataset);
         }
     }

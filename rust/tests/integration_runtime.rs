@@ -3,7 +3,11 @@
 //! normative functional model and the PE-level array simulation).
 //!
 //! Requires `make artifacts`; tests skip (with a notice) when the artifacts
-//! are missing so `cargo test` works in a fresh checkout.
+//! are missing so `cargo test` works in a fresh checkout. The whole suite is
+//! compiled only with the `xla` cargo feature (the PJRT client lives behind
+//! it).
+
+#![cfg(feature = "xla")]
 
 use sparsezipper::runtime::client::{artifact_dir, artifacts_available};
 use sparsezipper::runtime::{NativeEngine, XlaEngine, ZipUnit};

@@ -9,10 +9,10 @@ use sparsezipper::sim::Machine;
 use sparsezipper::spgemm::{self, SpGemm};
 
 fn all_impls() -> Vec<Box<dyn SpGemm>> {
-    spgemm::IMPL_NAMES
+    spgemm::ImplId::ALL
         .iter()
-        .map(|n| {
-            spgemm::by_name(n, Engine::Native, std::path::Path::new("artifacts")).unwrap()
+        .map(|id| {
+            id.instantiate(Engine::Native, std::path::Path::new("artifacts")).unwrap()
         })
         .collect()
 }

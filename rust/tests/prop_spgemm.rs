@@ -58,8 +58,9 @@ fn prop_differential_all_impls() {
     for trial in 0..30 {
         let (a, desc) = random_matrix(&mut rng, trial);
         let r = spgemm::reference(&a, &a);
-        for name in spgemm::IMPL_NAMES {
-            let mut im = spgemm::by_name(name, Engine::Native, std::path::Path::new("artifacts")).unwrap();
+        for id in spgemm::ImplId::ALL {
+            let name = id.name();
+            let mut im = id.instantiate(Engine::Native, std::path::Path::new("artifacts")).unwrap();
             let mut m = Machine::new(SystemConfig::default());
             let c = im.multiply(&mut m, &a, &a).unwrap();
             assert!(
