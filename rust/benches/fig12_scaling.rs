@@ -1,0 +1,54 @@
+//! Bench: Figure 12 multi-core scaling — spz over the dataset suite at
+//! 1/2/4/8 simulated cores, static vs work-stealing block schedules.
+//!
+//! `SPZ_BENCH_SCALE=1.0 cargo bench --bench fig12_scaling` = full size.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use sparsezipper::api::{DatasetSource, Session};
+use sparsezipper::coordinator::figures;
+use sparsezipper::matrix::registry;
+use sparsezipper::spgemm::parallel::Scheduler;
+use sparsezipper::ImplId;
+
+fn main() {
+    let session = Session::new();
+    let datasets: Vec<DatasetSource> =
+        registry::DATASETS.iter().map(DatasetSource::Registry).collect();
+    let cores = [1usize, 2, 4, 8];
+    println!(
+        "== Figure 12 ({} datasets, cores {:?}, scale {}) ==",
+        datasets.len(),
+        cores,
+        bench_util::scale()
+    );
+    let mut out = None;
+    bench_util::bench("fig12 scaling sweep (spz)", 1, || {
+        out = Some(
+            figures::scaling_sweep(&session, &datasets, ImplId::Spz, bench_util::scale(), &cores)
+                .expect("scaling sweep"),
+        );
+    });
+    let points = out.unwrap();
+    println!("{}", figures::fig12(&points));
+    // Imbalance headline: how much work-stealing buys over static at 8 cores.
+    let gain: Vec<f64> = points
+        .iter()
+        .filter(|p| p.cores == 8 && p.scheduler == Some(Scheduler::Static))
+        .filter_map(|st| {
+            points
+                .iter()
+                .find(|ws| {
+                    ws.dataset == st.dataset
+                        && ws.cores == 8
+                        && ws.scheduler == Some(Scheduler::WorkStealing)
+                })
+                .map(|ws| ws.speedup / st.speedup)
+        })
+        .collect();
+    if !gain.is_empty() {
+        let g = gain.iter().product::<f64>().powf(1.0 / gain.len() as f64);
+        println!("geomean work-stealing/static speedup at 8 cores: {g:.3}x");
+    }
+}

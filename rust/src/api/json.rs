@@ -6,7 +6,7 @@
 use crate::api::session::{JobResult, SuiteRun};
 use crate::matrix::MatrixStats;
 use crate::sim::machine::{NUM_PHASES, PHASE_NAMES};
-use crate::sim::RunMetrics;
+use crate::sim::{MulticoreMetrics, RunMetrics};
 use std::fmt::Write as _;
 
 /// Escape a string for a JSON string literal (without the quotes).
@@ -37,15 +37,20 @@ fn num(x: f64) -> String {
     }
 }
 
-fn metrics_json(m: &RunMetrics) -> String {
+fn phases_json(phase_cycles: &[f64; NUM_PHASES]) -> String {
     let mut phases = String::from("{");
     for p in 0..NUM_PHASES {
         if p > 0 {
             phases.push(',');
         }
-        let _ = write!(phases, "\"{}\":{}", PHASE_NAMES[p], num(m.phase_cycles[p]));
+        let _ = write!(phases, "\"{}\":{}", PHASE_NAMES[p], num(phase_cycles[p]));
     }
     phases.push('}');
+    phases
+}
+
+fn metrics_json(m: &RunMetrics) -> String {
+    let phases = phases_json(&m.phase_cycles);
     let o = &m.ops;
     let ops = format!(
         "{{\"scalar_ops\":{},\"branches\":{},\"vector_ops\":{},\"scalar_loads\":{},\
@@ -106,12 +111,30 @@ fn stats_json(st: &MatrixStats) -> String {
     )
 }
 
+fn multicore_json(mc: &MulticoreMetrics) -> String {
+    let mut per_core = String::from("[");
+    for (c, m) in mc.per_core.iter().enumerate() {
+        if c > 0 {
+            per_core.push(',');
+        }
+        per_core.push_str(&metrics_json(m));
+    }
+    per_core.push(']');
+    format!(
+        "{{\"critical_path_cycles\":{},\"critical_path\":{},\"per_core\":{per_core}}}",
+        num(mc.critical_path_cycles),
+        phases_json(&mc.critical_path)
+    )
+}
+
 impl JobResult {
-    /// One job as a single-line JSON object.
+    /// One job as a single-line JSON object. New fields only ever get
+    /// appended (`cores`/`sched`/`multicore` landed after `metrics`).
     pub fn to_json(&self) -> String {
         format!(
             "{{\"impl\":\"{}\",\"dataset\":\"{}\",\"out_nnz\":{},\"verified\":{},\
-             \"wall_secs\":{},\"block_elems\":{},\"metrics\":{}}}",
+             \"wall_secs\":{},\"block_elems\":{},\"metrics\":{},\"cores\":{},\
+             \"sched\":{},\"multicore\":{}}}",
             self.impl_id.name(),
             escape(&self.dataset),
             self.out_nnz,
@@ -120,7 +143,15 @@ impl JobResult {
             self.block_elems
                 .map(|b| b.to_string())
                 .unwrap_or_else(|| "null".to_string()),
-            metrics_json(&self.metrics)
+            metrics_json(&self.metrics),
+            self.cores,
+            self.sched
+                .map(|s| format!("\"{}\"", s.name()))
+                .unwrap_or_else(|| "null".to_string()),
+            self.multicore
+                .as_ref()
+                .map(multicore_json)
+                .unwrap_or_else(|| "null".to_string()),
         )
     }
 }

@@ -27,6 +27,8 @@ mod json;
 mod session;
 mod spec;
 
+pub use crate::sim::MulticoreMetrics;
+pub use crate::spgemm::parallel::Scheduler;
 pub use crate::spgemm::ImplId;
 pub use session::{JobResult, Product, Session, SessionConfig, SuiteRun};
 pub use spec::{DatasetKey, DatasetSource, JobSpec, SuiteSpec};

@@ -7,7 +7,8 @@ use crate::api::spec::{DatasetKey, DatasetSource, JobSpec, SuiteSpec};
 use crate::config::SystemConfig;
 use crate::matrix::{stats, Csr, MatrixStats};
 use crate::runtime::{client, Engine};
-use crate::sim::{Machine, RunMetrics};
+use crate::sim::{Machine, MulticoreMetrics, RunMetrics};
+use crate::spgemm::parallel::{self, Scheduler};
 use crate::spgemm::{self, ImplId, SpGemm};
 use anyhow::{ensure, Context, Result};
 use std::collections::HashMap;
@@ -67,6 +68,10 @@ pub struct Session {
     reference_builds: AtomicU64,
 }
 
+/// ESC block sizes the per-matrix vec-radix sweep tries (§V-B), shared by
+/// the serial and multi-core execution paths so they can never drift.
+const VEC_RADIX_BLOCK_SWEEP: [usize; 3] = [4 * 1024, 16 * 1024, 64 * 1024];
+
 /// A general product from [`Session::spgemm`].
 #[derive(Clone, Debug)]
 pub struct Product {
@@ -79,6 +84,9 @@ pub struct Product {
 pub struct JobResult {
     pub impl_id: ImplId,
     pub dataset: String,
+    /// Single-core metrics, or the element-wise totals over cores for
+    /// multi-core jobs (counts stay exact and additive; cycles become
+    /// aggregate core-cycles — see [`JobResult::time_cycles`]).
     pub metrics: RunMetrics,
     pub out_nnz: usize,
     pub verified: bool,
@@ -86,6 +94,24 @@ pub struct JobResult {
     pub wall_secs: f64,
     /// Block size chosen for vec-radix (after the sweep), if applicable.
     pub block_elems: Option<usize>,
+    /// Simulated cores the job ran on (1 = serial loop).
+    pub cores: usize,
+    /// Row-block scheduler (multi-core jobs only).
+    pub sched: Option<Scheduler>,
+    /// Per-core breakdown + critical path (multi-core jobs only).
+    pub multicore: Option<MulticoreMetrics>,
+}
+
+impl JobResult {
+    /// Simulated wall-clock cycles: the multi-core critical path when
+    /// present, the single core's cycles otherwise. This is the number to
+    /// compare across core counts (fig12); `metrics.cycles` sums over cores.
+    pub fn time_cycles(&self) -> f64 {
+        self.multicore
+            .as_ref()
+            .map(|m| m.critical_path_cycles)
+            .unwrap_or(self.metrics.cycles)
+    }
 }
 
 /// All results of a sweep, with the per-dataset Table III characterization.
@@ -103,11 +129,13 @@ impl SuiteRun {
             .find(|r| r.impl_id == id && r.dataset == dataset)
     }
 
-    /// Speedup of `num` over `den` on `dataset` (cycles ratio).
+    /// Speedup of `num` over `den` on `dataset`: ratio of simulated
+    /// wall-clock cycles ([`JobResult::time_cycles`] — the multi-core
+    /// critical path when jobs ran on several cores, plain cycles otherwise).
     pub fn speedup(&self, num: ImplId, den: ImplId, dataset: &str) -> Option<f64> {
         let n = self.get(num, dataset)?;
         let d = self.get(den, dataset)?;
-        Some(d.metrics.cycles / n.metrics.cycles)
+        Some(d.time_cycles() / n.time_cycles())
     }
 }
 
@@ -276,6 +304,12 @@ impl Session {
     /// Unlike [`Session::run`], `ImplId::VecRadix` uses its default ESC
     /// block size here — the paper's per-matrix block-size sweep is an
     /// evaluation-pipeline concern and only happens for A*A jobs.
+    ///
+    /// The job owns the core count in this API: serial entry points always
+    /// price as a single active core (`sys.cores` is normalized to 1 here
+    /// and to [`crate::api::JobSpec::cores`] in `run`/`run_suite`), so a
+    /// `SessionConfig` carrying `sys.cores > 1` never charges idle-core
+    /// contention to a serial run.
     pub fn spgemm(&self, id: ImplId, a: &Csr, b: &Csr) -> Result<Product> {
         ensure!(
             a.ncols == b.nrows,
@@ -285,7 +319,9 @@ impl Session {
             b.nrows,
             b.ncols
         );
-        let mut machine = Machine::new(self.cfg.sys);
+        let mut sys = self.cfg.sys;
+        sys.cores = 1;
+        let mut machine = Machine::new(sys);
         let mut im = id.instantiate(self.cfg.engine, &self.cfg.artifact_dir)?;
         let csr = im
             .multiply(&mut machine, a, b)
@@ -294,14 +330,28 @@ impl Session {
     }
 
     /// Run one job (A*A on the job's dataset), reusing the session caches.
+    /// `job.cores >= 2` runs the row-blocked multi-core driver
+    /// ([`crate::spgemm::parallel`]) and fills [`JobResult::multicore`].
     pub fn run(&self, job: &JobSpec) -> Result<JobResult> {
+        ensure!(
+            job.cores >= 1,
+            "JobSpec.cores must be at least 1 (got {})",
+            job.cores
+        );
         let a = self.dataset(&job.dataset, job.scale)?;
         let reference = if job.verify {
             Some(self.reference_product(&job.dataset, job.scale)?)
         } else {
             None
         };
-        self.execute(job.impl_id, &job.dataset.name(), &a, reference.as_deref())
+        self.execute(
+            job.impl_id,
+            &job.dataset.name(),
+            &a,
+            reference.as_deref(),
+            job.cores,
+            job.sched,
+        )
     }
 
     /// Run a (datasets x implementations) sweep on worker threads.
@@ -312,7 +362,20 @@ impl Session {
     /// way. Simulations are independent (one `Machine` each), so the
     /// parallelism does not perturb the simulated metrics.
     pub fn run_suite(&self, spec: &SuiteSpec) -> Result<SuiteRun> {
+        anyhow::ensure!(
+            spec.cores >= 1,
+            "SuiteSpec.cores must be at least 1 (got {})",
+            spec.cores
+        );
         let threads = spec.threads.max(1);
+        // Multi-core jobs spawn `cores` scoped threads each inside
+        // `parallel::row_blocked`; cap the phase-2 grid workers so the host
+        // sees ~`threads` real threads total instead of threads*cores.
+        let grid_workers = if spec.cores > 1 {
+            threads.div_ceil(spec.cores).max(1)
+        } else {
+            threads
+        };
 
         // Results and stats are keyed by display name; two different
         // sources with one name would silently collide in `SuiteRun`.
@@ -388,7 +451,7 @@ impl Session {
         let job_errs: Mutex<Vec<String>> = Mutex::new(Vec::new());
         let next = AtomicUsize::new(0);
         std::thread::scope(|scope| {
-            for _ in 0..threads.min(jobs.len()) {
+            for _ in 0..grid_workers.min(jobs.len()) {
                 let jobs = &jobs;
                 let built = &built;
                 let results = &results;
@@ -401,7 +464,7 @@ impl Session {
                     }
                     let (id, di) = jobs[j];
                     let (name, a, reference) = &built[di];
-                    match self.execute(id, name, a, reference.as_deref()) {
+                    match self.execute(id, name, a, reference.as_deref(), spec.cores, spec.sched) {
                         Ok(r) => results.lock().unwrap().push((j, r)),
                         Err(e) => job_errs
                             .lock()
@@ -428,12 +491,18 @@ impl Session {
     /// (and, under `Engine::Xla`, its compiled artifacts) is instantiated
     /// per job: `ZipUnit` is `&mut`-stateful, so jobs running on parallel
     /// workers cannot share one engine.
+    ///
+    /// `cores >= 2` runs the row-blocked multi-core driver instead of the
+    /// serial loop; the vec-radix block sweep then picks the configuration
+    /// with the shortest *critical path*.
     fn execute(
         &self,
         id: ImplId,
         dataset: &str,
         a: &Csr,
         verify: Option<&Csr>,
+        cores: usize,
+        sched: Scheduler,
     ) -> Result<JobResult> {
         let t0 = Instant::now();
         let mut block = None;
@@ -445,10 +514,53 @@ impl Session {
             a.ncols
         );
 
-        let (metrics, product) = if id == ImplId::VecRadix {
+        let (metrics, multicore, product) = if cores > 1 {
+            let pcfg = parallel::ParallelConfig { cores, scheduler: sched, block_rows: None };
+            let run = if id == ImplId::VecRadix {
+                let mut best: Option<(parallel::ParallelRun, usize)> = None;
+                for be in VEC_RADIX_BLOCK_SWEEP {
+                    let r = parallel::row_blocked(
+                        &self.cfg.sys,
+                        move || {
+                            Ok(Box::new(spgemm::vec_radix::VecRadix { block_elems: be })
+                                as Box<dyn SpGemm>)
+                        },
+                        a,
+                        a,
+                        &pcfg,
+                    )
+                    .with_context(|| format!("vec-radix block={be}"))?;
+                    let better = best
+                        .as_ref()
+                        .map(|(b, _)| {
+                            r.metrics.critical_path_cycles < b.metrics.critical_path_cycles
+                        })
+                        .unwrap_or(true);
+                    if better {
+                        best = Some((r, be));
+                    }
+                }
+                let (r, be) = best.unwrap();
+                block = Some(be);
+                r
+            } else {
+                parallel::row_blocked(
+                    &self.cfg.sys,
+                    || id.instantiate(self.cfg.engine, &self.cfg.artifact_dir),
+                    a,
+                    a,
+                    &pcfg,
+                )
+                .with_context(|| format!("{} on {dataset} ({cores} cores)", id.name()))?
+            };
+            let parallel::ParallelRun { csr, metrics: mc, .. } = run;
+            (mc.total.clone(), Some(mc), csr)
+        } else if id == ImplId::VecRadix {
             let mut best: Option<(RunMetrics, Csr, usize)> = None;
-            for be in [4 * 1024usize, 16 * 1024, 64 * 1024] {
-                let mut m = Machine::new(self.cfg.sys);
+            let mut serial_sys = self.cfg.sys;
+            serial_sys.cores = 1;
+            for be in VEC_RADIX_BLOCK_SWEEP {
+                let mut m = Machine::new(serial_sys);
                 let mut im = spgemm::vec_radix::VecRadix { block_elems: be };
                 let c = im
                     .multiply(&mut m, a, a)
@@ -460,12 +572,12 @@ impl Session {
             }
             let (met, c, be) = best.unwrap();
             block = Some(be);
-            (met, c)
+            (met, None, c)
         } else {
             let p = self
                 .spgemm(id, a, a)
                 .with_context(|| format!("{} on {dataset}", id.name()))?;
-            (p.metrics, p.csr)
+            (p.metrics, None, p.csr)
         };
 
         let verified = match verify {
@@ -490,6 +602,9 @@ impl Session {
             verified,
             wall_secs: t0.elapsed().as_secs_f64(),
             block_elems: block,
+            cores: cores.max(1),
+            sched: if cores > 1 { Some(sched) } else { None },
+            multicore,
         })
     }
 }
@@ -517,10 +632,12 @@ mod tests {
             scale: 0.01,
             threads: 2,
             verify: true,
+            ..SuiteSpec::default()
         };
         let r = session.run_suite(&spec).unwrap();
         assert_eq!(r.results.len(), 4);
         assert!(r.results.iter().all(|x| x.verified));
+        assert!(r.results.iter().all(|x| x.cores == 1 && x.multicore.is_none()));
         assert!(r.speedup(ImplId::Spz, ImplId::SclHash, "p2p").unwrap() > 0.0);
         assert!(r.dataset_stats.contains_key("m133-b3"));
         // Everything went through the cache exactly once per dataset.
@@ -540,6 +657,7 @@ mod tests {
             scale: 0.01,
             threads: 4,
             verify: false,
+            ..SuiteSpec::default()
         };
         let r = session.run_suite(&spec).unwrap();
         let order: Vec<(String, ImplId)> = r
@@ -607,6 +725,29 @@ mod tests {
             ))
             .unwrap();
         assert!(res.block_elems.is_some());
+    }
+
+    #[test]
+    fn multicore_job_verifies_and_reports_per_core_metrics() {
+        let a = Arc::new(gen::rmat(128, 128, 1000, 0.6, 0.18, 0.14, 83));
+        let session = Session::new();
+        let src = DatasetSource::in_memory("er-mc", a);
+        let serial = session
+            .run(&JobSpec::new(ImplId::Spz, src.clone()).with_verify(true))
+            .unwrap();
+        let par = session
+            .run(&JobSpec::new(ImplId::Spz, src).with_verify(true).with_cores(4))
+            .unwrap();
+        assert!(par.verified);
+        assert_eq!(par.cores, 4);
+        assert_eq!(par.sched, Some(Scheduler::WorkStealing));
+        let mc = par.multicore.as_ref().expect("multicore metrics");
+        assert_eq!(mc.cores(), 4);
+        // Exact event-count additivity vs the serial run (16-aligned blocks).
+        assert_eq!(mc.total.ops, serial.metrics.ops);
+        // The critical path is the effective time and beats the serial run.
+        assert!(par.time_cycles() <= serial.time_cycles());
+        assert_eq!(par.out_nnz, serial.out_nnz);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! boundary ([`DatasetSource::parse`]).
 
 use crate::matrix::{mm, registry, Csr};
+use crate::spgemm::parallel::Scheduler;
 use crate::spgemm::ImplId;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -136,11 +137,24 @@ pub struct JobSpec {
     pub scale: f64,
     /// Verify the product against the memoized reference oracle.
     pub verify: bool,
+    /// Simulated cores. 1 = the classic serial loop; >= 2 runs the
+    /// row-blocked multi-core driver ([`crate::spgemm::parallel`]) and fills
+    /// [`crate::api::JobResult::multicore`].
+    pub cores: usize,
+    /// Row-block scheduler for multi-core runs (ignored at 1 core).
+    pub sched: Scheduler,
 }
 
 impl JobSpec {
     pub fn new(impl_id: ImplId, dataset: DatasetSource) -> Self {
-        JobSpec { impl_id, dataset, scale: 1.0, verify: false }
+        JobSpec {
+            impl_id,
+            dataset,
+            scale: 1.0,
+            verify: false,
+            cores: 1,
+            sched: Scheduler::WorkStealing,
+        }
     }
 
     pub fn with_scale(mut self, scale: f64) -> Self {
@@ -150,6 +164,16 @@ impl JobSpec {
 
     pub fn with_verify(mut self, verify: bool) -> Self {
         self.verify = verify;
+        self
+    }
+
+    pub fn with_cores(mut self, cores: usize) -> Self {
+        self.cores = cores.max(1);
+        self
+    }
+
+    pub fn with_scheduler(mut self, sched: Scheduler) -> Self {
+        self.sched = sched;
         self
     }
 }
@@ -167,6 +191,13 @@ pub struct SuiteSpec {
     pub threads: usize,
     /// Verify every product against the reference oracle.
     pub verify: bool,
+    /// Simulated cores per job (see [`JobSpec::cores`]). At >= 2 every
+    /// job's `metrics` are aggregate core-cycles; use
+    /// [`crate::api::JobResult::multicore`] (or `time_cycles()`) for the
+    /// critical-path view.
+    pub cores: usize,
+    /// Row-block scheduler for multi-core jobs.
+    pub sched: Scheduler,
 }
 
 impl Default for SuiteSpec {
@@ -177,6 +208,8 @@ impl Default for SuiteSpec {
             scale: 1.0,
             threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
             verify: false,
+            cores: 1,
+            sched: Scheduler::WorkStealing,
         }
     }
 }

@@ -77,6 +77,12 @@ pub struct SystemConfig {
     pub unit: MatrixUnitConfig,
     /// Elements per 512-bit vector register (ELEN=32 -> 16).
     pub vlen_elems: usize,
+    /// Active cores sharing the LLC and DRAM bus. Each core has its own
+    /// pipeline, private caches, and matrix unit (a [`crate::sim::Machine`]
+    /// each, see [`crate::sim::Machine::fork_core`]); `cores > 1` turns on
+    /// the first-order shared-resource contention adjustment in
+    /// [`crate::sim::CostModel`]. Event *counts* are never affected.
+    pub cores: usize,
 }
 
 impl Default for SystemConfig {
@@ -120,6 +126,7 @@ impl Default for SystemConfig {
                 pass_stalls: 2,
             },
             vlen_elems: 16,
+            cores: 1,
         }
     }
 }
@@ -176,6 +183,7 @@ mod tests {
         assert_eq!(c.unit.n, 16);
         assert_eq!(c.unit.num_regs, 16);
         assert_eq!(c.vlen_elems, 16);
+        assert_eq!(c.cores, 1);
     }
 
     #[test]

@@ -2,11 +2,13 @@
 //! [`SuiteRun`]: aligned-text rendering (stdout) plus TSV series
 //! (reports/ directory) for plotting.
 
-use crate::api::SuiteRun;
+use crate::api::{DatasetSource, JobSpec, Session, SuiteRun};
 use crate::matrix::registry;
 use crate::sim::machine::{Phase, NUM_PHASES, PHASE_NAMES};
+use crate::spgemm::parallel::Scheduler;
 use crate::spgemm::ImplId;
 use crate::util::stats::geomean;
+use anyhow::Result;
 use std::fmt::Write as _;
 
 /// Order datasets as Table III (descending work variance), then any
@@ -154,7 +156,8 @@ pub fn fig9(r: &SuiteRun) -> String {
                 for p in 0..NUM_PHASES {
                     let _ = write!(s, " {:>8.1}%", 100.0 * e.metrics.phase_cycles[p] / tot);
                 }
-                let _ = writeln!(s, " {:>14.0}", e.metrics.cycles);
+                // Simulated wall clock (critical path for multi-core jobs).
+                let _ = writeln!(s, " {:>14.0}", e.time_cycles());
             }
         }
     }
@@ -224,7 +227,7 @@ pub fn tsv_exports(r: &SuiteRun) -> Vec<(String, String)> {
     for name in ordered_datasets(r) {
         for e in r.results.iter().filter(|e| e.dataset == name) {
             let sp = r.speedup(e.impl_id, ImplId::SclHash, &name).unwrap_or(f64::NAN);
-            let _ = writeln!(t, "{name}\t{}\t{sp:.6}\t{:.1}", e.impl_id, e.metrics.cycles);
+            let _ = writeln!(t, "{name}\t{}\t{sp:.6}\t{:.1}", e.impl_id, e.time_cycles());
         }
     }
     out.push(("fig8.tsv".to_string(), t));
@@ -340,4 +343,137 @@ pub fn shape_checks(r: &SuiteRun) -> Vec<(String, bool)> {
 pub fn sort_share(r: &SuiteRun, impl_id: ImplId, dataset: &str) -> Option<f64> {
     let e = r.get(impl_id, dataset)?;
     Some(e.metrics.phase_cycles[Phase::Sort as usize] / e.metrics.cycles.max(1e-9))
+}
+
+/// One point of the Figure 12 scaling study: `impl_id` on `dataset` at
+/// `cores` under `scheduler` (`None` = the serial 1-core baseline).
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub dataset: String,
+    pub impl_id: ImplId,
+    pub scheduler: Option<Scheduler>,
+    pub cores: usize,
+    /// Simulated wall-clock cycles (multi-core critical path).
+    pub cycles: f64,
+    /// Speedup over the same implementation's 1-core run.
+    pub speedup: f64,
+    /// Busiest core over mean core cycles (1.0 = balanced; the static vs
+    /// work-stealing gap this exposes is the spz vs spz-rsort story at the
+    /// core level).
+    pub imbalance: f64,
+}
+
+/// Run the Figure 12 scaling study: `impl_id` on every dataset at each core
+/// count, once per scheduler, all through the session's dataset cache.
+pub fn scaling_sweep(
+    session: &Session,
+    datasets: &[DatasetSource],
+    impl_id: ImplId,
+    scale: f64,
+    cores: &[usize],
+) -> Result<Vec<ScalingPoint>> {
+    let mut out = Vec::new();
+    for src in datasets {
+        let base = session.run(&JobSpec::new(impl_id, src.clone()).with_scale(scale))?;
+        let base_cycles = base.time_cycles();
+        out.push(ScalingPoint {
+            dataset: base.dataset.clone(),
+            impl_id,
+            scheduler: None,
+            cores: 1,
+            cycles: base_cycles,
+            speedup: 1.0,
+            imbalance: 1.0,
+        });
+        for &c in cores.iter().filter(|&&c| c > 1) {
+            for sched in [Scheduler::Static, Scheduler::WorkStealing] {
+                let r = session.run(
+                    &JobSpec::new(impl_id, src.clone())
+                        .with_scale(scale)
+                        .with_cores(c)
+                        .with_scheduler(sched),
+                )?;
+                let cycles = r.time_cycles();
+                out.push(ScalingPoint {
+                    dataset: r.dataset.clone(),
+                    impl_id,
+                    scheduler: Some(sched),
+                    cores: c,
+                    cycles,
+                    speedup: base_cycles / cycles.max(1e-9),
+                    imbalance: r.multicore.as_ref().map(|m| m.imbalance()).unwrap_or(1.0),
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Figure 12: multi-core speedup per dataset, static vs work-stealing.
+pub fn fig12(points: &[ScalingPoint]) -> String {
+    let mut s = String::new();
+    let impl_name = points.first().map(|p| p.impl_id.name()).unwrap_or("-");
+    let mut cores: Vec<usize> = points.iter().map(|p| p.cores).collect();
+    cores.sort_unstable();
+    cores.dedup();
+    let _ = writeln!(
+        s,
+        "Figure 12. Multi-core scaling ({impl_name}): speedup over 1 core \
+         (row-blocked driver; work-stealing vs static block schedule)"
+    );
+    let _ = write!(s, "{:<10} {:<14}", "Matrix", "sched");
+    for c in &cores {
+        let col = format!("x{c}");
+        let _ = write!(s, " {col:>7}");
+    }
+    let _ = writeln!(s, " {:>10}", "imbalance");
+    let mut datasets: Vec<&str> = Vec::new();
+    for p in points {
+        if !datasets.contains(&p.dataset.as_str()) {
+            datasets.push(&p.dataset);
+        }
+    }
+    for d in datasets {
+        for sched in [Scheduler::Static, Scheduler::WorkStealing] {
+            let _ = write!(s, "{d:<10} {:<14}", sched.name());
+            let mut worst_imb = 1.0f64;
+            for &c in &cores {
+                let pt = points.iter().find(|p| {
+                    p.dataset == d
+                        && p.cores == c
+                        && (p.scheduler == Some(sched) || (c == 1 && p.scheduler.is_none()))
+                });
+                match pt {
+                    Some(p) => {
+                        worst_imb = worst_imb.max(p.imbalance);
+                        let _ = write!(s, " {:>7.2}", p.speedup);
+                    }
+                    None => {
+                        let _ = write!(s, " {:>7}", "-");
+                    }
+                }
+            }
+            let _ = writeln!(s, " {worst_imb:>9.2}x");
+        }
+    }
+    s
+}
+
+/// TSV series for the scaling study (`fig12.tsv`).
+pub fn fig12_tsv(points: &[ScalingPoint]) -> String {
+    let mut t = String::from("matrix\timpl\tsched\tcores\tcycles\tspeedup\timbalance\n");
+    for p in points {
+        let _ = writeln!(
+            t,
+            "{}\t{}\t{}\t{}\t{:.1}\t{:.6}\t{:.6}",
+            p.dataset,
+            p.impl_id,
+            p.scheduler.map(|s| s.name()).unwrap_or("serial"),
+            p.cores,
+            p.cycles,
+            p.speedup,
+            p.imbalance
+        );
+    }
+    t
 }

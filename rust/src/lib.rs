@@ -45,11 +45,16 @@
 //!
 //! [`Session::spgemm`] runs a general `C = A*B` on caller-owned matrices;
 //! [`DatasetSource`] covers registry synthetics, `.mtx` files, and in-memory
-//! [`Csr`]s. The `spz` CLI (`src/main.rs`) is a thin argv adapter over this
-//! API, and [`coordinator`] renders [`api::SuiteRun`]s into the paper's
-//! tables and figures. See `rust/README.md` for a quick start, or
-//! `examples/` (quickstart, paper_pipeline, triangle_counting, amg_galerkin)
-//! for the API in use.
+//! [`Csr`]s. [`JobSpec::with_cores`] switches a job onto the row-blocked
+//! multi-core driver ([`spgemm::parallel`]): row blocks of A on real worker
+//! threads, one forked [`Machine`] per simulated core, static or
+//! work-stealing block scheduling, per-core metrics and critical-path cycles
+//! in [`MulticoreMetrics`]. The `spz` CLI (`src/main.rs`) is a thin argv
+//! adapter over this API, and [`coordinator`] renders [`api::SuiteRun`]s
+//! into the paper's tables and figures (including the `fig12` multi-core
+//! scaling study). See `rust/README.md` for a quick start, or `examples/`
+//! (quickstart, paper_pipeline, triangle_counting, amg_galerkin) for the
+//! API in use.
 
 pub mod api;
 pub mod area;
@@ -70,5 +75,5 @@ pub use api::{
 pub use config::SystemConfig;
 pub use matrix::Csr;
 pub use runtime::Engine;
-pub use sim::Machine;
+pub use sim::{Machine, MulticoreMetrics, RunMetrics};
 pub use spgemm::ImplId;

@@ -19,6 +19,7 @@ use sparsezipper::area::AreaModel;
 use sparsezipper::coordinator::{figures, report};
 use sparsezipper::matrix::registry;
 use sparsezipper::runtime::Engine;
+use sparsezipper::spgemm::parallel::Scheduler;
 use sparsezipper::ImplId;
 use std::path::{Path, PathBuf};
 
@@ -32,8 +33,8 @@ struct Args {
 /// are listed explicitly; any other `--key` expects a value and may appear
 /// at most once (a duplicate is an error, not a silent overwrite).
 const COMMANDS: &[&str] = &[
-    "table3", "fig4", "fig8", "fig9", "fig10", "fig11", "table4", "all", "run", "ablate", "isa",
-    "config", "gen",
+    "table3", "fig4", "fig8", "fig9", "fig10", "fig11", "fig12", "table4", "all", "run", "ablate",
+    "isa", "config", "gen",
 ];
 
 fn parse_argv(args: &[String]) -> Result<Args> {
@@ -79,16 +80,22 @@ fn parse_argv(args: &[String]) -> Result<Args> {
 /// is an error rather than a silently ignored map entry.
 fn allowed_opts(cmd: &str) -> &'static [&'static str] {
     const SUITE: &[&str] = &[
-        "scale", "threads", "datasets", "engine", "artifacts", "mtx-dir", "out-dir",
+        "scale", "threads", "datasets", "engine", "artifacts", "mtx-dir", "out-dir", "cores",
+        "sched",
     ];
     match cmd {
         // Only fig8/all honor --impls; the other figures fix their own
         // implementation set, so accepting it would silently discard it.
         "fig8" | "all" => &[
             "scale", "threads", "datasets", "impls", "engine", "artifacts", "mtx-dir", "out-dir",
+            "cores", "sched",
         ],
         "table3" | "fig9" | "fig10" | "fig11" => SUITE,
-        "run" => &["dataset", "impl", "scale", "engine", "artifacts", "mtx-dir"],
+        // fig12 sweeps a *list* of core counts and both schedulers itself.
+        "fig12" => &[
+            "scale", "datasets", "impl", "cores", "engine", "artifacts", "mtx-dir", "out-dir",
+        ],
+        "run" => &["dataset", "impl", "scale", "engine", "artifacts", "mtx-dir", "cores", "sched"],
         // ablate sweeps are engine-independent (hardwired NativeEngine).
         "ablate" => &["dataset", "scale", "mtx-dir", "out-dir"],
         "gen" => &["dataset", "out", "scale"],
@@ -102,6 +109,7 @@ fn allowed_opts(cmd: &str) -> &'static [&'static str] {
 fn allowed_flags(cmd: &str) -> &'static [&'static str] {
     match cmd {
         "table3" | "fig8" | "fig9" | "fig10" | "fig11" | "all" => &["verify", "quiet", "json"],
+        "fig12" => &["quiet"],
         "run" => &["verify", "json"],
         "ablate" => &["quiet"],
         "table4" => &["sweep", "quiet"],
@@ -112,13 +120,18 @@ fn allowed_flags(cmd: &str) -> &'static [&'static str] {
 fn print_help() {
     println!(
         "spz — SparseZipper reproduction\n\
-         commands: table3 fig4 fig8 fig9 fig10 fig11 table4 all run ablate isa config gen help\n\
+         commands: table3 fig4 fig8 fig9 fig10 fig11 fig12 table4 all run ablate isa config gen \
+         help\n\
          suite commands (table3 fig8 fig9 fig10 fig11 all):\n\
          \x20   --scale F --threads N --datasets a,b --engine native|xla\n\
          \x20   --mtx-dir DIR --out-dir DIR --artifacts DIR --verify --quiet --json\n\
+         \x20   --cores N --sched static|work-stealing (simulated multi-core jobs)\n\
          \x20   (fig8 and all also take --impls a,b)\n\
          run:    --dataset NAME [--impl NAME] [--scale F] [--engine native|xla]\n\
-         \x20       [--mtx-dir DIR] [--artifacts DIR] [--verify] [--json]\n\
+         \x20       [--mtx-dir DIR] [--artifacts DIR] [--cores N] [--sched S]\n\
+         \x20       [--verify] [--json]\n\
+         fig12:  [--impl NAME] [--cores 1,2,4,8] [--scale F] [--datasets a,b]\n\
+         \x20       [--engine E] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          ablate: [--dataset NAME] [--scale F] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          gen:    --dataset NAME --out FILE.mtx [--scale F]\n\
          table4: [--sweep] [--out-dir DIR] [--quiet]"
@@ -156,6 +169,24 @@ fn parse_datasets(spec: &str, mtx: Option<&Path>) -> Result<Vec<DatasetSource>> 
         .collect()
 }
 
+fn cores_opt(a: &Args) -> Result<Option<usize>> {
+    match a.opts.get("cores") {
+        Some(c) => {
+            let n: usize = c.parse().context("--cores")?;
+            anyhow::ensure!(n >= 1, "--cores must be at least 1");
+            Ok(Some(n))
+        }
+        None => Ok(None),
+    }
+}
+
+fn sched_opt(a: &Args) -> Result<Option<Scheduler>> {
+    a.opts
+        .get("sched")
+        .map(|s| s.parse::<Scheduler>().map_err(anyhow::Error::msg))
+        .transpose()
+}
+
 fn suite_spec(a: &Args) -> Result<SuiteSpec> {
     let mut spec = SuiteSpec::default();
     if let Some(s) = scale_opt(a)? {
@@ -163,6 +194,18 @@ fn suite_spec(a: &Args) -> Result<SuiteSpec> {
     }
     if let Some(t) = a.opts.get("threads") {
         spec.threads = t.parse().context("--threads")?;
+    }
+    if let Some(c) = cores_opt(a)? {
+        spec.cores = c;
+    }
+    if let Some(s) = sched_opt(a)? {
+        // A scheduler choice on a serial run would be silently discarded;
+        // reject it like any other inapplicable option.
+        anyhow::ensure!(
+            spec.cores >= 2,
+            "--sched requires --cores >= 2 (it only affects multi-core runs)"
+        );
+        spec.sched = s;
     }
     let mtx = mtx_dir(a);
     if let Some(d) = a.opts.get("datasets") {
@@ -296,26 +339,37 @@ fn main() -> Result<()> {
                 .unwrap_or("spz")
                 .parse()
                 .map_err(anyhow::Error::msg)?;
-            let job = JobSpec::new(impl_id, dataset.clone())
+            let mut job = JobSpec::new(impl_id, dataset.clone())
                 .with_scale(scale_opt(&a)?.unwrap_or(1.0))
-                .with_verify(a.flags.contains("verify"));
+                .with_verify(a.flags.contains("verify"))
+                .with_cores(cores_opt(&a)?.unwrap_or(1));
+            if let Some(s) = sched_opt(&a)? {
+                anyhow::ensure!(
+                    job.cores >= 2,
+                    "--sched requires --cores >= 2 (it only affects multi-core runs)"
+                );
+                job = job.with_scheduler(s);
+            }
             let m = session.dataset(&dataset, job.scale)?;
             eprintln!(
-                "[spz] {}: {} rows, {} nnz; running {impl_id} (engine {:?})",
+                "[spz] {}: {} rows, {} nnz; running {impl_id} on {} core(s) (engine {:?})",
                 dataset.name(),
                 m.nrows,
                 m.nnz(),
+                job.cores,
                 session.engine()
             );
             let res = session.run(&job)?;
             if json {
                 println!("{}", res.to_json());
             } else {
-                println!(
+                // `cycles` is the run's simulated wall-clock: the per-phase
+                // critical path for multi-core runs, the core's cycles alone.
+                print!(
                     "impl={} dataset={} cycles={:.0} l1d_accesses={} l1d_hit={:.1}% kv_pairs={} out_nnz={} verified={} wall={:.2}s",
                     res.impl_id,
                     res.dataset,
-                    res.metrics.cycles,
+                    res.time_cycles(),
                     res.metrics.mem.l1d_accesses,
                     100.0 * res.metrics.mem.l1d_hit_rate(),
                     res.metrics.total_matrix_kv_pairs(),
@@ -323,7 +377,61 @@ fn main() -> Result<()> {
                     res.verified,
                     res.wall_secs
                 );
+                if let Some(mc) = &res.multicore {
+                    print!(
+                        " cores={} sched={} agg_cycles={:.0} efficiency={:.2}x imbalance={:.2}x",
+                        res.cores,
+                        res.sched.map(|s| s.name()).unwrap_or("-"),
+                        mc.total.cycles,
+                        mc.parallel_efficiency(),
+                        mc.imbalance()
+                    );
+                }
+                println!();
             }
+        }
+        "fig12" => {
+            let session = Session::with_config(session_config(&a)?);
+            let impl_id: ImplId = a
+                .opts
+                .get("impl")
+                .map(|s| s.as_str())
+                .unwrap_or("spz")
+                .parse()
+                .map_err(anyhow::Error::msg)?;
+            let mtx = mtx_dir(&a);
+            let datasets: Vec<DatasetSource> = match a.opts.get("datasets") {
+                Some(d) => parse_datasets(d, mtx.as_deref())?,
+                None => registry::DATASETS
+                    .iter()
+                    .map(|d| DatasetSource::parse(d.name, mtx.as_deref()))
+                    .collect::<Result<_>>()?,
+            };
+            let mut cores: Vec<usize> = match a.opts.get("cores") {
+                Some(spec) => spec
+                    .split(',')
+                    .map(|t| t.trim().parse::<usize>().context("--cores"))
+                    .collect::<Result<_>>()?,
+                None => vec![1, 2, 4, 8],
+            };
+            anyhow::ensure!(
+                cores.iter().all(|&c| c >= 1),
+                "--cores entries must be at least 1"
+            );
+            cores.sort_unstable();
+            cores.dedup();
+            let scale = scale_opt(&a)?.unwrap_or(1.0);
+            eprintln!(
+                "[spz] fig12 scaling: {impl_id} on {} datasets at cores {:?}, scale {scale}",
+                datasets.len(),
+                cores
+            );
+            let t0 = std::time::Instant::now();
+            let points = figures::scaling_sweep(&session, &datasets, impl_id, scale, &cores)?;
+            eprintln!("[spz] scaling sweep done in {:.1}s", t0.elapsed().as_secs_f64());
+            let od = out_dir(&a);
+            report::emit(&od, "fig12_scaling.txt", &figures::fig12(&points), quiet)?;
+            report::emit(&od, "fig12.tsv", &figures::fig12_tsv(&points), true)?;
         }
         "ablate" => {
             use sparsezipper::coordinator::ablate;
@@ -437,6 +545,29 @@ mod tests {
         assert_eq!(spec.datasets.len(), 2);
         assert_eq!(spec.impls, vec![ImplId::Spz, ImplId::SclHash]);
         assert!((spec.scale - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cores_and_sched_parse() {
+        let a = parse_argv(&v(&["run", "--cores", "8", "--sched", "static"])).unwrap();
+        assert_eq!(cores_opt(&a).unwrap(), Some(8));
+        assert_eq!(sched_opt(&a).unwrap(), Some(Scheduler::Static));
+        let a = parse_argv(&v(&["fig8", "--cores", "4", "--sched", "work-stealing"])).unwrap();
+        let spec = suite_spec(&a).unwrap();
+        assert_eq!(spec.cores, 4);
+        assert_eq!(spec.sched, Scheduler::WorkStealing);
+        let a = parse_argv(&v(&["run", "--cores", "0"])).unwrap();
+        assert!(cores_opt(&a).unwrap_err().to_string().contains("at least 1"));
+        let a = parse_argv(&v(&["run", "--sched", "greedy"])).unwrap();
+        let e = sched_opt(&a).unwrap_err().to_string();
+        assert!(e.contains("static") && e.contains("greedy"), "{e}");
+        // --sched on a serial suite would be silently discarded -> error.
+        let a = parse_argv(&v(&["fig8", "--sched", "static"])).unwrap();
+        let e = suite_spec(&a).unwrap_err().to_string();
+        assert!(e.contains("--sched requires --cores"), "{e}");
+        // fig12 parses its own --cores list; suite-only options don't apply.
+        assert!(parse_argv(&v(&["fig12", "--cores", "1,2,4", "--impl", "spz"])).is_ok());
+        assert!(parse_argv(&v(&["fig12", "--threads", "2"])).is_err());
     }
 
     #[test]

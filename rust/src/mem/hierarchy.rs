@@ -36,6 +36,19 @@ impl MemStats {
             self.l1d_hits as f64 / self.l1d_accesses as f64
         }
     }
+
+    /// Element-wise accumulate (multi-core aggregation across per-core
+    /// private hierarchies).
+    pub fn add(&mut self, o: &MemStats) {
+        self.l1d_accesses += o.l1d_accesses;
+        self.l1d_hits += o.l1d_hits;
+        self.l2_accesses += o.l2_accesses;
+        self.l2_hits += o.l2_hits;
+        self.llc_accesses += o.llc_accesses;
+        self.llc_hits += o.llc_hits;
+        self.dram_accesses += o.dram_accesses;
+        self.writebacks += o.writebacks;
+    }
 }
 
 #[derive(Debug)]

@@ -28,7 +28,11 @@ pub const PHASE_NAMES: [&str; NUM_PHASES] =
     ["preprocess", "expand", "sort", "output", "rowsort"];
 
 /// Dynamic instruction / event counters (Figure 10 & 11 inputs).
-#[derive(Clone, Copy, Debug, Default)]
+///
+/// Counts are *exact* (instrumented execution, not sampling), so they are
+/// additive across cores: a multi-core run's per-core counters sum to the
+/// matching single-core totals — the invariant the parallel-driver tests pin.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpCounters {
     pub scalar_ops: u64,
     pub branches: u64,
@@ -58,13 +62,121 @@ pub struct RunMetrics {
     pub sim_footprint_bytes: u64,
 }
 
+impl OpCounters {
+    /// Element-wise accumulate (multi-core aggregation).
+    pub fn add(&mut self, o: &OpCounters) {
+        self.scalar_ops += o.scalar_ops;
+        self.branches += o.branches;
+        self.vector_ops += o.vector_ops;
+        self.scalar_loads += o.scalar_loads;
+        self.scalar_stores += o.scalar_stores;
+        self.vector_loads += o.vector_loads;
+        self.vector_stores += o.vector_stores;
+        self.gather_elems += o.gather_elems;
+        self.scatter_elems += o.scatter_elems;
+        self.mssortk += o.mssortk;
+        self.mszipk += o.mszipk;
+        self.mlxe += o.mlxe;
+        self.msxe += o.msxe;
+        self.mmv += o.mmv;
+        self.mmul += o.mmul;
+        self.matrix_busy_cycles += o.matrix_busy_cycles;
+    }
+}
+
 impl RunMetrics {
     pub fn total_matrix_kv_pairs(&self) -> u64 {
         self.ops.mssortk + self.ops.mszipk
     }
+
+    /// All-zero metrics (identity of [`RunMetrics::merge`]).
+    pub fn zero() -> RunMetrics {
+        RunMetrics {
+            cycles: 0.0,
+            phase_cycles: [0.0; NUM_PHASES],
+            ops: OpCounters::default(),
+            mem: MemStats::default(),
+            sim_footprint_bytes: 0,
+        }
+    }
+
+    /// Accumulate another run's metrics into this one (sums everywhere:
+    /// cycles become *aggregate core-cycles*, not wall time — see
+    /// [`MulticoreMetrics`] for the critical-path view).
+    pub fn merge(&mut self, o: &RunMetrics) {
+        self.cycles += o.cycles;
+        for p in 0..NUM_PHASES {
+            self.phase_cycles[p] += o.phase_cycles[p];
+        }
+        self.ops.add(&o.ops);
+        self.mem.add(&o.mem);
+        self.sim_footprint_bytes += o.sim_footprint_bytes;
+    }
 }
 
-/// The simulated machine.
+/// Aggregate view of one multi-core run: the per-core breakdown, element-wise
+/// totals, and the critical path under a barrier-per-phase execution model
+/// (each phase ends when its slowest core finishes, so the per-phase critical
+/// path is the max over cores and the run's critical path is their sum).
+#[derive(Clone, Debug)]
+pub struct MulticoreMetrics {
+    /// One [`RunMetrics`] per core, indexed by core id.
+    pub per_core: Vec<RunMetrics>,
+    /// Element-wise sums over cores (aggregate core-cycles, exact counts).
+    pub total: RunMetrics,
+    /// Per-phase critical path: max over cores of that phase's cycles.
+    pub critical_path: [f64; NUM_PHASES],
+    /// Simulated wall-clock cycles: sum of the per-phase maxima.
+    pub critical_path_cycles: f64,
+}
+
+impl MulticoreMetrics {
+    /// Aggregate per-core snapshots (index = core id).
+    pub fn from_cores(per_core: Vec<RunMetrics>) -> MulticoreMetrics {
+        let mut total = RunMetrics::zero();
+        let mut critical_path = [0.0; NUM_PHASES];
+        for m in &per_core {
+            total.merge(m);
+            for p in 0..NUM_PHASES {
+                critical_path[p] = critical_path[p].max(m.phase_cycles[p]);
+            }
+        }
+        MulticoreMetrics {
+            critical_path_cycles: critical_path.iter().sum(),
+            per_core,
+            total,
+            critical_path,
+        }
+    }
+
+    pub fn cores(&self) -> usize {
+        self.per_core.len()
+    }
+
+    /// Aggregate core-cycles over critical-path cycles: the effective
+    /// parallel speedup *within this run* (upper-bounded by `cores()`).
+    pub fn parallel_efficiency(&self) -> f64 {
+        if self.critical_path_cycles > 0.0 {
+            self.total.cycles / self.critical_path_cycles
+        } else {
+            1.0
+        }
+    }
+
+    /// Load imbalance: busiest core's cycles over the per-core mean
+    /// (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let max = self.per_core.iter().map(|m| m.cycles).fold(0.0, f64::max);
+        let mean = self.total.cycles / self.per_core.len().max(1) as f64;
+        if mean > 0.0 {
+            max / mean
+        } else {
+            1.0
+        }
+    }
+}
+
+/// The simulated machine (one core plus its private caches and matrix unit).
 pub struct Machine {
     pub cfg: SystemConfig,
     pub cost: CostModel,
@@ -72,6 +184,7 @@ pub struct Machine {
     pub alloc: SimAlloc,
     pub unit: SystolicTiming,
     pub ops: OpCounters,
+    core_id: usize,
     cycles: f64,
     phase_cycles: [f64; NUM_PHASES],
     phase: Phase,
@@ -80,16 +193,35 @@ pub struct Machine {
 impl Machine {
     pub fn new(cfg: SystemConfig) -> Self {
         Machine {
-            cost: CostModel::new(cfg.core, &cfg.mem),
+            cost: CostModel::new(cfg.core, &cfg.mem, cfg.cores),
             mem: Hierarchy::new(cfg.mem),
             alloc: SimAlloc::new(),
             unit: SystolicTiming::new(cfg.unit),
             ops: OpCounters::default(),
+            core_id: 0,
             cycles: 0.0,
             phase_cycles: [0.0; NUM_PHASES],
             phase: Phase::Preprocess,
             cfg,
         }
+    }
+
+    /// Shard off a per-core machine for multi-core simulation: shares this
+    /// machine's [`SystemConfig`] (whose `cores` drives the shared-LLC/DRAM
+    /// contention adjustment in [`CostModel`]) with fresh private caches,
+    /// counters, and simulated address space. Each worker thread of the
+    /// parallel SpGEMM driver charges its own fork; see
+    /// [`crate::spgemm::parallel`].
+    pub fn fork_core(&self, core_id: usize) -> Machine {
+        let mut m = Machine::new(self.cfg);
+        m.core_id = core_id;
+        m
+    }
+
+    /// Which core of the simulated system this machine models (0 for
+    /// single-core runs).
+    pub fn core_id(&self) -> usize {
+        self.core_id
     }
 
     #[inline]
@@ -358,5 +490,80 @@ mod tests {
         let mut mc = m();
         mc.salloc(1000);
         assert_eq!(mc.metrics().sim_footprint_bytes, 1000);
+    }
+
+    #[test]
+    fn fork_core_shares_config_with_fresh_state() {
+        let mut base = Machine::new(SystemConfig { cores: 4, ..SystemConfig::default() });
+        base.scalar_ops(100);
+        let fork = base.fork_core(3);
+        assert_eq!(fork.core_id(), 3);
+        assert_eq!(fork.cfg.cores, 4);
+        assert_eq!(fork.cycles(), 0.0, "forked core starts with fresh counters");
+        assert_eq!(fork.ops, OpCounters::default());
+        assert_eq!(base.core_id(), 0);
+    }
+
+    #[test]
+    fn contended_machine_pays_more_for_dram_traffic() {
+        // Same cold streaming pattern, 8 sharers vs alone: only cycles move.
+        let run = |cores: usize| {
+            let mut mc = Machine::new(SystemConfig { cores, ..SystemConfig::default() });
+            let a = mc.salloc(1 << 22);
+            for i in 0..1024u64 {
+                mc.load(a + i * 4096, 4);
+            }
+            mc.metrics()
+        };
+        let alone = run(1);
+        let crowd = run(8);
+        assert!(crowd.cycles > alone.cycles, "{} !> {}", crowd.cycles, alone.cycles);
+        assert_eq!(crowd.ops, alone.ops, "contention must not change event counts");
+        assert_eq!(crowd.mem.dram_accesses, alone.mem.dram_accesses);
+    }
+
+    #[test]
+    fn merge_sums_everything() {
+        let mut a = m();
+        a.phase(Phase::Expand);
+        a.scalar_ops(10);
+        a.zip_pair(4);
+        let mut b = m();
+        b.phase(Phase::Sort);
+        b.vector_ops(6);
+        b.salloc(128);
+        let (ra, rb) = (a.metrics(), b.metrics());
+        let mut tot = RunMetrics::zero();
+        tot.merge(&ra);
+        tot.merge(&rb);
+        assert!((tot.cycles - (ra.cycles + rb.cycles)).abs() < 1e-9);
+        assert_eq!(tot.ops.scalar_ops, 10);
+        assert_eq!(tot.ops.vector_ops, 6);
+        assert_eq!(tot.ops.mszipk, 1);
+        assert_eq!(tot.sim_footprint_bytes, 128);
+        let ps: f64 = tot.phase_cycles.iter().sum();
+        assert!((ps - tot.cycles).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multicore_critical_path_is_per_phase_max() {
+        let mk = |expand: f64, sort: f64| {
+            let mut r = RunMetrics::zero();
+            r.phase_cycles[Phase::Expand as usize] = expand;
+            r.phase_cycles[Phase::Sort as usize] = sort;
+            r.cycles = expand + sort;
+            r
+        };
+        let mc = MulticoreMetrics::from_cores(vec![mk(100.0, 10.0), mk(40.0, 50.0)]);
+        assert_eq!(mc.cores(), 2);
+        assert_eq!(mc.critical_path[Phase::Expand as usize], 100.0);
+        assert_eq!(mc.critical_path[Phase::Sort as usize], 50.0);
+        assert_eq!(mc.critical_path_cycles, 150.0);
+        assert_eq!(mc.total.cycles, 200.0);
+        assert!((mc.parallel_efficiency() - 200.0 / 150.0).abs() < 1e-12);
+        assert!((mc.imbalance() - 110.0 / 100.0).abs() < 1e-12);
+        // A single core's critical path is just its own cycles.
+        let solo = MulticoreMetrics::from_cores(vec![mk(100.0, 10.0)]);
+        assert_eq!(solo.critical_path_cycles, solo.total.cycles);
     }
 }

@@ -11,4 +11,4 @@ pub mod cost;
 pub mod machine;
 
 pub use cost::CostModel;
-pub use machine::{Machine, Phase, RunMetrics};
+pub use machine::{Machine, MulticoreMetrics, Phase, RunMetrics};

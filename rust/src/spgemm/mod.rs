@@ -10,8 +10,10 @@
 //!
 //! Every implementation computes the *real* product (verified against
 //! [`reference`]) while charging its architectural events to a
-//! [`crate::sim::Machine`].
+//! [`crate::sim::Machine`]. The [`parallel`] module runs any of them over
+//! row blocks of A on multiple simulated cores (one forked machine each).
 
+pub mod parallel;
 pub mod prep;
 pub mod scl_array;
 pub mod scl_hash;
@@ -188,17 +190,6 @@ impl std::fmt::Display for ImplId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.pad(self.name())
     }
-}
-
-/// Construct an implementation by name (engine applies to spz variants).
-#[deprecated(note = "parse an `ImplId` and call `ImplId::instantiate` (or use `api::Session`)")]
-pub fn by_name(
-    name: &str,
-    engine: crate::runtime::Engine,
-    artifact_dir: &std::path::Path,
-) -> Result<Box<dyn SpGemm>> {
-    let id: ImplId = name.parse().map_err(anyhow::Error::msg)?;
-    id.instantiate(engine, artifact_dir)
 }
 
 /// All implementation names in the paper's Figure 8 order (derived from

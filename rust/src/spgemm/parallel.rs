@@ -1,0 +1,468 @@
+//! Multi-core SpGEMM driver: run any [`SpGemm`] implementation over row
+//! blocks of A on real worker threads, one forked [`Machine`] per simulated
+//! core (the paper's evaluation distributes rows of A to per-core matrix
+//! units the same way; SpArch and the SSR multi-core clusters are the
+//! related-work analogues).
+//!
+//! Row-wise SpGEMM makes this exact: rows `[lo, hi)` of `C = A*B` depend
+//! only on rows `[lo, hi)` of A (and all of B), so a block is simulated by
+//! multiplying the corresponding row *slab* of A against B and the per-block
+//! outputs stitch back into one [`Csr`] in block order — bit-identical in
+//! structure to the serial product, independent of core count and scheduler.
+//!
+//! Two invariants the tests pin:
+//!
+//! * **Blocks are core-count independent** (and scheduler-independent):
+//!   [`block_rows_for`] depends only on the matrix and the matrix-unit group
+//!   size, so the per-core event counts of an N-core run always sum exactly
+//!   to the 1-core run's totals.
+//! * **Blocks are aligned to the matrix-unit group size** (16 rows): the spz
+//!   variants process rows in lockstep groups of `unit.n` streams, so
+//!   group-aligned blocks leave every group's composition — and therefore
+//!   every dynamic event count of `spz`, `scl-array`, and `scl-hash` —
+//!   exactly equal to the serial run's. (`vec-radix` re-partitions its ESC
+//!   batches per block and `spz-rsort` work-sorts within a block, so their
+//!   counts match the 1-core *driver* run, not the serial loop.)
+
+use crate::config::SystemConfig;
+use crate::matrix::Csr;
+use crate::sim::{Machine, MulticoreMetrics};
+use crate::spgemm::SpGemm;
+use crate::util::round_up;
+use anyhow::{ensure, Context, Result};
+use std::sync::Mutex;
+
+/// How row blocks are assigned to cores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheduler {
+    /// Contiguous static partition of the block list (each core gets
+    /// `nblocks/cores` consecutive blocks up front). Cheap, but exposed to
+    /// load imbalance when heavy rows cluster — the effect `spz-rsort`'s
+    /// row sorting (and Figure 11's work-variance column) makes measurable.
+    Static,
+    /// Dynamic self-scheduling off a shared queue: blocks are claimed in
+    /// order by whichever core becomes idle first, so one heavy block never
+    /// idles the pool. The claim sequence is simulated *deterministically*
+    /// from the per-row work estimates (the same Gustavson work counts every
+    /// implementation's Preprocess pass computes) rather than from host
+    /// thread timing — per-core metrics, critical path, and fig12 are
+    /// bit-reproducible run to run.
+    WorkStealing,
+}
+
+impl Scheduler {
+    pub const fn name(self) -> &'static str {
+        match self {
+            Scheduler::Static => "static",
+            Scheduler::WorkStealing => "work-stealing",
+        }
+    }
+}
+
+impl std::str::FromStr for Scheduler {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "static" => Ok(Scheduler::Static),
+            "work-stealing" | "ws" => Ok(Scheduler::WorkStealing),
+            other => Err(format!(
+                "unknown scheduler '{other}' (expected one of: static, work-stealing)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for Scheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(self.name())
+    }
+}
+
+/// Parallel-execution parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelConfig {
+    /// Simulated cores (= real worker threads). Clamped to at least 1.
+    pub cores: usize,
+    pub scheduler: Scheduler,
+    /// Rows of A per block (rounded up to the matrix-unit group size);
+    /// `None` picks [`block_rows_for`]'s core-count-independent default.
+    pub block_rows: Option<usize>,
+}
+
+impl ParallelConfig {
+    pub fn new(cores: usize) -> Self {
+        ParallelConfig {
+            cores,
+            scheduler: Scheduler::WorkStealing,
+            block_rows: None,
+        }
+    }
+}
+
+/// Result of a parallel run: the stitched product, the per-core metrics
+/// aggregate, and how many blocks each core executed (the scheduler's
+/// footprint, useful for imbalance reporting).
+#[derive(Clone, Debug)]
+pub struct ParallelRun {
+    pub csr: Csr,
+    pub metrics: MulticoreMetrics,
+    pub blocks_per_core: Vec<usize>,
+}
+
+/// Default rows per block: targets ~64 blocks (plenty of steals even at 8
+/// cores) with a one-group floor, rounded up to the group size. Depends only
+/// on the matrix and the unit geometry — never on the core count — so
+/// per-core event counts sum identically at every core count.
+pub fn block_rows_for(nrows: usize, group: usize) -> usize {
+    let group = group.max(1);
+    round_up(nrows.max(1).div_ceil(64).max(group), group)
+}
+
+/// The row-block list for an `nrows`-row A (block size from
+/// [`ParallelConfig::block_rows`] or [`block_rows_for`]).
+pub fn row_blocks(nrows: usize, group: usize, cfg: &ParallelConfig) -> Vec<(usize, usize)> {
+    let bs = match cfg.block_rows {
+        Some(req) => round_up(req.max(1), group.max(1)),
+        None => block_rows_for(nrows, group),
+    };
+    let mut blocks = Vec::with_capacity(nrows.div_ceil(bs.max(1)));
+    let mut lo = 0usize;
+    while lo < nrows {
+        let hi = (lo + bs).min(nrows);
+        blocks.push((lo, hi));
+        lo = hi;
+    }
+    blocks
+}
+
+/// Per-core block assignment, decided up front so it depends only on the
+/// inputs (never on host-thread timing):
+///
+/// * `Static` — contiguous equal-count chunks of the block list.
+/// * `WorkStealing` — the deterministic replay of a dynamic self-scheduling
+///   queue: walk blocks in order, handing each to the core whose accumulated
+///   estimated work (Gustavson multiply counts, + a per-row term for the
+///   fixed row overheads) is smallest — i.e. the core that would have gone
+///   idle and stolen next. Ties break toward the lowest core id.
+fn assign_blocks(
+    a: &Csr,
+    b: &Csr,
+    blocks: &[(usize, usize)],
+    cores: usize,
+    scheduler: Scheduler,
+) -> Vec<Vec<usize>> {
+    let nblocks = blocks.len();
+    match scheduler {
+        Scheduler::Static => (0..cores)
+            .map(|c| (c * nblocks / cores..(c + 1) * nblocks / cores).collect())
+            .collect(),
+        Scheduler::WorkStealing => {
+            let row_work = crate::matrix::stats::row_work(a, b);
+            let mut plan: Vec<Vec<usize>> = vec![Vec::new(); cores];
+            let mut est = vec![0.0f64; cores];
+            for (i, &(lo, hi)) in blocks.iter().enumerate() {
+                let w: u64 = row_work[lo..hi].iter().sum();
+                let mut best = 0usize;
+                for c in 1..cores {
+                    if est[c] < est[best] {
+                        best = c;
+                    }
+                }
+                plan[best].push(i);
+                est[best] += (w + (hi - lo) as u64) as f64;
+            }
+            plan
+        }
+    }
+}
+
+/// Rows `[lo, hi)` of `a` as a standalone CSR (same column space).
+fn row_slab(a: &Csr, lo: usize, hi: usize) -> Csr {
+    let base = a.indptr[lo];
+    Csr {
+        nrows: hi - lo,
+        ncols: a.ncols,
+        indptr: a.indptr[lo..=hi].iter().map(|&p| p - base).collect(),
+        indices: a.indices[a.indptr[lo]..a.indptr[hi]].to_vec(),
+        data: a.data[a.indptr[lo]..a.indptr[hi]].to_vec(),
+    }
+}
+
+/// Concatenate per-block products (in block order) into one CSR.
+fn stitch(nrows: usize, ncols: usize, parts: Vec<Option<Csr>>) -> Result<Csr> {
+    let nnz: usize = parts.iter().map(|p| p.as_ref().map_or(0, |c| c.nnz())).sum();
+    let mut indptr = Vec::with_capacity(nrows + 1);
+    indptr.push(0usize);
+    let mut indices = Vec::with_capacity(nnz);
+    let mut data = Vec::with_capacity(nnz);
+    for part in parts {
+        let c = part.context("internal: a row block produced no result")?;
+        let base = indices.len();
+        for &p in &c.indptr[1..] {
+            indptr.push(base + p);
+        }
+        indices.extend_from_slice(&c.indices);
+        data.extend_from_slice(&c.data);
+    }
+    ensure!(indptr.len() == nrows + 1, "internal: stitched row count mismatch");
+    Ok(Csr { nrows, ncols, indptr, indices, data })
+}
+
+/// Run `C = A*B` over row blocks of A on `cfg.cores` worker threads.
+///
+/// `make_impl` constructs one implementation instance per worker (the spz
+/// engines are `&mut`-stateful, so cores cannot share one). Each worker
+/// charges a [`Machine::fork_core`] fork whose `SystemConfig.cores` enables
+/// the shared-LLC/DRAM contention adjustment. The block-to-core assignment
+/// is decided up front by [`Scheduler`] (host-thread timing never leaks into
+/// it), so the product, every event count, *and* the per-core cycle
+/// breakdown are bit-reproducible run to run.
+pub fn row_blocked<F>(
+    sys: &SystemConfig,
+    make_impl: F,
+    a: &Csr,
+    b: &Csr,
+    cfg: &ParallelConfig,
+) -> Result<ParallelRun>
+where
+    F: Fn() -> Result<Box<dyn SpGemm>> + Sync,
+{
+    ensure!(
+        a.ncols == b.nrows,
+        "dimension mismatch: ({}x{}) * ({}x{})",
+        a.nrows,
+        a.ncols,
+        b.nrows,
+        b.ncols
+    );
+    let cores = cfg.cores.max(1);
+    let mut sys = *sys;
+    sys.cores = cores;
+    let base = Machine::new(sys);
+
+    let blocks = row_blocks(a.nrows, sys.unit.n, cfg);
+    let plan = assign_blocks(a, b, &blocks, cores, cfg.scheduler);
+    let blocks_per_core: Vec<usize> = plan.iter().map(|p| p.len()).collect();
+
+    let results: Mutex<Vec<Option<Csr>>> = Mutex::new(vec![None; blocks.len()]);
+    let mut per_core = Vec::with_capacity(cores);
+    let mut failures: Vec<String> = Vec::new();
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(cores);
+        for (core, mine) in plan.iter().enumerate() {
+            let machine = base.fork_core(core);
+            let blocks = &blocks;
+            let results = &results;
+            let make_impl = &make_impl;
+            handles.push(scope.spawn(move || -> Result<crate::sim::RunMetrics> {
+                let mut machine = machine;
+                let mut im = make_impl()?;
+                for &bi in mine {
+                    let (lo, hi) = blocks[bi];
+                    let slab = row_slab(a, lo, hi);
+                    let c = im
+                        .multiply(&mut machine, &slab, b)
+                        .with_context(|| format!("rows {lo}..{hi} on core {core}"))?;
+                    results.lock().unwrap()[bi] = Some(c);
+                }
+                Ok(machine.metrics())
+            }));
+        }
+        for (core, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(m)) => per_core.push(m),
+                Ok(Err(e)) => failures.push(format!("core {core}: {e:#}")),
+                Err(_) => failures.push(format!("core {core}: worker panicked")),
+            }
+        }
+    });
+    ensure!(failures.is_empty(), "parallel SpGEMM failed: {failures:?}");
+
+    let csr = stitch(a.nrows, b.ncols, results.into_inner().unwrap())?;
+    Ok(ParallelRun {
+        csr,
+        metrics: MulticoreMetrics::from_cores(per_core),
+        blocks_per_core,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::sim::RunMetrics;
+    use crate::spgemm::{reference, same_product, ImplId};
+
+    fn sys() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    fn native(id: ImplId) -> impl Fn() -> Result<Box<dyn SpGemm>> + Sync {
+        move || id.instantiate(crate::runtime::Engine::Native, std::path::Path::new("."))
+    }
+
+    fn serial(id: ImplId, a: &Csr) -> (Csr, RunMetrics) {
+        let mut m = Machine::new(sys());
+        let mut im = native(id)().unwrap();
+        let c = im.multiply(&mut m, a, a).unwrap();
+        (c, m.metrics())
+    }
+
+    #[test]
+    fn scheduler_parses_and_prints() {
+        assert_eq!("static".parse::<Scheduler>().unwrap(), Scheduler::Static);
+        assert_eq!("ws".parse::<Scheduler>().unwrap(), Scheduler::WorkStealing);
+        assert_eq!(
+            "work-stealing".parse::<Scheduler>().unwrap().to_string(),
+            "work-stealing"
+        );
+        let e = "greedy".parse::<Scheduler>().unwrap_err();
+        assert!(e.contains("static") && e.contains("greedy"), "{e}");
+    }
+
+    #[test]
+    fn block_sizing_is_core_independent_and_group_aligned() {
+        assert_eq!(block_rows_for(100, 16), 16);
+        assert_eq!(block_rows_for(200_000, 16), 3136);
+        assert_eq!(block_rows_for(0, 16), 16);
+        assert_eq!(block_rows_for(100, 16) % 16, 0);
+        let blocks = row_blocks(100, 16, &ParallelConfig::new(4));
+        assert_eq!(blocks.len(), 7);
+        assert_eq!(blocks[0], (0, 16));
+        assert_eq!(blocks[6], (96, 100));
+        // An explicit request is rounded up to group alignment.
+        let cfg = ParallelConfig { block_rows: Some(10), ..ParallelConfig::new(2) };
+        assert!(row_blocks(100, 16, &cfg).iter().all(|&(lo, _)| lo % 16 == 0));
+    }
+
+    #[test]
+    fn row_slab_extracts_rows() {
+        let a = gen::erdos_renyi(40, 30, 200, 5);
+        let s = row_slab(&a, 16, 32);
+        assert!(s.validate().is_ok());
+        assert_eq!(s.nrows, 16);
+        assert_eq!(s.ncols, 30);
+        for r in 0..16 {
+            assert_eq!(s.row(r), a.row(16 + r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_for_every_impl() {
+        let a = gen::rmat(128, 128, 1100, 0.6, 0.18, 0.14, 91);
+        let r = reference(&a, &a);
+        for id in ImplId::ALL {
+            let (cs, _) = serial(id, &a);
+            for cores in [1usize, 3] {
+                let run = row_blocked(&sys(), native(id), &a, &a, &ParallelConfig::new(cores))
+                    .unwrap();
+                assert!(run.csr.validate().is_ok());
+                assert_eq!(run.csr.indptr, cs.indptr, "{} x{cores}", id.name());
+                assert_eq!(run.csr.indices, cs.indices, "{} x{cores}", id.name());
+                assert!(same_product(&run.csr, &cs, 1e-5), "{} x{cores}", id.name());
+                assert!(same_product(&run.csr, &r, 1e-3), "{} x{cores}", id.name());
+                assert_eq!(run.metrics.cores(), cores);
+                assert_eq!(
+                    run.blocks_per_core.iter().sum::<usize>(),
+                    row_blocks(a.nrows, 16, &ParallelConfig::new(cores)).len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn per_core_counts_sum_to_single_core_totals() {
+        let a = gen::rmat(128, 128, 1100, 0.6, 0.18, 0.14, 92);
+        for id in ImplId::ALL {
+            let one = row_blocked(&sys(), native(id), &a, &a, &ParallelConfig::new(1)).unwrap();
+            for cores in [2usize, 7] {
+                for sched in [Scheduler::Static, Scheduler::WorkStealing] {
+                    let cfg = ParallelConfig { scheduler: sched, ..ParallelConfig::new(cores) };
+                    let many = row_blocked(&sys(), native(id), &a, &a, &cfg).unwrap();
+                    assert_eq!(
+                        many.metrics.total.ops, one.metrics.total.ops,
+                        "{} x{cores} {sched}", id.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn group_aligned_blocks_keep_spz_counts_exactly_serial() {
+        let a = gen::rmat(160, 160, 1400, 0.58, 0.2, 0.14, 93);
+        for id in [ImplId::SclArray, ImplId::SclHash, ImplId::Spz] {
+            let (_, sm) = serial(id, &a);
+            let run = row_blocked(&sys(), native(id), &a, &a, &ParallelConfig::new(4)).unwrap();
+            assert_eq!(run.metrics.total.ops, sm.ops, "{}", id.name());
+        }
+    }
+
+    #[test]
+    fn work_stealing_schedule_is_deterministic_and_beats_static_on_skew() {
+        let a = gen::rmat(256, 256, 2600, 0.62, 0.18, 0.14, 97);
+        let run =
+            || row_blocked(&sys(), native(ImplId::Spz), &a, &a, &ParallelConfig::new(4)).unwrap();
+        let r1 = run();
+        let r2 = run();
+        let c1: Vec<f64> = r1.metrics.per_core.iter().map(|m| m.cycles).collect();
+        let c2: Vec<f64> = r2.metrics.per_core.iter().map(|m| m.cycles).collect();
+        assert_eq!(c1, c2, "per-core schedule must not depend on host timing");
+        assert_eq!(r1.blocks_per_core, r2.blocks_per_core);
+        // R-MAT hubs cluster in the low rows, so contiguous static chunking
+        // overloads one core; estimate-driven dynamic claiming spreads them.
+        let st_cfg = ParallelConfig { scheduler: Scheduler::Static, ..ParallelConfig::new(4) };
+        let st = row_blocked(&sys(), native(ImplId::Spz), &a, &a, &st_cfg).unwrap();
+        assert!(
+            r1.metrics.critical_path_cycles <= st.metrics.critical_path_cycles * 1.05,
+            "work-stealing {} should not lose to static {}",
+            r1.metrics.critical_path_cycles,
+            st.metrics.critical_path_cycles
+        );
+    }
+
+    #[test]
+    fn critical_path_shrinks_with_cores() {
+        let a = gen::erdos_renyi(512, 512, 6000, 94);
+        let one =
+            row_blocked(&sys(), native(ImplId::Spz), &a, &a, &ParallelConfig::new(1)).unwrap();
+        let eight =
+            row_blocked(&sys(), native(ImplId::Spz), &a, &a, &ParallelConfig::new(8)).unwrap();
+        assert!(
+            eight.metrics.critical_path_cycles < one.metrics.critical_path_cycles,
+            "{} !< {}",
+            eight.metrics.critical_path_cycles,
+            one.metrics.critical_path_cycles
+        );
+        assert!(eight.metrics.parallel_efficiency() > 1.5);
+    }
+
+    #[test]
+    fn empty_and_tiny_matrices_work() {
+        let e = Csr::empty(0, 0);
+        let run =
+            row_blocked(&sys(), native(ImplId::Spz), &e, &e, &ParallelConfig::new(4)).unwrap();
+        assert_eq!(run.csr.nrows, 0);
+        assert_eq!(run.csr.nnz(), 0);
+        // More cores than blocks: idle cores report zero metrics.
+        let tiny = Csr::identity(8);
+        let run =
+            row_blocked(&sys(), native(ImplId::SclHash), &tiny, &tiny, &ParallelConfig::new(7))
+                .unwrap();
+        assert_eq!(run.csr, tiny);
+        assert_eq!(run.metrics.cores(), 7);
+        assert_eq!(run.blocks_per_core.iter().sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn rectangular_products_supported() {
+        let a = gen::erdos_renyi(64, 40, 300, 95);
+        let b = gen::erdos_renyi(40, 32, 200, 96);
+        let run =
+            row_blocked(&sys(), native(ImplId::Spz), &a, &b, &ParallelConfig::new(3)).unwrap();
+        assert!(same_product(&run.csr, &reference(&a, &b), 1e-3));
+        let bad = row_blocked(&sys(), native(ImplId::Spz), &b, &a, &ParallelConfig::new(2));
+        assert!(bad.is_err());
+    }
+}

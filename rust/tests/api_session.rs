@@ -50,6 +50,7 @@ fn suite_reuses_job_cache() {
         scale: 0.01,
         threads: 2,
         verify: false,
+        ..SuiteSpec::default()
     };
     let r = session.run_suite(&spec).unwrap();
     assert_eq!(r.results.len(), 4);
@@ -180,6 +181,7 @@ fn duplicate_dataset_names_rejected() {
         scale: 1.0,
         threads: 1,
         verify: false,
+        ..SuiteSpec::default()
     };
     let e = format!("{:#}", session.run_suite(&spec).unwrap_err());
     assert!(e.contains("duplicate dataset name 'same'"), "{e}");
@@ -198,6 +200,7 @@ fn non_registry_datasets_appear_in_figures() {
         scale: 1.0,
         threads: 1,
         verify: false,
+        ..SuiteSpec::default()
     };
     let suite = session.run_suite(&spec).unwrap();
     assert!(figures::fig8(&suite).contains("mygraph"));
@@ -223,8 +226,26 @@ fn json_export_is_stable_and_parseable_ish() {
         "\"l1d_accesses\":",
         "\"mssortk\":",
         "\"block_elems\":null",
+        "\"cores\":1",
+        "\"sched\":null",
+        "\"multicore\":null",
     ] {
         assert!(j.contains(key), "missing {key} in {j}");
+    }
+
+    // A multi-core job exports the per-core section.
+    let par = session
+        .run(&JobSpec::new(ImplId::SclHash, src.clone()).with_cores(2))
+        .unwrap();
+    let pj = par.to_json();
+    for key in [
+        "\"cores\":2",
+        "\"sched\":\"work-stealing\"",
+        "\"multicore\":{\"critical_path_cycles\":",
+        "\"critical_path\":{\"preprocess\":",
+        "\"per_core\":[",
+    ] {
+        assert!(pj.contains(key), "missing {key} in {pj}");
     }
 
     let spec = SuiteSpec {
@@ -233,6 +254,7 @@ fn json_export_is_stable_and_parseable_ish() {
         scale: 1.0,
         threads: 1,
         verify: false,
+        ..SuiteSpec::default()
     };
     let suite = session.run_suite(&spec).unwrap();
     let sj = suite.to_json();

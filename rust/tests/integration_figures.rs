@@ -75,6 +75,38 @@ fn qualitative_shape_small_scale() {
 }
 
 #[test]
+fn fig12_scaling_sweep_renders_and_scales() {
+    let session = Session::new();
+    let datasets: Vec<DatasetSource> = ["p2p", "m133-b3"]
+        .iter()
+        .map(|n| DatasetSource::registry(n).unwrap())
+        .collect();
+    let points =
+        figures::scaling_sweep(&session, &datasets, ImplId::Spz, 0.02, &[1, 4]).expect("sweep");
+    // 1 serial baseline + (static, work-stealing) at 4 cores, per dataset.
+    assert_eq!(points.len(), 2 * 3);
+    for p in &points {
+        assert!(p.cycles > 0.0, "{}: zero cycles", p.dataset);
+        if p.cores > 1 {
+            assert!(
+                p.speedup > 1.0,
+                "{} x{} {:?}: no speedup ({:.2}x)",
+                p.dataset,
+                p.cores,
+                p.scheduler,
+                p.speedup
+            );
+            assert!(p.imbalance >= 1.0);
+        }
+    }
+    let txt = figures::fig12(&points);
+    assert!(txt.contains("p2p") && txt.contains("work-stealing"), "{txt}");
+    let tsv = figures::fig12_tsv(&points);
+    assert_eq!(tsv.lines().count(), 1 + points.len());
+    assert!(tsv.starts_with("matrix\timpl\tsched\tcores\t"), "{tsv}");
+}
+
+#[test]
 fn area_model_reproduces_table4() {
     let m = AreaModel::paper();
     assert!((m.overhead_pct() - 12.72).abs() < 1.0);

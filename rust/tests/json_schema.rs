@@ -1,0 +1,100 @@
+//! Golden-file pin of the stable `--json` suite-export schema: the exact
+//! sequence of object keys (field names, nesting order, phase names, and the
+//! multi-core `per_core` section) must match `tests/golden/suite_json_schema.txt`.
+//!
+//! The contract from PR 1 is that this schema only ever *grows* — fields are
+//! appended, never renamed or reordered. If you intentionally extend the
+//! export, append the new keys to the golden file in emission order (the
+//! test's failure output prints the observed sequence).
+
+use sparsezipper::api::{DatasetSource, Session, SuiteSpec};
+use sparsezipper::matrix::gen;
+use sparsezipper::ImplId;
+use std::sync::Arc;
+
+const GOLDEN: &str = include_str!("golden/suite_json_schema.txt");
+
+/// Object keys in order of appearance: every `"name"` immediately followed
+/// (modulo whitespace) by a `:`. String *values* are never followed by a
+/// colon in this grammar, so they are not captured.
+fn keys(json: &str) -> Vec<String> {
+    let b: Vec<char> = json.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == '"' {
+            let start = i + 1;
+            let mut j = start;
+            while j < b.len() && b[j] != '"' {
+                if b[j] == '\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            let mut k = j + 1;
+            while k < b.len() && (b[k] == ' ' || b[k] == '\n' || b[k] == '\t') {
+                k += 1;
+            }
+            if k < b.len() && b[k] == ':' {
+                out.push(b[start..j].iter().collect());
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+#[test]
+fn key_extractor_handles_nesting_and_string_values() {
+    let ks = keys("{\"a\":1,\"b\":{\"c\":\"not:a:key\"},\"d\":[{\"e\":null}]}");
+    assert_eq!(ks, vec!["a", "b", "c", "d", "e"]);
+}
+
+#[test]
+fn suite_json_schema_matches_golden() {
+    let session = Session::new();
+    let spec = SuiteSpec {
+        datasets: vec![DatasetSource::in_memory(
+            "golden",
+            Arc::new(gen::erdos_renyi(64, 64, 300, 7)),
+        )],
+        impls: vec![ImplId::SclHash, ImplId::Spz],
+        scale: 1.0,
+        threads: 1,
+        verify: false,
+        cores: 2,
+        ..SuiteSpec::default()
+    };
+    let suite = session.run_suite(&spec).expect("suite");
+    let observed = keys(&suite.to_json());
+    let expected: Vec<String> = GOLDEN
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect();
+    assert_eq!(
+        observed,
+        expected,
+        "--json schema drifted from tests/golden/suite_json_schema.txt.\n\
+         The export schema is a stable contract: fields may only be appended.\n\
+         Observed key sequence:\n{}",
+        observed.join("\n")
+    );
+}
+
+#[test]
+fn single_core_job_schema_has_null_multicore_tail() {
+    let session = Session::new();
+    let src = DatasetSource::in_memory("solo", Arc::new(gen::erdos_renyi(40, 40, 160, 9)));
+    let res = session
+        .run(&sparsezipper::JobSpec::new(ImplId::SclHash, src))
+        .expect("job");
+    let j = res.to_json();
+    // The multi-core fields exist at every core count (null when serial), so
+    // parsers see one shape.
+    assert!(j.contains("\"cores\":1"), "{j}");
+    assert!(j.ends_with("\"sched\":null,\"multicore\":null}"), "{j}");
+}

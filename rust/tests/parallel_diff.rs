@@ -1,0 +1,102 @@
+//! Differential sweep: all five implementations x every registry dataset at
+//! small scale against the `spgemm::reference` oracle — serial and through
+//! the row-blocked multi-core driver at 1, 2, and 7 cores (non-power-of-two
+//! on purpose). Pins the two multi-core contracts:
+//!
+//! * the parallel product is bit-identical in structure (and within
+//!   `same_product` tolerance in values) to the serial run, at every core
+//!   count and scheduler;
+//! * per-core event counts sum *exactly* to the 1-core run's totals — and,
+//!   for the strictly row/group-local implementations (scl-array, scl-hash,
+//!   spz), exactly to the plain serial loop's counts.
+
+use sparsezipper::matrix::{registry, Csr};
+use sparsezipper::sim::machine::OpCounters;
+use sparsezipper::sim::{Machine, RunMetrics};
+use sparsezipper::spgemm::parallel::{self, ParallelConfig, Scheduler};
+use sparsezipper::spgemm::{self, ImplId, SpGemm};
+use sparsezipper::SystemConfig;
+use anyhow::Result;
+
+const SCALE: f64 = 0.003;
+
+fn native(id: ImplId) -> impl Fn() -> Result<Box<dyn SpGemm>> + Sync {
+    move || id.instantiate(sparsezipper::Engine::Native, std::path::Path::new("."))
+}
+
+fn serial(id: ImplId, a: &Csr) -> (Csr, RunMetrics) {
+    let mut m = Machine::new(SystemConfig::default());
+    let mut im = native(id)().unwrap();
+    let c = im.multiply(&mut m, a, a).unwrap();
+    (c, m.metrics())
+}
+
+#[test]
+fn differential_every_impl_every_registry_dataset_serial_and_parallel() {
+    let sys = SystemConfig::default();
+    for d in registry::DATASETS {
+        let a = d.build(SCALE);
+        let oracle = spgemm::reference(&a, &a);
+        for id in ImplId::ALL {
+            let ctx = |extra: &str| format!("{} on {} {extra}", id.name(), d.name);
+
+            // Serial loop vs the independent oracle.
+            let (cs, sm) = serial(id, &a);
+            assert!(spgemm::same_product(&cs, &oracle, 1e-2), "{}", ctx("serial vs oracle"));
+
+            // Driver at 1 core: same block list as every other core count.
+            let one = parallel::row_blocked(&sys, native(id), &a, &a, &ParallelConfig::new(1))
+                .unwrap_or_else(|e| panic!("{}: {e:#}", ctx("x1")));
+            assert_eq!(one.csr.indptr, cs.indptr, "{}", ctx("x1 structure"));
+            assert_eq!(one.csr.indices, cs.indices, "{}", ctx("x1 structure"));
+            assert!(spgemm::same_product(&one.csr, &cs, 1e-4), "{}", ctx("x1 values"));
+
+            // The row/group-local impls match the serial loop *exactly*.
+            if matches!(id, ImplId::SclArray | ImplId::SclHash | ImplId::Spz) {
+                assert_eq!(one.metrics.total.ops, sm.ops, "{}", ctx("x1 counts vs serial"));
+            }
+
+            for cores in [2usize, 7] {
+                for sched in [Scheduler::Static, Scheduler::WorkStealing] {
+                    let cfg = ParallelConfig { scheduler: sched, ..ParallelConfig::new(cores) };
+                    let many = parallel::row_blocked(&sys, native(id), &a, &a, &cfg)
+                        .unwrap_or_else(|e| panic!("{}: {e:#}", ctx("xN")));
+                    // Deterministic product: bitwise equal across core counts
+                    // and schedulers.
+                    assert_eq!(many.csr, one.csr, "{}", ctx(&format!("x{cores} {sched}")));
+                    // Per-core event counts sum exactly to the 1-core totals.
+                    let mut sum = OpCounters::default();
+                    for core in &many.metrics.per_core {
+                        sum.add(&core.ops);
+                    }
+                    assert_eq!(
+                        sum,
+                        one.metrics.total.ops,
+                        "{}",
+                        ctx(&format!("x{cores} {sched} count additivity"))
+                    );
+                    assert_eq!(many.metrics.cores(), cores);
+                }
+            }
+        }
+
+        // Multi-core spz must never be slower than its 1-core run once there
+        // are enough blocks to spread (the fig12/acceptance property; tiny
+        // 4-block datasets can degenerate to one hot block, so gate on size).
+        if a.nrows >= 128 {
+            let one =
+                parallel::row_blocked(&sys, native(ImplId::Spz), &a, &a, &ParallelConfig::new(1))
+                    .unwrap();
+            let eight =
+                parallel::row_blocked(&sys, native(ImplId::Spz), &a, &a, &ParallelConfig::new(8))
+                    .unwrap();
+            assert!(
+                eight.metrics.critical_path_cycles <= one.metrics.critical_path_cycles,
+                "{}: x8 critical path {} > x1 {}",
+                d.name,
+                eight.metrics.critical_path_cycles,
+                one.metrics.critical_path_cycles
+            );
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Property tests for the synthetic generators (`matrix::gen`): seed
+//! determinism, structural invariants (bandwidth, stencil degrees), and
+//! realized-nnz fidelity — the contracts the Table III registry stand-ins
+//! and every simulation test build on.
+
+use sparsezipper::matrix::{gen, Csr};
+
+/// Every generator family, invoked at a fixed small size from one seed.
+fn all_generators(seed: u64) -> Vec<(&'static str, Csr)> {
+    vec![
+        ("erdos_renyi", gen::erdos_renyi(300, 300, 2000, seed)),
+        ("rmat", gen::rmat(256, 256, 4096, 0.57, 0.19, 0.19, seed)),
+        ("powerlaw", gen::powerlaw(2000, 16000, 0.8, seed)),
+        ("powerlaw_clustered", gen::powerlaw_clustered(1500, 9000, 1.0, 0.5, seed)),
+        ("grid2d", gen::grid2d(20, 20, seed)),
+        ("grid3d_27pt", gen::grid3d_27pt(5, seed)),
+        ("road", gen::road(40, 40, 0.64, seed)),
+        ("banded", gen::banded(600, 24, 12, seed)),
+        ("block_banded", gen::block_banded(2000, 100, 16, 8, 0.2, seed)),
+        ("kregular", gen::kregular(500, 4, seed)),
+        ("uniform_degree", gen::uniform_degree(1000, 10, 14, seed)),
+        ("circuit", gen::circuit(2000, 6.0, 0.1, seed)),
+    ]
+}
+
+#[test]
+fn every_generator_validates() {
+    for (name, m) in all_generators(11) {
+        assert!(m.validate().is_ok(), "{name}: {:?}", m.validate());
+        assert!(m.nnz() > 0, "{name} empty");
+    }
+}
+
+#[test]
+fn same_seed_is_bit_identical() {
+    for ((name, a), (_, b)) in all_generators(42).into_iter().zip(all_generators(42)) {
+        assert_eq!(a, b, "{name} not deterministic");
+    }
+}
+
+#[test]
+fn different_seed_changes_the_matrix() {
+    for ((name, a), (_, b)) in all_generators(1).into_iter().zip(all_generators(2)) {
+        // Random generators move the sparsity pattern; the fixed-structure
+        // stencils (grid2d/grid3d) at least draw different values.
+        let pattern_differs = a.indptr != b.indptr || a.indices != b.indices;
+        let values_differ = a.data != b.data;
+        assert!(
+            pattern_differs || values_differ,
+            "{name}: seeds 1 and 2 give identical matrices"
+        );
+        match name {
+            "grid2d" | "grid3d_27pt" => {
+                assert_eq!(a.indices, b.indices, "{name} structure should be seed-free");
+                assert!(values_differ, "{name} values should move with the seed");
+            }
+            _ => assert!(pattern_differs, "{name} pattern should move with the seed"),
+        }
+    }
+}
+
+#[test]
+fn banded_respects_bandwidth() {
+    for (n, half_band, per_row, seed) in
+        [(200usize, 8usize, 6usize, 3u64), (600, 24, 12, 4), (1000, 50, 20, 5)]
+    {
+        let m = gen::banded(n, half_band, per_row, seed);
+        assert!(m.validate().is_ok());
+        for r in 0..m.nrows {
+            let (k, _) = m.row(r);
+            assert!(!k.is_empty(), "row {r} lost its diagonal");
+            for &c in k {
+                assert!(
+                    (c as i64 - r as i64).unsigned_abs() <= half_band as u64,
+                    "banded({n},{half_band},{per_row}) row {r} column {c} outside band"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn stencil_row_degrees_bounded() {
+    let g2 = gen::grid2d(17, 9, 7);
+    for r in 0..g2.nrows {
+        let d = g2.row_len(r);
+        assert!((3..=5).contains(&d), "grid2d row {r} degree {d}");
+    }
+    let g3 = gen::grid3d_27pt(5, 8);
+    for r in 0..g3.nrows {
+        let d = g3.row_len(r);
+        assert!((8..=27).contains(&d), "grid3d row {r} degree {d}");
+    }
+    // Total nnz follows from the degree bounds.
+    assert!(g2.nnz() <= 5 * g2.nrows && g2.nnz() >= 3 * g2.nrows);
+    assert!(g3.nnz() <= 27 * g3.nrows && g3.nnz() >= 8 * g3.nrows);
+}
+
+/// Realized nnz stays within tolerance of the request for every generator
+/// that takes an nnz/degree target (duplicates collapse, so the realized
+/// count is at most the request and loses only a modest fraction).
+#[test]
+fn realized_nnz_tracks_request() {
+    let within = |name: &str, got: usize, want: f64, lo: f64, hi: f64| {
+        let ratio = got as f64 / want;
+        assert!(
+            ratio >= lo && ratio <= hi,
+            "{name}: realized {got} vs requested {want} (ratio {ratio:.3} outside [{lo},{hi}])"
+        );
+    };
+
+    let er = gen::erdos_renyi(300, 300, 2000, 21);
+    within("erdos_renyi", er.nnz(), 2000.0, 0.85, 1.0);
+
+    let rm = gen::rmat(256, 256, 4096, 0.57, 0.19, 0.19, 22);
+    within("rmat", rm.nnz(), 4096.0, 0.55, 1.0);
+
+    let pl = gen::powerlaw(2000, 16000, 0.8, 23);
+    within("powerlaw", pl.nnz(), 16000.0, 0.6, 1.2);
+
+    let plc = gen::powerlaw_clustered(1500, 9000, 1.0, 0.5, 24);
+    within("powerlaw_clustered", plc.nnz(), 9000.0, 0.5, 1.25);
+
+    let ud = gen::uniform_degree(1000, 10, 14, 25);
+    within("uniform_degree", ud.nnz(), 12000.0, 0.8, 1.2);
+
+    let ci = gen::circuit(2000, 6.0, 0.1, 26);
+    within("circuit", ci.nnz(), 2000.0 * 6.0, 0.7, 1.15);
+
+    let bb = gen::block_banded(2000, 100, 16, 8, 0.2, 27);
+    within("block_banded", bb.nnz(), 2000.0 * 16.0, 0.5, 1.8);
+
+    let rd = gen::road(40, 40, 0.64, 28);
+    // Two undirected edge families at p_edge each: ~4*p_edge entries/vertex.
+    within("road", rd.nnz(), 1600.0 * 4.0 * 0.64, 0.6, 1.2);
+
+    // Exact-count generators: no tolerance needed.
+    assert_eq!(gen::kregular(500, 4, 29).nnz(), 500 * 4);
+    let g = gen::grid2d(20, 20, 30);
+    assert_eq!(g.nnz(), 5 * 400 - 2 * 20 - 2 * 20);
+}
+
+#[test]
+fn kregular_rows_and_columns_are_k_regular() {
+    let m = gen::kregular(300, 4, 31);
+    for r in 0..m.nrows {
+        assert_eq!(m.row_len(r), 4, "row {r}");
+    }
+    let t = m.transpose();
+    let col_degs: Vec<usize> = (0..t.nrows).map(|r| t.row_len(r)).collect();
+    // Columns are k-regular up to the rare linear-probe collision.
+    let exact = col_degs.iter().filter(|&&d| d == 4).count();
+    assert!(exact >= 290, "only {exact}/300 columns have degree 4");
+}
+
+#[test]
+fn values_stay_in_generator_range() {
+    for (name, m) in all_generators(33) {
+        match name {
+            // Stencils/regular matrices carry structured diagonals/signs.
+            "grid2d" | "grid3d_27pt" | "kregular" | "banded" | "block_banded" => continue,
+            _ => {}
+        }
+        assert!(
+            m.data.iter().all(|&v| (0.5..1.5).contains(&v)),
+            "{name} values escaped [0.5, 1.5)"
+        );
+    }
+}
