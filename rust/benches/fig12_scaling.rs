@@ -51,4 +51,21 @@ fn main() {
         let g = gain.iter().product::<f64>().powf(1.0 / gain.len() as f64);
         println!("geomean work-stealing/static speedup at 8 cores: {g:.3}x");
     }
+    // Shared-memory headline: how much real sharing/contention the replay
+    // saw at 8 cores (the analytic constants this model replaced were blind
+    // to both).
+    let at8: Vec<_> = points
+        .iter()
+        .filter(|p| p.cores == 8 && p.scheduler == Some(Scheduler::WorkStealing))
+        .collect();
+    if !at8.is_empty() {
+        let hit = at8.iter().map(|p| p.llc_hit_rate).sum::<f64>() / at8.len() as f64;
+        let coh: u64 = at8.iter().map(|p| p.coherence_events).sum();
+        let dq: f64 = at8.iter().map(|p| p.dram_queue_cycles).sum();
+        println!(
+            "shared memory at 8 cores (work-stealing): mean LLC hit {:.1}%, \
+             {coh} coherence events, {dq:.0} DRAM queue cycles",
+            100.0 * hit
+        );
+    }
 }

@@ -5,6 +5,7 @@
 
 use crate::api::session::{JobResult, SuiteRun};
 use crate::matrix::MatrixStats;
+use crate::mem::SharedStats;
 use crate::sim::machine::{NUM_PHASES, PHASE_NAMES};
 use crate::sim::{MulticoreMetrics, RunMetrics};
 use std::fmt::Write as _;
@@ -90,10 +91,40 @@ fn metrics_json(m: &RunMetrics) -> String {
     );
     format!(
         "{{\"cycles\":{},\"phase_cycles\":{phases},\"total_matrix_kv_pairs\":{},\
-         \"ops\":{ops},\"mem\":{mem},\"sim_footprint_bytes\":{}}}",
+         \"ops\":{ops},\"mem\":{mem},\"sim_footprint_bytes\":{},\"shared\":{}}}",
         num(m.cycles),
         m.total_matrix_kv_pairs(),
-        m.sim_footprint_bytes
+        m.sim_footprint_bytes,
+        shared_json(&m.shared)
+    )
+}
+
+/// Shared-memory replay results (all-zero for serial runs, so parsers see
+/// one shape at every core count).
+fn shared_json(s: &SharedStats) -> String {
+    format!(
+        "{{\"llc_accesses\":{},\"llc_hits\":{},\"llc_misses\":{},\"writeback_installs\":{},\
+         \"llc_hit_rate\":{},\"shared_fills\":{},\"demotions\":{},\"upgrades\":{},\
+         \"invalidations_sent\":{},\"invalidations_received\":{},\"dirty_forwards\":{},\
+         \"llc_queue_cycles\":{},\"dram_queue_cycles\":{},\"coherence_cycles\":{},\
+         \"demotion_cycles\":{},\"sharing_saved_cycles\":{},\"stall_cycles\":{}}}",
+        s.llc_accesses,
+        s.llc_hits,
+        s.llc_misses,
+        s.writeback_installs,
+        num(s.llc_hit_rate()),
+        s.shared_fills,
+        s.demotions,
+        s.upgrades,
+        s.invalidations_sent,
+        s.invalidations_received,
+        s.dirty_forwards,
+        num(s.llc_queue_cycles),
+        num(s.dram_queue_cycles),
+        num(s.coherence_cycles),
+        num(s.demotion_cycles),
+        num(s.sharing_saved_cycles),
+        num(s.stall_cycles())
     )
 }
 
@@ -120,8 +151,17 @@ fn multicore_json(mc: &MulticoreMetrics) -> String {
         per_core.push_str(&metrics_json(m));
     }
     per_core.push(']');
+    let mut channels = String::from("[");
+    for (i, b) in mc.channel_busy_cycles.iter().enumerate() {
+        if i > 0 {
+            channels.push(',');
+        }
+        channels.push_str(&num(*b));
+    }
+    channels.push(']');
     format!(
-        "{{\"critical_path_cycles\":{},\"critical_path\":{},\"per_core\":{per_core}}}",
+        "{{\"critical_path_cycles\":{},\"critical_path\":{},\"per_core\":{per_core},\
+         \"channel_busy_cycles\":{channels}}}",
         num(mc.critical_path_cycles),
         phases_json(&mc.critical_path)
     )

@@ -27,6 +27,7 @@ mod json;
 mod session;
 mod spec;
 
+pub use crate::mem::SharedStats;
 pub use crate::sim::MulticoreMetrics;
 pub use crate::spgemm::parallel::Scheduler;
 pub use crate::spgemm::ImplId;

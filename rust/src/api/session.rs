@@ -27,6 +27,14 @@ pub struct SessionConfig {
     pub artifact_dir: PathBuf,
     /// Simulated system (Table II).
     pub sys: SystemConfig,
+    /// Upper bound on cached `(source, scale)` entries. `None` (the
+    /// default, and the pre-existing behaviour) keeps the cache unbounded;
+    /// `Some(cap)` evicts the least-recently-used entries once the cache
+    /// would exceed `cap`, so long-lived services streaming many distinct
+    /// datasets stop growing without manual `evict`/`clear_cache` calls.
+    /// The entry being accessed is never the victim (an effective floor of
+    /// one).
+    pub max_cached_datasets: Option<usize>,
 }
 
 impl Default for SessionConfig {
@@ -35,6 +43,7 @@ impl Default for SessionConfig {
             engine: Engine::Native,
             artifact_dir: client::artifact_dir(),
             sys: SystemConfig::default(),
+            max_cached_datasets: None,
         }
     }
 }
@@ -63,7 +72,11 @@ type SharedEntry = Arc<Mutex<CacheEntry>>;
 /// jobs; `&Session` is `Sync`, so one session can serve concurrent callers.
 pub struct Session {
     cfg: SessionConfig,
-    cache: Mutex<HashMap<DatasetKey, SharedEntry>>,
+    /// Entry handle plus its last-use tick (for LRU eviction when
+    /// [`SessionConfig::max_cached_datasets`] caps the cache).
+    cache: Mutex<HashMap<DatasetKey, (SharedEntry, u64)>>,
+    cache_tick: AtomicU64,
+    cache_evictions: AtomicU64,
     dataset_builds: AtomicU64,
     reference_builds: AtomicU64,
 }
@@ -149,6 +162,8 @@ impl Session {
         Session {
             cfg,
             cache: Mutex::new(HashMap::new()),
+            cache_tick: AtomicU64::new(0),
+            cache_evictions: AtomicU64::new(0),
             dataset_builds: AtomicU64::new(0),
             reference_builds: AtomicU64::new(0),
         }
@@ -177,6 +192,11 @@ impl Session {
         self.cache.lock().unwrap().len()
     }
 
+    /// How many entries the LRU cap has evicted so far (0 when unbounded).
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache_evictions.load(Ordering::Relaxed)
+    }
+
     /// Evict one `(source, scale)` entry, dropping its matrix, stats, and
     /// reference product (and releasing any in-memory `Arc` it pinned).
     /// Returns whether an entry existed. In-flight builds on the entry
@@ -185,18 +205,49 @@ impl Session {
         self.cache.lock().unwrap().remove(&src.cache_key(scale)).is_some()
     }
 
-    /// Drop every cached entry. The cache is unbounded by design (suites
-    /// revisit datasets), so long-lived services streaming many distinct
-    /// datasets should evict or clear periodically; a bounded/LRU policy is
-    /// left to a future scaling change. Build counters are not reset.
+    /// Drop every cached entry. By default the cache is unbounded (suites
+    /// revisit datasets); set [`SessionConfig::max_cached_datasets`] to make
+    /// the session evict least-recently-used entries automatically instead.
+    /// Build counters are not reset.
     pub fn clear_cache(&self) {
         self.cache.lock().unwrap().clear();
     }
 
-    /// The per-key entry handle (creating it if absent); the map lock is
-    /// released before any expensive work starts.
+    /// The per-key entry handle (creating it if absent), bumping its LRU
+    /// tick and applying the cache cap; the map lock is released before any
+    /// expensive work starts. Evicting an entry another thread is still
+    /// building is safe: the builder keeps its own `Arc` handle and simply
+    /// is no longer cached.
     fn entry(&self, key: DatasetKey) -> SharedEntry {
-        self.cache.lock().unwrap().entry(key).or_default().clone()
+        let mut map = self.cache.lock().unwrap();
+        let tick = self.cache_tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let handle = {
+            let slot = map.entry(key.clone()).or_default();
+            slot.1 = tick;
+            slot.0.clone()
+        };
+        if let Some(cap) = self.cfg.max_cached_datasets {
+            while map.len() > cap.max(1) {
+                // LRU victim, never the entry this caller just touched.
+                let mut victim: Option<(DatasetKey, u64)> = None;
+                for (k, v) in map.iter() {
+                    if *k == key {
+                        continue;
+                    }
+                    if victim.as_ref().map(|(_, t)| v.1 < *t).unwrap_or(true) {
+                        victim = Some((k.clone(), v.1));
+                    }
+                }
+                match victim {
+                    Some((v, _)) => {
+                        map.remove(&v);
+                        self.cache_evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => break,
+                }
+            }
+        }
+        handle
     }
 
     /// Build-or-fetch the matrix with the entry lock held, so racing
@@ -226,7 +277,7 @@ impl Session {
     fn forget_if_empty(&self, key: &DatasetKey, entry: &SharedEntry, e: &CacheEntry) {
         if e.csr.is_none() && e.stats.is_none() && e.reference.is_none() {
             let mut map = self.cache.lock().unwrap();
-            if map.get(key).is_some_and(|cur| Arc::ptr_eq(cur, entry)) {
+            if map.get(key).is_some_and(|(cur, _)| Arc::ptr_eq(cur, entry)) {
                 map.remove(key);
             }
         }
@@ -748,6 +799,57 @@ mod tests {
         // The critical path is the effective time and beats the serial run.
         assert!(par.time_cycles() <= serial.time_cycles());
         assert_eq!(par.out_nnz, serial.out_nnz);
+    }
+
+    #[test]
+    fn bounded_cache_evicts_least_recently_used() {
+        let session = Session::with_config(SessionConfig {
+            max_cached_datasets: Some(2),
+            ..SessionConfig::default()
+        });
+        let a = DatasetSource::registry("p2p").unwrap();
+        let b = DatasetSource::registry("m133-b3").unwrap();
+        let c = DatasetSource::registry("wiki").unwrap();
+        session.dataset(&a, 0.005).unwrap();
+        session.dataset(&b, 0.005).unwrap();
+        assert_eq!(session.cached_datasets(), 2);
+        assert_eq!(session.cache_evictions(), 0);
+        // Touch `a` so `b` becomes the LRU victim when `c` arrives.
+        session.dataset(&a, 0.005).unwrap();
+        session.dataset(&c, 0.005).unwrap();
+        assert_eq!(session.cached_datasets(), 2);
+        assert_eq!(session.cache_evictions(), 1);
+        assert_eq!(session.dataset_builds(), 3);
+        // `a` survived (no rebuild); `b` was evicted (rebuilds).
+        session.dataset(&a, 0.005).unwrap();
+        assert_eq!(session.dataset_builds(), 3, "recently-used entry must survive");
+        session.dataset(&b, 0.005).unwrap();
+        assert_eq!(session.dataset_builds(), 4, "LRU entry must have been evicted");
+    }
+
+    #[test]
+    fn unbounded_cache_is_backwards_compatible() {
+        let session = Session::new();
+        for name in ["p2p", "m133-b3", "wiki"] {
+            let src = DatasetSource::registry(name).unwrap();
+            session.dataset(&src, 0.005).unwrap();
+        }
+        assert_eq!(session.cached_datasets(), 3);
+        assert_eq!(session.cache_evictions(), 0);
+    }
+
+    #[test]
+    fn cache_cap_never_evicts_the_active_entry() {
+        let session = Session::with_config(SessionConfig {
+            max_cached_datasets: Some(0),
+            ..SessionConfig::default()
+        });
+        let a = DatasetSource::registry("p2p").unwrap();
+        session.dataset(&a, 0.005).unwrap();
+        // Cap 0 behaves as cap 1: the entry being touched stays cached.
+        assert_eq!(session.cached_datasets(), 1);
+        session.dataset(&a, 0.005).unwrap();
+        assert_eq!(session.dataset_builds(), 1);
     }
 
     #[test]

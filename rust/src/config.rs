@@ -5,6 +5,13 @@
 //! 512-bit SIMD units and a 16x16 systolic matrix unit, fronted by a
 //! 32KB L1D / 256KB L2 / 512KB LLC hierarchy over DDR4-2400.
 
+/// Cycles of DRAM *bandwidth* occupancy per line transfer — a floor that
+/// memory-level parallelism cannot hide (64B line at ~20GB/s on a ~3GHz
+/// core). Charged on every DRAM-reaching access by [`crate::sim::CostModel`]
+/// and used as the per-channel transfer occupancy by the shared-memory
+/// replay ([`crate::mem::shared`]).
+pub const DRAM_BW_CYCLES: f64 = 6.0;
+
 /// One cache level's geometry and hit latency (Table II).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CacheConfig {
@@ -28,6 +35,60 @@ pub struct MemConfig {
     pub llc: CacheConfig,
     /// DRAM access latency in CPU cycles (DDR4-2400 at ~3 GHz core clock).
     pub dram_latency: u32,
+}
+
+/// The shared end of the memory system: one LLC shared by all active cores
+/// plus a multi-channel DRAM back end, modeled by deterministic
+/// trace-and-replay (see [`crate::mem::trace`] and [`crate::mem::shared`]).
+/// All cost fields are calibration knobs in the DESIGN.md spirit: relative
+/// multi-core behaviour is what matters, and every one of them contributes
+/// *zero* cycles when a single core runs alone.
+#[derive(Clone, Copy, Debug)]
+pub struct SharedMemConfig {
+    /// Independent DRAM channels; lines are channel-interleaved by address
+    /// (`line % dram_channels`), so streaming traffic spreads while pathological
+    /// same-channel conflicts stay representable.
+    pub dram_channels: usize,
+    /// Shared LLC capacity policy: `true` models a sliced LLC whose
+    /// capacity scales with the active core count — each core brings its
+    /// Table II slice, added as extra sets (power-of-two slicings; odd core
+    /// counts round up via a second way bank) — while `false` keeps one
+    /// fixed slice that all cores contend for. Either way the geometry at
+    /// 1 core is exactly the Table II LLC, which the 1-core == seed
+    /// differential tests pin.
+    pub llc_sliced: bool,
+    /// Cycles one lookup (or writeback install) occupies the shared LLC tag
+    /// pipeline; queueing behind *other* cores' lookups is charged to the
+    /// waiting core.
+    pub llc_service_cycles: f64,
+    /// Cycles a line transfer occupies its DRAM channel. Defaults to
+    /// [`DRAM_BW_CYCLES`] so channel occupancy and the per-access bandwidth
+    /// floor describe the same bus.
+    pub dram_transfer_cycles: f64,
+    /// Writer stall for invalidating remote sharers on a write to a
+    /// write-shared line (MESI upgrade round-trip).
+    pub upgrade_cycles: f64,
+    /// Reader stall for a line whose last writer was another core (dirty
+    /// data forwarded through the shared LLC).
+    pub dirty_forward_cycles: f64,
+    /// Extra exposed latency when a phase-1 shadow-LLC hit turns into a
+    /// shared-LLC miss under real sharing pressure (capacity interference;
+    /// charged on top of the unpaid bandwidth floor).
+    pub demotion_cycles: f64,
+}
+
+impl Default for SharedMemConfig {
+    fn default() -> Self {
+        SharedMemConfig {
+            dram_channels: 4,
+            llc_sliced: true,
+            llc_service_cycles: 2.0,
+            dram_transfer_cycles: DRAM_BW_CYCLES,
+            upgrade_cycles: 24.0,
+            dirty_forward_cycles: 24.0,
+            demotion_cycles: 40.0,
+        }
+    }
 }
 
 /// Matrix-unit (systolic array) configuration.
@@ -75,13 +136,18 @@ pub struct SystemConfig {
     pub core: CoreConfig,
     pub mem: MemConfig,
     pub unit: MatrixUnitConfig,
+    /// The shared memory system behind the private L1/L2s: one shared LLC
+    /// with MESI-lite coherence bookkeeping and a multi-channel DRAM back
+    /// end, priced by deterministic trace-and-replay.
+    pub shared: SharedMemConfig,
     /// Elements per 512-bit vector register (ELEN=32 -> 16).
     pub vlen_elems: usize,
-    /// Active cores sharing the LLC and DRAM bus. Each core has its own
+    /// Active cores sharing the LLC and DRAM channels. Each core has its own
     /// pipeline, private caches, and matrix unit (a [`crate::sim::Machine`]
-    /// each, see [`crate::sim::Machine::fork_core`]); `cores > 1` turns on
-    /// the first-order shared-resource contention adjustment in
-    /// [`crate::sim::CostModel`]. Event *counts* are never affected.
+    /// each, see [`crate::sim::Machine::fork_core`]); with `cores > 1` the
+    /// parallel driver replays the per-core access traces through the shared
+    /// LLC + DRAM model ([`crate::mem::shared::replay`]) to derive queueing,
+    /// coherence, and sharing costs. Event *counts* are never affected.
     pub cores: usize,
 }
 
@@ -125,6 +191,7 @@ impl Default for SystemConfig {
                 issue_overhead: 4,
                 pass_stalls: 2,
             },
+            shared: SharedMemConfig::default(),
             vlen_elems: 16,
             cores: 1,
         }
@@ -144,8 +211,8 @@ impl SystemConfig {
              \x20          | {}-cycle MAC, non-speculative sort/zip issue (+{} cycles)\n\
              L1D        | {}-way, {}KB, {}-cycle hit\n\
              L2         | {}-way, {}KB, {}-cycle hit\n\
-             LLC        | {}-way, {}KB, {}-cycle hit\n\
-             Memory     | DDR4-2400 ({} CPU cycles)\n",
+             LLC        | {}-way, {}KB, {}-cycle hit (shared, {})\n\
+             Memory     | DDR4-2400 ({} CPU cycles), {} channels\n",
             self.core.scalar_ipc,
             self.core.vector_ipc,
             self.core.mem_issue_per_cycle,
@@ -163,7 +230,13 @@ impl SystemConfig {
             m.llc.ways,
             m.llc.size_bytes / 1024,
             m.llc.hit_latency,
+            if self.shared.llc_sliced {
+                "sliced per core"
+            } else {
+                "one fixed slice"
+            },
             m.dram_latency,
+            self.shared.dram_channels,
         )
     }
 }
@@ -198,5 +271,14 @@ mod tests {
         let s = SystemConfig::default().table2();
         assert!(s.contains("16x16"));
         assert!(s.contains("32KB"));
+        assert!(s.contains("4 channels"));
+    }
+
+    #[test]
+    fn shared_mem_defaults_are_inert_at_one_core() {
+        let c = SystemConfig::default();
+        assert_eq!(c.shared.dram_channels, 4);
+        assert!(c.shared.llc_sliced);
+        assert_eq!(c.shared.dram_transfer_cycles, DRAM_BW_CYCLES);
     }
 }

@@ -361,6 +361,13 @@ pub struct ScalingPoint {
     /// work-stealing gap this exposes is the spz vs spz-rsort story at the
     /// core level).
     pub imbalance: f64,
+    /// Shared-LLC demand hit rate from the replay (private-LLC rate for the
+    /// serial baseline, where the shadow is the LLC).
+    pub llc_hit_rate: f64,
+    /// Coherence events (upgrades + dirty forwards) summed over cores.
+    pub coherence_events: u64,
+    /// Cross-core DRAM channel queueing cycles summed over cores.
+    pub dram_queue_cycles: f64,
 }
 
 /// Run the Figure 12 scaling study: `impl_id` on every dataset at each core
@@ -376,6 +383,11 @@ pub fn scaling_sweep(
     for src in datasets {
         let base = session.run(&JobSpec::new(impl_id, src.clone()).with_scale(scale))?;
         let base_cycles = base.time_cycles();
+        let private_llc_rate = if base.metrics.mem.llc_accesses == 0 {
+            0.0
+        } else {
+            base.metrics.mem.llc_hits as f64 / base.metrics.mem.llc_accesses as f64
+        };
         out.push(ScalingPoint {
             dataset: base.dataset.clone(),
             impl_id,
@@ -384,9 +396,12 @@ pub fn scaling_sweep(
             cycles: base_cycles,
             speedup: 1.0,
             imbalance: 1.0,
+            llc_hit_rate: private_llc_rate,
+            coherence_events: 0,
+            dram_queue_cycles: 0.0,
         });
         for &c in cores.iter().filter(|&&c| c > 1) {
-            for sched in [Scheduler::Static, Scheduler::WorkStealing] {
+            for sched in [Scheduler::Static, Scheduler::WorkStealing, Scheduler::WorkStealingDyn] {
                 let r = session.run(
                     &JobSpec::new(impl_id, src.clone())
                         .with_scale(scale)
@@ -394,6 +409,7 @@ pub fn scaling_sweep(
                         .with_scheduler(sched),
                 )?;
                 let cycles = r.time_cycles();
+                let sh = &r.metrics.shared;
                 out.push(ScalingPoint {
                     dataset: r.dataset.clone(),
                     impl_id,
@@ -402,6 +418,9 @@ pub fn scaling_sweep(
                     cycles,
                     speedup: base_cycles / cycles.max(1e-9),
                     imbalance: r.multicore.as_ref().map(|m| m.imbalance()).unwrap_or(1.0),
+                    llc_hit_rate: sh.llc_hit_rate(),
+                    coherence_events: sh.coherence_events(),
+                    dram_queue_cycles: sh.dram_queue_cycles,
                 });
             }
         }
@@ -409,7 +428,9 @@ pub fn scaling_sweep(
     Ok(out)
 }
 
-/// Figure 12: multi-core speedup per dataset, static vs work-stealing.
+/// Figure 12: multi-core speedup per dataset, static vs (dynamic)
+/// work-stealing, with the shared-memory picture at the largest core count
+/// (shared-LLC hit rate and coherence events from the replay).
 pub fn fig12(points: &[ScalingPoint]) -> String {
     let mut s = String::new();
     let impl_name = points.first().map(|p| p.impl_id.name()).unwrap_or("-");
@@ -419,14 +440,20 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
     let _ = writeln!(
         s,
         "Figure 12. Multi-core scaling ({impl_name}): speedup over 1 core \
-         (row-blocked driver; work-stealing vs static block schedule)"
+         (row-blocked driver; static vs work-stealing vs ws-dyn block \
+         schedule; llc-hit/coh/dram-q from the shared-memory replay at the \
+         largest core count)"
     );
     let _ = write!(s, "{:<10} {:<14}", "Matrix", "sched");
     for c in &cores {
         let col = format!("x{c}");
         let _ = write!(s, " {col:>7}");
     }
-    let _ = writeln!(s, " {:>10}", "imbalance");
+    let _ = writeln!(
+        s,
+        " {:>10} {:>8} {:>8} {:>10}",
+        "imbalance", "llc-hit", "coh", "dram-q"
+    );
     let mut datasets: Vec<&str> = Vec::new();
     for p in points {
         if !datasets.contains(&p.dataset.as_str()) {
@@ -434,9 +461,14 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
         }
     }
     for d in datasets {
-        for sched in [Scheduler::Static, Scheduler::WorkStealing] {
+        for sched in [Scheduler::Static, Scheduler::WorkStealing, Scheduler::WorkStealingDyn] {
+            // Skip schedulers the sweep did not run (older point sets).
+            if !points.iter().any(|p| p.dataset == d && p.scheduler == Some(sched)) {
+                continue;
+            }
             let _ = write!(s, "{d:<10} {:<14}", sched.name());
             let mut worst_imb = 1.0f64;
+            let mut biggest: Option<&ScalingPoint> = None;
             for &c in &cores {
                 let pt = points.iter().find(|p| {
                     p.dataset == d
@@ -446,6 +478,9 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
                 match pt {
                     Some(p) => {
                         worst_imb = worst_imb.max(p.imbalance);
+                        if p.cores > 1 {
+                            biggest = Some(p);
+                        }
                         let _ = write!(s, " {:>7.2}", p.speedup);
                     }
                     None => {
@@ -453,7 +488,20 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
                     }
                 }
             }
-            let _ = writeln!(s, " {worst_imb:>9.2}x");
+            match biggest {
+                Some(p) => {
+                    let _ = writeln!(
+                        s,
+                        " {worst_imb:>9.2}x {:>7.1}% {:>8} {:>10.0}",
+                        100.0 * p.llc_hit_rate,
+                        p.coherence_events,
+                        p.dram_queue_cycles
+                    );
+                }
+                None => {
+                    let _ = writeln!(s, " {worst_imb:>9.2}x {:>8} {:>8} {:>10}", "-", "-", "-");
+                }
+            }
         }
     }
     s
@@ -461,19 +509,113 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
 
 /// TSV series for the scaling study (`fig12.tsv`).
 pub fn fig12_tsv(points: &[ScalingPoint]) -> String {
-    let mut t = String::from("matrix\timpl\tsched\tcores\tcycles\tspeedup\timbalance\n");
+    let mut t = String::from(
+        "matrix\timpl\tsched\tcores\tcycles\tspeedup\timbalance\tllc_hit_rate\t\
+         coherence_events\tdram_queue_cycles\n",
+    );
     for p in points {
         let _ = writeln!(
             t,
-            "{}\t{}\t{}\t{}\t{:.1}\t{:.6}\t{:.6}",
+            "{}\t{}\t{}\t{}\t{:.1}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.1}",
             p.dataset,
             p.impl_id,
             p.scheduler.map(|s| s.name()).unwrap_or("serial"),
             p.cores,
             p.cycles,
             p.speedup,
-            p.imbalance
+            p.imbalance,
+            p.llc_hit_rate,
+            p.coherence_events,
+            p.dram_queue_cycles
         );
     }
     t
+}
+
+/// `spz mem`: the shared-memory picture of one job — per-core shared-LLC
+/// traffic, queueing, coherence counters, sharing corrections, and DRAM
+/// channel occupancy from the trace replay. Serial jobs report the private
+/// hierarchy only (no replay ran).
+pub fn mem_report(r: &crate::api::JobResult) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Shared-memory report: {} on {} ({} core{})",
+        r.impl_id.name(),
+        r.dataset,
+        r.cores,
+        if r.cores == 1 { "" } else { "s" }
+    );
+    let m = &r.metrics.mem;
+    let _ = writeln!(
+        s,
+        "private   | L1D {:.1}% of {} | L2 {} | shadow-LLC {} | DRAM {} | writebacks {}",
+        100.0 * m.l1d_hit_rate(),
+        m.l1d_accesses,
+        m.l2_accesses,
+        m.llc_accesses,
+        m.dram_accesses,
+        m.writebacks
+    );
+    let Some(mc) = &r.multicore else {
+        let _ = writeln!(
+            s,
+            "(serial job: the shadow LLC is the LLC; run with --cores >= 2 \
+             for the shared-memory replay)"
+        );
+        return s;
+    };
+    let _ = writeln!(
+        s,
+        "{:<5} {:>12} {:>9} {:>7} {:>6} {:>6} {:>6} {:>6} {:>6} {:>9} {:>9} {:>9} {:>10}",
+        "core", "cycles", "llc_acc", "hit%", "fills", "demot", "upgr", "inv_rx", "fwd",
+        "q_llc", "q_dram", "coh", "net_stall"
+    );
+    let mut rows: Vec<(String, &crate::sim::RunMetrics)> = mc
+        .per_core
+        .iter()
+        .enumerate()
+        .map(|(c, m)| (c.to_string(), m))
+        .collect();
+    rows.push(("all".to_string(), &mc.total));
+    for (name, m) in rows {
+        let sh = &m.shared;
+        let _ = writeln!(
+            s,
+            "{:<5} {:>12.0} {:>9} {:>6.1}% {:>6} {:>6} {:>6} {:>6} {:>6} {:>9.0} {:>9.0} {:>9.0} {:>10.0}",
+            name,
+            m.cycles,
+            sh.llc_accesses,
+            100.0 * sh.llc_hit_rate(),
+            sh.shared_fills,
+            sh.demotions,
+            sh.upgrades,
+            sh.invalidations_received,
+            sh.dirty_forwards,
+            sh.llc_queue_cycles,
+            sh.dram_queue_cycles,
+            sh.coherence_cycles,
+            sh.stall_cycles()
+        );
+    }
+    let _ = writeln!(
+        s,
+        "critical path {:.0} cycles, efficiency {:.2}x, imbalance {:.2}x",
+        mc.critical_path_cycles,
+        mc.parallel_efficiency(),
+        mc.imbalance()
+    );
+    if !mc.channel_busy_cycles.is_empty() {
+        let _ = write!(s, "DRAM channels (busy cycles):");
+        for (ch, b) in mc.channel_busy_cycles.iter().copied().enumerate() {
+            let pct = if mc.critical_path_cycles > 0.0 {
+                100.0 * b / mc.critical_path_cycles
+            } else {
+                0.0
+            };
+            let _ = write!(s, " ch{ch} {b:.0} ({pct:.1}%)");
+        }
+        let _ = writeln!(s);
+    }
+    s
 }

@@ -47,14 +47,20 @@
 //! [`DatasetSource`] covers registry synthetics, `.mtx` files, and in-memory
 //! [`Csr`]s. [`JobSpec::with_cores`] switches a job onto the row-blocked
 //! multi-core driver ([`spgemm::parallel`]): row blocks of A on real worker
-//! threads, one forked [`Machine`] per simulated core, static or
-//! work-stealing block scheduling, per-core metrics and critical-path cycles
-//! in [`MulticoreMetrics`]. The `spz` CLI (`src/main.rs`) is a thin argv
-//! adapter over this API, and [`coordinator`] renders [`api::SuiteRun`]s
-//! into the paper's tables and figures (including the `fig12` multi-core
-//! scaling study). See `rust/README.md` for a quick start, or `examples/`
-//! (quickstart, paper_pipeline, triangle_counting, amg_galerkin) for the
-//! API in use.
+//! threads, one forked [`Machine`] per simulated core, static /
+//! work-stealing / work-proportional (`ws-dyn`) block scheduling, per-core
+//! metrics and critical-path cycles in [`MulticoreMetrics`]. The memory
+//! system behind the cores is modeled end-to-end: private L1/L2 per core
+//! and one shared LLC with MESI-lite coherence bookkeeping plus a
+//! multi-channel DRAM back end, priced by deterministic trace-and-replay
+//! ([`mem::trace`] records during execution, [`mem::shared`] replays after
+//! the workers join) so per-core results stay bit-reproducible across host
+//! thread schedules. The `spz` CLI (`src/main.rs`) is a thin argv adapter
+//! over this API, and [`coordinator`] renders [`api::SuiteRun`]s into the
+//! paper's tables and figures (including the `fig12` multi-core scaling
+//! study and the `spz mem` shared-memory report). See `rust/README.md` for
+//! a quick start, or `examples/` (quickstart, paper_pipeline,
+//! triangle_counting, amg_galerkin) for the API in use.
 
 pub mod api;
 pub mod area;
@@ -72,7 +78,7 @@ pub mod util;
 pub use api::{
     DatasetSource, JobResult, JobSpec, Product, Session, SessionConfig, SuiteRun, SuiteSpec,
 };
-pub use config::SystemConfig;
+pub use config::{SharedMemConfig, SystemConfig};
 pub use matrix::Csr;
 pub use runtime::Engine;
 pub use sim::{Machine, MulticoreMetrics, RunMetrics};

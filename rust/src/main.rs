@@ -33,8 +33,8 @@ struct Args {
 /// are listed explicitly; any other `--key` expects a value and may appear
 /// at most once (a duplicate is an error, not a silent overwrite).
 const COMMANDS: &[&str] = &[
-    "table3", "fig4", "fig8", "fig9", "fig10", "fig11", "fig12", "table4", "all", "run", "ablate",
-    "isa", "config", "gen",
+    "table3", "fig4", "fig8", "fig9", "fig10", "fig11", "fig12", "table4", "all", "run", "mem",
+    "ablate", "isa", "config", "gen",
 ];
 
 fn parse_argv(args: &[String]) -> Result<Args> {
@@ -96,6 +96,12 @@ fn allowed_opts(cmd: &str) -> &'static [&'static str] {
             "scale", "datasets", "impl", "cores", "engine", "artifacts", "mtx-dir", "out-dir",
         ],
         "run" => &["dataset", "impl", "scale", "engine", "artifacts", "mtx-dir", "cores", "sched"],
+        // mem runs one multi-core job and renders the shared-memory report
+        // (per-core LLC/coherence/queueing + DRAM channel occupancy).
+        "mem" => &[
+            "dataset", "impl", "scale", "engine", "artifacts", "mtx-dir", "cores", "sched",
+            "channels", "out-dir",
+        ],
         // ablate sweeps are engine-independent (hardwired NativeEngine).
         "ablate" => &["dataset", "scale", "mtx-dir", "out-dir"],
         "gen" => &["dataset", "out", "scale"],
@@ -111,6 +117,7 @@ fn allowed_flags(cmd: &str) -> &'static [&'static str] {
         "table3" | "fig8" | "fig9" | "fig10" | "fig11" | "all" => &["verify", "quiet", "json"],
         "fig12" => &["quiet"],
         "run" => &["verify", "json"],
+        "mem" => &["quiet"],
         "ablate" => &["quiet"],
         "table4" => &["sweep", "quiet"],
         _ => &[],
@@ -120,16 +127,19 @@ fn allowed_flags(cmd: &str) -> &'static [&'static str] {
 fn print_help() {
     println!(
         "spz — SparseZipper reproduction\n\
-         commands: table3 fig4 fig8 fig9 fig10 fig11 fig12 table4 all run ablate isa config gen \
-         help\n\
+         commands: table3 fig4 fig8 fig9 fig10 fig11 fig12 table4 all run mem ablate isa config \
+         gen help\n\
          suite commands (table3 fig8 fig9 fig10 fig11 all):\n\
          \x20   --scale F --threads N --datasets a,b --engine native|xla\n\
          \x20   --mtx-dir DIR --out-dir DIR --artifacts DIR --verify --quiet --json\n\
-         \x20   --cores N --sched static|work-stealing (simulated multi-core jobs)\n\
+         \x20   --cores N --sched static|work-stealing|ws-dyn (simulated multi-core jobs)\n\
          \x20   (fig8 and all also take --impls a,b)\n\
          run:    --dataset NAME [--impl NAME] [--scale F] [--engine native|xla]\n\
          \x20       [--mtx-dir DIR] [--artifacts DIR] [--cores N] [--sched S]\n\
          \x20       [--verify] [--json]\n\
+         mem:    --dataset NAME [--impl NAME] [--cores N] [--sched S] [--channels N]\n\
+         \x20       [--scale F] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
+         \x20       (shared-memory report: per-core LLC/coherence/queueing + DRAM channels)\n\
          fig12:  [--impl NAME] [--cores 1,2,4,8] [--scale F] [--datasets a,b]\n\
          \x20       [--engine E] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          ablate: [--dataset NAME] [--scale F] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
@@ -173,7 +183,11 @@ fn cores_opt(a: &Args) -> Result<Option<usize>> {
     match a.opts.get("cores") {
         Some(c) => {
             let n: usize = c.parse().context("--cores")?;
-            anyhow::ensure!(n >= 1, "--cores must be at least 1");
+            anyhow::ensure!(
+                (1..=64).contains(&n),
+                "--cores must be between 1 and 64 (the shared-memory model \
+                 supports up to 64 cores)"
+            );
             Ok(Some(n))
         }
         None => Ok(None),
@@ -390,6 +404,47 @@ fn main() -> Result<()> {
                 println!();
             }
         }
+        "mem" => {
+            let mut cfg = session_config(&a)?;
+            if let Some(chs) = a.opts.get("channels") {
+                let n: usize = chs.parse().context("--channels")?;
+                anyhow::ensure!(n >= 1, "--channels must be at least 1");
+                cfg.sys.shared.dram_channels = n;
+            }
+            let session = Session::with_config(cfg);
+            let name = a.opts.get("dataset").context("--dataset required")?;
+            let dataset = DatasetSource::parse(name, mtx_dir(&a).as_deref())?;
+            let impl_id: ImplId = a
+                .opts
+                .get("impl")
+                .map(|s| s.as_str())
+                .unwrap_or("spz")
+                .parse()
+                .map_err(anyhow::Error::msg)?;
+            let mut job = JobSpec::new(impl_id, dataset.clone())
+                .with_scale(scale_opt(&a)?.unwrap_or(1.0))
+                .with_cores(cores_opt(&a)?.unwrap_or(4));
+            if let Some(s) = sched_opt(&a)? {
+                anyhow::ensure!(
+                    job.cores >= 2,
+                    "--sched requires --cores >= 2 (it only affects multi-core runs)"
+                );
+                job = job.with_scheduler(s);
+            }
+            eprintln!(
+                "[spz] shared-memory report: {impl_id} on {} at {} core(s), {} DRAM channel(s)",
+                dataset.name(),
+                job.cores,
+                session.system().shared.dram_channels
+            );
+            let res = session.run(&job)?;
+            report::emit(
+                &out_dir(&a),
+                &format!("mem_{}.txt", dataset.name()),
+                &figures::mem_report(&res),
+                quiet,
+            )?;
+        }
         "fig12" => {
             let session = Session::with_config(session_config(&a)?);
             let impl_id: ImplId = a
@@ -415,8 +470,8 @@ fn main() -> Result<()> {
                 None => vec![1, 2, 4, 8],
             };
             anyhow::ensure!(
-                cores.iter().all(|&c| c >= 1),
-                "--cores entries must be at least 1"
+                cores.iter().all(|&c| (1..=64).contains(&c)),
+                "--cores entries must be between 1 and 64"
             );
             cores.sort_unstable();
             cores.dedup();
@@ -557,7 +612,9 @@ mod tests {
         assert_eq!(spec.cores, 4);
         assert_eq!(spec.sched, Scheduler::WorkStealing);
         let a = parse_argv(&v(&["run", "--cores", "0"])).unwrap();
-        assert!(cores_opt(&a).unwrap_err().to_string().contains("at least 1"));
+        assert!(cores_opt(&a).unwrap_err().to_string().contains("between 1 and 64"));
+        let a = parse_argv(&v(&["run", "--cores", "65"])).unwrap();
+        assert!(cores_opt(&a).unwrap_err().to_string().contains("between 1 and 64"));
         let a = parse_argv(&v(&["run", "--sched", "greedy"])).unwrap();
         let e = sched_opt(&a).unwrap_err().to_string();
         assert!(e.contains("static") && e.contains("greedy"), "{e}");
@@ -568,6 +625,30 @@ mod tests {
         // fig12 parses its own --cores list; suite-only options don't apply.
         assert!(parse_argv(&v(&["fig12", "--cores", "1,2,4", "--impl", "spz"])).is_ok());
         assert!(parse_argv(&v(&["fig12", "--threads", "2"])).is_err());
+    }
+
+    #[test]
+    fn mem_command_parses_its_options() {
+        let a = parse_argv(&v(&[
+            "mem", "--dataset", "p2p", "--cores", "8", "--sched", "ws-dyn", "--channels", "2",
+            "--quiet",
+        ]))
+        .unwrap();
+        assert_eq!(a.cmd, "mem");
+        assert_eq!(a.opts.get("channels").unwrap(), "2");
+        assert_eq!(sched_opt(&a).unwrap(), Some(Scheduler::WorkStealingDyn));
+        // --channels belongs to mem, not run.
+        let e = parse_argv(&v(&["run", "--channels", "2"])).unwrap_err();
+        assert!(e.to_string().contains("unknown option --channels"), "{e}");
+        // --json does not apply to mem.
+        assert!(parse_argv(&v(&["mem", "--dataset", "p2p", "--json"])).is_err());
+    }
+
+    #[test]
+    fn ws_dyn_sched_accepted_by_suite_commands() {
+        let a = parse_argv(&v(&["fig8", "--cores", "4", "--sched", "ws-dyn"])).unwrap();
+        let spec = suite_spec(&a).unwrap();
+        assert_eq!(spec.sched, Scheduler::WorkStealingDyn);
     }
 
     #[test]

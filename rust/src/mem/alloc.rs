@@ -22,11 +22,21 @@ impl Default for SimAlloc {
     }
 }
 
+/// Default start of the simulated address space (away from address zero,
+/// like a real process image).
+pub const START: u64 = 0x10000;
+
 impl SimAlloc {
     pub fn new() -> Self {
-        // Start away from address zero (like a real process image).
+        Self::with_base(START)
+    }
+
+    /// An allocator whose first allocation starts at `base` — used to give
+    /// each simulated core a disjoint private region and the shared-operand
+    /// table its own canonical region (see `sim::Machine::fork_core`).
+    pub fn with_base(base: u64) -> Self {
         SimAlloc {
-            next: 0x10000,
+            next: base,
             allocated: 0,
         }
     }

@@ -1,13 +1,23 @@
-//! Three-level cache hierarchy (L1D -> L2 -> LLC -> DRAM) per Table II.
+//! Per-core cache hierarchy (L1D -> L2 -> LLC-shadow -> DRAM) per Table II.
 //!
 //! `access` walks an address range line-by-line, probes the levels in order,
 //! models write-back propagation of dirty victims, and returns the raw
 //! latency of the *slowest* line touched plus the number of L1D line
 //! accesses (Figure 10's metric). The cost model in `sim::cost` turns raw
 //! latencies into effective (overlap-adjusted) cycles.
+//!
+//! The split between private and shared levels: `l1d` and `l2` are the
+//! core's private caches and their results are final. `llc` is the core's
+//! private *shadow* of the shared LLC — at one core it **is** the LLC;
+//! under multi-core execution it serves as each core's latency predictor
+//! while the real shared LLC (+ coherence + DRAM channels) is priced by
+//! deterministic trace-and-replay: with tracing enabled (see
+//! [`Hierarchy::enable_trace`]) every access that leaves the private L1/L2
+//! is recorded as a [`TraceEvent`] for [`crate::mem::shared::replay`].
 
 use crate::config::MemConfig;
 use crate::mem::cache::Cache;
+use crate::mem::trace::{TraceEvent, TraceKind};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AccessKind {
@@ -55,6 +65,7 @@ impl MemStats {
 pub struct Hierarchy {
     pub l1d: Cache,
     pub l2: Cache,
+    /// The core's private shadow of the shared LLC (see module docs).
     pub llc: Cache,
     cfg: MemConfig,
     line_shift: u32,
@@ -67,6 +78,19 @@ pub struct Hierarchy {
     prefetch_tab: [u64; 8],
     pf_idx: usize,
     pub prefetch_hits: u64,
+    /// Shared-memory access trace (`None` = tracing off, the serial
+    /// default). Records every LLC-level access for phase-2 replay.
+    trace: Option<Vec<TraceEvent>>,
+    /// Core-local logical time stamped onto trace events (set by the
+    /// machine before each access group).
+    now: f64,
+    /// Figure 9 phase stamped onto trace events.
+    phase: u8,
+    /// Whether the current `access()` call has already attributed the
+    /// (once-per-access) DRAM bandwidth floor to one of its lines: the cost
+    /// model charges `dram_bw` from the single worst-line latency, so
+    /// exactly one traced line per access may carry `paid_bw = true`.
+    bw_paid_this_access: bool,
 }
 
 impl Hierarchy {
@@ -83,11 +107,61 @@ impl Hierarchy {
             prefetch_tab: [u64::MAX; 8],
             pf_idx: 0,
             prefetch_hits: 0,
+            trace: None,
+            now: 0.0,
+            phase: 0,
+            bw_paid_this_access: false,
         }
     }
 
     pub fn line_bytes(&self) -> usize {
         self.cfg.l1d.line_bytes
+    }
+
+    // ---- shared-memory trace hooks ----------------------------------------
+
+    /// Start recording the shared-memory (LLC-level) access trace. The
+    /// parallel driver enables this on every forked core; serial machines
+    /// leave it off and pay no overhead.
+    pub fn enable_trace(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    pub fn trace_enabled(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// Take the recorded trace (empty if tracing was never enabled).
+    /// Tracing stays enabled with a fresh buffer.
+    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+        self.trace.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    /// Stamp the core-local logical time onto subsequent trace events.
+    #[inline]
+    pub fn set_now(&mut self, t: f64) {
+        self.now = t;
+    }
+
+    /// Stamp the Figure 9 phase onto subsequent trace events.
+    #[inline]
+    pub fn set_phase(&mut self, p: u8) {
+        self.phase = p;
+    }
+
+    #[inline]
+    fn record(&mut self, line: u64, kind: TraceKind, write: bool, shadow_hit: bool, paid_bw: bool) {
+        if let Some(t) = self.trace.as_mut() {
+            t.push(TraceEvent {
+                line,
+                time: self.now,
+                kind,
+                write,
+                shadow_hit,
+                paid_bw,
+                phase: self.phase,
+            });
+        }
     }
 
     /// Probe a single line address (already shifted). Returns raw latency,
@@ -102,7 +176,7 @@ impl Hierarchy {
             .any(|&p| p != u64::MAX && (line == p + 1 || line == p + 2));
         self.prefetch_tab[self.pf_idx] = line;
         self.pf_idx = (self.pf_idx + 1) % self.prefetch_tab.len();
-        let raw = self.demand_line(line, kind);
+        let raw = self.demand_line(line, kind, streamed);
         if streamed && raw > self.cfg.l1d.hit_latency {
             self.prefetch_hits += 1;
             return self.cfg.l1d.hit_latency;
@@ -111,15 +185,16 @@ impl Hierarchy {
     }
 
     #[inline]
-    fn demand_line(&mut self, line: u64, kind: AccessKind) -> u32 {
+    fn demand_line(&mut self, line: u64, kind: AccessKind, streamed: bool) -> u32 {
         let write = kind == AccessKind::Write;
         let (hit1, wb1) = self.l1d.access_line(line, write);
         if let Some(v) = wb1 {
             // Dirty L1 victim written back into L2 (allocate, mark dirty).
             let (_, wb2) = self.l2.access_line(v, true);
             if let Some(v2) = wb2 {
-                let (_, _wb3) = self.llc.access_line(v2, true);
+                let (wbhit, _wb3) = self.llc.access_line(v2, true);
                 // LLC dirty victims go to DRAM; latency hidden (write buffer).
+                self.record(v2, TraceKind::Writeback, true, wbhit, false);
             }
         }
         if hit1 {
@@ -129,12 +204,23 @@ impl Hierarchy {
         // the demand write dirties L1 (handled above via write-allocate).
         let (hit2, wb2) = self.l2.access_line(line, false);
         if let Some(v2) = wb2 {
-            let (_, _wb3) = self.llc.access_line(v2, true);
+            let (wbhit, _wb3) = self.llc.access_line(v2, true);
+            self.record(v2, TraceKind::Writeback, true, wbhit, false);
         }
         if hit2 {
             return self.cfg.l1d.hit_latency + self.cfg.l2.hit_latency;
         }
         let (hit3, _wb3) = self.llc.access_line(line, false);
+        // The bandwidth floor is charged by the cost model once per access
+        // call, from the worst line's reported latency — which reaches DRAM
+        // iff some line misses here without being stream-clamped. Attribute
+        // the floor to the *first* such line only, so the replay can never
+        // refund more than phase 1 charged.
+        let paid = !hit3 && !streamed && !self.bw_paid_this_access;
+        if paid {
+            self.bw_paid_this_access = true;
+        }
+        self.record(line, TraceKind::Demand, write, hit3, paid);
         if hit3 {
             return self.cfg.l1d.hit_latency + self.cfg.l2.hit_latency + self.cfg.llc.hit_latency;
         }
@@ -146,12 +232,15 @@ impl Hierarchy {
     }
 
     /// Access `bytes` starting at simulated address `addr`. Returns
-    /// `(max_line_latency, lines_touched)`.
+    /// `(max_line_latency, lines_touched)`. One machine-level access call;
+    /// the cost model charges the DRAM bandwidth floor at most once per
+    /// call, and the trace marks at most one line as having paid it.
     #[inline]
     pub fn access(&mut self, addr: u64, bytes: usize, kind: AccessKind) -> (u32, u32) {
         if bytes == 0 {
             return (0, 0);
         }
+        self.bw_paid_this_access = false;
         let first = addr >> self.line_shift;
         let last = (addr + bytes as u64 - 1) >> self.line_shift;
         let mut worst = 0u32;
@@ -186,6 +275,16 @@ impl Hierarchy {
         self.l2.reset_stats();
         self.llc.reset_stats();
         self.dram_accesses = 0;
+        // Prefetcher stats *and* stream state: without clearing the table,
+        // lines touched before the reset kept being detected as streams
+        // afterwards, leaking both the counter and the predictor state
+        // across reset boundaries.
+        self.prefetch_hits = 0;
+        self.prefetch_tab = [u64::MAX; 8];
+        self.pf_idx = 0;
+        if let Some(t) = self.trace.as_mut() {
+            t.clear();
+        }
     }
 }
 
@@ -269,5 +368,109 @@ mod tests {
         let (lat, lines) = m.access(0x10000, 0, AccessKind::Read);
         assert_eq!((lat, lines), (0, 0));
         assert_eq!(m.stats().l1d_accesses, 0);
+    }
+
+    #[test]
+    fn reset_stats_clears_prefetch_state_and_counters() {
+        let mut m = h();
+        // Stream enough adjacent lines to score prefetch hits and leave the
+        // stream table populated.
+        for i in 0..16u64 {
+            m.access(0x50000 + i * 64, 4, AccessKind::Read);
+        }
+        assert!(m.prefetch_hits > 0, "streaming must hit the prefetcher");
+        m.reset_stats();
+        assert_eq!(m.prefetch_hits, 0, "prefetch_hits must reset");
+        assert_eq!(m.stats().l1d_accesses, 0);
+        assert_eq!(m.stats().dram_accesses, 0);
+        // Regression: the stream table used to survive the reset, so the
+        // never-touched line adjacent to the pre-reset stream was still
+        // treated as prefetched (latency clamped to an L1 hit). After a true
+        // reset it pays its full cold-miss latency.
+        let (lat, _) = m.access(0x50000 + 16 * 64, 4, AccessKind::Read);
+        assert!(
+            lat > 2,
+            "line adjacent to pre-reset stream must not be treated as prefetched (lat {lat})"
+        );
+        assert_eq!(m.prefetch_hits, 0);
+    }
+
+    #[test]
+    fn trace_records_llc_level_accesses_only() {
+        let mut m = h();
+        m.enable_trace();
+        assert!(m.trace_enabled());
+        m.set_phase(2);
+        m.set_now(123.0);
+        // Cold access: misses L1/L2, reaches the LLC -> one demand event.
+        m.access(0x10000, 4, AccessKind::Write);
+        // Warm repeat: L1 hit, no LLC-level traffic.
+        m.access(0x10000, 4, AccessKind::Read);
+        let t = m.take_trace();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].kind, TraceKind::Demand);
+        assert_eq!(t[0].line, 0x10000 >> 6);
+        assert_eq!(t[0].time, 123.0);
+        assert_eq!(t[0].phase, 2);
+        assert!(t[0].write);
+        assert!(!t[0].shadow_hit, "cold line cannot hit the shadow LLC");
+        assert!(t[0].paid_bw, "non-streamed DRAM access pays the bandwidth floor");
+        // The buffer was taken; tracing continues fresh.
+        assert!(m.take_trace().is_empty());
+        m.access(0x90000, 4, AccessKind::Read);
+        assert_eq!(m.take_trace().len(), 1);
+        // An untraced hierarchy records nothing.
+        let mut quiet = h();
+        quiet.access(0x10000, 4, AccessKind::Read);
+        assert!(quiet.take_trace().is_empty());
+        assert!(!quiet.trace_enabled());
+    }
+
+    #[test]
+    fn streamed_accesses_record_unpaid_bandwidth_floor() {
+        let mut m = h();
+        m.enable_trace();
+        m.access(0x60000, 4, AccessKind::Read); // cold, not streamed
+        m.access(0x60000 + 64, 4, AccessKind::Read); // adjacent -> streamed
+        let t = m.take_trace();
+        assert_eq!(t.len(), 2);
+        assert!(t[0].paid_bw);
+        assert!(!t[1].paid_bw, "prefetched line pays no bandwidth floor in phase 1");
+        assert!(!t[1].shadow_hit);
+    }
+
+    #[test]
+    fn multi_line_access_pays_the_bandwidth_floor_at_most_once() {
+        let mut m = h();
+        m.enable_trace();
+        // A cold 4-line access charges one bandwidth floor (the cost model
+        // uses the single worst-line latency), so exactly one traced line
+        // may carry paid_bw — the replay can never refund more than was
+        // charged.
+        m.access(0x70000, 256, AccessKind::Read);
+        let t = m.take_trace();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.iter().filter(|e| e.paid_bw).count(), 1);
+        assert!(t[0].paid_bw, "the first DRAM-reaching line carries the floor");
+    }
+
+    #[test]
+    fn trace_sees_every_llc_access_of_the_shadow() {
+        let mut m = h();
+        m.enable_trace();
+        // Write enough distinct lines to force L1 and L2 evictions, so the
+        // trace carries both demand fills and writeback installs.
+        for i in 0..8192u64 {
+            m.access(0x200000 + i * 64, 8, AccessKind::Write);
+        }
+        let t = m.take_trace();
+        let demands = t.iter().filter(|e| e.kind == TraceKind::Demand).count() as u64;
+        let wbs = t.iter().filter(|e| e.kind == TraceKind::Writeback).count() as u64;
+        assert!(wbs > 0, "dirty L2 victims must appear in the trace");
+        assert_eq!(
+            demands + wbs,
+            m.stats().llc_accesses,
+            "every LLC-level access must be traced exactly once"
+        );
     }
 }

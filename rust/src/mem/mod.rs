@@ -1,12 +1,19 @@
 //! Simulated memory subsystem: a bump allocator for the *simulated* address
-//! space, set-associative write-back caches, and the three-level hierarchy
-//! from Table II. This substrate replaces gem5's Ruby/CHI model with a
+//! space, set-associative write-back caches, the per-core private hierarchy
+//! from Table II, and the shared end of the system — one LLC shared by all
+//! cores with MESI-lite coherence bookkeeping and a multi-channel DRAM back
+//! end, priced by deterministic trace-and-replay ([`trace`] records,
+//! [`shared`] replays). This substrate replaces gem5's Ruby/CHI model with a
 //! tag-only timing simulation (DESIGN.md "Substitutions").
 
 pub mod alloc;
 pub mod cache;
 pub mod hierarchy;
+pub mod shared;
+pub mod trace;
 
 pub use alloc::SimAlloc;
 pub use cache::Cache;
 pub use hierarchy::{AccessKind, Hierarchy, MemStats};
+pub use shared::{replay, ReplayOutcome, SharedStats};
+pub use trace::{TraceEvent, TraceKind, MAX_PHASES};

@@ -1,0 +1,548 @@
+//! Phase 2 of the shared-memory model: deterministic replay of the merged
+//! per-core traces through one shared LLC (with MESI-lite coherence
+//! bookkeeping) and a multi-channel DRAM back end.
+//!
+//! [`replay`] is a *pure function* of the per-core traces and the
+//! configuration: host thread scheduling never enters, so per-core stall
+//! cycles and coherence counters are bit-reproducible run to run (the same
+//! invariant the parallel driver pins for event counts). Three cost classes
+//! come out of it, every one of which is exactly zero when a single core
+//! runs alone:
+//!
+//! * **Queueing** — waiting behind *other* cores' lookups at the shared LLC
+//!   tag pipeline, and behind other cores' line transfers on the same DRAM
+//!   channel. A core's own back-to-back traffic never queues against itself
+//!   here (its own throughput is already priced in phase 1), and each
+//!   event's charged wait is bounded by one in-flight service per other
+//!   core — finite queues/MSHRs — so saturation degrades gracefully
+//!   instead of compounding.
+//! * **Coherence** — MESI-lite bookkeeping over a line directory: a write to
+//!   a line other cores hold costs the writer an upgrade (invalidation
+//!   round-trip, e.g. the stitched output row-pointer arrays' boundary
+//!   lines), and a read of a line last written by another core costs a
+//!   dirty forward.
+//! * **Sharing corrections** — phase 1 priced each access against the
+//!   core's private *shadow* LLC. Where the real shared LLC disagrees, the
+//!   difference is settled here: a shadow miss that hits shared (another
+//!   core already pulled B's row in — constructive sharing) refunds the
+//!   bandwidth floor phase 1 charged; a shadow hit that misses shared
+//!   (capacity interference from the other cores — destructive) pays the
+//!   floor plus extra exposed latency.
+//!
+//! At one core the shared LLC sees exactly the shadow's access sequence with
+//! identical geometry, so predictions never diverge and all three classes
+//! vanish — the differential tests pin that the 1-core model reproduces the
+//! seed cycle-for-cycle.
+
+use crate::config::{MemConfig, SharedMemConfig, DRAM_BW_CYCLES};
+use crate::mem::cache::Cache;
+use crate::mem::trace::{TraceEvent, TraceKind, MAX_PHASES};
+use std::collections::HashMap;
+
+/// Per-core shared-memory counters and stall cycles from one replay.
+/// Counters are exact; stall fields are replay-derived cycles. Everything is
+/// zero for serial (non-replayed) runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SharedStats {
+    /// Demand lookups this core issued at the shared LLC.
+    pub llc_accesses: u64,
+    pub llc_hits: u64,
+    pub llc_misses: u64,
+    /// Dirty L2 victims this core installed into the shared LLC.
+    /// `llc_accesses + writeback_installs` equals the core's shadow-LLC
+    /// access count exactly (the replay sees every LLC-level access).
+    pub writeback_installs: u64,
+    /// Shadow-miss / shared-hit events: another core had already filled the
+    /// line (constructive sharing).
+    pub shared_fills: u64,
+    /// Shadow-hit / shared-miss events: sharing pressure evicted a line the
+    /// private shadow still predicted resident (destructive interference).
+    pub demotions: u64,
+    /// Writes to lines other cores held (MESI upgrade, invalidations sent).
+    pub upgrades: u64,
+    /// Remote copies this core's writes invalidated.
+    pub invalidations_sent: u64,
+    /// This core's copies invalidated by other cores' writes.
+    pub invalidations_received: u64,
+    /// Reads of lines last written by another core (dirty data forwarded).
+    pub dirty_forwards: u64,
+    /// Cycles spent queueing behind other cores at the shared LLC.
+    pub llc_queue_cycles: f64,
+    /// Cycles spent queueing behind other cores' DRAM channel transfers.
+    pub dram_queue_cycles: f64,
+    /// Upgrade + dirty-forward stalls.
+    pub coherence_cycles: f64,
+    /// Bandwidth floor + exposed latency paid for demotions.
+    pub demotion_cycles: f64,
+    /// Bandwidth-floor refunds earned from constructive sharing.
+    pub sharing_saved_cycles: f64,
+}
+
+impl SharedStats {
+    /// Element-wise accumulate (multi-core aggregation).
+    pub fn add(&mut self, o: &SharedStats) {
+        self.llc_accesses += o.llc_accesses;
+        self.llc_hits += o.llc_hits;
+        self.llc_misses += o.llc_misses;
+        self.writeback_installs += o.writeback_installs;
+        self.shared_fills += o.shared_fills;
+        self.demotions += o.demotions;
+        self.upgrades += o.upgrades;
+        self.invalidations_sent += o.invalidations_sent;
+        self.invalidations_received += o.invalidations_received;
+        self.dirty_forwards += o.dirty_forwards;
+        self.llc_queue_cycles += o.llc_queue_cycles;
+        self.dram_queue_cycles += o.dram_queue_cycles;
+        self.coherence_cycles += o.coherence_cycles;
+        self.demotion_cycles += o.demotion_cycles;
+        self.sharing_saved_cycles += o.sharing_saved_cycles;
+    }
+
+    /// Shared-LLC demand hit rate.
+    pub fn llc_hit_rate(&self) -> f64 {
+        if self.llc_accesses == 0 {
+            0.0
+        } else {
+            self.llc_hits as f64 / self.llc_accesses as f64
+        }
+    }
+
+    /// Coherence protocol events this core initiated.
+    pub fn coherence_events(&self) -> u64 {
+        self.upgrades + self.dirty_forwards
+    }
+
+    /// Net replay-derived stall cycles (sharing refunds subtract).
+    pub fn stall_cycles(&self) -> f64 {
+        self.llc_queue_cycles + self.dram_queue_cycles + self.coherence_cycles
+            + self.demotion_cycles
+            - self.sharing_saved_cycles
+    }
+}
+
+/// Everything one replay produced.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReplayOutcome {
+    /// Per-core counters and stall totals, indexed by core id.
+    pub per_core: Vec<SharedStats>,
+    /// Per-core stall cycles bucketed by the phase each traced access
+    /// charged into (fold these into the matching `phase_cycles` /
+    /// `cycles`; entries past the machine's phase count stay zero).
+    pub per_core_phase_stalls: Vec<[f64; MAX_PHASES]>,
+    /// Total transfer occupancy per DRAM channel, in cycles.
+    pub channel_busy_cycles: Vec<f64>,
+}
+
+/// MESI-lite directory state for one line: which cores plausibly hold it in
+/// their private caches (set on demand fill, cleared on writeback or remote
+/// invalidation) and who wrote it last.
+struct LineState {
+    sharers: u64,
+    /// Last writer (`u8::MAX` = none / written back).
+    owner: u8,
+    dirty: bool,
+}
+
+const NO_OWNER: u8 = u8::MAX;
+
+/// Replay the merged per-core traces (index = core id) through the shared
+/// LLC + DRAM-channel model. Deterministic: events merge in canonical
+/// `(local time, core id, program order)` order, so the outcome is a pure
+/// function of the traces. Supports up to 64 cores (directory bitmaps).
+pub fn replay(
+    mem: &MemConfig,
+    cfg: &SharedMemConfig,
+    traces: &[Vec<TraceEvent>],
+) -> ReplayOutcome {
+    let cores = traces.len();
+    assert!(
+        (1..=64).contains(&cores),
+        "replay supports 1..=64 cores, got {cores}"
+    );
+
+    // Canonical deterministic interleaving. Per-core traces are already in
+    // program order with monotone local times; ties across cores break
+    // toward the lower core id, then program order.
+    let total: usize = traces.iter().map(|t| t.len()).sum();
+    let mut order: Vec<(u32, u32)> = Vec::with_capacity(total);
+    for (c, t) in traces.iter().enumerate() {
+        for i in 0..t.len() {
+            order.push((c as u32, i as u32));
+        }
+    }
+    order.sort_unstable_by(|&(ca, ia), &(cb, ib)| {
+        let ta = traces[ca as usize][ia as usize].time;
+        let tb = traces[cb as usize][ib as usize].time;
+        ta.total_cmp(&tb).then(ca.cmp(&cb)).then(ia.cmp(&ib))
+    });
+
+    // The shared LLC. Same geometry as each core's Table II shadow slice;
+    // in sliced mode every active core brings one slice of capacity.
+    // Capacity scales through the *set count* (power-of-two slices keep the
+    // sets a power of two and the per-lookup way scan O(base ways)); odd
+    // core counts round up to the next power-of-two slicing via a second
+    // way bank. At 1 core both modes are exactly the shadow geometry.
+    let mut llc_cfg = mem.llc;
+    if cfg.llc_sliced {
+        let sets_scale = if cores.is_power_of_two() {
+            cores
+        } else {
+            cores.next_power_of_two() / 2
+        };
+        let ways_scale = cores.div_ceil(sets_scale);
+        llc_cfg.size_bytes *= sets_scale * ways_scale;
+        llc_cfg.ways *= ways_scale;
+    }
+    let mut llc = Cache::new(llc_cfg);
+
+    let channels = cfg.dram_channels.max(1);
+    let mut directory: HashMap<u64, LineState> = HashMap::new();
+    // Occupancy tails, split per core so a core only ever queues behind
+    // *other* cores (self-throughput is phase 1's business).
+    let mut llc_busy = vec![0.0f64; cores];
+    let mut chan_busy = vec![vec![0.0f64; cores]; channels];
+    let mut channel_busy_cycles = vec![0.0f64; channels];
+    let mut stats = vec![SharedStats::default(); cores];
+    let mut phase_stalls = vec![[0.0f64; MAX_PHASES]; cores];
+
+    for &(ci, ei) in &order {
+        let c = ci as usize;
+        let e = traces[c][ei as usize];
+        let t = e.time;
+        match e.kind {
+            TraceKind::Writeback => {
+                // State + occupancy only: the write buffer hides latency,
+                // but the install updates the shared LLC exactly as it did
+                // the shadow, occupies the tag pipeline, and means the line
+                // has left this core's private caches.
+                stats[c].writeback_installs += 1;
+                let (_, _victim) = llc.access_line(e.line, true);
+                llc_busy[c] = t.max(llc_busy[c]) + cfg.llc_service_cycles;
+                if let Some(st) = directory.get_mut(&e.line) {
+                    st.sharers &= !(1u64 << c);
+                    if st.owner == c as u8 {
+                        st.owner = NO_OWNER;
+                    }
+                }
+            }
+            TraceKind::Demand => {
+                stats[c].llc_accesses += 1;
+                let mut extra = 0.0f64;
+
+                // (1) Queue behind other cores' outstanding LLC lookups.
+                // The charged wait is capped at one service slot per other
+                // core: phase-1 issue times feel no backpressure, so under
+                // sustained overload the raw tail-minus-arrival gap would
+                // compound without bound, while a real core waits at most
+                // for the bounded queue (MSHRs) ahead of it.
+                let mut other = 0.0f64;
+                for (k, &b) in llc_busy.iter().enumerate() {
+                    if k != c && b > other {
+                        other = b;
+                    }
+                }
+                let wait = (other - t)
+                    .max(0.0)
+                    .min((cores - 1) as f64 * cfg.llc_service_cycles);
+                stats[c].llc_queue_cycles += wait;
+                extra += wait;
+                llc_busy[c] = t.max(llc_busy[c]).max(other) + cfg.llc_service_cycles;
+
+                // (2) The lookup itself — the same fill the shadow performed.
+                let (hit, _victim) = llc.access_line(e.line, false);
+
+                // (3) MESI-lite coherence bookkeeping.
+                let st = directory.entry(e.line).or_insert(LineState {
+                    sharers: 0,
+                    owner: NO_OWNER,
+                    dirty: false,
+                });
+                if e.write {
+                    let others = st.sharers & !(1u64 << c);
+                    if others != 0 {
+                        stats[c].upgrades += 1;
+                        stats[c].invalidations_sent += others.count_ones() as u64;
+                        stats[c].coherence_cycles += cfg.upgrade_cycles;
+                        extra += cfg.upgrade_cycles;
+                        for (k, s) in stats.iter_mut().enumerate() {
+                            if k != c && (others >> k) & 1 == 1 {
+                                s.invalidations_received += 1;
+                            }
+                        }
+                    }
+                    st.sharers = 1u64 << c;
+                    st.owner = c as u8;
+                    st.dirty = true;
+                } else {
+                    if st.dirty && st.owner != NO_OWNER && st.owner != c as u8 {
+                        stats[c].dirty_forwards += 1;
+                        stats[c].coherence_cycles += cfg.dirty_forward_cycles;
+                        extra += cfg.dirty_forward_cycles;
+                        // Forwarded and downgraded to shared.
+                        st.dirty = false;
+                    }
+                    st.sharers |= 1u64 << c;
+                }
+
+                // (4) Settle the shadow prediction against the shared truth.
+                if hit {
+                    stats[c].llc_hits += 1;
+                    if !e.shadow_hit {
+                        // Constructive sharing: another core already pulled
+                        // the line in. Refund the bandwidth floor — but only
+                        // where phase 1 really charged it (stream-prefetched
+                        // accesses were clamped to an L1 hit and never paid).
+                        stats[c].shared_fills += 1;
+                        if e.paid_bw {
+                            stats[c].sharing_saved_cycles += DRAM_BW_CYCLES;
+                            extra -= DRAM_BW_CYCLES;
+                        }
+                    }
+                } else {
+                    stats[c].llc_misses += 1;
+                    let ch = (e.line % channels as u64) as usize;
+                    let mut otherb = 0.0f64;
+                    for (k, &b) in chan_busy[ch].iter().enumerate() {
+                        if k != c && b > otherb {
+                            otherb = b;
+                        }
+                    }
+                    // Same bounded-queue cap as the LLC: at most one
+                    // in-flight transfer per other core ahead of us.
+                    let dwait = (otherb - t)
+                        .max(0.0)
+                        .min((cores - 1) as f64 * cfg.dram_transfer_cycles);
+                    stats[c].dram_queue_cycles += dwait;
+                    extra += dwait;
+                    chan_busy[ch][c] =
+                        t.max(chan_busy[ch][c]).max(otherb) + cfg.dram_transfer_cycles;
+                    channel_busy_cycles[ch] += cfg.dram_transfer_cycles;
+                    if e.shadow_hit {
+                        // Destructive interference: phase 1 charged no
+                        // bandwidth floor for this access — pay it now plus
+                        // the exposed-latency penalty.
+                        stats[c].demotions += 1;
+                        let pay = DRAM_BW_CYCLES + cfg.demotion_cycles;
+                        stats[c].demotion_cycles += pay;
+                        extra += pay;
+                    }
+                }
+
+                let p = (e.phase as usize).min(MAX_PHASES - 1);
+                phase_stalls[c][p] += extra;
+            }
+        }
+    }
+
+    ReplayOutcome {
+        per_core: stats,
+        per_core_phase_stalls: phase_stalls,
+        channel_busy_cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::mem::{AccessKind, Hierarchy};
+
+    fn sys() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    fn demand(line: u64, time: f64, write: bool, shadow_hit: bool) -> TraceEvent {
+        TraceEvent {
+            line,
+            time,
+            kind: TraceKind::Demand,
+            write,
+            shadow_hit,
+            // Hand-built events model plain (non-prefetched) accesses: the
+            // floor was paid exactly when the shadow missed.
+            paid_bw: !shadow_hit,
+            phase: 1,
+        }
+    }
+
+    #[test]
+    fn single_core_replay_charges_exactly_zero() {
+        // Record a real trace through a hierarchy, then replay it alone:
+        // every stall class must be *exactly* 0.0 (the 1-core == seed pin).
+        let c = sys();
+        let mut h = Hierarchy::new(c.mem);
+        h.enable_trace();
+        for i in 0..4096u64 {
+            h.access(0x100000 + i * 64, 4, AccessKind::Write);
+        }
+        for i in 0..4096u64 {
+            h.access(0x100000 + i * 64, 4, AccessKind::Read);
+        }
+        let trace = h.take_trace();
+        assert!(!trace.is_empty());
+        let out = replay(&c.mem, &c.shared, &[trace.clone()]);
+        let s = &out.per_core[0];
+        assert_eq!(s.llc_queue_cycles, 0.0);
+        assert_eq!(s.dram_queue_cycles, 0.0);
+        assert_eq!(s.coherence_cycles, 0.0);
+        assert_eq!(s.demotion_cycles, 0.0);
+        assert_eq!(s.sharing_saved_cycles, 0.0);
+        assert_eq!(s.stall_cycles(), 0.0);
+        assert_eq!(s.upgrades + s.dirty_forwards + s.invalidations_received, 0);
+        // The shared LLC agreed with the shadow on every single access.
+        assert_eq!(s.shared_fills + s.demotions, 0);
+        let hits = trace
+            .iter()
+            .filter(|e| e.kind == TraceKind::Demand && e.shadow_hit)
+            .count() as u64;
+        assert_eq!(s.llc_hits, hits);
+        assert!(out.per_core_phase_stalls[0].iter().all(|&x| x == 0.0));
+        // Every LLC-level access of the shadow was replayed.
+        assert_eq!(
+            s.llc_accesses + s.writeback_installs,
+            h.stats().llc_accesses
+        );
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let c = sys();
+        let t0: Vec<TraceEvent> =
+            (0..64).map(|i| demand(i * 3, i as f64, i % 2 == 0, false)).collect();
+        let t1: Vec<TraceEvent> =
+            (0..64).map(|i| demand(i * 3 + 1, i as f64, false, false)).collect();
+        let a = replay(&c.mem, &c.shared, &[t0.clone(), t1.clone()]);
+        let b = replay(&c.mem, &c.shared, &[t0, t1]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn disjoint_addresses_have_zero_coherence() {
+        let c = sys();
+        let t0: Vec<TraceEvent> =
+            (0..128).map(|i| demand(i * 2, i as f64, true, false)).collect();
+        let t1: Vec<TraceEvent> =
+            (0..128).map(|i| demand(i * 2 + 1, i as f64, true, false)).collect();
+        let out = replay(&c.mem, &c.shared, &[t0, t1]);
+        for s in &out.per_core {
+            assert_eq!(s.upgrades, 0);
+            assert_eq!(s.invalidations_sent, 0);
+            assert_eq!(s.invalidations_received, 0);
+            assert_eq!(s.dirty_forwards, 0);
+            assert_eq!(s.coherence_cycles, 0.0);
+            assert_eq!(s.shared_fills, 0, "disjoint lines cannot share fills");
+        }
+    }
+
+    #[test]
+    fn write_shared_line_counts_upgrade_and_invalidation() {
+        let c = sys();
+        // Core 1 reads line 5, then core 0 writes it.
+        let t0 = vec![demand(5, 100.0, true, false)];
+        let t1 = vec![demand(5, 0.0, false, false)];
+        let out = replay(&c.mem, &c.shared, &[t0, t1]);
+        assert_eq!(out.per_core[0].upgrades, 1);
+        assert_eq!(out.per_core[0].invalidations_sent, 1);
+        assert_eq!(out.per_core[1].invalidations_received, 1);
+        assert!(out.per_core[0].coherence_cycles > 0.0);
+        assert_eq!(out.per_core[1].coherence_cycles, 0.0);
+    }
+
+    #[test]
+    fn read_after_remote_write_is_a_dirty_forward() {
+        let c = sys();
+        let t0 = vec![demand(9, 0.0, true, false)];
+        let t1 = vec![demand(9, 100.0, false, false)];
+        let out = replay(&c.mem, &c.shared, &[t0, t1]);
+        assert_eq!(out.per_core[1].dirty_forwards, 1);
+        assert!(out.per_core[1].coherence_cycles > 0.0);
+        // Core 0's fill made it a shared-LLC hit for core 1: constructive.
+        assert_eq!(out.per_core[1].shared_fills, 1);
+        assert!(out.per_core[1].sharing_saved_cycles > 0.0);
+    }
+
+    #[test]
+    fn equal_times_tie_break_toward_lower_core_id() {
+        let c = sys();
+        // Both cores write line 7 at t=0: core 0 replays first, so core 1
+        // pays the upgrade. Canonical, host-independent.
+        let t0 = vec![demand(7, 0.0, true, false)];
+        let t1 = vec![demand(7, 0.0, true, false)];
+        let out = replay(&c.mem, &c.shared, &[t0, t1]);
+        assert_eq!(out.per_core[0].upgrades, 0);
+        assert_eq!(out.per_core[1].upgrades, 1);
+        assert_eq!(out.per_core[0].invalidations_received, 1);
+    }
+
+    #[test]
+    fn fewer_channels_mean_more_dram_queueing() {
+        let c = sys();
+        // Two cores streaming distinct cold lines at overlapping times.
+        let t0: Vec<TraceEvent> =
+            (0..256).map(|i| demand(i * 2, (i / 4) as f64, false, false)).collect();
+        let t1: Vec<TraceEvent> =
+            (0..256).map(|i| demand(i * 2 + 1, (i / 4) as f64, false, false)).collect();
+        let narrow_cfg = SharedMemConfig { dram_channels: 1, ..c.shared };
+        let wide_cfg = SharedMemConfig { dram_channels: 8, ..c.shared };
+        let narrow = replay(&c.mem, &narrow_cfg, &[t0.clone(), t1.clone()]);
+        let wide = replay(&c.mem, &wide_cfg, &[t0, t1]);
+        let q = |o: &ReplayOutcome| {
+            o.per_core.iter().map(|s| s.dram_queue_cycles).sum::<f64>()
+        };
+        assert!(
+            q(&narrow) > q(&wide),
+            "1 channel {} !> 8 channels {}",
+            q(&narrow),
+            q(&wide)
+        );
+        assert_eq!(narrow.channel_busy_cycles.len(), 1);
+        assert_eq!(wide.channel_busy_cycles.len(), 8);
+        // Same total transfer occupancy, spread over more channels.
+        let tot = |o: &ReplayOutcome| o.channel_busy_cycles.iter().sum::<f64>();
+        assert_eq!(tot(&narrow), tot(&wide));
+    }
+
+    #[test]
+    fn constructive_sharing_refunds_the_bandwidth_floor() {
+        let c = sys();
+        // Both cores stream the same lines (B's rows): the second core's
+        // shadow predicted misses, but the shared LLC has them.
+        let t0: Vec<TraceEvent> = (0..64).map(|i| demand(i, i as f64, false, false)).collect();
+        let t1: Vec<TraceEvent> =
+            (0..64).map(|i| demand(i, 1000.0 + i as f64, false, false)).collect();
+        let out = replay(&c.mem, &c.shared, &[t0, t1]);
+        assert_eq!(out.per_core[1].shared_fills, 64);
+        assert_eq!(out.per_core[1].sharing_saved_cycles, 64.0 * DRAM_BW_CYCLES);
+        assert!(out.per_core[1].stall_cycles() < 0.0);
+        assert_eq!(out.per_core[0].shared_fills, 0);
+    }
+
+    #[test]
+    fn unpaid_bandwidth_floor_is_never_refunded() {
+        let c = sys();
+        // Core 1's access is a shadow miss that hits shared, but it was
+        // stream-prefetched in phase 1 (paid_bw = false): it still counts as
+        // a constructive fill, yet no refund may be issued for a floor that
+        // was never charged.
+        let t0 = vec![demand(11, 0.0, false, false)];
+        let mut streamed = demand(11, 1000.0, false, false);
+        streamed.paid_bw = false;
+        let out = replay(&c.mem, &c.shared, &[t0, vec![streamed]]);
+        assert_eq!(out.per_core[1].shared_fills, 1);
+        assert_eq!(out.per_core[1].sharing_saved_cycles, 0.0);
+        assert_eq!(out.per_core[1].stall_cycles(), 0.0);
+    }
+
+    #[test]
+    fn phase_stalls_land_in_the_traced_phase() {
+        let c = sys();
+        let mut e0 = demand(3, 0.0, false, false);
+        e0.phase = 2;
+        let mut e1 = demand(3, 0.5, true, false); // queues + upgrades
+        e1.phase = 3;
+        let out = replay(&c.mem, &c.shared, &[vec![e0], vec![e1]]);
+        assert_eq!(out.per_core_phase_stalls[0][2], 0.0, "core 0 went first");
+        assert!(out.per_core_phase_stalls[1][3] != 0.0);
+        assert_eq!(out.per_core_phase_stalls[1][2], 0.0);
+    }
+}

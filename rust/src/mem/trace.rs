@@ -1,0 +1,97 @@
+//! Line-granular shared-memory access traces (phase 1 of the two-phase
+//! shared-memory model).
+//!
+//! The shared LLC and DRAM channels are *time-shared* resources: what they
+//! cost a core depends on what every other core is doing at the same moment.
+//! Simulating them inline would make per-core results depend on host thread
+//! interleaving and break the bit-reproducibility invariant the parallel
+//! driver pins (see `spgemm::parallel`). Instead the model is two-phase
+//! **trace-and-replay**:
+//!
+//! 1. During parallel execution, each core's [`crate::mem::Hierarchy`]
+//!    records a compact trace of every access that leaves its private L1/L2
+//!    — demand fills walking down into the LLC and dirty L2 victims written
+//!    back into it — stamped with the core's *local logical time* (its own
+//!    simulated cycle count) and the Figure 9 phase it charged into.
+//!    Private L1/L2 results are final in this phase.
+//! 2. After the workers join, a deterministic interleaver merges the
+//!    per-core traces in canonical logical-time order and replays them
+//!    through the shared LLC + multi-channel DRAM model
+//!    ([`crate::mem::shared::replay`]), producing per-core shared-memory
+//!    stall cycles and coherence counters that are a pure function of the
+//!    traces — independent of host scheduling.
+//!
+//! The trade-off is explicit: phase 1 prices each core's private-hierarchy
+//! latency against its own *shadow* copy of the LLC, so cross-core effects
+//! on private-cache contents (a line another core invalidated, say) are
+//! folded in as replay-derived stall corrections rather than re-executed.
+
+/// Upper bound on [`TraceEvent::phase`] values ( >= the machine model's
+/// `NUM_PHASES`; replay buckets stalls per phase in arrays of this size).
+pub const MAX_PHASES: usize = 8;
+
+/// What a traced LLC-level access was doing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Demand fill: an access that missed the private L1 and L2 and walked
+    /// down into the LLC.
+    Demand,
+    /// A dirty L2 victim installed into the LLC (write-back path). Latency
+    /// is hidden by the write buffer, but the install still updates LLC
+    /// state and occupies the shared tag pipeline.
+    Writeback,
+}
+
+/// One line-granular access that left a core's private L1/L2.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Line address (byte address `>> line_shift`).
+    pub line: u64,
+    /// Core-local logical time in simulated cycles at which the access
+    /// issued (the machine's cycle counter, monotone within a core).
+    pub time: f64,
+    pub kind: TraceKind,
+    /// Demand intent: `true` for stores (drives the MESI-lite upgrade /
+    /// invalidation bookkeeping). Always `true` for writeback installs.
+    pub write: bool,
+    /// Phase-1 outcome in the core's private *shadow* LLC. The replay
+    /// compares this prediction against the real shared-LLC outcome to
+    /// price constructive sharing (shadow miss, shared hit) and destructive
+    /// interference (shadow hit, shared miss).
+    pub shadow_hit: bool,
+    /// Whether phase 1 actually charged the DRAM bandwidth floor for this
+    /// access. False for shadow hits, for stream-prefetched accesses (whose
+    /// raw latency was clamped to an L1 hit, so `dram_bw` saw no DRAM
+    /// latency), and for writeback installs. The replay refunds the floor on
+    /// constructive sharing only when it was really paid.
+    pub paid_bw: bool,
+    /// Figure 9 breakdown phase the access charged into (`< MAX_PHASES`),
+    /// so replay-derived stalls land in the same per-phase buckets.
+    pub phase: u8,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_event_is_compact_and_comparable() {
+        let e = TraceEvent {
+            line: 42,
+            time: 7.5,
+            kind: TraceKind::Demand,
+            write: false,
+            shadow_hit: true,
+            paid_bw: false,
+            phase: 1,
+        };
+        assert_eq!(e, e);
+        assert_ne!(
+            e,
+            TraceEvent {
+                kind: TraceKind::Writeback,
+                ..e
+            }
+        );
+    }
+}

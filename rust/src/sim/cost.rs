@@ -2,8 +2,21 @@
 //! first-order out-of-order overlap (issue-bandwidth + MLP-divided miss
 //! latency). All constants live in [`crate::config::CoreConfig`]; this
 //! module only encodes *how* they combine.
+//!
+//! This model prices everything a core does against its *own* resources
+//! (pipeline, private caches, and the uncontended bandwidth floor of one
+//! DRAM line transfer). Shared-resource costs — queueing at the shared LLC,
+//! DRAM channel conflicts, coherence — are **not** analytic constants here
+//! any more: they are derived by replaying the per-core access traces
+//! through the shared-memory model ([`crate::mem::shared::replay`]), which
+//! charges exactly zero when one core runs alone. (The retired
+//! `DRAM_BW_CONTENTION_PER_CORE` / `LLC_QUEUE_CYCLES_PER_CORE` knobs
+//! inflated every access by a flat per-core factor regardless of what the
+//! other cores actually touched.)
 
 use crate::config::{CoreConfig, MemConfig};
+
+pub use crate::config::DRAM_BW_CYCLES;
 
 /// Computes effective (overlap-adjusted) cycle costs for the machine model.
 #[derive(Clone, Copy, Debug)]
@@ -11,64 +24,35 @@ pub struct CostModel {
     pub core: CoreConfig,
     /// L1 hit latency, subtracted from raw latencies (hits are pipelined).
     l1_hit: f64,
-    /// Raw latency at or above which an access left the private caches
-    /// (i.e. at least an LLC lookup happened).
-    llc_threshold: f64,
     /// Raw latency at or above which an access reached DRAM.
     dram_threshold: f64,
-    /// DRAM-bandwidth inflation from cores sharing the bus (1.0 = alone).
-    bw_factor: f64,
-    /// Extra queueing cycles at the shared LLC per contended access.
-    llc_queue: f64,
 }
 
-/// Cycles of DRAM *bandwidth* occupancy per line transfer — a floor that
-/// memory-level parallelism cannot hide (64B line at ~20GB/s on a ~3GHz
-/// core). Charged on every DRAM-reaching access; this is what makes
-/// one-useful-element-per-line access patterns (scl-array's scattered
-/// accumulator) pay for the full line.
-pub const DRAM_BW_CYCLES: f64 = 6.0;
-
-/// First-order multi-core contention knobs: with `cores` active cores the
-/// shared DRAM bus sustains proportionally less bandwidth per core
-/// (`1 + 0.5*(cores-1)` occupancy inflation — half of the extra demand is
-/// absorbed by bank parallelism) and the shared LLC adds a small queueing
-/// delay per contended lookup. Calibration-knob constants in the spirit of
-/// DESIGN.md: relative multi-core behaviour (bandwidth-bound kernels stop
-/// scaling, cache-resident ones keep scaling) is what matters.
-pub const DRAM_BW_CONTENTION_PER_CORE: f64 = 0.5;
-pub const LLC_QUEUE_CYCLES_PER_CORE: f64 = 1.0;
-
 impl CostModel {
-    /// Cost model for one core of a `cores`-core system (Table II machine
-    /// when `cores == 1`; contended shared-resource costs otherwise).
-    pub fn new(core: CoreConfig, mem: &MemConfig, cores: usize) -> Self {
-        let extra = (cores.max(1) - 1) as f64;
+    /// Cost model for one core (Table II machine). Identical at every core
+    /// count: multi-core contention is priced by the shared-memory replay,
+    /// not by inflating per-access costs.
+    pub fn new(core: CoreConfig, mem: &MemConfig) -> Self {
         CostModel {
             core,
             l1_hit: mem.l1d.hit_latency as f64,
-            llc_threshold: (mem.l1d.hit_latency + mem.l2.hit_latency) as f64 + 1.0,
             dram_threshold: (mem.l1d.hit_latency + mem.l2.hit_latency + mem.llc.hit_latency) as f64
                 + 1.0,
-            bw_factor: 1.0 + DRAM_BW_CONTENTION_PER_CORE * extra,
-            llc_queue: LLC_QUEUE_CYCLES_PER_CORE * extra,
         }
     }
 
-    /// Shared-resource cost of an access whose raw hierarchy latency was
-    /// `raw`: the DRAM bandwidth floor (inflated under multi-core bus
-    /// contention) plus LLC queueing for any access that left the private
-    /// caches. Zero for L1/L2 hits; identical to the seed model at 1 core.
+    /// Uncontended DRAM-bandwidth floor of an access whose raw hierarchy
+    /// latency was `raw`: [`DRAM_BW_CYCLES`] for any access that reached
+    /// DRAM, zero otherwise. This is what makes one-useful-element-per-line
+    /// access patterns (scl-array's scattered accumulator) pay for the full
+    /// line. Contended shared costs come from the trace replay.
     #[inline]
     pub fn dram_bw(&self, raw: u32) -> f64 {
-        let mut c = 0.0;
-        if (raw as f64) >= self.llc_threshold {
-            c += self.llc_queue;
-        }
         if (raw as f64) >= self.dram_threshold {
-            c += DRAM_BW_CYCLES * self.bw_factor;
+            DRAM_BW_CYCLES
+        } else {
+            0.0
         }
-        c
     }
 
     /// Cycles for `n` dependent-ish scalar ALU ops.
@@ -141,7 +125,7 @@ mod tests {
 
     fn cm() -> CostModel {
         let c = SystemConfig::default();
-        CostModel::new(c.core, &c.mem, 1)
+        CostModel::new(c.core, &c.mem)
     }
 
     #[test]
@@ -169,28 +153,15 @@ mod tests {
     }
 
     #[test]
-    fn single_core_shared_costs_match_seed_model() {
+    fn uncontended_costs_match_seed_model() {
+        // The per-access shared cost is the seed model's single-core cost at
+        // every core count: no bandwidth-factor inflation, no flat LLC
+        // queueing. Contention now comes exclusively from the trace replay.
         let m = cm();
         let dram_raw = 2 + 8 + 8 + 160;
         assert_eq!(m.dram_bw(2), 0.0); // L1 hit
         assert_eq!(m.dram_bw(2 + 8), 0.0); // L2 hit
-        assert_eq!(m.dram_bw(2 + 8 + 8), 0.0); // LLC hit, no queueing alone
+        assert_eq!(m.dram_bw(2 + 8 + 8), 0.0); // LLC hit
         assert_eq!(m.dram_bw(dram_raw), DRAM_BW_CYCLES);
-    }
-
-    #[test]
-    fn contention_inflates_shared_costs_only() {
-        let c = SystemConfig::default();
-        let alone = CostModel::new(c.core, &c.mem, 1);
-        let crowd = CostModel::new(c.core, &c.mem, 8);
-        let dram_raw = 2 + 8 + 8 + 160;
-        let llc_raw = 2 + 8 + 8;
-        // DRAM bus occupancy scales with active cores; LLC lookups queue.
-        assert!(crowd.dram_bw(dram_raw) > alone.dram_bw(dram_raw));
-        assert!(crowd.dram_bw(llc_raw) > 0.0);
-        assert_eq!(crowd.dram_bw(2 + 8), 0.0, "private-cache hits are free of contention");
-        // Core-private costs are untouched.
-        assert_eq!(crowd.scalar_ops(8), alone.scalar_ops(8));
-        assert_eq!(crowd.scalar_miss(dram_raw), alone.scalar_miss(dram_raw));
     }
 }

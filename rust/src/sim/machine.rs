@@ -4,7 +4,7 @@
 //! [`RunMetrics`] afterwards to build Figures 8–11.
 
 use crate::config::SystemConfig;
-use crate::mem::{AccessKind, Hierarchy, MemStats, SimAlloc};
+use crate::mem::{AccessKind, Hierarchy, MemStats, SharedStats, SimAlloc, TraceEvent};
 use crate::sim::cost::CostModel;
 use crate::systolic::SystolicTiming;
 
@@ -26,6 +26,9 @@ pub enum Phase {
 pub const NUM_PHASES: usize = 5;
 pub const PHASE_NAMES: [&str; NUM_PHASES] =
     ["preprocess", "expand", "sort", "output", "rowsort"];
+
+// Trace events bucket replay stalls per phase in MAX_PHASES-sized arrays.
+const _: () = assert!(NUM_PHASES <= crate::mem::MAX_PHASES);
 
 /// Dynamic instruction / event counters (Figure 10 & 11 inputs).
 ///
@@ -58,7 +61,13 @@ pub struct RunMetrics {
     pub cycles: f64,
     pub phase_cycles: [f64; NUM_PHASES],
     pub ops: OpCounters,
+    /// Private-hierarchy statistics (L1/L2 plus the core's shadow LLC).
     pub mem: MemStats,
+    /// Shared-memory replay results (queueing, coherence, sharing
+    /// corrections). All-zero for serial runs — the parallel driver fills
+    /// this after phase-2 replay, and the replay stalls are already folded
+    /// into `cycles` / `phase_cycles`.
+    pub shared: SharedStats,
     pub sim_footprint_bytes: u64,
 }
 
@@ -96,6 +105,7 @@ impl RunMetrics {
             phase_cycles: [0.0; NUM_PHASES],
             ops: OpCounters::default(),
             mem: MemStats::default(),
+            shared: SharedStats::default(),
             sim_footprint_bytes: 0,
         }
     }
@@ -110,6 +120,7 @@ impl RunMetrics {
         }
         self.ops.add(&o.ops);
         self.mem.add(&o.mem);
+        self.shared.add(&o.shared);
         self.sim_footprint_bytes += o.sim_footprint_bytes;
     }
 }
@@ -128,6 +139,9 @@ pub struct MulticoreMetrics {
     pub critical_path: [f64; NUM_PHASES],
     /// Simulated wall-clock cycles: sum of the per-phase maxima.
     pub critical_path_cycles: f64,
+    /// Total transfer occupancy per DRAM channel from the shared-memory
+    /// replay (empty when no replay ran).
+    pub channel_busy_cycles: Vec<f64>,
 }
 
 impl MulticoreMetrics {
@@ -146,6 +160,7 @@ impl MulticoreMetrics {
             per_core,
             total,
             critical_path,
+            channel_busy_cycles: Vec::new(),
         }
     }
 
@@ -176,6 +191,19 @@ impl MulticoreMetrics {
     }
 }
 
+/// Private address-space stride between simulated cores: large enough that
+/// 64 cores' regions never collide, and a power of two far above every
+/// cache-index bit, so a core's cache behaviour is identical to a
+/// base-region run.
+const CORE_ADDR_SPAN: u64 = 1 << 40;
+
+/// Base of the canonical shared-operand region (above every core's private
+/// span).
+const SHARED_ADDR_BASE: u64 = 1 << 56;
+
+/// Shared-operand table entries: `(identity key, (indptr, indices, data))`.
+type SharedObjTable = Vec<(usize, (u64, u64, u64))>;
+
 /// The simulated machine (one core plus its private caches and matrix unit).
 pub struct Machine {
     pub cfg: SystemConfig,
@@ -188,12 +216,19 @@ pub struct Machine {
     cycles: f64,
     phase_cycles: [f64; NUM_PHASES],
     phase: Phase,
+    /// Canonical allocator for operands shared read-only by all cores;
+    /// every fork starts from the same state, so the same registration
+    /// sequence yields the same addresses on every core.
+    shared_alloc: SimAlloc,
+    /// Shared-operand table; `None` on serial machines (plain per-machine
+    /// allocation applies).
+    shared_objs: Option<SharedObjTable>,
 }
 
 impl Machine {
     pub fn new(cfg: SystemConfig) -> Self {
         Machine {
-            cost: CostModel::new(cfg.core, &cfg.mem, cfg.cores),
+            cost: CostModel::new(cfg.core, &cfg.mem),
             mem: Hierarchy::new(cfg.mem),
             alloc: SimAlloc::new(),
             unit: SystolicTiming::new(cfg.unit),
@@ -202,20 +237,75 @@ impl Machine {
             cycles: 0.0,
             phase_cycles: [0.0; NUM_PHASES],
             phase: Phase::Preprocess,
+            shared_alloc: SimAlloc::with_base(SHARED_ADDR_BASE),
+            shared_objs: None,
             cfg,
         }
     }
 
     /// Shard off a per-core machine for multi-core simulation: shares this
-    /// machine's [`SystemConfig`] (whose `cores` drives the shared-LLC/DRAM
-    /// contention adjustment in [`CostModel`]) with fresh private caches,
-    /// counters, and simulated address space. Each worker thread of the
-    /// parallel SpGEMM driver charges its own fork; see
-    /// [`crate::spgemm::parallel`].
+    /// machine's [`SystemConfig`] with fresh private caches, counters, and
+    /// simulated address space. Each worker thread of the parallel SpGEMM
+    /// driver charges its own fork and records its shared-memory trace for
+    /// the phase-2 replay; see [`crate::spgemm::parallel`].
     pub fn fork_core(&self, core_id: usize) -> Machine {
         let mut m = Machine::new(self.cfg);
         m.core_id = core_id;
+        // Each core owns a disjoint private address region (the power-of-two
+        // stride keeps every cache-index bit identical to a base-region run,
+        // so per-core cache behaviour is unchanged), and inherits the
+        // parent's shared-operand table so shared objects resolve to the
+        // same canonical addresses on every core — cross-core line identity
+        // in the replay means real sharing, never allocator aliasing.
+        m.alloc = SimAlloc::with_base(crate::mem::alloc::START + core_id as u64 * CORE_ADDR_SPAN);
+        // Inherit the allocator *cursor* too: a fork registering a new
+        // shared operand must not reuse addresses the parent already handed
+        // out (that would alias two distinct operands).
+        m.shared_alloc = self.shared_alloc.clone();
+        m.shared_objs = self.shared_objs.clone();
         m
+    }
+
+    /// Turn on the shared-operand table (the parallel driver calls this on
+    /// the base machine before forking, so every fork inherits it).
+    pub fn enable_shared_operands(&mut self) {
+        if self.shared_objs.is_none() {
+            self.shared_objs = Some(Vec::new());
+        }
+    }
+
+    /// Canonical addresses for an operand shared read-only by every core
+    /// (the B matrix of a parallel run): the same `key` resolves to the same
+    /// three block addresses on every fork. Returns `None` on machines
+    /// without a shared-operand table (serial runs keep the seed's plain
+    /// per-machine allocation).
+    pub fn shared_csr(
+        &mut self,
+        key: usize,
+        sizes: (usize, usize, usize),
+    ) -> Option<(u64, u64, u64)> {
+        let table = self.shared_objs.as_mut()?;
+        if let Some(&(_, addrs)) = table.iter().find(|&&(k, _)| k == key) {
+            return Some(addrs);
+        }
+        let addrs = (
+            self.shared_alloc.alloc(sizes.0),
+            self.shared_alloc.alloc(sizes.1),
+            self.shared_alloc.alloc(sizes.2),
+        );
+        table.push((key, addrs));
+        Some(addrs)
+    }
+
+    /// Start recording this machine's shared-memory (LLC-level) access
+    /// trace for the deterministic replay ([`crate::mem::shared::replay`]).
+    pub fn enable_trace(&mut self) {
+        self.mem.enable_trace();
+    }
+
+    /// Take the recorded trace (empty if tracing was never enabled).
+    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+        self.mem.take_trace()
     }
 
     /// Which core of the simulated system this machine models (0 for
@@ -233,6 +323,7 @@ impl Machine {
     /// Switch the current Figure 9 breakdown phase.
     pub fn phase(&mut self, p: Phase) {
         self.phase = p;
+        self.mem.set_phase(p as u8);
     }
 
     pub fn cycles(&self) -> f64 {
@@ -268,6 +359,7 @@ impl Machine {
 
     pub fn load(&mut self, addr: u64, bytes: usize) {
         self.ops.scalar_loads += 1;
+        self.mem.set_now(self.cycles);
         let (raw, _) = self.mem.access(addr, bytes, AccessKind::Read);
         let c = self.cost.mem_issue(1) + self.cost.scalar_miss(raw) + self.cost.dram_bw(raw);
         self.charge(c);
@@ -277,6 +369,7 @@ impl Machine {
     /// the hit latency is on the critical path.
     pub fn load_dep(&mut self, addr: u64, bytes: usize) {
         self.ops.scalar_loads += 1;
+        self.mem.set_now(self.cycles);
         let (raw, _) = self.mem.access(addr, bytes, AccessKind::Read);
         let c = self.cost.mem_issue(1) + self.cost.dep_load(raw) + self.cost.dram_bw(raw);
         self.charge(c);
@@ -291,6 +384,7 @@ impl Machine {
 
     pub fn store(&mut self, addr: u64, bytes: usize) {
         self.ops.scalar_stores += 1;
+        self.mem.set_now(self.cycles);
         let (raw, _) = self.mem.access(addr, bytes, AccessKind::Write);
         // Stores retire through the store buffer; expose only a fraction.
         let c = self.cost.mem_issue(1) + 0.25 * self.cost.scalar_miss(raw) + self.cost.dram_bw(raw);
@@ -302,6 +396,7 @@ impl Machine {
     /// Unit-stride vector load of `bytes` starting at `addr`.
     pub fn vload(&mut self, addr: u64, bytes: usize) {
         self.ops.vector_loads += 1;
+        self.mem.set_now(self.cycles);
         let (raw, lines) = self.mem.access(addr, bytes, AccessKind::Read);
         let c = self.cost.mem_issue(lines as u64) + self.cost.vector_miss(raw) + self.cost.dram_bw(raw);
         self.charge(c);
@@ -310,6 +405,7 @@ impl Machine {
     /// Unit-stride vector store.
     pub fn vstore(&mut self, addr: u64, bytes: usize) {
         self.ops.vector_stores += 1;
+        self.mem.set_now(self.cycles);
         let (raw, lines) = self.mem.access(addr, bytes, AccessKind::Write);
         let c = self.cost.mem_issue(lines as u64) + 0.25 * self.cost.vector_miss(raw) + self.cost.dram_bw(raw);
         self.charge(c);
@@ -321,6 +417,9 @@ impl Machine {
         let mut c = 0.0;
         for a in addrs {
             self.ops.gather_elems += 1;
+            // Lanes issue as the gather progresses: stamp each lane with the
+            // cycle it would leave the core, so replay interleaves fairly.
+            self.mem.set_now(self.cycles + c);
             let (raw, _) = self.mem.access(a, elem_bytes, AccessKind::Read);
             // Gathers sustain ~1 lane/cycle on wide SIMD machines.
             c += self.cost.mem_issue(2) + self.cost.gather_miss(raw) + self.cost.dram_bw(raw);
@@ -334,6 +433,7 @@ impl Machine {
         let mut c = 0.0;
         for a in addrs {
             self.ops.scatter_elems += 1;
+            self.mem.set_now(self.cycles + c);
             let (raw, _) = self.mem.access(a, elem_bytes, AccessKind::Write);
             c += self.cost.mem_issue(2) + 0.25 * self.cost.gather_miss(raw) + self.cost.dram_bw(raw);
         }
@@ -351,6 +451,7 @@ impl Machine {
             if elems == 0 {
                 continue;
             }
+            self.mem.set_now(self.cycles + c);
             let (raw, lines) = self.mem.access(addr, elems * 4, AccessKind::Read);
             c += self.cost.mem_issue(lines as u64) + self.cost.vector_miss(raw) + self.cost.dram_bw(raw);
         }
@@ -365,6 +466,7 @@ impl Machine {
             if elems == 0 {
                 continue;
             }
+            self.mem.set_now(self.cycles + c);
             let (raw, lines) = self.mem.access(addr, elems * 4, AccessKind::Write);
             c += self.cost.mem_issue(lines as u64) + 0.25 * self.cost.vector_miss(raw) + self.cost.dram_bw(raw);
         }
@@ -402,14 +504,16 @@ impl Machine {
         self.charge(c);
     }
 
-    /// Final metrics snapshot.
+    /// Final metrics snapshot. `shared` stays zero here: the parallel
+    /// driver fills it (and folds the stall cycles in) after replay.
     pub fn metrics(&self) -> RunMetrics {
         RunMetrics {
             cycles: self.cycles,
             phase_cycles: self.phase_cycles,
             ops: self.ops,
             mem: self.mem.stats(),
-            sim_footprint_bytes: self.alloc.footprint(),
+            shared: SharedStats::default(),
+            sim_footprint_bytes: self.alloc.footprint() + self.shared_alloc.footprint(),
         }
     }
 }
@@ -505,8 +609,33 @@ mod tests {
     }
 
     #[test]
-    fn contended_machine_pays_more_for_dram_traffic() {
-        // Same cold streaming pattern, 8 sharers vs alone: only cycles move.
+    fn forked_cores_have_disjoint_private_regions_and_shared_operands() {
+        let mut base = Machine::new(SystemConfig { cores: 2, ..SystemConfig::default() });
+        base.enable_shared_operands();
+        let mut f0 = base.fork_core(0);
+        let mut f1 = base.fork_core(1);
+        // Private allocations can never alias across cores...
+        let p0 = f0.salloc(64);
+        let p1 = f1.salloc(64);
+        assert_ne!(p0 >> 40, p1 >> 40, "private regions must be disjoint");
+        // ...while a shared operand resolves to identical addresses on
+        // every fork (and is stable across repeated registrations).
+        let s0 = f0.shared_csr(42, (64, 64, 64)).unwrap();
+        let s1 = f1.shared_csr(42, (64, 64, 64)).unwrap();
+        assert_eq!(s0, s1, "shared operand must map identically on every core");
+        assert_eq!(f0.shared_csr(42, (64, 64, 64)).unwrap(), s0);
+        assert_ne!(s0.0, s0.1);
+        // Shared addresses live outside every private region.
+        assert!(s0.0 > p0 && s0.0 > p1);
+        // Serial machines have no shared-operand table.
+        let mut serial = Machine::new(SystemConfig::default());
+        assert!(serial.shared_csr(42, (64, 64, 64)).is_none());
+    }
+
+    #[test]
+    fn core_count_never_changes_phase1_charging() {
+        // Per-access costs are the uncontended Table II machine at every
+        // core count: contention is the replay's business, not phase 1's.
         let run = |cores: usize| {
             let mut mc = Machine::new(SystemConfig { cores, ..SystemConfig::default() });
             let a = mc.salloc(1 << 22);
@@ -517,9 +646,33 @@ mod tests {
         };
         let alone = run(1);
         let crowd = run(8);
-        assert!(crowd.cycles > alone.cycles, "{} !> {}", crowd.cycles, alone.cycles);
-        assert_eq!(crowd.ops, alone.ops, "contention must not change event counts");
+        assert_eq!(crowd.cycles, alone.cycles, "phase 1 is core-count independent");
+        assert_eq!(crowd.ops, alone.ops);
         assert_eq!(crowd.mem.dram_accesses, alone.mem.dram_accesses);
+    }
+
+    #[test]
+    fn machine_trace_stamps_phase_and_monotone_time() {
+        let mut mc = m();
+        mc.enable_trace();
+        let a = mc.salloc(1 << 20);
+        mc.phase(Phase::Expand);
+        mc.load(a, 4); // cold -> demand event in Expand
+        mc.phase(Phase::Sort);
+        mc.load(a + 4096, 4); // cold -> demand event in Sort
+        mc.load(a + 4096, 4); // warm L1 hit -> no event
+        let t = mc.take_trace();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].phase, Phase::Expand as u8);
+        assert_eq!(t[1].phase, Phase::Sort as u8);
+        assert_eq!(t[0].time, 0.0, "first access issues at cycle zero");
+        assert!(t[1].time > t[0].time, "local timestamps are monotone");
+        assert!(!t[0].write);
+        // An untraced machine records nothing.
+        let mut quiet = m();
+        let b = quiet.salloc(4096);
+        quiet.load(b, 4);
+        assert!(quiet.take_trace().is_empty());
     }
 
     #[test]

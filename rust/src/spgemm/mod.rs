@@ -78,6 +78,21 @@ impl CsrAddrs {
         }
     }
 
+    /// Register the *shared* operand (the B matrix every core streams):
+    /// under the parallel driver each core maps the same matrix at the same
+    /// canonical simulated addresses (keyed by the `&Csr`'s identity, which
+    /// is one shared reference across the workers), so cross-core line
+    /// identity in the shared-memory replay is real sharing of B — not
+    /// per-core allocator aliasing. On serial machines, where no
+    /// shared-operand table exists, this is exactly [`CsrAddrs::register`].
+    pub fn register_shared(mach: &mut Machine, m: &Csr) -> CsrAddrs {
+        let sizes = ((m.nrows + 1) * 8, m.nnz().max(1) * 4, m.nnz().max(1) * 4);
+        match mach.shared_csr(m as *const Csr as usize, sizes) {
+            Some((indptr, indices, data)) => CsrAddrs { indptr, indices, data },
+            None => CsrAddrs::register(mach, m),
+        }
+    }
+
     #[inline]
     pub fn indptr_at(&self, r: usize) -> u64 {
         self.indptr + (r as u64) * 8

@@ -12,10 +12,11 @@
 //!
 //! Two invariants the tests pin:
 //!
-//! * **Blocks are core-count independent** (and scheduler-independent):
-//!   [`block_rows_for`] depends only on the matrix and the matrix-unit group
-//!   size, so the per-core event counts of an N-core run always sum exactly
-//!   to the 1-core run's totals.
+//! * **Blocks are core-count independent**: both the uniform splitter
+//!   ([`block_rows_for`]) and the work-proportional one ([`row_blocks_dyn`])
+//!   depend only on the matrices and the matrix-unit group size, so the
+//!   per-core event counts of an N-core run always sum exactly to the
+//!   1-core run's totals under the same block policy.
 //! * **Blocks are aligned to the matrix-unit group size** (16 rows): the spz
 //!   variants process rows in lockstep groups of `unit.n` streams, so
 //!   group-aligned blocks leave every group's composition — and therefore
@@ -23,9 +24,19 @@
 //!   exactly equal to the serial run's. (`vec-radix` re-partitions its ESC
 //!   batches per block and `spz-rsort` work-sorts within a block, so their
 //!   counts match the 1-core *driver* run, not the serial loop.)
+//!
+//! After the workers join, the driver runs the **shared-memory replay**
+//! ([`crate::mem::shared::replay`]): each core recorded its LLC-level access
+//! trace during execution, and the deterministic replay prices the shared
+//! LLC (queueing + MESI-lite coherence) and the multi-channel DRAM back end,
+//! folding per-core stall cycles into the per-phase metrics. Everything
+//! stays bit-reproducible across host thread schedules, and at 1 core the
+//! replay is an exact no-op on the cycle counts.
 
 use crate::config::SystemConfig;
 use crate::matrix::Csr;
+use crate::mem::{shared, TraceEvent};
+use crate::sim::machine::NUM_PHASES;
 use crate::sim::{Machine, MulticoreMetrics};
 use crate::spgemm::SpGemm;
 use crate::util::round_up;
@@ -48,6 +59,13 @@ pub enum Scheduler {
     /// thread timing — per-core metrics, critical path, and fig12 are
     /// bit-reproducible run to run.
     WorkStealing,
+    /// Work-stealing claims over *work-proportional* blocks: instead of a
+    /// uniform row count per block, block boundaries are cut where the
+    /// accumulated Gustavson work estimate crosses an equal share (see
+    /// [`row_blocks_dyn`]), so heavy hub rows stop producing one outsized
+    /// block. Boundaries stay group-aligned and depend only on the matrices
+    /// — never the core count — preserving exact count additivity.
+    WorkStealingDyn,
 }
 
 impl Scheduler {
@@ -55,6 +73,7 @@ impl Scheduler {
         match self {
             Scheduler::Static => "static",
             Scheduler::WorkStealing => "work-stealing",
+            Scheduler::WorkStealingDyn => "ws-dyn",
         }
     }
 }
@@ -65,8 +84,9 @@ impl std::str::FromStr for Scheduler {
         match s {
             "static" => Ok(Scheduler::Static),
             "work-stealing" | "ws" => Ok(Scheduler::WorkStealing),
+            "ws-dyn" | "work-stealing-dyn" => Ok(Scheduler::WorkStealingDyn),
             other => Err(format!(
-                "unknown scheduler '{other}' (expected one of: static, work-stealing)"
+                "unknown scheduler '{other}' (expected one of: static, work-stealing, ws-dyn)"
             )),
         }
     }
@@ -109,13 +129,17 @@ pub struct ParallelRun {
     pub blocks_per_core: Vec<usize>,
 }
 
-/// Default rows per block: targets ~64 blocks (plenty of steals even at 8
-/// cores) with a one-group floor, rounded up to the group size. Depends only
-/// on the matrix and the unit geometry — never on the core count — so
-/// per-core event counts sum identically at every core count.
+/// Target block count for both the uniform and the work-proportional
+/// splitters: ~64 blocks means plenty of steals even at 8 cores.
+const TARGET_BLOCKS: usize = 64;
+
+/// Default rows per block: targets ~[`TARGET_BLOCKS`] blocks with a
+/// one-group floor, rounded up to the group size. Depends only on the
+/// matrix and the unit geometry — never on the core count — so per-core
+/// event counts sum identically at every core count.
 pub fn block_rows_for(nrows: usize, group: usize) -> usize {
     let group = group.max(1);
-    round_up(nrows.max(1).div_ceil(64).max(group), group)
+    round_up(nrows.max(1).div_ceil(TARGET_BLOCKS).max(group), group)
 }
 
 /// The row-block list for an `nrows`-row A (block size from
@@ -135,6 +159,50 @@ pub fn row_blocks(nrows: usize, group: usize, cfg: &ParallelConfig) -> Vec<(usiz
     blocks
 }
 
+/// Work-proportional row blocks (the `ws-dyn` policy): cut a block boundary
+/// whenever the accumulated per-row work estimate (Gustavson multiply
+/// counts plus a per-row overhead term, the same estimator the
+/// work-stealing claim replay uses) crosses 1/[`TARGET_BLOCKS`] of the
+/// total. Two invariants are preserved on purpose:
+///
+/// * boundaries move only at matrix-unit-group granularity, so the spz/scl
+///   group compositions — and therefore their dynamic event counts — stay
+///   exactly equal to the serial run's;
+/// * the split depends only on `(a, b, group)`, never on the core count, so
+///   per-core counts still sum identically at every core count.
+///
+/// An explicit [`ParallelConfig::block_rows`] request overrides the policy
+/// and falls back to the uniform splitter.
+pub fn row_blocks_dyn(a: &Csr, b: &Csr, group: usize, cfg: &ParallelConfig) -> Vec<(usize, usize)> {
+    if cfg.block_rows.is_some() {
+        return row_blocks(a.nrows, group, cfg);
+    }
+    dyn_blocks_from_work(a.nrows, group, &crate::matrix::stats::row_work(a, b))
+}
+
+/// [`row_blocks_dyn`]'s core, over a precomputed work estimate (the driver
+/// computes `row_work` once and shares it with the scheduler).
+fn dyn_blocks_from_work(nrows: usize, group: usize, row_work: &[u64]) -> Vec<(usize, usize)> {
+    let group = group.max(1);
+    let total: u64 = row_work.iter().sum::<u64>() + nrows as u64;
+    let target = total.div_ceil(TARGET_BLOCKS as u64).max(1);
+    let mut blocks = Vec::new();
+    let mut lo = 0usize;
+    let mut acc = 0u64;
+    let mut r = 0usize;
+    while r < nrows {
+        let hi = (r + group).min(nrows);
+        acc += row_work[r..hi].iter().sum::<u64>() + (hi - r) as u64;
+        r = hi;
+        if acc >= target || r == nrows {
+            blocks.push((lo, r));
+            lo = r;
+            acc = 0;
+        }
+    }
+    blocks
+}
+
 /// Per-core block assignment, decided up front so it depends only on the
 /// inputs (never on host-thread timing):
 ///
@@ -145,8 +213,7 @@ pub fn row_blocks(nrows: usize, group: usize, cfg: &ParallelConfig) -> Vec<(usiz
 ///   fixed row overheads) is smallest — i.e. the core that would have gone
 ///   idle and stolen next. Ties break toward the lowest core id.
 fn assign_blocks(
-    a: &Csr,
-    b: &Csr,
+    row_work: &[u64],
     blocks: &[(usize, usize)],
     cores: usize,
     scheduler: Scheduler,
@@ -156,8 +223,7 @@ fn assign_blocks(
         Scheduler::Static => (0..cores)
             .map(|c| (c * nblocks / cores..(c + 1) * nblocks / cores).collect())
             .collect(),
-        Scheduler::WorkStealing => {
-            let row_work = crate::matrix::stats::row_work(a, b);
+        Scheduler::WorkStealing | Scheduler::WorkStealingDyn => {
             let mut plan: Vec<Vec<usize>> = vec![Vec::new(); cores];
             let mut est = vec![0.0f64; cores];
             for (i, &(lo, hi)) in blocks.iter().enumerate() {
@@ -236,16 +302,38 @@ where
         b.ncols
     );
     let cores = cfg.cores.max(1);
+    ensure!(
+        cores <= 64,
+        "at most 64 simulated cores are supported (the shared-memory \
+         replay's coherence directory uses 64-bit sharer sets), got {cores}"
+    );
     let mut sys = *sys;
     sys.cores = cores;
-    let base = Machine::new(sys);
+    let mut base = Machine::new(sys);
+    // Every fork maps the shared operand (B) at the same canonical
+    // addresses, and each core's private allocations live in a disjoint
+    // region — so line identity across cores in the replay is exactly
+    // "the same bytes of B".
+    base.enable_shared_operands();
 
-    let blocks = row_blocks(a.nrows, sys.unit.n, cfg);
-    let plan = assign_blocks(a, b, &blocks, cores, cfg.scheduler);
+    // One O(nnz) Gustavson work estimate serves both the ws-dyn block cut
+    // and the work-stealing claim replay (Static needs neither).
+    let row_work = if cfg.scheduler == Scheduler::Static {
+        Vec::new()
+    } else {
+        crate::matrix::stats::row_work(a, b)
+    };
+    let blocks = if cfg.scheduler == Scheduler::WorkStealingDyn && cfg.block_rows.is_none() {
+        dyn_blocks_from_work(a.nrows, sys.unit.n, &row_work)
+    } else {
+        row_blocks(a.nrows, sys.unit.n, cfg)
+    };
+    let plan = assign_blocks(&row_work, &blocks, cores, cfg.scheduler);
     let blocks_per_core: Vec<usize> = plan.iter().map(|p| p.len()).collect();
 
     let results: Mutex<Vec<Option<Csr>>> = Mutex::new(vec![None; blocks.len()]);
     let mut per_core = Vec::with_capacity(cores);
+    let mut traces: Vec<Vec<TraceEvent>> = Vec::with_capacity(cores);
     let mut failures: Vec<String> = Vec::new();
 
     std::thread::scope(|scope| {
@@ -255,23 +343,30 @@ where
             let blocks = &blocks;
             let results = &results;
             let make_impl = &make_impl;
-            handles.push(scope.spawn(move || -> Result<crate::sim::RunMetrics> {
-                let mut machine = machine;
-                let mut im = make_impl()?;
-                for &bi in mine {
-                    let (lo, hi) = blocks[bi];
-                    let slab = row_slab(a, lo, hi);
-                    let c = im
-                        .multiply(&mut machine, &slab, b)
-                        .with_context(|| format!("rows {lo}..{hi} on core {core}"))?;
-                    results.lock().unwrap()[bi] = Some(c);
-                }
-                Ok(machine.metrics())
-            }));
+            handles.push(scope.spawn(
+                move || -> Result<(crate::sim::RunMetrics, Vec<TraceEvent>)> {
+                    let mut machine = machine;
+                    machine.enable_trace();
+                    let mut im = make_impl()?;
+                    for &bi in mine {
+                        let (lo, hi) = blocks[bi];
+                        let slab = row_slab(a, lo, hi);
+                        let c = im
+                            .multiply(&mut machine, &slab, b)
+                            .with_context(|| format!("rows {lo}..{hi} on core {core}"))?;
+                        results.lock().unwrap()[bi] = Some(c);
+                    }
+                    let trace = machine.take_trace();
+                    Ok((machine.metrics(), trace))
+                },
+            ));
         }
         for (core, h) in handles.into_iter().enumerate() {
             match h.join() {
-                Ok(Ok(m)) => per_core.push(m),
+                Ok(Ok((m, t))) => {
+                    per_core.push(m);
+                    traces.push(t);
+                }
                 Ok(Err(e)) => failures.push(format!("core {core}: {e:#}")),
                 Err(_) => failures.push(format!("core {core}: worker panicked")),
             }
@@ -279,10 +374,28 @@ where
     });
     ensure!(failures.is_empty(), "parallel SpGEMM failed: {failures:?}");
 
+    // Phase 2: deterministic shared-memory replay. The merged per-core
+    // traces price the shared LLC (queueing + MESI-lite coherence) and the
+    // DRAM channels; the resulting per-core stalls fold into the same
+    // per-phase buckets the accesses charged in phase 1. At 1 core every
+    // replay-derived cost is exactly zero, so this stage is an identity on
+    // the seed model's numbers (the differential tests pin that).
+    let outcome = shared::replay(&sys.mem, &sys.shared, &traces);
+    for (c, m) in per_core.iter_mut().enumerate() {
+        m.shared = outcome.per_core[c];
+        let stalls = &outcome.per_core_phase_stalls[c];
+        for (p, &stall) in stalls.iter().enumerate().take(NUM_PHASES) {
+            m.phase_cycles[p] += stall;
+            m.cycles += stall;
+        }
+    }
+    let mut metrics = MulticoreMetrics::from_cores(per_core);
+    metrics.channel_busy_cycles = outcome.channel_busy_cycles;
+
     let csr = stitch(a.nrows, b.ncols, results.into_inner().unwrap())?;
     Ok(ParallelRun {
         csr,
-        metrics: MulticoreMetrics::from_cores(per_core),
+        metrics,
         blocks_per_core,
     })
 }
@@ -317,8 +430,10 @@ mod tests {
             "work-stealing".parse::<Scheduler>().unwrap().to_string(),
             "work-stealing"
         );
+        assert_eq!("ws-dyn".parse::<Scheduler>().unwrap(), Scheduler::WorkStealingDyn);
+        assert_eq!(Scheduler::WorkStealingDyn.to_string(), "ws-dyn");
         let e = "greedy".parse::<Scheduler>().unwrap_err();
-        assert!(e.contains("static") && e.contains("greedy"), "{e}");
+        assert!(e.contains("static") && e.contains("greedy") && e.contains("ws-dyn"), "{e}");
     }
 
     #[test]
@@ -439,6 +554,129 @@ mod tests {
     }
 
     #[test]
+    fn dyn_blocks_are_aligned_core_independent_and_cover_all_rows() {
+        let a = gen::rmat(256, 256, 2600, 0.62, 0.18, 0.14, 98);
+        let cfg2 = ParallelConfig {
+            scheduler: Scheduler::WorkStealingDyn,
+            ..ParallelConfig::new(2)
+        };
+        let cfg8 = ParallelConfig {
+            scheduler: Scheduler::WorkStealingDyn,
+            ..ParallelConfig::new(8)
+        };
+        let b2 = row_blocks_dyn(&a, &a, 16, &cfg2);
+        let b8 = row_blocks_dyn(&a, &a, 16, &cfg8);
+        assert_eq!(b2, b8, "dyn blocks must not depend on the core count");
+        assert!(b2.iter().all(|&(lo, _)| lo % 16 == 0), "group alignment");
+        assert_eq!(b2.first().unwrap().0, 0);
+        assert_eq!(b2.last().unwrap().1, a.nrows);
+        for w in b2.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "blocks must tile contiguously");
+        }
+        // An explicit block size overrides the policy (uniform fallback).
+        let forced = ParallelConfig { block_rows: Some(32), ..cfg2 };
+        let bf = row_blocks_dyn(&a, &a, 16, &forced);
+        assert!(bf.iter().take(bf.len() - 1).all(|&(lo, hi)| hi - lo == 32));
+    }
+
+    #[test]
+    fn ws_dyn_matches_serial_product_and_counts() {
+        let a = gen::rmat(160, 160, 1400, 0.58, 0.2, 0.14, 99);
+        for id in [ImplId::SclArray, ImplId::SclHash, ImplId::Spz] {
+            let (cs, sm) = serial(id, &a);
+            let cfg = ParallelConfig {
+                scheduler: Scheduler::WorkStealingDyn,
+                ..ParallelConfig::new(4)
+            };
+            let run = row_blocked(&sys(), native(id), &a, &a, &cfg).unwrap();
+            assert_eq!(run.csr.indptr, cs.indptr, "{}", id.name());
+            assert_eq!(run.csr.indices, cs.indices, "{}", id.name());
+            // Group-aligned dyn blocks keep the row/group-local impls'
+            // event counts exactly serial.
+            assert_eq!(run.metrics.total.ops, sm.ops, "{}", id.name());
+        }
+    }
+
+    #[test]
+    fn ws_dyn_does_not_lose_to_uniform_work_stealing_on_skew() {
+        let a = gen::rmat(256, 256, 2600, 0.62, 0.18, 0.14, 100);
+        let ws = row_blocked(&sys(), native(ImplId::Spz), &a, &a, &ParallelConfig::new(4)).unwrap();
+        let dyn_cfg = ParallelConfig {
+            scheduler: Scheduler::WorkStealingDyn,
+            ..ParallelConfig::new(4)
+        };
+        let dy = row_blocked(&sys(), native(ImplId::Spz), &a, &a, &dyn_cfg).unwrap();
+        assert!(
+            dy.metrics.critical_path_cycles <= ws.metrics.critical_path_cycles * 1.05,
+            "ws-dyn {} should not lose to uniform work-stealing {}",
+            dy.metrics.critical_path_cycles,
+            ws.metrics.critical_path_cycles
+        );
+    }
+
+    #[test]
+    fn one_core_replay_is_an_exact_noop() {
+        let a = gen::rmat(128, 128, 1100, 0.6, 0.18, 0.14, 101);
+        for id in [ImplId::SclHash, ImplId::Spz] {
+            let run = row_blocked(&sys(), native(id), &a, &a, &ParallelConfig::new(1)).unwrap();
+            let s = &run.metrics.per_core[0].shared;
+            assert!(s.llc_accesses > 0, "{}: trace must have been recorded", id.name());
+            assert_eq!(s.stall_cycles(), 0.0, "{}", id.name());
+            assert_eq!(s.llc_queue_cycles, 0.0, "{}", id.name());
+            assert_eq!(s.dram_queue_cycles, 0.0, "{}", id.name());
+            assert_eq!(s.coherence_cycles, 0.0, "{}", id.name());
+            assert_eq!(s.shared_fills + s.demotions, 0, "{}: shadow == shared", id.name());
+            assert_eq!(s.coherence_events(), 0, "{}", id.name());
+            // The shadow and the shared model agree access for access.
+            assert_eq!(
+                s.llc_accesses + s.writeback_installs,
+                run.metrics.per_core[0].mem.llc_accesses,
+                "{}",
+                id.name()
+            );
+        }
+    }
+
+    #[test]
+    fn multicore_replay_reports_contention_and_stays_deterministic() {
+        let a = gen::erdos_renyi(512, 512, 6000, 102);
+        let run =
+            || row_blocked(&sys(), native(ImplId::Spz), &a, &a, &ParallelConfig::new(4)).unwrap();
+        let r1 = run();
+        let r2 = run();
+        // Bit-reproducible across host thread schedules: cycles, stalls,
+        // coherence counters, and channel occupancy all match exactly.
+        let c1: Vec<f64> = r1.metrics.per_core.iter().map(|m| m.cycles).collect();
+        let c2: Vec<f64> = r2.metrics.per_core.iter().map(|m| m.cycles).collect();
+        assert_eq!(c1, c2);
+        assert_eq!(
+            r1.metrics.per_core.iter().map(|m| m.shared).collect::<Vec<_>>(),
+            r2.metrics.per_core.iter().map(|m| m.shared).collect::<Vec<_>>()
+        );
+        assert_eq!(r1.metrics.channel_busy_cycles, r2.metrics.channel_busy_cycles);
+        assert_eq!(
+            r1.metrics.channel_busy_cycles.len(),
+            sys().shared.dram_channels
+        );
+        // Four cores streaming one B: the shared LLC sees real traffic and
+        // the totals add up exactly.
+        let tot = &r1.metrics.total.shared;
+        assert!(tot.llc_accesses > 0);
+        assert_eq!(tot.llc_hits + tot.llc_misses, tot.llc_accesses);
+        let sum: u64 = r1.metrics.per_core.iter().map(|m| m.shared.llc_accesses).sum();
+        assert_eq!(sum, tot.llc_accesses);
+        // Per-phase cycles still sum to the core's total after folding.
+        for m in &r1.metrics.per_core {
+            let ps: f64 = m.phase_cycles.iter().sum();
+            assert!(
+                (ps - m.cycles).abs() <= 1e-9 * m.cycles.max(1.0),
+                "{ps} vs {}",
+                m.cycles
+            );
+        }
+    }
+
+    #[test]
     fn empty_and_tiny_matrices_work() {
         let e = Csr::empty(0, 0);
         let run =
@@ -453,6 +691,17 @@ mod tests {
         assert_eq!(run.csr, tiny);
         assert_eq!(run.metrics.cores(), 7);
         assert_eq!(run.blocks_per_core.iter().sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn more_than_64_cores_is_a_clean_error() {
+        let a = Csr::identity(8);
+        let e = row_blocked(&sys(), native(ImplId::SclHash), &a, &a, &ParallelConfig::new(65));
+        assert!(e.is_err(), "65 cores must error, not panic");
+        assert!(format!("{:#}", e.unwrap_err()).contains("64"));
+        // The boundary itself works.
+        assert!(row_blocked(&sys(), native(ImplId::SclHash), &a, &a, &ParallelConfig::new(64))
+            .is_ok());
     }
 
     #[test]

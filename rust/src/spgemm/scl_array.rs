@@ -22,7 +22,7 @@ impl SpGemm for SclArray {
 
     fn multiply(&mut self, m: &mut Machine, a: &Csr, b: &Csr) -> Result<Csr> {
         let aa = CsrAddrs::register(m, a);
-        let ba = CsrAddrs::register(m, b);
+        let ba = CsrAddrs::register_shared(m, b);
 
         // --- Preprocess: size the output (upper bound = total work). ------
         let work = crate::spgemm::prep::row_work(m, a, b, &aa, &ba);

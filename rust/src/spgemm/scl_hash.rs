@@ -25,7 +25,7 @@ impl SpGemm for SclHash {
 
     fn multiply(&mut self, m: &mut Machine, a: &Csr, b: &Csr) -> Result<Csr> {
         let aa = CsrAddrs::register(m, a);
-        let ba = CsrAddrs::register(m, b);
+        let ba = CsrAddrs::register_shared(m, b);
 
         // --- Preprocess: per-row work -> per-row table size. --------------
         let work = crate::spgemm::prep::row_work(m, a, b, &aa, &ba);

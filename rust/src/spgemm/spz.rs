@@ -72,7 +72,7 @@ impl Spz {
         let n = self.engine.n(); // chunk size = matrix register rows
         let vl = m.cfg.vlen_elems;
         let aa = CsrAddrs::register(m, a);
-        let ba = CsrAddrs::register(m, b);
+        let ba = CsrAddrs::register_shared(m, b);
 
         // --- Preprocess: work + padded temp offsets (§V-B). ---------------
         let work = crate::spgemm::prep::row_work(m, a, b, &aa, &ba);

@@ -39,7 +39,7 @@ impl SpGemm for VecRadix {
     fn multiply(&mut self, m: &mut Machine, a: &Csr, b: &Csr) -> Result<Csr> {
         let vl = m.cfg.vlen_elems;
         let aa = CsrAddrs::register(m, a);
-        let ba = CsrAddrs::register(m, b);
+        let ba = CsrAddrs::register_shared(m, b);
 
         // --- Preprocess: per-row work, block partitioning, allocation. ----
         let work = crate::spgemm::prep::row_work(m, a, b, &aa, &ba);

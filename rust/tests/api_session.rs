@@ -213,6 +213,37 @@ fn non_registry_datasets_appear_in_figures() {
 }
 
 #[test]
+fn bounded_session_cache_and_ws_dyn_jobs_work_end_to_end() {
+    use sparsezipper::api::Scheduler;
+    let session = Session::with_config(SessionConfig {
+        max_cached_datasets: Some(1),
+        ..SessionConfig::default()
+    });
+    // A ws-dyn multi-core job through the public API, with the bounded
+    // cache evicting as new datasets stream through.
+    let a = session
+        .run(
+            &JobSpec::new(ImplId::Spz, DatasetSource::registry("p2p").unwrap())
+                .with_scale(0.01)
+                .with_verify(true)
+                .with_cores(4)
+                .with_scheduler(Scheduler::WorkStealingDyn),
+        )
+        .unwrap();
+    assert!(a.verified);
+    assert_eq!(a.sched, Some(Scheduler::WorkStealingDyn));
+    let mc = a.multicore.as_ref().expect("multicore metrics");
+    assert_eq!(mc.cores(), 4);
+    assert!(!mc.channel_busy_cycles.is_empty(), "replay reports channel occupancy");
+    let wiki = DatasetSource::registry("wiki").unwrap();
+    session
+        .run(&JobSpec::new(ImplId::SclHash, wiki).with_scale(0.01))
+        .unwrap();
+    assert_eq!(session.cached_datasets(), 1, "cap 1 keeps only the latest dataset");
+    assert!(session.cache_evictions() >= 1);
+}
+
+#[test]
 fn json_export_is_stable_and_parseable_ish() {
     let session = Session::with_config(SessionConfig::default());
     let src = DatasetSource::in_memory("jay", Arc::new(gen::erdos_renyi(40, 40, 160, 5)));
@@ -244,9 +275,16 @@ fn json_export_is_stable_and_parseable_ish() {
         "\"multicore\":{\"critical_path_cycles\":",
         "\"critical_path\":{\"preprocess\":",
         "\"per_core\":[",
+        "\"shared\":{\"llc_accesses\":",
+        "\"writeback_installs\":",
+        "\"stall_cycles\":",
+        "\"channel_busy_cycles\":[",
     ] {
         assert!(pj.contains(key), "missing {key} in {pj}");
     }
+    // The serial job carries the same shape with an all-zero shared block.
+    assert!(j.contains("\"shared\":{\"llc_accesses\":"), "{j}");
+    assert!(j.contains("\"coherence_cycles\":0"), "{j}");
 
     let spec = SuiteSpec {
         datasets: vec![src],

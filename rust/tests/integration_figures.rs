@@ -83,8 +83,8 @@ fn fig12_scaling_sweep_renders_and_scales() {
         .collect();
     let points =
         figures::scaling_sweep(&session, &datasets, ImplId::Spz, 0.02, &[1, 4]).expect("sweep");
-    // 1 serial baseline + (static, work-stealing) at 4 cores, per dataset.
-    assert_eq!(points.len(), 2 * 3);
+    // 1 serial baseline + (static, work-stealing, ws-dyn) at 4 cores each.
+    assert_eq!(points.len(), 2 * 4);
     for p in &points {
         assert!(p.cycles > 0.0, "{}: zero cycles", p.dataset);
         if p.cores > 1 {
@@ -97,6 +97,10 @@ fn fig12_scaling_sweep_renders_and_scales() {
                 p.speedup
             );
             assert!(p.imbalance >= 1.0);
+            // The shared-memory replay ran: the hit rate is a rate and the
+            // queueing totals are non-negative.
+            assert!((0.0..=1.0).contains(&p.llc_hit_rate), "{}", p.dataset);
+            assert!(p.dram_queue_cycles >= 0.0);
         }
     }
     let txt = figures::fig12(&points);

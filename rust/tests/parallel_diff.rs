@@ -6,9 +6,13 @@
 //! * the parallel product is bit-identical in structure (and within
 //!   `same_product` tolerance in values) to the serial run, at every core
 //!   count and scheduler;
-//! * per-core event counts sum *exactly* to the 1-core run's totals — and,
-//!   for the strictly row/group-local implementations (scl-array, scl-hash,
-//!   spz), exactly to the plain serial loop's counts.
+//! * per-core event counts sum *exactly* to the 1-core run's totals (under
+//!   the same block policy — uniform or ws-dyn) — and, for the strictly
+//!   row/group-local implementations (scl-array, scl-hash, spz), exactly to
+//!   the plain serial loop's counts;
+//! * at 1 core the shared-memory replay is an exact no-op: every queueing /
+//!   coherence / sharing correction is 0.0, so the new shared model
+//!   reproduces the seed cycle model cycle-for-cycle.
 
 use sparsezipper::matrix::{registry, Csr};
 use sparsezipper::sim::machine::OpCounters;
@@ -56,6 +60,30 @@ fn differential_every_impl_every_registry_dataset_serial_and_parallel() {
                 assert_eq!(one.metrics.total.ops, sm.ops, "{}", ctx("x1 counts vs serial"));
             }
 
+            // Acceptance pin: at 1 core the shared-memory model reproduces
+            // the seed cycle model exactly — the replay's queueing,
+            // coherence, and sharing corrections are all *exactly* zero
+            // (phase-1 charging is the uncontended seed model, so zero
+            // extras means identical cycles).
+            let s1 = &one.metrics.per_core[0].shared;
+            assert_eq!(s1.stall_cycles(), 0.0, "{}", ctx("x1 replay stalls"));
+            assert_eq!(s1.llc_queue_cycles, 0.0, "{}", ctx("x1 llc queue"));
+            assert_eq!(s1.dram_queue_cycles, 0.0, "{}", ctx("x1 dram queue"));
+            assert_eq!(s1.coherence_cycles, 0.0, "{}", ctx("x1 coherence"));
+            assert_eq!(
+                s1.shared_fills + s1.demotions,
+                0,
+                "{}",
+                ctx("x1 shadow/shared divergence")
+            );
+            assert_eq!(s1.coherence_events(), 0, "{}", ctx("x1 coherence events"));
+            assert_eq!(
+                s1.llc_accesses + s1.writeback_installs,
+                one.metrics.per_core[0].mem.llc_accesses,
+                "{}",
+                ctx("x1 trace accounting")
+            );
+
             for cores in [2usize, 7] {
                 for sched in [Scheduler::Static, Scheduler::WorkStealing] {
                     let cfg = ParallelConfig { scheduler: sched, ..ParallelConfig::new(cores) };
@@ -77,6 +105,39 @@ fn differential_every_impl_every_registry_dataset_serial_and_parallel() {
                     );
                     assert_eq!(many.metrics.cores(), cores);
                 }
+            }
+
+            // ws-dyn uses its own (work-proportional, core-count-independent)
+            // block list: the product stays bit-identical, and the 2-core
+            // counts sum exactly to the 1-core ws-dyn run's totals.
+            let dyn1 = ParallelConfig {
+                scheduler: Scheduler::WorkStealingDyn,
+                ..ParallelConfig::new(1)
+            };
+            let dyn2 = ParallelConfig {
+                scheduler: Scheduler::WorkStealingDyn,
+                ..ParallelConfig::new(2)
+            };
+            let done = parallel::row_blocked(&sys, native(id), &a, &a, &dyn1)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", ctx("ws-dyn x1")));
+            let dtwo = parallel::row_blocked(&sys, native(id), &a, &a, &dyn2)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", ctx("ws-dyn x2")));
+            assert_eq!(done.csr, one.csr, "{}", ctx("ws-dyn x1 product"));
+            assert_eq!(dtwo.csr, one.csr, "{}", ctx("ws-dyn x2 product"));
+            let mut sum = OpCounters::default();
+            for core in &dtwo.metrics.per_core {
+                sum.add(&core.ops);
+            }
+            assert_eq!(
+                sum,
+                done.metrics.total.ops,
+                "{}",
+                ctx("ws-dyn count additivity")
+            );
+            // Group-aligned dyn blocks keep the row/group-local impls'
+            // counts exactly equal to the uniform-block (and serial) runs.
+            if matches!(id, ImplId::SclArray | ImplId::SclHash | ImplId::Spz) {
+                assert_eq!(done.metrics.total.ops, sm.ops, "{}", ctx("ws-dyn vs serial"));
             }
         }
 
