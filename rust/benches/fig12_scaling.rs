@@ -26,8 +26,15 @@ fn main() {
     let mut out = None;
     bench_util::bench("fig12 scaling sweep (spz)", 1, || {
         out = Some(
-            figures::scaling_sweep(&session, &datasets, ImplId::Spz, bench_util::scale(), &cores)
-                .expect("scaling sweep"),
+            figures::scaling_sweep(
+                &session,
+                &datasets,
+                ImplId::Spz,
+                bench_util::scale(),
+                &cores,
+                &Scheduler::ALL,
+            )
+            .expect("scaling sweep"),
         );
     });
     let points = out.unwrap();

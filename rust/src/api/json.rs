@@ -100,14 +100,18 @@ fn metrics_json(m: &RunMetrics) -> String {
 }
 
 /// Shared-memory replay results (all-zero for serial runs, so parsers see
-/// one shape at every core count).
+/// one shape at every core count). Append-only: the iterative-engine and
+/// row-buffer fields (`replay_iters` .. `row_extra_cycles`) extend the
+/// PR 3 schema after `stall_cycles`.
 fn shared_json(s: &SharedStats) -> String {
     format!(
         "{{\"llc_accesses\":{},\"llc_hits\":{},\"llc_misses\":{},\"writeback_installs\":{},\
          \"llc_hit_rate\":{},\"shared_fills\":{},\"demotions\":{},\"upgrades\":{},\
          \"invalidations_sent\":{},\"invalidations_received\":{},\"dirty_forwards\":{},\
          \"llc_queue_cycles\":{},\"dram_queue_cycles\":{},\"coherence_cycles\":{},\
-         \"demotion_cycles\":{},\"sharing_saved_cycles\":{},\"stall_cycles\":{}}}",
+         \"demotion_cycles\":{},\"sharing_saved_cycles\":{},\"stall_cycles\":{},\
+         \"replay_iters\":{},\"replay_residual\":{},\"row_hits\":{},\"row_misses\":{},\
+         \"row_conflicts\":{},\"row_extra_cycles\":{}}}",
         s.llc_accesses,
         s.llc_hits,
         s.llc_misses,
@@ -124,7 +128,13 @@ fn shared_json(s: &SharedStats) -> String {
         num(s.coherence_cycles),
         num(s.demotion_cycles),
         num(s.sharing_saved_cycles),
-        num(s.stall_cycles())
+        num(s.stall_cycles()),
+        s.replay_iters,
+        num(s.replay_residual),
+        s.row_hits,
+        s.row_misses,
+        s.row_conflicts,
+        num(s.row_extra_cycles)
     )
 }
 

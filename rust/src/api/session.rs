@@ -545,7 +545,10 @@ impl Session {
     ///
     /// `cores >= 2` runs the row-blocked multi-core driver instead of the
     /// serial loop; the vec-radix block sweep then picks the configuration
-    /// with the shortest *critical path*.
+    /// with the shortest *critical path*. Every scheduler (including the
+    /// pilot-replay-driven `ws-bw`) is a pure function of the inputs, so
+    /// repeated jobs on one session are bit-reproducible even though the
+    /// grid itself runs on work-stealing host threads.
     fn execute(
         &self,
         id: ImplId,

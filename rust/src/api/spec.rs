@@ -141,7 +141,10 @@ pub struct JobSpec {
     /// row-blocked multi-core driver ([`crate::spgemm::parallel`]) and fills
     /// [`crate::api::JobResult::multicore`].
     pub cores: usize,
-    /// Row-block scheduler for multi-core runs (ignored at 1 core).
+    /// Row-block scheduler for multi-core runs (ignored at 1 core). The
+    /// full set lives in [`Scheduler::ALL`], and string forms parse through
+    /// the one `Scheduler::from_str` the CLI uses — so `"ws-bw"` works
+    /// identically here, in `spz run/suite/fig12/mem`, and in every sweep.
     pub sched: Scheduler,
 }
 

@@ -38,8 +38,9 @@ pub struct MemConfig {
 }
 
 /// The shared end of the memory system: one LLC shared by all active cores
-/// plus a multi-channel DRAM back end, modeled by deterministic
-/// trace-and-replay (see [`crate::mem::trace`] and [`crate::mem::shared`]).
+/// plus a multi-channel DRAM back end with per-channel bank/row-buffer
+/// state, modeled by the iterative deterministic trace-and-replay engine
+/// (see [`crate::mem::trace`] and [`crate::mem::shared::ReplayEngine`]).
 /// All cost fields are calibration knobs in the DESIGN.md spirit: relative
 /// multi-core behaviour is what matters, and every one of them contributes
 /// *zero* cycles when a single core runs alone.
@@ -49,6 +50,40 @@ pub struct SharedMemConfig {
     /// (`line % dram_channels`), so streaming traffic spreads while pathological
     /// same-channel conflicts stay representable.
     pub dram_channels: usize,
+    /// DRAM banks per channel. Within a channel, consecutive lines fill one
+    /// bank's row buffer for [`SharedMemConfig::row_buffer_lines`] lines
+    /// before rotating to the next bank, so streams keep rows open while
+    /// interleaved streams from other cores close them.
+    pub dram_banks: usize,
+    /// Cache lines per DRAM row buffer (row size / line size; 8KB rows of
+    /// 64B lines = 128).
+    pub row_buffer_lines: usize,
+    /// Service cost of a row-buffer *hit* (the open-row fast path), used as
+    /// the baseline the miss/conflict costs are priced against. The replay
+    /// charges only the *difference* between the shared bank outcome and the
+    /// core's private shadow bank outcome, so single-stream row behaviour
+    /// stays phase 1's business and everything is exactly zero at 1 core.
+    pub row_hit_cycles: f64,
+    /// Service cost of a row-buffer miss (precharge + activate) caused by
+    /// the core's own stream turning the row.
+    pub row_miss_cycles: f64,
+    /// Service cost of a row-buffer *conflict*: the row this core's stream
+    /// had open was closed by another core's interleaved traffic.
+    pub row_conflict_cycles: f64,
+    /// Upper bound on replay iterations of the
+    /// [`crate::mem::shared::ReplayEngine`]: iteration k+1 re-replays with
+    /// the shadow-LLC lines that iteration k demoted treated as invalidated
+    /// (so repeat demotions stop paying the exposed-latency penalty).
+    /// Set to 1 to select the one-shot (PR 3) model. The current
+    /// invalidation feedback provably reaches its fixed point in <= 2
+    /// passes (demotion triggers are pass-invariant), so the default budget
+    /// of 2 is exact; the knob stays a budget so richer cross-pass feedback
+    /// (e.g. timing shifts) can land without an interface change.
+    pub max_replay_iters: u32,
+    /// Convergence threshold: the engine stops iterating once the pending
+    /// stall correction (the cycles the next iteration would reclassify)
+    /// falls to or below this many cycles.
+    pub replay_epsilon: f64,
     /// Shared LLC capacity policy: `true` models a sliced LLC whose
     /// capacity scales with the active core count — each core brings its
     /// Table II slice, added as extra sets (power-of-two slicings; odd core
@@ -81,6 +116,13 @@ impl Default for SharedMemConfig {
     fn default() -> Self {
         SharedMemConfig {
             dram_channels: 4,
+            dram_banks: 4,
+            row_buffer_lines: 128,
+            row_hit_cycles: 0.0,
+            row_miss_cycles: 18.0,
+            row_conflict_cycles: 50.0,
+            max_replay_iters: 2,
+            replay_epsilon: 1e-6,
             llc_sliced: true,
             llc_service_cycles: 2.0,
             dram_transfer_cycles: DRAM_BW_CYCLES,
@@ -280,5 +322,10 @@ mod tests {
         assert_eq!(c.shared.dram_channels, 4);
         assert!(c.shared.llc_sliced);
         assert_eq!(c.shared.dram_transfer_cycles, DRAM_BW_CYCLES);
+        assert_eq!(c.shared.dram_banks, 4);
+        assert_eq!(c.shared.row_buffer_lines, 128);
+        assert!(c.shared.max_replay_iters >= 2, "fixed point needs >= 2 passes");
+        assert!(c.shared.replay_epsilon >= 0.0);
+        assert!(c.shared.row_conflict_cycles >= c.shared.row_miss_cycles);
     }
 }

@@ -371,13 +371,15 @@ pub struct ScalingPoint {
 }
 
 /// Run the Figure 12 scaling study: `impl_id` on every dataset at each core
-/// count, once per scheduler, all through the session's dataset cache.
+/// count, once per scheduler in `scheds` (`&Scheduler::ALL` for the full
+/// sweep), all through the session's dataset cache.
 pub fn scaling_sweep(
     session: &Session,
     datasets: &[DatasetSource],
     impl_id: ImplId,
     scale: f64,
     cores: &[usize],
+    scheds: &[Scheduler],
 ) -> Result<Vec<ScalingPoint>> {
     let mut out = Vec::new();
     for src in datasets {
@@ -401,7 +403,7 @@ pub fn scaling_sweep(
             dram_queue_cycles: 0.0,
         });
         for &c in cores.iter().filter(|&&c| c > 1) {
-            for sched in [Scheduler::Static, Scheduler::WorkStealing, Scheduler::WorkStealingDyn] {
+            for &sched in scheds {
                 let r = session.run(
                     &JobSpec::new(impl_id, src.clone())
                         .with_scale(scale)
@@ -440,9 +442,9 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
     let _ = writeln!(
         s,
         "Figure 12. Multi-core scaling ({impl_name}): speedup over 1 core \
-         (row-blocked driver; static vs work-stealing vs ws-dyn block \
-         schedule; llc-hit/coh/dram-q from the shared-memory replay at the \
-         largest core count)"
+         (row-blocked driver; static vs work-stealing vs ws-dyn vs \
+         bandwidth-aware ws-bw block schedule; llc-hit/coh/dram-q from the \
+         shared-memory replay at the largest core count)"
     );
     let _ = write!(s, "{:<10} {:<14}", "Matrix", "sched");
     for c in &cores {
@@ -461,7 +463,7 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
         }
     }
     for d in datasets {
-        for sched in [Scheduler::Static, Scheduler::WorkStealing, Scheduler::WorkStealingDyn] {
+        for sched in Scheduler::ALL {
             // Skip schedulers the sweep did not run (older point sets).
             if !points.iter().any(|p| p.dataset == d && p.scheduler == Some(sched)) {
                 continue;
@@ -540,11 +542,14 @@ pub fn mem_report(r: &crate::api::JobResult) -> String {
     let mut s = String::new();
     let _ = writeln!(
         s,
-        "Shared-memory report: {} on {} ({} core{})",
+        "Shared-memory report: {} on {} ({} core{}{})",
         r.impl_id.name(),
         r.dataset,
         r.cores,
-        if r.cores == 1 { "" } else { "s" }
+        if r.cores == 1 { "" } else { "s" },
+        r.sched
+            .map(|sc| format!(", sched {}", sc.name()))
+            .unwrap_or_default()
     );
     let m = &r.metrics.mem;
     let _ = writeln!(
@@ -598,6 +603,19 @@ pub fn mem_report(r: &crate::api::JobResult) -> String {
             sh.stall_cycles()
         );
     }
+    let tot = &mc.total.shared;
+    let _ = writeln!(
+        s,
+        "replay    | {} iteration{} (residual {:.1} cycles) | row-buffer: {} hits, {} misses, \
+         {} conflicts ({:+.0} cycles)",
+        tot.replay_iters,
+        if tot.replay_iters == 1 { "" } else { "s" },
+        tot.replay_residual,
+        tot.row_hits,
+        tot.row_misses,
+        tot.row_conflicts,
+        tot.row_extra_cycles
+    );
     let _ = writeln!(
         s,
         "critical path {:.0} cycles, efficiency {:.2}x, imbalance {:.2}x",

@@ -91,9 +91,11 @@ fn allowed_opts(cmd: &str) -> &'static [&'static str] {
             "cores", "sched",
         ],
         "table3" | "fig9" | "fig10" | "fig11" => SUITE,
-        // fig12 sweeps a *list* of core counts and both schedulers itself.
+        // fig12 sweeps a *list* of core counts and, by default, every
+        // scheduler; --sched narrows it to a comma list.
         "fig12" => &[
-            "scale", "datasets", "impl", "cores", "engine", "artifacts", "mtx-dir", "out-dir",
+            "scale", "datasets", "impl", "cores", "sched", "engine", "artifacts", "mtx-dir",
+            "out-dir",
         ],
         "run" => &["dataset", "impl", "scale", "engine", "artifacts", "mtx-dir", "cores", "sched"],
         // mem runs one multi-core job and renders the shared-memory report
@@ -132,15 +134,16 @@ fn print_help() {
          suite commands (table3 fig8 fig9 fig10 fig11 all):\n\
          \x20   --scale F --threads N --datasets a,b --engine native|xla\n\
          \x20   --mtx-dir DIR --out-dir DIR --artifacts DIR --verify --quiet --json\n\
-         \x20   --cores N --sched static|work-stealing|ws-dyn (simulated multi-core jobs)\n\
+         \x20   --cores N --sched static|work-stealing|ws-dyn|ws-bw (simulated multi-core)\n\
          \x20   (fig8 and all also take --impls a,b)\n\
          run:    --dataset NAME [--impl NAME] [--scale F] [--engine native|xla]\n\
          \x20       [--mtx-dir DIR] [--artifacts DIR] [--cores N] [--sched S]\n\
          \x20       [--verify] [--json]\n\
          mem:    --dataset NAME [--impl NAME] [--cores N] [--sched S] [--channels N]\n\
          \x20       [--scale F] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
-         \x20       (shared-memory report: per-core LLC/coherence/queueing + DRAM channels)\n\
-         fig12:  [--impl NAME] [--cores 1,2,4,8] [--scale F] [--datasets a,b]\n\
+         \x20       (shared-memory report: per-core LLC/coherence/queueing + banked DRAM\n\
+         \x20        channels + iterative-replay convergence)\n\
+         fig12:  [--impl NAME] [--cores 1,2,4,8] [--sched a,b] [--scale F] [--datasets a,b]\n\
          \x20       [--engine E] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          ablate: [--dataset NAME] [--scale F] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          gen:    --dataset NAME --out FILE.mtx [--scale F]\n\
@@ -199,6 +202,20 @@ fn sched_opt(a: &Args) -> Result<Option<Scheduler>> {
         .get("sched")
         .map(|s| s.parse::<Scheduler>().map_err(anyhow::Error::msg))
         .transpose()
+}
+
+/// fig12's `--sched a,b` comma list: parsed through the one
+/// `Scheduler::from_str`, duplicates dropped (first occurrence wins) so a
+/// repeated name cannot silently double the sweep.
+fn parse_scheds(spec: &str) -> Result<Vec<Scheduler>> {
+    let mut out: Vec<Scheduler> = Vec::new();
+    for t in spec.split(',') {
+        let s = t.trim().parse::<Scheduler>().map_err(anyhow::Error::msg)?;
+        if !out.contains(&s) {
+            out.push(s);
+        }
+    }
+    Ok(out)
 }
 
 fn suite_spec(a: &Args) -> Result<SuiteSpec> {
@@ -475,14 +492,23 @@ fn main() -> Result<()> {
             );
             cores.sort_unstable();
             cores.dedup();
+            // One Scheduler::from_str serves run/suite/mem and this list,
+            // so a new scheduler name works everywhere at once.
+            let scheds: Vec<Scheduler> = match a.opts.get("sched") {
+                Some(spec) => parse_scheds(spec)?,
+                None => Scheduler::ALL.to_vec(),
+            };
             let scale = scale_opt(&a)?.unwrap_or(1.0);
             eprintln!(
-                "[spz] fig12 scaling: {impl_id} on {} datasets at cores {:?}, scale {scale}",
+                "[spz] fig12 scaling: {impl_id} on {} datasets at cores {:?}, scale {scale}, \
+                 schedulers {:?}",
                 datasets.len(),
-                cores
+                cores,
+                scheds.iter().map(|s| s.name()).collect::<Vec<_>>()
             );
             let t0 = std::time::Instant::now();
-            let points = figures::scaling_sweep(&session, &datasets, impl_id, scale, &cores)?;
+            let points =
+                figures::scaling_sweep(&session, &datasets, impl_id, scale, &cores, &scheds)?;
             eprintln!("[spz] scaling sweep done in {:.1}s", t0.elapsed().as_secs_f64());
             let od = out_dir(&a);
             report::emit(&od, "fig12_scaling.txt", &figures::fig12(&points), quiet)?;
@@ -649,6 +675,31 @@ mod tests {
         let a = parse_argv(&v(&["fig8", "--cores", "4", "--sched", "ws-dyn"])).unwrap();
         let spec = suite_spec(&a).unwrap();
         assert_eq!(spec.sched, Scheduler::WorkStealingDyn);
+    }
+
+    #[test]
+    fn ws_bw_lands_in_every_command_via_the_one_parser() {
+        // One Scheduler::from_str feeds run, the suites, mem, and fig12:
+        // the bandwidth-aware scheduler parses identically everywhere.
+        let a = parse_argv(&v(&["run", "--cores", "4", "--sched", "ws-bw"])).unwrap();
+        assert_eq!(sched_opt(&a).unwrap(), Some(Scheduler::WorkStealingBw));
+        let a = parse_argv(&v(&["fig8", "--cores", "4", "--sched", "ws-bw"])).unwrap();
+        assert_eq!(suite_spec(&a).unwrap().sched, Scheduler::WorkStealingBw);
+        let a = parse_argv(&v(&["mem", "--dataset", "p2p", "--sched", "ws-bw", "--cores", "2"]))
+            .unwrap();
+        assert_eq!(sched_opt(&a).unwrap(), Some(Scheduler::WorkStealingBw));
+        // fig12 takes a comma list through the same parser; duplicates are
+        // dropped so a repeated name cannot double the sweep.
+        assert!(parse_argv(&v(&["fig12", "--sched", "ws-dyn,ws-bw"])).is_ok());
+        assert_eq!(
+            parse_scheds("ws-dyn, ws-bw").unwrap(),
+            vec![Scheduler::WorkStealingDyn, Scheduler::WorkStealingBw]
+        );
+        assert_eq!(
+            parse_scheds("ws-bw,ws-bw,static").unwrap(),
+            vec![Scheduler::WorkStealingBw, Scheduler::Static]
+        );
+        assert!(parse_scheds("ws-bw,greedy").is_err());
     }
 
     #[test]

@@ -26,6 +26,24 @@ impl Default for SimAlloc {
 /// like a real process image).
 pub const START: u64 = 0x10000;
 
+// ---- multi-core address-space layout --------------------------------------
+//
+// The layout below is what makes cross-core line identity in the shared
+// memory replay *honest*: two cores touching the same line address are
+// touching the same bytes of the same object, never two private objects a
+// bump allocator happened to alias.
+
+/// Private address-space stride between simulated cores: large enough that
+/// 64 cores' regions never collide, and a power of two far above every
+/// cache-index bit, so a core's cache behaviour is identical to a
+/// base-region run.
+pub const CORE_ADDR_SPAN: u64 = 1 << 40;
+
+/// Base of the canonical shared region (above every core's private span):
+/// read-shared operands (the B matrix) and the write-shared stitched output
+/// both live here, mapped at addresses common to every fork.
+pub const SHARED_ADDR_BASE: u64 = 1 << 56;
+
 impl SimAlloc {
     pub fn new() -> Self {
         Self::with_base(START)

@@ -17,7 +17,7 @@
 
 use crate::config::MemConfig;
 use crate::mem::cache::Cache;
-use crate::mem::trace::{TraceEvent, TraceKind};
+use crate::mem::trace::{TraceBuf, TraceEvent, TraceKind};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AccessKind {
@@ -80,7 +80,7 @@ pub struct Hierarchy {
     pub prefetch_hits: u64,
     /// Shared-memory access trace (`None` = tracing off, the serial
     /// default). Records every LLC-level access for phase-2 replay.
-    trace: Option<Vec<TraceEvent>>,
+    trace: Option<TraceBuf>,
     /// Core-local logical time stamped onto trace events (set by the
     /// machine before each access group).
     now: f64,
@@ -124,7 +124,7 @@ impl Hierarchy {
     /// parallel driver enables this on every forked core; serial machines
     /// leave it off and pay no overhead.
     pub fn enable_trace(&mut self) {
-        self.trace = Some(Vec::new());
+        self.trace = Some(TraceBuf::new());
     }
 
     pub fn trace_enabled(&self) -> bool {
@@ -133,7 +133,7 @@ impl Hierarchy {
 
     /// Take the recorded trace (empty if tracing was never enabled).
     /// Tracing stays enabled with a fresh buffer.
-    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+    pub fn take_trace(&mut self) -> TraceBuf {
         self.trace.as_mut().map(std::mem::take).unwrap_or_default()
     }
 
@@ -151,16 +151,10 @@ impl Hierarchy {
 
     #[inline]
     fn record(&mut self, line: u64, kind: TraceKind, write: bool, shadow_hit: bool, paid_bw: bool) {
+        let now = self.now;
+        let phase = self.phase;
         if let Some(t) = self.trace.as_mut() {
-            t.push(TraceEvent {
-                line,
-                time: self.now,
-                kind,
-                write,
-                shadow_hit,
-                paid_bw,
-                phase: self.phase,
-            });
+            t.push(TraceEvent::new(line, kind, write, shadow_hit, paid_bw, phase), now);
         }
     }
 
@@ -408,13 +402,14 @@ mod tests {
         m.access(0x10000, 4, AccessKind::Read);
         let t = m.take_trace();
         assert_eq!(t.len(), 1);
-        assert_eq!(t[0].kind, TraceKind::Demand);
-        assert_eq!(t[0].line, 0x10000 >> 6);
-        assert_eq!(t[0].time, 123.0);
-        assert_eq!(t[0].phase, 2);
-        assert!(t[0].write);
-        assert!(!t[0].shadow_hit, "cold line cannot hit the shadow LLC");
-        assert!(t[0].paid_bw, "non-streamed DRAM access pays the bandwidth floor");
+        let (time, e) = t.iter_timed().next().unwrap();
+        assert_eq!(e.kind(), TraceKind::Demand);
+        assert_eq!(e.line(), 0x10000 >> 6);
+        assert_eq!(time, 123.0);
+        assert_eq!(e.phase(), 2);
+        assert!(e.write());
+        assert!(!e.shadow_hit(), "cold line cannot hit the shadow LLC");
+        assert!(e.paid_bw(), "non-streamed DRAM access pays the bandwidth floor");
         // The buffer was taken; tracing continues fresh.
         assert!(m.take_trace().is_empty());
         m.access(0x90000, 4, AccessKind::Read);
@@ -434,9 +429,9 @@ mod tests {
         m.access(0x60000 + 64, 4, AccessKind::Read); // adjacent -> streamed
         let t = m.take_trace();
         assert_eq!(t.len(), 2);
-        assert!(t[0].paid_bw);
-        assert!(!t[1].paid_bw, "prefetched line pays no bandwidth floor in phase 1");
-        assert!(!t[1].shadow_hit);
+        assert!(t.get(0).paid_bw());
+        assert!(!t.get(1).paid_bw(), "prefetched line pays no bandwidth floor in phase 1");
+        assert!(!t.get(1).shadow_hit());
     }
 
     #[test]
@@ -450,8 +445,8 @@ mod tests {
         m.access(0x70000, 256, AccessKind::Read);
         let t = m.take_trace();
         assert_eq!(t.len(), 4);
-        assert_eq!(t.iter().filter(|e| e.paid_bw).count(), 1);
-        assert!(t[0].paid_bw, "the first DRAM-reaching line carries the floor");
+        assert_eq!(t.iter().filter(|e| e.paid_bw()).count(), 1);
+        assert!(t.get(0).paid_bw(), "the first DRAM-reaching line carries the floor");
     }
 
     #[test]
@@ -464,8 +459,8 @@ mod tests {
             m.access(0x200000 + i * 64, 8, AccessKind::Write);
         }
         let t = m.take_trace();
-        let demands = t.iter().filter(|e| e.kind == TraceKind::Demand).count() as u64;
-        let wbs = t.iter().filter(|e| e.kind == TraceKind::Writeback).count() as u64;
+        let demands = t.iter().filter(|e| e.kind() == TraceKind::Demand).count() as u64;
+        let wbs = t.iter().filter(|e| e.kind() == TraceKind::Writeback).count() as u64;
         assert!(wbs > 0, "dirty L2 victims must appear in the trace");
         assert_eq!(
             demands + wbs,

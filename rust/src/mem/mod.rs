@@ -15,5 +15,5 @@ pub mod trace;
 pub use alloc::SimAlloc;
 pub use cache::Cache;
 pub use hierarchy::{AccessKind, Hierarchy, MemStats};
-pub use shared::{replay, ReplayOutcome, SharedStats};
-pub use trace::{TraceEvent, TraceKind, MAX_PHASES};
+pub use shared::{replay, ReplayEngine, ReplayOutcome, SharedStats};
+pub use trace::{TraceBuf, TraceEvent, TraceKind, MAX_PHASES, TRACE_CHUNK};

@@ -17,18 +17,38 @@
 //! 2. After the workers join, a deterministic interleaver merges the
 //!    per-core traces in canonical logical-time order and replays them
 //!    through the shared LLC + multi-channel DRAM model
-//!    ([`crate::mem::shared::replay`]), producing per-core shared-memory
-//!    stall cycles and coherence counters that are a pure function of the
-//!    traces — independent of host scheduling.
+//!    ([`crate::mem::shared::ReplayEngine`]), producing per-core
+//!    shared-memory stall cycles and coherence counters that are a pure
+//!    function of the traces — independent of host scheduling.
 //!
 //! The trade-off is explicit: phase 1 prices each core's private-hierarchy
 //! latency against its own *shadow* copy of the LLC, so cross-core effects
 //! on private-cache contents (a line another core invalidated, say) are
 //! folded in as replay-derived stall corrections rather than re-executed.
+//!
+//! ## Storage format
+//!
+//! Multi-core jobs on large matrices record tens of millions of events per
+//! core, so the in-memory format matters. Each [`TraceEvent`] is a packed
+//! 16-byte record: the line id and all flag bits (kind, write intent, shadow
+//! outcome, bandwidth attribution, phase) share one `u64`, and the local
+//! timestamp is a `u32` *delta* from the previous event of the same core in
+//! 1/64-cycle fixed point. [`TraceBuf`] stores events in fixed-size chunks
+//! (no doubling reallocation, so peak memory stays within one chunk of the
+//! live data) and decodes absolute times by sequential accumulation.
 
 /// Upper bound on [`TraceEvent::phase`] values ( >= the machine model's
 /// `NUM_PHASES`; replay buckets stalls per phase in arrays of this size).
 pub const MAX_PHASES: usize = 8;
+
+/// Events per [`TraceBuf`] chunk (64KB of packed events per chunk).
+pub const TRACE_CHUNK: usize = 4096;
+
+/// Fixed-point shift for trace time deltas: 1/64-cycle resolution, so a
+/// `u32` delta spans ~67M cycles between consecutive LLC-level events of one
+/// core (far beyond any real gap; larger gaps saturate deterministically).
+const TIME_SHIFT: u32 = 6;
+const TIME_SCALE: f64 = (1u64 << TIME_SHIFT) as f64;
 
 /// What a traced LLC-level access was doing.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -42,32 +62,191 @@ pub enum TraceKind {
     Writeback,
 }
 
-/// One line-granular access that left a core's private L1/L2.
-#[derive(Clone, Copy, Debug, PartialEq)]
+// Bit layout of `TraceEvent::bits`: the low 57 bits hold the line address,
+// the top 7 the flags. Line addresses are `byte_addr >> 6`; the simulated
+// address space tops out at the shared-operand region (2^56 + epsilon), so
+// lines fit in ~51 bits with room to spare.
+const LINE_BITS: u32 = 57;
+const LINE_MASK: u64 = (1u64 << LINE_BITS) - 1;
+const KIND_BIT: u64 = 1 << 57;
+const WRITE_BIT: u64 = 1 << 58;
+const SHADOW_BIT: u64 = 1 << 59;
+const PAID_BIT: u64 = 1 << 60;
+const PHASE_SHIFT: u32 = 61;
+
+/// One line-granular access that left a core's private L1/L2, packed into
+/// 16 bytes (see the module docs for the layout). Construct with
+/// [`TraceEvent::new`]; the local timestamp lives in the owning
+/// [`TraceBuf`]'s delta stream, not in the event itself.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TraceEvent {
+    bits: u64,
+    /// Time delta to the previous event of the same trace, 1/64-cycle
+    /// fixed point (filled in by [`TraceBuf::push`]).
+    dt: u32,
+}
+
+// The whole point of the packed layout: one event is 16 bytes, not the ~32
+// of the naive struct-of-fields encoding.
+const _: () = assert!(std::mem::size_of::<TraceEvent>() == 16);
+const _: () = assert!(MAX_PHASES <= (1usize << (64 - PHASE_SHIFT as usize)));
+
+impl TraceEvent {
+    /// Pack an event (timestamp is assigned by [`TraceBuf::push`]).
+    pub fn new(
+        line: u64,
+        kind: TraceKind,
+        write: bool,
+        shadow_hit: bool,
+        paid_bw: bool,
+        phase: u8,
+    ) -> TraceEvent {
+        debug_assert!(line <= LINE_MASK, "line id overflows the packed layout");
+        debug_assert!((phase as usize) < MAX_PHASES);
+        let mut bits = line & LINE_MASK;
+        if kind == TraceKind::Writeback {
+            bits |= KIND_BIT;
+        }
+        if write {
+            bits |= WRITE_BIT;
+        }
+        if shadow_hit {
+            bits |= SHADOW_BIT;
+        }
+        if paid_bw {
+            bits |= PAID_BIT;
+        }
+        bits |= ((phase as u64) & (MAX_PHASES as u64 - 1)) << PHASE_SHIFT;
+        TraceEvent { bits, dt: 0 }
+    }
+
     /// Line address (byte address `>> line_shift`).
-    pub line: u64,
-    /// Core-local logical time in simulated cycles at which the access
-    /// issued (the machine's cycle counter, monotone within a core).
-    pub time: f64,
-    pub kind: TraceKind,
+    #[inline]
+    pub fn line(self) -> u64 {
+        self.bits & LINE_MASK
+    }
+
+    #[inline]
+    pub fn kind(self) -> TraceKind {
+        if self.bits & KIND_BIT != 0 {
+            TraceKind::Writeback
+        } else {
+            TraceKind::Demand
+        }
+    }
+
     /// Demand intent: `true` for stores (drives the MESI-lite upgrade /
     /// invalidation bookkeeping). Always `true` for writeback installs.
-    pub write: bool,
+    #[inline]
+    pub fn write(self) -> bool {
+        self.bits & WRITE_BIT != 0
+    }
+
     /// Phase-1 outcome in the core's private *shadow* LLC. The replay
     /// compares this prediction against the real shared-LLC outcome to
     /// price constructive sharing (shadow miss, shared hit) and destructive
     /// interference (shadow hit, shared miss).
-    pub shadow_hit: bool,
+    #[inline]
+    pub fn shadow_hit(self) -> bool {
+        self.bits & SHADOW_BIT != 0
+    }
+
     /// Whether phase 1 actually charged the DRAM bandwidth floor for this
     /// access. False for shadow hits, for stream-prefetched accesses (whose
     /// raw latency was clamped to an L1 hit, so `dram_bw` saw no DRAM
     /// latency), and for writeback installs. The replay refunds the floor on
     /// constructive sharing only when it was really paid.
-    pub paid_bw: bool,
+    #[inline]
+    pub fn paid_bw(self) -> bool {
+        self.bits & PAID_BIT != 0
+    }
+
     /// Figure 9 breakdown phase the access charged into (`< MAX_PHASES`),
     /// so replay-derived stalls land in the same per-phase buckets.
-    pub phase: u8,
+    #[inline]
+    pub fn phase(self) -> u8 {
+        (self.bits >> PHASE_SHIFT) as u8
+    }
+}
+
+/// A core's recorded trace: packed events in fixed-size chunks plus the
+/// delta-encoded local timestamps. Absolute times are recovered by
+/// sequential accumulation ([`TraceBuf::iter_timed`]); random access to the
+/// packed fields (not times) goes through [`TraceBuf::get`].
+#[derive(Clone, Debug, Default)]
+pub struct TraceBuf {
+    chunks: Vec<Vec<TraceEvent>>,
+    len: usize,
+    /// Quantized timestamp of the last pushed event (encoder state; kept in
+    /// quantized units so encode and decode can never drift apart).
+    last_q: u64,
+}
+
+impl TraceBuf {
+    pub fn new() -> TraceBuf {
+        TraceBuf::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append an event issued at core-local `time` (simulated cycles,
+    /// monotone per core; quantized to 1/64-cycle deltas).
+    pub fn push(&mut self, mut e: TraceEvent, time: f64) {
+        let q = (time * TIME_SCALE).max(0.0) as u64;
+        // Local times are monotone per core; saturate both directions so a
+        // pathological stamp can never panic or run time backwards.
+        let dt = q.saturating_sub(self.last_q).min(u32::MAX as u64) as u32;
+        self.last_q += dt as u64;
+        e.dt = dt;
+        if self.chunks.last().map(|c| c.len() >= TRACE_CHUNK).unwrap_or(true) {
+            self.chunks.push(Vec::with_capacity(TRACE_CHUNK));
+        }
+        self.chunks.last_mut().unwrap().push(e);
+        self.len += 1;
+    }
+
+    /// Random access to the packed event fields (times require the
+    /// sequential decoder, [`TraceBuf::iter_timed`]).
+    #[inline]
+    pub fn get(&self, i: usize) -> TraceEvent {
+        self.chunks[i / TRACE_CHUNK][i % TRACE_CHUNK]
+    }
+
+    /// Iterate `(absolute_time, event)` pairs, decoding the delta stream.
+    pub fn iter_timed(&self) -> impl Iterator<Item = (f64, TraceEvent)> + '_ {
+        let mut acc = 0u64;
+        self.chunks.iter().flatten().map(move |&e| {
+            acc += e.dt as u64;
+            (acc as f64 / TIME_SCALE, e)
+        })
+    }
+
+    /// Iterate the packed events without decoding times.
+    pub fn iter(&self) -> impl Iterator<Item = TraceEvent> + '_ {
+        self.chunks.iter().flatten().copied()
+    }
+
+    /// Drop all recorded events (encoder time state resets too).
+    pub fn clear(&mut self) {
+        self.chunks.clear();
+        self.len = 0;
+        self.last_q = 0;
+    }
+
+    /// Test/builder convenience: a buffer from `(time, event)` pairs.
+    pub fn from_events<I: IntoIterator<Item = (f64, TraceEvent)>>(events: I) -> TraceBuf {
+        let mut b = TraceBuf::new();
+        for (t, e) in events {
+            b.push(e, t);
+        }
+        b
+    }
 }
 
 #[cfg(test)]
@@ -75,23 +254,67 @@ mod tests {
     use super::*;
 
     #[test]
-    fn trace_event_is_compact_and_comparable() {
-        let e = TraceEvent {
-            line: 42,
-            time: 7.5,
-            kind: TraceKind::Demand,
-            write: false,
-            shadow_hit: true,
-            paid_bw: false,
-            phase: 1,
-        };
-        assert_eq!(e, e);
-        assert_ne!(
-            e,
-            TraceEvent {
-                kind: TraceKind::Writeback,
-                ..e
-            }
-        );
+    fn trace_event_is_packed_and_round_trips() {
+        assert_eq!(std::mem::size_of::<TraceEvent>(), 16);
+        let e = TraceEvent::new(42, TraceKind::Demand, false, true, false, 1);
+        assert_eq!(e.line(), 42);
+        assert_eq!(e.kind(), TraceKind::Demand);
+        assert!(!e.write());
+        assert!(e.shadow_hit());
+        assert!(!e.paid_bw());
+        assert_eq!(e.phase(), 1);
+        let w = TraceEvent::new((1 << 50) + 7, TraceKind::Writeback, true, false, true, 7);
+        assert_eq!(w.line(), (1 << 50) + 7);
+        assert_eq!(w.kind(), TraceKind::Writeback);
+        assert!(w.write());
+        assert!(!w.shadow_hit());
+        assert!(w.paid_bw());
+        assert_eq!(w.phase(), 7);
+        assert_ne!(e, w);
+    }
+
+    #[test]
+    fn trace_buf_preserves_order_times_and_chunks() {
+        let mut b = TraceBuf::new();
+        let n = TRACE_CHUNK * 2 + 17; // force multiple chunks
+        for i in 0..n {
+            b.push(
+                TraceEvent::new(i as u64, TraceKind::Demand, i % 2 == 0, false, true, 2),
+                i as f64 * 1.5,
+            );
+        }
+        assert_eq!(b.len(), n);
+        for (i, (t, e)) in b.iter_timed().enumerate() {
+            assert_eq!(e.line(), i as u64);
+            assert_eq!(e.write(), i % 2 == 0);
+            assert!((t - i as f64 * 1.5).abs() < 1.0 / 64.0 + 1e-9, "event {i}: {t}");
+            assert_eq!(b.get(i).line(), i as u64);
+        }
+        b.clear();
+        assert!(b.is_empty());
+        // After a clear, the delta encoder restarts at time zero.
+        b.push(TraceEvent::new(9, TraceKind::Demand, false, false, false, 0), 10.0);
+        let (t0, _) = b.iter_timed().next().unwrap();
+        assert!((t0 - 10.0).abs() < 1.0 / 64.0 + 1e-9);
+    }
+
+    #[test]
+    fn fractional_times_quantize_to_sixty_fourths() {
+        let b = TraceBuf::from_events([
+            (0.25, TraceEvent::new(1, TraceKind::Demand, false, false, true, 1)),
+            (0.75, TraceEvent::new(2, TraceKind::Demand, false, false, true, 1)),
+        ]);
+        let ts: Vec<f64> = b.iter_timed().map(|(t, _)| t).collect();
+        assert_eq!(ts, vec![0.25, 0.75], "quarter cycles are exactly representable");
+    }
+
+    #[test]
+    fn non_monotone_time_saturates_instead_of_panicking() {
+        let b = TraceBuf::from_events([
+            (100.0, TraceEvent::new(1, TraceKind::Demand, false, false, true, 1)),
+            (50.0, TraceEvent::new(2, TraceKind::Demand, false, false, true, 1)),
+        ]);
+        let ts: Vec<f64> = b.iter_timed().map(|(t, _)| t).collect();
+        assert_eq!(ts[1], ts[0], "clock can stall but never run backwards");
     }
 }

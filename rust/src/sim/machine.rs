@@ -4,7 +4,8 @@
 //! [`RunMetrics`] afterwards to build Figures 8–11.
 
 use crate::config::SystemConfig;
-use crate::mem::{AccessKind, Hierarchy, MemStats, SharedStats, SimAlloc, TraceEvent};
+use crate::mem::alloc::{CORE_ADDR_SPAN, SHARED_ADDR_BASE};
+use crate::mem::{AccessKind, Hierarchy, MemStats, SharedStats, SimAlloc, TraceBuf};
 use crate::sim::cost::CostModel;
 use crate::systolic::SystolicTiming;
 
@@ -191,18 +192,33 @@ impl MulticoreMetrics {
     }
 }
 
-/// Private address-space stride between simulated cores: large enough that
-/// 64 cores' regions never collide, and a power of two far above every
-/// cache-index bit, so a core's cache behaviour is identical to a
-/// base-region run.
-const CORE_ADDR_SPAN: u64 = 1 << 40;
-
-/// Base of the canonical shared-operand region (above every core's private
-/// span).
-const SHARED_ADDR_BASE: u64 = 1 << 56;
-
 /// Shared-operand table entries: `(identity key, (indptr, indices, data))`.
 type SharedObjTable = Vec<(usize, (u64, u64, u64))>;
+
+/// Canonical addresses of the modeled *shared destination region* for the
+/// stitched product: one indptr array covering every row of C plus packed
+/// indices/data arrays sized by the Gustavson work estimate. Mapped once on
+/// the base machine (before forking), so every core sees the same addresses
+/// — phase-3 output writes from different cores land in one region and the
+/// block-boundary lines generate real upgrade/invalidation traffic through
+/// the replay's directory.
+#[derive(Clone, Copy, Debug)]
+struct SharedOutRegion {
+    indptr: u64,
+    indices: u64,
+    data: u64,
+}
+
+/// One row block's window into the shared destination region, bound by the
+/// parallel driver before each block's multiply: rows `[row_lo, ...)` of the
+/// global indptr and `elem_cap` elements of the packed indices/data arrays
+/// starting at `elem_off`.
+#[derive(Clone, Copy, Debug)]
+struct OutWindow {
+    row_lo: usize,
+    elem_off: u64,
+    elem_cap: u64,
+}
 
 /// The simulated machine (one core plus its private caches and matrix unit).
 pub struct Machine {
@@ -223,6 +239,12 @@ pub struct Machine {
     /// Shared-operand table; `None` on serial machines (plain per-machine
     /// allocation applies).
     shared_objs: Option<SharedObjTable>,
+    /// Canonical shared destination region for the stitched output; `None`
+    /// on serial machines (outputs stay in the core's private region).
+    shared_out: Option<SharedOutRegion>,
+    /// The current row block's window into the shared destination region
+    /// (set by the parallel driver before each block's multiply).
+    out_window: Option<OutWindow>,
 }
 
 impl Machine {
@@ -239,6 +261,8 @@ impl Machine {
             phase: Phase::Preprocess,
             shared_alloc: SimAlloc::with_base(SHARED_ADDR_BASE),
             shared_objs: None,
+            shared_out: None,
+            out_window: None,
             cfg,
         }
     }
@@ -263,6 +287,9 @@ impl Machine {
         // out (that would alias two distinct operands).
         m.shared_alloc = self.shared_alloc.clone();
         m.shared_objs = self.shared_objs.clone();
+        // The shared destination region is common to all forks; the
+        // per-block window is the worker's to bind.
+        m.shared_out = self.shared_out;
         m
     }
 
@@ -297,6 +324,62 @@ impl Machine {
         Some(addrs)
     }
 
+    /// Map the canonical shared destination region for an `nrows`-row
+    /// stitched product whose packed indices/data arrays hold up to
+    /// `est_elems` elements (the Gustavson work upper bound). The parallel
+    /// driver calls this on the base machine before forking, so every core
+    /// resolves the same addresses; serial machines never map one and keep
+    /// the seed's private output allocation.
+    pub fn map_shared_output(&mut self, nrows: usize, est_elems: usize) {
+        self.shared_out = Some(SharedOutRegion {
+            indptr: self.shared_alloc.alloc((nrows + 1) * 8),
+            indices: self.shared_alloc.alloc(est_elems.max(1) * 4),
+            data: self.shared_alloc.alloc(est_elems.max(1) * 4),
+        });
+    }
+
+    /// Canonical base addresses of the shared destination region
+    /// (`(indptr, indices, data)`), if one is mapped. The `ws-bw` pilot uses
+    /// this to price output traffic on the same lines the replay will see.
+    pub fn shared_output(&self) -> Option<(u64, u64, u64)> {
+        self.shared_out.map(|r| (r.indptr, r.indices, r.data))
+    }
+
+    /// Bind the current row block's window into the shared destination
+    /// region: global output rows start at `row_lo`, and the block owns
+    /// `elem_cap` packed elements starting at element `elem_off`. Called by
+    /// the parallel driver before each block's multiply; a no-op influence
+    /// on machines without a mapped region.
+    pub fn bind_output_block(&mut self, row_lo: usize, elem_off: u64, elem_cap: u64) {
+        self.out_window = Some(OutWindow { row_lo, elem_off, elem_cap });
+    }
+
+    /// Simulated addresses for an implementation's output CSR arrays
+    /// (`(indices, data, indptr)` bases): `rows` output rows and up to
+    /// `est_elems` packed elements. With a shared destination region and a
+    /// bound block window that fits, the returned addresses are canonical —
+    /// `indptr` is offset so slab row `r` maps to global row `row_lo + r`,
+    /// and the packed arrays sit at the block's element offset, so adjacent
+    /// blocks on different cores write-share boundary lines. Otherwise this
+    /// allocates privately, in exactly the order and sizes the seed
+    /// implementations always used (indices, data, indptr).
+    pub fn out_csr_addrs(&mut self, rows: usize, est_elems: usize) -> (u64, u64, u64) {
+        if let (Some(region), Some(w)) = (self.shared_out, self.out_window) {
+            if est_elems as u64 <= w.elem_cap {
+                return (
+                    region.indices + w.elem_off * 4,
+                    region.data + w.elem_off * 4,
+                    region.indptr + w.row_lo as u64 * 8,
+                );
+            }
+        }
+        (
+            self.alloc.alloc(est_elems.max(1) * 4),
+            self.alloc.alloc(est_elems.max(1) * 4),
+            self.alloc.alloc((rows + 1) * 8),
+        )
+    }
+
     /// Start recording this machine's shared-memory (LLC-level) access
     /// trace for the deterministic replay ([`crate::mem::shared::replay`]).
     pub fn enable_trace(&mut self) {
@@ -304,7 +387,7 @@ impl Machine {
     }
 
     /// Take the recorded trace (empty if tracing was never enabled).
-    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+    pub fn take_trace(&mut self) -> TraceBuf {
         self.mem.take_trace()
     }
 
@@ -633,6 +716,39 @@ mod tests {
     }
 
     #[test]
+    fn shared_output_region_maps_canonically_and_falls_back() {
+        let mut base = Machine::new(SystemConfig { cores: 2, ..SystemConfig::default() });
+        base.enable_shared_operands();
+        base.map_shared_output(100, 1000);
+        let (ip, ix, dv) = base.shared_output().unwrap();
+        assert!(ip >= crate::mem::alloc::SHARED_ADDR_BASE);
+        let mut f0 = base.fork_core(0);
+        let mut f1 = base.fork_core(1);
+        // Block [0, 16) on core 0, block [16, 32) on core 1: canonical,
+        // adjacent, and derived from the same global arrays.
+        f0.bind_output_block(0, 0, 300);
+        f1.bind_output_block(16, 300, 700);
+        let (i0, d0, p0) = f0.out_csr_addrs(16, 300);
+        let (i1, d1, p1) = f1.out_csr_addrs(16, 700);
+        assert_eq!(p0, ip);
+        assert_eq!(p1, ip + 16 * 8, "indptr windows tile the global array");
+        assert_eq!(i0, ix);
+        assert_eq!(i1, ix + 300 * 4, "packed element windows tile too");
+        assert_eq!(d1, dv + 300 * 4);
+        assert_ne!(d0, i0);
+        // A request larger than the bound window falls back to the private
+        // region (never aliasing another block's canonical window).
+        let (priv_i, _, priv_p) = f1.out_csr_addrs(16, 10_000);
+        assert!(priv_i < crate::mem::alloc::SHARED_ADDR_BASE);
+        assert!(priv_p < crate::mem::alloc::SHARED_ADDR_BASE);
+        // Serial machines allocate privately (the seed path).
+        let mut serial = Machine::new(SystemConfig::default());
+        let (si, sd, sp) = serial.out_csr_addrs(10, 50);
+        assert!(si < crate::mem::alloc::SHARED_ADDR_BASE);
+        assert!(si < sd && sd < sp, "seed allocation order: indices, data, indptr");
+    }
+
+    #[test]
     fn core_count_never_changes_phase1_charging() {
         // Per-access costs are the uncontended Table II machine at every
         // core count: contention is the replay's business, not phase 1's.
@@ -663,11 +779,12 @@ mod tests {
         mc.load(a + 4096, 4); // warm L1 hit -> no event
         let t = mc.take_trace();
         assert_eq!(t.len(), 2);
-        assert_eq!(t[0].phase, Phase::Expand as u8);
-        assert_eq!(t[1].phase, Phase::Sort as u8);
-        assert_eq!(t[0].time, 0.0, "first access issues at cycle zero");
-        assert!(t[1].time > t[0].time, "local timestamps are monotone");
-        assert!(!t[0].write);
+        let timed: Vec<(f64, crate::mem::TraceEvent)> = t.iter_timed().collect();
+        assert_eq!(timed[0].1.phase(), Phase::Expand as u8);
+        assert_eq!(timed[1].1.phase(), Phase::Sort as u8);
+        assert_eq!(timed[0].0, 0.0, "first access issues at cycle zero");
+        assert!(timed[1].0 > timed[0].0, "local timestamps are monotone");
+        assert!(!timed[0].1.write());
         // An untraced machine records nothing.
         let mut quiet = m();
         let b = quiet.salloc(4096);

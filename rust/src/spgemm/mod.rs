@@ -68,7 +68,21 @@ pub struct CsrAddrs {
     pub data: u64,
 }
 
+/// Identity key for a shared operand: the `&Csr`'s address. One shared
+/// reference across the parallel workers (and the driver) means one key,
+/// so every party resolves the same canonical simulated addresses.
+pub fn csr_shared_key(m: &Csr) -> usize {
+    m as *const Csr as usize
+}
+
 impl CsrAddrs {
+    /// Byte sizes of a CSR's three arrays (indptr, indices, data) — the one
+    /// definition [`CsrAddrs::register_shared`] and the parallel driver's
+    /// pre-registration both use.
+    pub fn csr_sizes(m: &Csr) -> (usize, usize, usize) {
+        ((m.nrows + 1) * 8, m.nnz().max(1) * 4, m.nnz().max(1) * 4)
+    }
+
     /// Register `m`'s arrays in the simulated address space.
     pub fn register(mach: &mut Machine, m: &Csr) -> CsrAddrs {
         CsrAddrs {
@@ -86,11 +100,23 @@ impl CsrAddrs {
     /// per-core allocator aliasing. On serial machines, where no
     /// shared-operand table exists, this is exactly [`CsrAddrs::register`].
     pub fn register_shared(mach: &mut Machine, m: &Csr) -> CsrAddrs {
-        let sizes = ((m.nrows + 1) * 8, m.nnz().max(1) * 4, m.nnz().max(1) * 4);
-        match mach.shared_csr(m as *const Csr as usize, sizes) {
+        match mach.shared_csr(csr_shared_key(m), CsrAddrs::csr_sizes(m)) {
             Some((indptr, indices, data)) => CsrAddrs { indptr, indices, data },
             None => CsrAddrs::register(mach, m),
         }
+    }
+
+    /// Addresses for an implementation's output CSR (`rows` output rows,
+    /// at most `est_elems` packed elements — the Gustavson work bound every
+    /// implementation sizes its output by). Under the parallel driver the
+    /// output lands in the block's window of the modeled *shared
+    /// destination region* (see [`crate::sim::Machine::map_shared_output`]),
+    /// so phase-3 writes from different cores share boundary lines and the
+    /// replay sees real write-shared traffic; serial machines allocate
+    /// privately exactly as the seed always did.
+    pub fn register_output(mach: &mut Machine, rows: usize, est_elems: usize) -> CsrAddrs {
+        let (indices, data, indptr) = mach.out_csr_addrs(rows, est_elems);
+        CsrAddrs { indptr, indices, data }
     }
 
     #[inline]

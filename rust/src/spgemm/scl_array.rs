@@ -27,9 +27,8 @@ impl SpGemm for SclArray {
         // --- Preprocess: size the output (upper bound = total work). ------
         let work = crate::spgemm::prep::row_work(m, a, b, &aa, &ba);
         let total_work: u64 = work.iter().sum();
-        let out_idx_addr = m.salloc((total_work.max(1) as usize) * 4);
-        let out_val_addr = m.salloc((total_work.max(1) as usize) * 4);
-        let out_ptr_addr = m.salloc((a.nrows + 1) * 8);
+        let out = CsrAddrs::register_output(m, a.nrows, total_work.max(1) as usize);
+        let (out_idx_addr, out_val_addr, out_ptr_addr) = (out.indices, out.data, out.indptr);
 
         // Dense accumulator + stamp + touched list (simulated addresses).
         let acc_addr = m.salloc(b.ncols * 4);

@@ -39,9 +39,8 @@ impl SpGemm for SclHash {
         let key_addr = m.salloc(max_table * 4);
         let val_addr = m.salloc(max_table * 4);
         let list_addr = m.salloc(max_table * 4);
-        let out_idx_addr = m.salloc((total_work.max(1) as usize) * 4);
-        let out_val_addr = m.salloc((total_work.max(1) as usize) * 4);
-        let out_ptr_addr = m.salloc((a.nrows + 1) * 8);
+        let out = CsrAddrs::register_output(m, a.nrows, total_work.max(1) as usize);
+        let (out_idx_addr, out_val_addr, out_ptr_addr) = (out.indices, out.data, out.indptr);
 
         // Functional table (u32::MAX = empty).
         let mut tkeys = vec![u32::MAX; max_table];

@@ -105,9 +105,8 @@ impl Spz {
             m.salloc((max_group_work.max(1) as usize) * 4),
             m.salloc((max_group_work.max(1) as usize) * 4),
         ];
-        let out_idx_addr = m.salloc((total_work.max(1) as usize) * 4);
-        let out_val_addr = m.salloc((total_work.max(1) as usize) * 4);
-        let out_ptr_addr = m.salloc((a.nrows + 1) * 8);
+        let out = CsrAddrs::register_output(m, a.nrows, total_work.max(1) as usize);
+        let (out_idx_addr, out_val_addr, out_ptr_addr) = (out.indices, out.data, out.indptr);
 
         let mut rows_out: Vec<(Vec<u32>, Vec<f32>)> = vec![(Vec::new(), Vec::new()); a.nrows];
         let mut out_cursor = 0u64;

@@ -66,9 +66,8 @@ impl SpGemm for VecRadix {
         let vbuf = [m.salloc((max_block.max(1) as usize) * 4), m.salloc((max_block.max(1) as usize) * 4)];
         // Per-lane histogram counters: vl lanes x 256 buckets x 4B.
         let hist_addr = m.salloc(vl * 256 * 4);
-        let out_idx_addr = m.salloc((total_work.max(1) as usize) * 4);
-        let out_val_addr = m.salloc((total_work.max(1) as usize) * 4);
-        let out_ptr_addr = m.salloc((a.nrows + 1) * 8);
+        let out = CsrAddrs::register_output(m, a.nrows, total_work.max(1) as usize);
+        let (out_idx_addr, out_val_addr, out_ptr_addr) = (out.indices, out.data, out.indptr);
 
         let col_bits = (64 - (b.ncols.max(2) as u64 - 1).leading_zeros()) as usize;
 

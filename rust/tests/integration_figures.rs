@@ -81,10 +81,20 @@ fn fig12_scaling_sweep_renders_and_scales() {
         .iter()
         .map(|n| DatasetSource::registry(n).unwrap())
         .collect();
-    let points =
-        figures::scaling_sweep(&session, &datasets, ImplId::Spz, 0.02, &[1, 4]).expect("sweep");
-    // 1 serial baseline + (static, work-stealing, ws-dyn) at 4 cores each.
-    assert_eq!(points.len(), 2 * 4);
+    let points = figures::scaling_sweep(
+        &session,
+        &datasets,
+        ImplId::Spz,
+        0.02,
+        &[1, 4],
+        &sparsezipper::spgemm::parallel::Scheduler::ALL,
+    )
+    .expect("sweep");
+    // 1 serial baseline + every scheduler at 4 cores, per dataset.
+    assert_eq!(
+        points.len(),
+        2 * (1 + sparsezipper::spgemm::parallel::Scheduler::ALL.len())
+    );
     for p in &points {
         assert!(p.cycles > 0.0, "{}: zero cycles", p.dataset);
         if p.cores > 1 {

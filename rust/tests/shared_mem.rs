@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 use sparsezipper::matrix::gen;
-use sparsezipper::mem::{replay, SharedStats, TraceEvent, TraceKind};
+use sparsezipper::mem::{replay, SharedStats, TraceBuf, TraceEvent, TraceKind};
 use sparsezipper::spgemm::parallel::{self, ParallelConfig, Scheduler};
 use sparsezipper::spgemm::{ImplId, SpGemm};
 use sparsezipper::SystemConfig;
@@ -53,7 +53,7 @@ fn per_core_trace_accounting_is_exact_at_every_core_count() {
 #[test]
 fn one_core_stalls_are_exactly_zero_for_every_scheduler() {
     let a = gen::rmat(160, 160, 1400, 0.58, 0.2, 0.14, 62);
-    for sched in [Scheduler::Static, Scheduler::WorkStealing, Scheduler::WorkStealingDyn] {
+    for sched in Scheduler::ALL {
         let cfg = ParallelConfig { scheduler: sched, ..ParallelConfig::new(1) };
         let run = parallel::row_blocked(&sys(), native(ImplId::SclHash), &a, &a, &cfg).unwrap();
         let s = &run.metrics.per_core[0].shared;
@@ -67,7 +67,7 @@ fn one_core_stalls_are_exactly_zero_for_every_scheduler() {
 #[test]
 fn multicore_results_are_bit_reproducible_per_scheduler() {
     let a = gen::rmat(256, 256, 2600, 0.62, 0.18, 0.14, 63);
-    for sched in [Scheduler::Static, Scheduler::WorkStealing, Scheduler::WorkStealingDyn] {
+    for sched in Scheduler::ALL {
         let cfg = ParallelConfig { scheduler: sched, ..ParallelConfig::new(7) };
         let r1 = parallel::row_blocked(&sys(), native(ImplId::Spz), &a, &a, &cfg).unwrap();
         let r2 = parallel::row_blocked(&sys(), native(ImplId::Spz), &a, &a, &cfg).unwrap();
@@ -123,18 +123,13 @@ fn dram_channel_occupancy_matches_misses() {
 #[test]
 fn hand_built_disjoint_traces_are_coherence_free_and_order_deterministic() {
     let c = sys();
-    let mk = |base: u64, n: u64, t0: f64| -> Vec<TraceEvent> {
-        (0..n)
-            .map(|i| TraceEvent {
-                line: base + i,
-                time: t0 + i as f64,
-                kind: TraceKind::Demand,
-                write: i % 3 == 0,
-                shadow_hit: false,
-                paid_bw: true,
-                phase: 1,
-            })
-            .collect()
+    let mk = |base: u64, n: u64, t0: f64| -> TraceBuf {
+        TraceBuf::from_events((0..n).map(|i| {
+            (
+                t0 + i as f64,
+                TraceEvent::new(base + i, TraceKind::Demand, i % 3 == 0, false, true, 1),
+            )
+        }))
     };
     // Disjoint line ranges per core.
     let traces = vec![mk(0, 200, 0.0), mk(10_000, 200, 0.0), mk(20_000, 200, 0.0)];
