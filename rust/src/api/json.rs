@@ -102,7 +102,9 @@ fn metrics_json(m: &RunMetrics) -> String {
 /// Shared-memory replay results (all-zero for serial runs, so parsers see
 /// one shape at every core count). Append-only: the iterative-engine and
 /// row-buffer fields (`replay_iters` .. `row_extra_cycles`) extend the
-/// PR 3 schema after `stall_cycles`.
+/// PR 3 schema after `stall_cycles`, and the NUMA `numa` block (remote
+/// fills / forwards / hop-priced extra cycles — structurally zero at one
+/// socket) extends it again after `row_extra_cycles`.
 fn shared_json(s: &SharedStats) -> String {
     format!(
         "{{\"llc_accesses\":{},\"llc_hits\":{},\"llc_misses\":{},\"writeback_installs\":{},\
@@ -111,7 +113,8 @@ fn shared_json(s: &SharedStats) -> String {
          \"llc_queue_cycles\":{},\"dram_queue_cycles\":{},\"coherence_cycles\":{},\
          \"demotion_cycles\":{},\"sharing_saved_cycles\":{},\"stall_cycles\":{},\
          \"replay_iters\":{},\"replay_residual\":{},\"row_hits\":{},\"row_misses\":{},\
-         \"row_conflicts\":{},\"row_extra_cycles\":{}}}",
+         \"row_conflicts\":{},\"row_extra_cycles\":{},\
+         \"numa\":{{\"remote_fills\":{},\"remote_forwards\":{},\"remote_extra_cycles\":{}}}}}",
         s.llc_accesses,
         s.llc_hits,
         s.llc_misses,
@@ -134,7 +137,10 @@ fn shared_json(s: &SharedStats) -> String {
         s.row_hits,
         s.row_misses,
         s.row_conflicts,
-        num(s.row_extra_cycles)
+        num(s.row_extra_cycles),
+        s.remote_fills,
+        s.remote_forwards,
+        num(s.remote_extra_cycles)
     )
 }
 

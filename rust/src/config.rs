@@ -12,6 +12,10 @@
 /// replay ([`crate::mem::shared`]).
 pub const DRAM_BW_CYCLES: f64 = 6.0;
 
+/// Upper bound on [`SharedMemConfig::sockets`]: trace events carry the
+/// requesting core's socket id in 4 packed bits (see [`crate::mem::trace`]).
+pub const MAX_SOCKETS: usize = 16;
+
 /// One cache level's geometry and hit latency (Table II).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CacheConfig {
@@ -110,6 +114,29 @@ pub struct SharedMemConfig {
     /// shared-LLC miss under real sharing pressure (capacity interference;
     /// charged on top of the unpaid bandwidth floor).
     pub demotion_cycles: f64,
+    /// CPU sockets (NUMA nodes). The DRAM channels are split into
+    /// `sockets` contiguous *channel groups* (channel `c` belongs to socket
+    /// `c * sockets / dram_channels`; [`SharedMemConfig::validate`] requires
+    /// `dram_channels % sockets == 0` so the groups are equal), and cores
+    /// are assigned to sockets in contiguous blocks by
+    /// [`SharedMemConfig::socket_of_core`]. Every LLC fill, dirty forward,
+    /// and DRAM transfer is then priced by the requesting core's
+    /// [`SharedMemConfig::socket_distance`] to the line's home socket —
+    /// all distances are zero at `sockets == 1`, so the default is exactly
+    /// the flat (PR 4) model bit for bit.
+    pub sockets: usize,
+    /// Extra cycles per interconnect *hop* a DRAM line transfer pays when
+    /// the requesting core's socket is not the channel's home socket
+    /// (remote memory access: the QPI/UPI traversal both lengthens the
+    /// exposed latency and occupies the channel end-to-end for longer).
+    /// Multiplied by the hop distance; zero-hop (local) transfers pay
+    /// nothing extra.
+    pub remote_transfer_cycles: f64,
+    /// Extra cycles per interconnect hop for cross-socket *coherence*
+    /// traffic: a dirty forward from a core on another socket, an upgrade
+    /// whose invalidations cross the interconnect, or a shared-LLC hit
+    /// served by a remote socket's slice. Multiplied by the hop distance.
+    pub remote_coherence_cycles: f64,
 }
 
 impl Default for SharedMemConfig {
@@ -129,7 +156,82 @@ impl Default for SharedMemConfig {
             upgrade_cycles: 24.0,
             dirty_forward_cycles: 24.0,
             demotion_cycles: 40.0,
+            sockets: 1,
+            remote_transfer_cycles: 12.0,
+            remote_coherence_cycles: 24.0,
         }
+    }
+}
+
+impl SharedMemConfig {
+    /// Validate the knob ranges once, at the API/CLI boundary (like the
+    /// 64-core check): every count must be at least 1 — the replay divides
+    /// by them and sizes its per-channel vectors from them — and the
+    /// socket topology must tile the channels evenly. The replay engine
+    /// asserts the same invariants instead of silently clamping.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.dram_channels >= 1,
+            "SharedMemConfig.dram_channels must be at least 1 (got {})",
+            self.dram_channels
+        );
+        anyhow::ensure!(
+            self.dram_banks >= 1,
+            "SharedMemConfig.dram_banks must be at least 1 (got {})",
+            self.dram_banks
+        );
+        anyhow::ensure!(
+            self.row_buffer_lines >= 1,
+            "SharedMemConfig.row_buffer_lines must be at least 1 (got {})",
+            self.row_buffer_lines
+        );
+        anyhow::ensure!(
+            (1..=MAX_SOCKETS).contains(&self.sockets),
+            "SharedMemConfig.sockets must be between 1 and {MAX_SOCKETS} (trace events \
+             carry the socket id in 4 bits), got {}",
+            self.sockets
+        );
+        anyhow::ensure!(
+            self.dram_channels % self.sockets == 0,
+            "SharedMemConfig.dram_channels ({}) must be a multiple of sockets ({}) so \
+             each socket owns an equal channel group",
+            self.dram_channels,
+            self.sockets
+        );
+        anyhow::ensure!(
+            self.remote_transfer_cycles >= 0.0 && self.remote_transfer_cycles.is_finite(),
+            "SharedMemConfig.remote_transfer_cycles must be finite and non-negative"
+        );
+        anyhow::ensure!(
+            self.remote_coherence_cycles >= 0.0 && self.remote_coherence_cycles.is_finite(),
+            "SharedMemConfig.remote_coherence_cycles must be finite and non-negative"
+        );
+        Ok(())
+    }
+
+    /// Socket a simulated core belongs to: contiguous blocks (cores
+    /// `[0, cores/sockets)` on socket 0, the next block on socket 1, ...)
+    /// the way real parts number them. Always 0 at one socket.
+    pub fn socket_of_core(&self, core: usize, cores: usize) -> usize {
+        let sockets = self.sockets.max(1);
+        (core * sockets / cores.max(1)).min(sockets - 1)
+    }
+
+    /// Home socket of a DRAM channel: contiguous channel groups (channels
+    /// `[0, dram_channels/sockets)` belong to socket 0, ...).
+    pub fn socket_of_channel(&self, channel: usize) -> usize {
+        let sockets = self.sockets.max(1);
+        (channel * sockets / self.dram_channels.max(1)).min(sockets - 1)
+    }
+
+    /// Interconnect hop distance between two sockets — the distance matrix
+    /// the NUMA charges scale with. Modeled as a ring (the common 2/4-socket
+    /// topology): 0 intra-socket, and `min(|a-b|, sockets-|a-b|)` hops
+    /// otherwise, so at 2 sockets every remote access is exactly one hop.
+    pub fn socket_distance(&self, a: usize, b: usize) -> usize {
+        let sockets = self.sockets.max(1);
+        let d = a.abs_diff(b);
+        d.min(sockets - d)
     }
 }
 
@@ -254,7 +356,7 @@ impl SystemConfig {
              L1D        | {}-way, {}KB, {}-cycle hit\n\
              L2         | {}-way, {}KB, {}-cycle hit\n\
              LLC        | {}-way, {}KB, {}-cycle hit (shared, {})\n\
-             Memory     | DDR4-2400 ({} CPU cycles), {} channels\n",
+             Memory     | DDR4-2400 ({} CPU cycles), {} channels across {} socket(s)\n",
             self.core.scalar_ipc,
             self.core.vector_ipc,
             self.core.mem_issue_per_cycle,
@@ -279,6 +381,7 @@ impl SystemConfig {
             },
             m.dram_latency,
             self.shared.dram_channels,
+            self.shared.sockets,
         )
     }
 }
@@ -327,5 +430,65 @@ mod tests {
         assert!(c.shared.max_replay_iters >= 2, "fixed point needs >= 2 passes");
         assert!(c.shared.replay_epsilon >= 0.0);
         assert!(c.shared.row_conflict_cycles >= c.shared.row_miss_cycles);
+        // The default is a single socket: every NUMA distance is zero, so
+        // the flat (PR 4) model is reproduced bit for bit.
+        assert_eq!(c.shared.sockets, 1);
+        assert!(c.shared.validate().is_ok());
+        for core in 0..8 {
+            assert_eq!(c.shared.socket_of_core(core, 8), 0);
+        }
+        for ch in 0..c.shared.dram_channels {
+            assert_eq!(c.shared.socket_of_channel(ch), 0);
+        }
+        assert_eq!(c.shared.socket_distance(0, 0), 0);
+    }
+
+    #[test]
+    fn socket_maps_are_contiguous_and_distances_ring() {
+        let s = SharedMemConfig {
+            sockets: 2,
+            ..SharedMemConfig::default()
+        };
+        assert!(s.validate().is_ok());
+        // 8 cores over 2 sockets: contiguous halves.
+        let socks: Vec<usize> = (0..8).map(|c| s.socket_of_core(c, 8)).collect();
+        assert_eq!(socks, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        // 4 channels over 2 sockets: contiguous channel groups.
+        let chans: Vec<usize> = (0..4).map(|c| s.socket_of_channel(c)).collect();
+        assert_eq!(chans, vec![0, 0, 1, 1]);
+        assert_eq!(s.socket_distance(0, 1), 1);
+        assert_eq!(s.socket_distance(1, 0), 1);
+        assert_eq!(s.socket_distance(1, 1), 0);
+        // Fewer cores than sockets still maps into range.
+        assert!(s.socket_of_core(0, 1) < 2);
+        // Ring distance at 4 sockets: opposite corners are 2 hops, neighbours
+        // (including the wrap-around pair) are 1.
+        let q = SharedMemConfig { sockets: 4, ..SharedMemConfig::default() };
+        assert_eq!(q.socket_distance(0, 2), 2);
+        assert_eq!(q.socket_distance(0, 3), 1);
+        assert_eq!(q.socket_distance(1, 2), 1);
+    }
+
+    #[test]
+    fn shared_mem_validation_rejects_bad_knobs() {
+        let base = SharedMemConfig::default();
+        assert!(SharedMemConfig { dram_channels: 0, ..base }.validate().is_err());
+        assert!(SharedMemConfig { dram_banks: 0, ..base }.validate().is_err());
+        assert!(SharedMemConfig { row_buffer_lines: 0, ..base }.validate().is_err());
+        assert!(SharedMemConfig { sockets: 0, ..base }.validate().is_err());
+        assert!(SharedMemConfig { sockets: MAX_SOCKETS + 1, ..base }.validate().is_err());
+        // 4 channels cannot split into 3 equal groups.
+        assert!(SharedMemConfig { sockets: 3, ..base }.validate().is_err());
+        assert!(SharedMemConfig { sockets: 4, ..base }.validate().is_ok());
+        assert!(
+            SharedMemConfig { remote_transfer_cycles: f64::NAN, ..base }
+                .validate()
+                .is_err()
+        );
+        assert!(
+            SharedMemConfig { remote_coherence_cycles: -1.0, ..base }
+                .validate()
+                .is_err()
+        );
     }
 }

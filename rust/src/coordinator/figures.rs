@@ -368,6 +368,10 @@ pub struct ScalingPoint {
     pub coherence_events: u64,
     /// Cross-core DRAM channel queueing cycles summed over cores.
     pub dram_queue_cycles: f64,
+    /// Remote-socket fills (NUMA) summed over cores; 0 at one socket.
+    pub remote_fills: u64,
+    /// Hop-priced NUMA extra cycles summed over cores; 0 at one socket.
+    pub remote_extra_cycles: f64,
 }
 
 /// Run the Figure 12 scaling study: `impl_id` on every dataset at each core
@@ -401,6 +405,8 @@ pub fn scaling_sweep(
             llc_hit_rate: private_llc_rate,
             coherence_events: 0,
             dram_queue_cycles: 0.0,
+            remote_fills: 0,
+            remote_extra_cycles: 0.0,
         });
         for &c in cores.iter().filter(|&&c| c > 1) {
             for &sched in scheds {
@@ -423,6 +429,8 @@ pub fn scaling_sweep(
                     llc_hit_rate: sh.llc_hit_rate(),
                     coherence_events: sh.coherence_events(),
                     dram_queue_cycles: sh.dram_queue_cycles,
+                    remote_fills: sh.remote_fills,
+                    remote_extra_cycles: sh.remote_extra_cycles,
                 });
             }
         }
@@ -443,8 +451,9 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
         s,
         "Figure 12. Multi-core scaling ({impl_name}): speedup over 1 core \
          (row-blocked driver; static vs work-stealing vs ws-dyn vs \
-         bandwidth-aware ws-bw block schedule; llc-hit/coh/dram-q from the \
-         shared-memory replay at the largest core count)"
+         bandwidth-aware ws-bw vs socket-aware ws-numa block schedule; \
+         llc-hit/coh/dram-q/numa-cyc from the shared-memory replay at the \
+         largest core count — numa-cyc is 0 unless --sockets >= 2)"
     );
     let _ = write!(s, "{:<10} {:<14}", "Matrix", "sched");
     for c in &cores {
@@ -453,8 +462,8 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
     }
     let _ = writeln!(
         s,
-        " {:>10} {:>8} {:>8} {:>10}",
-        "imbalance", "llc-hit", "coh", "dram-q"
+        " {:>10} {:>8} {:>8} {:>10} {:>10}",
+        "imbalance", "llc-hit", "coh", "dram-q", "numa-cyc"
     );
     let mut datasets: Vec<&str> = Vec::new();
     for p in points {
@@ -494,14 +503,19 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
                 Some(p) => {
                     let _ = writeln!(
                         s,
-                        " {worst_imb:>9.2}x {:>7.1}% {:>8} {:>10.0}",
+                        " {worst_imb:>9.2}x {:>7.1}% {:>8} {:>10.0} {:>10.0}",
                         100.0 * p.llc_hit_rate,
                         p.coherence_events,
-                        p.dram_queue_cycles
+                        p.dram_queue_cycles,
+                        p.remote_extra_cycles
                     );
                 }
                 None => {
-                    let _ = writeln!(s, " {worst_imb:>9.2}x {:>8} {:>8} {:>10}", "-", "-", "-");
+                    let _ = writeln!(
+                        s,
+                        " {worst_imb:>9.2}x {:>8} {:>8} {:>10} {:>10}",
+                        "-", "-", "-", "-"
+                    );
                 }
             }
         }
@@ -509,16 +523,17 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
     s
 }
 
-/// TSV series for the scaling study (`fig12.tsv`).
+/// TSV series for the scaling study (`fig12.tsv`). Columns only ever get
+/// appended (the NUMA pair landed after `dram_queue_cycles`).
 pub fn fig12_tsv(points: &[ScalingPoint]) -> String {
     let mut t = String::from(
         "matrix\timpl\tsched\tcores\tcycles\tspeedup\timbalance\tllc_hit_rate\t\
-         coherence_events\tdram_queue_cycles\n",
+         coherence_events\tdram_queue_cycles\tremote_fills\tremote_extra_cycles\n",
     );
     for p in points {
         let _ = writeln!(
             t,
-            "{}\t{}\t{}\t{}\t{:.1}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.1}",
+            "{}\t{}\t{}\t{}\t{:.1}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.1}\t{}\t{:.1}",
             p.dataset,
             p.impl_id,
             p.scheduler.map(|s| s.name()).unwrap_or("serial"),
@@ -528,7 +543,9 @@ pub fn fig12_tsv(points: &[ScalingPoint]) -> String {
             p.imbalance,
             p.llc_hit_rate,
             p.coherence_events,
-            p.dram_queue_cycles
+            p.dram_queue_cycles,
+            p.remote_fills,
+            p.remote_extra_cycles
         );
     }
     t
@@ -615,6 +632,12 @@ pub fn mem_report(r: &crate::api::JobResult) -> String {
         tot.row_misses,
         tot.row_conflicts,
         tot.row_extra_cycles
+    );
+    let _ = writeln!(
+        s,
+        "numa      | remote fills {}, remote forwards {}, remote extra {:+.0} cycles \
+         (all zero at 1 socket)",
+        tot.remote_fills, tot.remote_forwards, tot.remote_extra_cycles
     );
     let _ = writeln!(
         s,

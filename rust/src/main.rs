@@ -81,28 +81,31 @@ fn parse_argv(args: &[String]) -> Result<Args> {
 fn allowed_opts(cmd: &str) -> &'static [&'static str] {
     const SUITE: &[&str] = &[
         "scale", "threads", "datasets", "engine", "artifacts", "mtx-dir", "out-dir", "cores",
-        "sched",
+        "sched", "sockets",
     ];
     match cmd {
         // Only fig8/all honor --impls; the other figures fix their own
         // implementation set, so accepting it would silently discard it.
         "fig8" | "all" => &[
             "scale", "threads", "datasets", "impls", "engine", "artifacts", "mtx-dir", "out-dir",
-            "cores", "sched",
+            "cores", "sched", "sockets",
         ],
         "table3" | "fig9" | "fig10" | "fig11" => SUITE,
         // fig12 sweeps a *list* of core counts and, by default, every
         // scheduler; --sched narrows it to a comma list.
         "fig12" => &[
             "scale", "datasets", "impl", "cores", "sched", "engine", "artifacts", "mtx-dir",
-            "out-dir",
+            "out-dir", "sockets",
         ],
-        "run" => &["dataset", "impl", "scale", "engine", "artifacts", "mtx-dir", "cores", "sched"],
+        "run" => &[
+            "dataset", "impl", "scale", "engine", "artifacts", "mtx-dir", "cores", "sched",
+            "sockets",
+        ],
         // mem runs one multi-core job and renders the shared-memory report
         // (per-core LLC/coherence/queueing + DRAM channel occupancy).
         "mem" => &[
             "dataset", "impl", "scale", "engine", "artifacts", "mtx-dir", "cores", "sched",
-            "channels", "out-dir",
+            "channels", "sockets", "out-dir",
         ],
         // ablate sweeps are engine-independent (hardwired NativeEngine).
         "ablate" => &["dataset", "scale", "mtx-dir", "out-dir"],
@@ -134,17 +137,18 @@ fn print_help() {
          suite commands (table3 fig8 fig9 fig10 fig11 all):\n\
          \x20   --scale F --threads N --datasets a,b --engine native|xla\n\
          \x20   --mtx-dir DIR --out-dir DIR --artifacts DIR --verify --quiet --json\n\
-         \x20   --cores N --sched static|work-stealing|ws-dyn|ws-bw (simulated multi-core)\n\
+         \x20   --cores N --sched static|work-stealing|ws-dyn|ws-bw|ws-numa (simulated\n\
+         \x20   multi-core) --sockets N (NUMA sockets; channels split into per-socket groups)\n\
          \x20   (fig8 and all also take --impls a,b)\n\
          run:    --dataset NAME [--impl NAME] [--scale F] [--engine native|xla]\n\
-         \x20       [--mtx-dir DIR] [--artifacts DIR] [--cores N] [--sched S]\n\
+         \x20       [--mtx-dir DIR] [--artifacts DIR] [--cores N] [--sched S] [--sockets N]\n\
          \x20       [--verify] [--json]\n\
          mem:    --dataset NAME [--impl NAME] [--cores N] [--sched S] [--channels N]\n\
-         \x20       [--scale F] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
+         \x20       [--sockets N] [--scale F] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          \x20       (shared-memory report: per-core LLC/coherence/queueing + banked DRAM\n\
-         \x20        channels + iterative-replay convergence)\n\
-         fig12:  [--impl NAME] [--cores 1,2,4,8] [--sched a,b] [--scale F] [--datasets a,b]\n\
-         \x20       [--engine E] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
+         \x20        channels + NUMA remote traffic + iterative-replay convergence)\n\
+         fig12:  [--impl NAME] [--cores 1,2,4,8] [--sched a,b] [--sockets N] [--scale F]\n\
+         \x20       [--datasets a,b] [--engine E] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          ablate: [--dataset NAME] [--scale F] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          gen:    --dataset NAME --out FILE.mtx [--scale F]\n\
          table4: [--sweep] [--out-dir DIR] [--quiet]"
@@ -158,6 +162,23 @@ fn session_config(a: &Args) -> Result<SessionConfig> {
     }
     if let Some(ad) = a.opts.get("artifacts") {
         cfg.artifact_dir = PathBuf::from(ad);
+    }
+    // --channels is a mem-only option (allowed_opts gates it), handled here
+    // so the sockets/channels *combination* is validated once, after both
+    // overrides: `--sockets 3 --channels 6` is a valid topology even though
+    // 3 does not divide the default 4 channels.
+    if let Some(chs) = a.opts.get("channels") {
+        let n: usize = chs.parse().context("--channels")?;
+        anyhow::ensure!(n >= 1, "--channels must be at least 1");
+        cfg.sys.shared.dram_channels = n;
+    }
+    if let Some(s) = a.opts.get("sockets") {
+        cfg.sys.shared.sockets = s.parse().context("--sockets")?;
+    }
+    if a.opts.contains_key("sockets") || a.opts.contains_key("channels") {
+        // Validate at the argv boundary (like --cores) so a bad topology is
+        // a clean CLI error, not a deep replay panic.
+        cfg.sys.shared.validate()?;
     }
     Ok(cfg)
 }
@@ -422,13 +443,9 @@ fn main() -> Result<()> {
             }
         }
         "mem" => {
-            let mut cfg = session_config(&a)?;
-            if let Some(chs) = a.opts.get("channels") {
-                let n: usize = chs.parse().context("--channels")?;
-                anyhow::ensure!(n >= 1, "--channels must be at least 1");
-                cfg.sys.shared.dram_channels = n;
-            }
-            let session = Session::with_config(cfg);
+            // --channels and --sockets are folded in (and validated as a
+            // combination) by session_config.
+            let session = Session::with_config(session_config(&a)?);
             let name = a.opts.get("dataset").context("--dataset required")?;
             let dataset = DatasetSource::parse(name, mtx_dir(&a).as_deref())?;
             let impl_id: ImplId = a
@@ -449,10 +466,12 @@ fn main() -> Result<()> {
                 job = job.with_scheduler(s);
             }
             eprintln!(
-                "[spz] shared-memory report: {impl_id} on {} at {} core(s), {} DRAM channel(s)",
+                "[spz] shared-memory report: {impl_id} on {} at {} core(s), {} DRAM channel(s), \
+                 {} socket(s)",
                 dataset.name(),
                 job.cores,
-                session.system().shared.dram_channels
+                session.system().shared.dram_channels,
+                session.system().shared.sockets
             );
             let res = session.run(&job)?;
             report::emit(
@@ -493,10 +512,19 @@ fn main() -> Result<()> {
             cores.sort_unstable();
             cores.dedup();
             // One Scheduler::from_str serves run/suite/mem and this list,
-            // so a new scheduler name works everywhere at once.
+            // so a new scheduler name works everywhere at once. The default
+            // sweep drops ws-numa at one socket: it is bit-identical to
+            // ws-bw there (pinned by tests), so its rows would only repeat
+            // ws-bw's. An explicit --sched list is taken as given.
             let scheds: Vec<Scheduler> = match a.opts.get("sched") {
                 Some(spec) => parse_scheds(spec)?,
-                None => Scheduler::ALL.to_vec(),
+                None => Scheduler::ALL
+                    .into_iter()
+                    .filter(|&s| {
+                        s != Scheduler::WorkStealingNuma
+                            || session.system().shared.sockets >= 2
+                    })
+                    .collect(),
             };
             let scale = scale_opt(&a)?.unwrap_or(1.0);
             eprintln!(
@@ -700,6 +728,56 @@ mod tests {
             vec![Scheduler::WorkStealingBw, Scheduler::Static]
         );
         assert!(parse_scheds("ws-bw,greedy").is_err());
+    }
+
+    #[test]
+    fn sockets_option_parses_and_validates() {
+        // --sockets is accepted wherever --cores is, feeding the session's
+        // SharedMemConfig through the one session_config path.
+        for cmd in [
+            vec!["run", "--sockets", "2"],
+            vec!["mem", "--dataset", "p2p", "--sockets", "2"],
+            vec!["fig12", "--sockets", "2"],
+            vec!["fig8", "--sockets", "2"],
+        ] {
+            let a = parse_argv(&v(&cmd)).unwrap();
+            let cfg = session_config(&a).unwrap();
+            assert_eq!(cfg.sys.shared.sockets, 2, "{cmd:?}");
+        }
+        // A topology the channels cannot tile is a clean argv-boundary error.
+        let a = parse_argv(&v(&["run", "--sockets", "3"])).unwrap();
+        let e = format!("{:#}", session_config(&a).unwrap_err());
+        assert!(e.contains("sockets"), "{e}");
+        let a = parse_argv(&v(&["run", "--sockets", "0"])).unwrap();
+        assert!(session_config(&a).is_err());
+        // The sockets/channels *combination* is what validates: 3 sockets
+        // are fine once mem's --channels makes the groups tile.
+        let a = parse_argv(&v(&[
+            "mem", "--dataset", "p2p", "--sockets", "3", "--channels", "6",
+        ]))
+        .unwrap();
+        let cfg = session_config(&a).unwrap();
+        assert_eq!(cfg.sys.shared.sockets, 3);
+        assert_eq!(cfg.sys.shared.dram_channels, 6);
+        let a = parse_argv(&v(&[
+            "mem", "--dataset", "p2p", "--sockets", "2", "--channels", "3",
+        ]))
+        .unwrap();
+        assert!(session_config(&a).is_err(), "3 channels cannot split across 2 sockets");
+        // gen/table4 do not take --sockets.
+        assert!(parse_argv(&v(&["gen", "--sockets", "2"])).is_err());
+    }
+
+    #[test]
+    fn ws_numa_parses_like_every_other_scheduler() {
+        let a = parse_argv(&v(&["run", "--cores", "4", "--sched", "ws-numa"])).unwrap();
+        assert_eq!(sched_opt(&a).unwrap(), Some(Scheduler::WorkStealingNuma));
+        let a = parse_argv(&v(&["fig8", "--cores", "4", "--sched", "ws-numa"])).unwrap();
+        assert_eq!(suite_spec(&a).unwrap().sched, Scheduler::WorkStealingNuma);
+        assert_eq!(
+            parse_scheds("ws-bw,ws-numa").unwrap(),
+            vec![Scheduler::WorkStealingBw, Scheduler::WorkStealingNuma]
+        );
     }
 
     #[test]

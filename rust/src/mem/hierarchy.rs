@@ -86,6 +86,9 @@ pub struct Hierarchy {
     now: f64,
     /// Figure 9 phase stamped onto trace events.
     phase: u8,
+    /// Socket of the owning core, stamped onto trace events (0 for serial
+    /// machines and single-socket configs; set by `Machine::fork_core`).
+    socket: u8,
     /// Whether the current `access()` call has already attributed the
     /// (once-per-access) DRAM bandwidth floor to one of its lines: the cost
     /// model charges `dram_bw` from the single worst-line latency, so
@@ -110,6 +113,7 @@ impl Hierarchy {
             trace: None,
             now: 0.0,
             phase: 0,
+            socket: 0,
             bw_paid_this_access: false,
         }
     }
@@ -149,12 +153,25 @@ impl Hierarchy {
         self.phase = p;
     }
 
+    /// Stamp the owning core's socket onto subsequent trace events (the
+    /// NUMA replay prices each access by the distance from this socket to
+    /// the line's home channel group).
+    #[inline]
+    pub fn set_socket(&mut self, s: u8) {
+        self.socket = s;
+    }
+
     #[inline]
     fn record(&mut self, line: u64, kind: TraceKind, write: bool, shadow_hit: bool, paid_bw: bool) {
         let now = self.now;
         let phase = self.phase;
+        let socket = self.socket;
         if let Some(t) = self.trace.as_mut() {
-            t.push(TraceEvent::new(line, kind, write, shadow_hit, paid_bw, phase), now);
+            t.push(
+                TraceEvent::new(line, kind, write, shadow_hit, paid_bw, phase)
+                    .with_socket(socket),
+                now,
+            );
         }
     }
 
@@ -419,6 +436,19 @@ mod tests {
         quiet.access(0x10000, 4, AccessKind::Read);
         assert!(quiet.take_trace().is_empty());
         assert!(!quiet.trace_enabled());
+    }
+
+    #[test]
+    fn trace_events_carry_the_configured_socket() {
+        let mut m = h();
+        m.enable_trace();
+        m.access(0x10000, 4, AccessKind::Read);
+        m.set_socket(3);
+        m.access(0x20000, 4, AccessKind::Read);
+        let t = m.take_trace();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.get(0).socket(), 0, "default socket is 0 (flat model)");
+        assert_eq!(t.get(1).socket(), 3);
     }
 
     #[test]

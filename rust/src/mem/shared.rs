@@ -39,6 +39,18 @@
 //!   open for us is a (negative-cost) convenience. Single-stream row
 //!   behaviour is phase 1's flat `dram_latency`, so at one core the two
 //!   states are identical and the delta is exactly zero.
+//! * **NUMA distance** — the DRAM channels split into per-socket *channel
+//!   groups* and cores sit on sockets
+//!   ([`crate::config::SharedMemConfig::sockets`]); every trace event
+//!   carries its requester's socket. A shared-LLC miss whose channel
+//!   belongs to another socket pays `hops * remote_transfer_cycles` (and
+//!   occupies the channel that much longer); a hit served by a remote
+//!   socket's slice, a dirty forward from a core on another socket, and an
+//!   upgrade whose invalidations cross the interconnect pay
+//!   `hops * remote_coherence_cycles`. Distances come from the ring
+//!   distance matrix ([`crate::config::SharedMemConfig::socket_distance`]),
+//!   so at one socket every hop count — and therefore every NUMA charge —
+//!   is exactly zero and the flat model is reproduced bit for bit.
 //!
 //! ## Iteration (closing the loop)
 //!
@@ -104,6 +116,14 @@ pub struct SharedStats {
     /// Row-buffer conflicts: rows this core had open that other cores'
     /// interleaved traffic closed.
     pub row_conflicts: u64,
+    /// Lines this core filled from a *remote* socket: shared-LLC misses
+    /// served by another socket's channel group plus shared-LLC hits served
+    /// by a remote socket's slice. Zero at 1 socket by construction.
+    pub remote_fills: u64,
+    /// Cross-socket coherence transactions this core initiated: dirty
+    /// forwards from a core on another socket and upgrades whose
+    /// invalidations crossed the interconnect. Zero at 1 socket.
+    pub remote_forwards: u64,
     /// Cycles spent queueing behind other cores at the shared LLC.
     pub llc_queue_cycles: f64,
     /// Cycles spent queueing behind other cores' DRAM channel transfers.
@@ -118,6 +138,10 @@ pub struct SharedStats {
     /// core-alone shadow-state cost (negative when other cores' traffic
     /// happened to leave this core's rows open).
     pub row_extra_cycles: f64,
+    /// NUMA distance charges: hop-priced remote transfer and coherence
+    /// cycles over all of this core's remote fills and forwards. Exactly
+    /// zero at 1 socket.
+    pub remote_extra_cycles: f64,
     /// Replay iterations the engine ran (1 = the one-shot model sufficed;
     /// identical across cores of one run, aggregated with `max`).
     pub replay_iters: u32,
@@ -144,12 +168,15 @@ impl SharedStats {
         self.row_hits += o.row_hits;
         self.row_misses += o.row_misses;
         self.row_conflicts += o.row_conflicts;
+        self.remote_fills += o.remote_fills;
+        self.remote_forwards += o.remote_forwards;
         self.llc_queue_cycles += o.llc_queue_cycles;
         self.dram_queue_cycles += o.dram_queue_cycles;
         self.coherence_cycles += o.coherence_cycles;
         self.demotion_cycles += o.demotion_cycles;
         self.sharing_saved_cycles += o.sharing_saved_cycles;
         self.row_extra_cycles += o.row_extra_cycles;
+        self.remote_extra_cycles += o.remote_extra_cycles;
         self.replay_iters = self.replay_iters.max(o.replay_iters);
         self.replay_residual = self.replay_residual.max(o.replay_residual);
     }
@@ -173,6 +200,7 @@ impl SharedStats {
         self.llc_queue_cycles + self.dram_queue_cycles + self.coherence_cycles
             + self.demotion_cycles
             + self.row_extra_cycles
+            + self.remote_extra_cycles
             - self.sharing_saved_cycles
     }
 }
@@ -238,7 +266,10 @@ pub struct ReplayEngine<'a> {
 
 impl<'a> ReplayEngine<'a> {
     /// An engine over the merged per-core traces (index = core id).
-    /// Supports up to 64 cores (directory bitmaps).
+    /// Supports up to 64 cores (directory bitmaps). The configuration must
+    /// satisfy [`SharedMemConfig::validate`] — the driver and CLI `ensure!`
+    /// it with a clean error; the engine asserts it rather than silently
+    /// clamping.
     pub fn new(
         mem: &'a MemConfig,
         cfg: &'a SharedMemConfig,
@@ -249,7 +280,31 @@ impl<'a> ReplayEngine<'a> {
             (1..=64).contains(&cores),
             "replay supports 1..=64 cores, got {cores}"
         );
+        if let Err(e) = cfg.validate() {
+            panic!("invalid SharedMemConfig handed to the replay engine: {e}");
+        }
         ReplayEngine { mem, cfg, traces }
+    }
+
+    /// Socket of each core, read back from its trace's first event — used
+    /// to locate the *remote party* of a coherence transaction (the dirty
+    /// line's owner, an upgrade's sharers). The requester's own socket is
+    /// read per event (events are self-describing), so a trace whose stamps
+    /// vary mid-stream still prices each access correctly. Cores with empty
+    /// traces — and any stamp a hand-built trace put out of range — resolve
+    /// to socket 0 / the last socket, so the distance math can never leave
+    /// `[0, sockets)`.
+    fn core_sockets(&self) -> Vec<usize> {
+        let sockets = self.cfg.sockets.max(1);
+        self.traces
+            .iter()
+            .map(|t| {
+                t.iter()
+                    .next()
+                    .map(|e| (e.socket() as usize).min(sockets - 1))
+                    .unwrap_or(0)
+            })
+            .collect()
     }
 
     /// Run passes until the pending correction falls under
@@ -339,9 +394,14 @@ impl<'a> ReplayEngine<'a> {
         }
         let mut llc = Cache::new(llc_cfg);
 
-        let channels = cfg.dram_channels.max(1);
-        let banks = cfg.dram_banks.max(1);
-        let row_lines = cfg.row_buffer_lines.max(1) as u64;
+        // Validated in `new` — no silent clamping here.
+        let channels = cfg.dram_channels;
+        let banks = cfg.dram_banks;
+        let row_lines = cfg.row_buffer_lines as u64;
+        let sockets = cfg.sockets.max(1);
+        // Per-core sockets for the remote parties of coherence events; the
+        // requester's socket is read off each event itself.
+        let core_socket = self.core_sockets();
         let mut directory: HashMap<u64, LineState> = HashMap::new();
         // Occupancy tails, split per core so a core only ever queues behind
         // *other* cores (self-throughput is phase 1's business).
@@ -380,6 +440,8 @@ impl<'a> ReplayEngine<'a> {
                 }
                 TraceKind::Demand => {
                     stats[c].llc_accesses += 1;
+                    // The event's own stamp (clamped like `core_sockets`).
+                    let my_sock = (e.socket() as usize).min(sockets - 1);
                     let mut extra = 0.0f64;
 
                     // (1) Queue behind other cores' outstanding LLC lookups.
@@ -419,10 +481,21 @@ impl<'a> ReplayEngine<'a> {
                             stats[c].invalidations_sent += others.count_ones() as u64;
                             stats[c].coherence_cycles += cfg.upgrade_cycles;
                             extra += cfg.upgrade_cycles;
+                            // The upgrade round-trip is bounded by the
+                            // furthest sharer it must invalidate.
+                            let mut hops = 0usize;
                             for (k, s) in stats.iter_mut().enumerate() {
                                 if k != c && (others >> k) & 1 == 1 {
                                     s.invalidations_received += 1;
+                                    hops =
+                                        hops.max(cfg.socket_distance(my_sock, core_socket[k]));
                                 }
+                            }
+                            if hops > 0 {
+                                stats[c].remote_forwards += 1;
+                                let x = hops as f64 * cfg.remote_coherence_cycles;
+                                stats[c].remote_extra_cycles += x;
+                                extra += x;
                             }
                         }
                         st.sharers = 1u64 << c;
@@ -433,6 +506,16 @@ impl<'a> ReplayEngine<'a> {
                             stats[c].dirty_forwards += 1;
                             stats[c].coherence_cycles += cfg.dirty_forward_cycles;
                             extra += cfg.dirty_forward_cycles;
+                            // A forward from a core on another socket
+                            // crosses the interconnect.
+                            let hops =
+                                cfg.socket_distance(my_sock, core_socket[st.owner as usize]);
+                            if hops > 0 {
+                                stats[c].remote_forwards += 1;
+                                let x = hops as f64 * cfg.remote_coherence_cycles;
+                                stats[c].remote_extra_cycles += x;
+                                extra += x;
+                            }
                             // Forwarded and downgraded to shared.
                             st.dirty = false;
                         }
@@ -447,11 +530,24 @@ impl<'a> ReplayEngine<'a> {
                     let in_chan = line / channels as u64;
                     let bk = ch * banks + ((in_chan / row_lines) % banks as u64) as usize;
                     let row = in_chan / (row_lines * banks as u64);
+                    // NUMA: hop distance from the requesting core's socket
+                    // to the line's home channel group. 0 everywhere at one
+                    // socket, so every charge below vanishes and the flat
+                    // model is reproduced bit for bit.
+                    let home_hops = cfg.socket_distance(my_sock, cfg.socket_of_channel(ch));
 
                     // (4) Settle the shadow prediction against the shared
                     // truth.
                     if hit {
                         stats[c].llc_hits += 1;
+                        if home_hops > 0 {
+                            // The hit is served by a remote socket's LLC
+                            // slice: the line crosses the interconnect.
+                            stats[c].remote_fills += 1;
+                            let x = home_hops as f64 * cfg.remote_coherence_cycles;
+                            stats[c].remote_extra_cycles += x;
+                            extra += x;
+                        }
                         if !e.shadow_hit() {
                             // Constructive sharing: another core already
                             // pulled the line in. Refund the bandwidth floor
@@ -486,6 +582,17 @@ impl<'a> ReplayEngine<'a> {
                         chan_busy[ch][c] =
                             t.max(chan_busy[ch][c]).max(otherb) + cfg.dram_transfer_cycles;
                         channel_busy_cycles[ch] += cfg.dram_transfer_cycles;
+                        if home_hops > 0 {
+                            // Remote memory access: the transfer pays the
+                            // interconnect traversal and occupies the
+                            // channel end-to-end for that much longer.
+                            stats[c].remote_fills += 1;
+                            let x = home_hops as f64 * cfg.remote_transfer_cycles;
+                            stats[c].remote_extra_cycles += x;
+                            extra += x;
+                            chan_busy[ch][c] += x;
+                            channel_busy_cycles[ch] += x;
+                        }
 
                         // (5) Bank/row-buffer state. The *shared* bank
                         // always advances — this is a real DRAM access —
@@ -628,6 +735,8 @@ mod tests {
         assert_eq!(s.demotion_cycles, 0.0);
         assert_eq!(s.sharing_saved_cycles, 0.0);
         assert_eq!(s.row_extra_cycles, 0.0, "alone, shadow and shared banks agree");
+        assert_eq!(s.remote_fills + s.remote_forwards, 0, "one socket has no remote traffic");
+        assert_eq!(s.remote_extra_cycles, 0.0);
         assert_eq!(s.stall_cycles(), 0.0);
         assert_eq!(s.upgrades + s.dirty_forwards + s.invalidations_received, 0);
         // The shared LLC agreed with the shadow on every single access.
@@ -892,6 +1001,8 @@ mod tests {
             llc_accesses: 3,
             row_hits: 2,
             row_extra_cycles: 1.5,
+            remote_fills: 1,
+            remote_extra_cycles: 4.0,
             replay_iters: 1,
             replay_residual: 0.0,
             ..SharedStats::default()
@@ -900,6 +1011,9 @@ mod tests {
             llc_accesses: 4,
             row_conflicts: 5,
             row_extra_cycles: -0.5,
+            remote_fills: 2,
+            remote_forwards: 3,
+            remote_extra_cycles: 6.0,
             replay_iters: 2,
             replay_residual: 7.0,
             ..SharedStats::default()
@@ -909,7 +1023,145 @@ mod tests {
         assert_eq!(a.row_hits, 2);
         assert_eq!(a.row_conflicts, 5);
         assert_eq!(a.row_extra_cycles, 1.0);
+        assert_eq!(a.remote_fills, 3);
+        assert_eq!(a.remote_forwards, 3);
+        assert_eq!(a.remote_extra_cycles, 10.0);
         assert_eq!(a.replay_iters, 2, "iters aggregate with max, not sum");
         assert_eq!(a.replay_residual, 7.0);
+    }
+
+    /// Two one-event traces on distinct sockets of a 2-socket, 4-channel
+    /// config: lines are chosen so each core's line is either local or
+    /// remote to its socket's channel group.
+    fn two_socket_cfg() -> SharedMemConfig {
+        SharedMemConfig {
+            sockets: 2,
+            ..SystemConfig::default().shared
+        }
+    }
+
+    #[test]
+    fn remote_dram_transfer_pays_the_hop_price_and_local_does_not() {
+        let c = sys();
+        let cfg = two_socket_cfg();
+        // Channels 0,1 belong to socket 0; channels 2,3 to socket 1.
+        // Core 0 (socket 0) touches line 0 (ch 0, local) and line 2 (ch 2,
+        // remote); core 1 (socket 1, far in time so no queueing) touches
+        // line 3 (ch 3, local).
+        let t0 = TraceBuf::from_events([
+            (0.0, demand(0, false, false).with_socket(0)),
+            (1.0, demand(2, false, false).with_socket(0)),
+        ]);
+        let t1 = TraceBuf::from_events([(1_000_000.0, demand(3, false, false).with_socket(1))]);
+        let out = replay(&c.mem, &cfg, &[t0, t1]);
+        let s0 = &out.per_core[0];
+        let s1 = &out.per_core[1];
+        assert_eq!(s0.remote_fills, 1, "exactly the cross-socket line is remote");
+        assert_eq!(s0.remote_extra_cycles, cfg.remote_transfer_cycles);
+        assert_eq!(s1.remote_fills, 0, "socket-local access pays nothing");
+        assert_eq!(s1.remote_extra_cycles, 0.0);
+        // The remote transfer also occupies its channel longer.
+        assert_eq!(
+            out.channel_busy_cycles[2],
+            cfg.dram_transfer_cycles + cfg.remote_transfer_cycles
+        );
+        assert_eq!(out.channel_busy_cycles[3], cfg.dram_transfer_cycles);
+    }
+
+    #[test]
+    fn cross_socket_dirty_forward_and_upgrade_are_remote_forwards() {
+        let c = sys();
+        let cfg = two_socket_cfg();
+        // Core 0 (socket 0) writes line 9 (ch 1, local to socket 0); core 1
+        // (socket 1) reads it later -> dirty forward across the
+        // interconnect; core 0 then rewrites it -> upgrade whose
+        // invalidation crosses back.
+        let t0 = TraceBuf::from_events([
+            (0.0, demand(9, true, false).with_socket(0)),
+            (2_000_000.0, demand(9, true, true).with_socket(0)),
+        ]);
+        let t1 = TraceBuf::from_events([(1_000_000.0, demand(9, false, false).with_socket(1))]);
+        let out = replay(&c.mem, &cfg, &[t0, t1]);
+        let s1 = &out.per_core[1];
+        assert_eq!(s1.dirty_forwards, 1);
+        assert_eq!(s1.remote_forwards, 1, "the forward crossed sockets");
+        // Core 1's read also filled from a remote channel group (line 9 is
+        // ch 1 = socket 0): it hits the shared LLC core 0 filled.
+        assert_eq!(s1.remote_fills, 1);
+        assert!(s1.remote_extra_cycles > 0.0);
+        let s0 = &out.per_core[0];
+        assert_eq!(s0.upgrades, 1);
+        assert_eq!(
+            s0.remote_forwards, 1,
+            "the upgrade invalidated a sharer on the other socket"
+        );
+    }
+
+    #[test]
+    fn local_placement_beats_all_remote_placement() {
+        // The same access streams, once with each core stamped on the
+        // socket owning its lines' channel group and once with the stamps
+        // swapped (every access remote): the all-remote run must cost
+        // strictly more and the local one must carry zero NUMA charges.
+        let c = sys();
+        let cfg = two_socket_cfg();
+        let lines0: Vec<u64> = (0..64u64).map(|i| 4 * i).collect(); // ch 0: socket 0
+        let lines1: Vec<u64> = (0..64u64).map(|i| 4 * i + 2).collect(); // ch 2: socket 1
+        let mk = |lines: &[u64], sock: u8| {
+            TraceBuf::from_events(
+                lines
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &l)| (i as f64, demand(l, false, false).with_socket(sock))),
+            )
+        };
+        let local = replay(&c.mem, &cfg, &[mk(&lines0, 0), mk(&lines1, 1)]);
+        let remote = replay(&c.mem, &cfg, &[mk(&lines0, 1), mk(&lines1, 0)]);
+        let stalls = |o: &ReplayOutcome| -> f64 {
+            o.per_core.iter().map(|s| s.stall_cycles()).sum()
+        };
+        for s in &local.per_core {
+            assert_eq!(s.remote_fills, 0, "affine placement is NUMA-free");
+            assert_eq!(s.remote_extra_cycles, 0.0);
+        }
+        for s in &remote.per_core {
+            assert_eq!(s.remote_fills, 64, "anti-affine placement is all-remote");
+        }
+        assert!(
+            stalls(&remote) > stalls(&local),
+            "all-remote {} must cost more than local {}",
+            stalls(&remote),
+            stalls(&local)
+        );
+        assert_eq!(
+            stalls(&remote) - stalls(&local),
+            128.0 * cfg.remote_transfer_cycles,
+            "the gap is exactly the hop-priced transfers"
+        );
+    }
+
+    #[test]
+    fn numa_charges_are_zero_at_one_socket_even_with_socket_stamps() {
+        // Stamps out of range for the socket count clamp safely, and at one
+        // socket every distance is zero regardless of the stamps.
+        let c = sys();
+        let t0 = buf((0..32).map(|i| (i as f64, demand(i * 2, false, false))));
+        let t1 = TraceBuf::from_events(
+            (0..32).map(|i| (i as f64, demand(i * 2 + 1, false, false).with_socket(7))),
+        );
+        let out = replay(&c.mem, &c.shared, &[t0, t1]);
+        for s in &out.per_core {
+            assert_eq!(s.remote_fills + s.remote_forwards, 0);
+            assert_eq!(s.remote_extra_cycles, 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid SharedMemConfig")]
+    fn replay_engine_rejects_invalid_configs() {
+        let c = sys();
+        let bad = SharedMemConfig { dram_channels: 0, ..c.shared };
+        let t = buf([(0.0, demand(1, false, false))]);
+        let _ = ReplayEngine::new(&c.mem, &bad, std::slice::from_ref(&t));
     }
 }

@@ -62,12 +62,15 @@ pub enum TraceKind {
     Writeback,
 }
 
-// Bit layout of `TraceEvent::bits`: the low 57 bits hold the line address,
-// the top 7 the flags. Line addresses are `byte_addr >> 6`; the simulated
-// address space tops out at the shared-operand region (2^56 + epsilon), so
-// lines fit in ~51 bits with room to spare.
-const LINE_BITS: u32 = 57;
+// Bit layout of `TraceEvent::bits`: the low 53 bits hold the line address,
+// the next 4 the requesting core's socket id, the top 7 the flags. Line
+// addresses are `byte_addr >> 6`; the simulated address space tops out at
+// the shared-operand region (2^56 + epsilon), so lines fit in ~51 bits with
+// room to spare even after ceding 4 bits to the socket id.
+const LINE_BITS: u32 = 53;
 const LINE_MASK: u64 = (1u64 << LINE_BITS) - 1;
+const SOCKET_SHIFT: u32 = 53;
+const SOCKET_MASK: u64 = (crate::config::MAX_SOCKETS as u64) - 1;
 const KIND_BIT: u64 = 1 << 57;
 const WRITE_BIT: u64 = 1 << 58;
 const SHADOW_BIT: u64 = 1 << 59;
@@ -90,9 +93,15 @@ pub struct TraceEvent {
 // of the naive struct-of-fields encoding.
 const _: () = assert!(std::mem::size_of::<TraceEvent>() == 16);
 const _: () = assert!(MAX_PHASES <= (1usize << (64 - PHASE_SHIFT as usize)));
+// The socket field must fill its 4 bits exactly and sit flush against the
+// kind bit.
+const _: () = assert!(crate::config::MAX_SOCKETS == 16);
+const _: () = assert!(SOCKET_SHIFT + 4 == 57);
 
 impl TraceEvent {
-    /// Pack an event (timestamp is assigned by [`TraceBuf::push`]).
+    /// Pack an event (timestamp is assigned by [`TraceBuf::push`]). The
+    /// requesting core's socket id defaults to 0 (single-socket / flat);
+    /// stamp it with [`TraceEvent::with_socket`].
     pub fn new(
         line: u64,
         kind: TraceKind,
@@ -118,6 +127,23 @@ impl TraceEvent {
         }
         bits |= ((phase as u64) & (MAX_PHASES as u64 - 1)) << PHASE_SHIFT;
         TraceEvent { bits, dt: 0 }
+    }
+
+    /// Stamp the requesting core's socket id (`< MAX_SOCKETS`): the replay
+    /// prices each event's NUMA distance from this, so traces stay
+    /// self-describing (no side-channel core-to-socket table).
+    #[inline]
+    pub fn with_socket(mut self, socket: u8) -> TraceEvent {
+        debug_assert!((socket as usize) < crate::config::MAX_SOCKETS);
+        self.bits = (self.bits & !(SOCKET_MASK << SOCKET_SHIFT))
+            | (((socket as u64) & SOCKET_MASK) << SOCKET_SHIFT);
+        self
+    }
+
+    /// Socket of the requesting core (0 for single-socket traces).
+    #[inline]
+    pub fn socket(self) -> u8 {
+        ((self.bits >> SOCKET_SHIFT) & SOCKET_MASK) as u8
     }
 
     /// Line address (byte address `>> line_shift`).
@@ -271,6 +297,21 @@ mod tests {
         assert!(w.paid_bw());
         assert_eq!(w.phase(), 7);
         assert_ne!(e, w);
+    }
+
+    #[test]
+    fn socket_stamp_round_trips_without_disturbing_other_fields() {
+        let e = TraceEvent::new((1 << 50) + 3, TraceKind::Demand, true, true, true, 5);
+        assert_eq!(e.socket(), 0, "unstamped events are socket 0 (flat model)");
+        let s = e.with_socket(15);
+        assert_eq!(s.socket(), 15);
+        assert_eq!(s.line(), (1 << 50) + 3);
+        assert_eq!(s.kind(), TraceKind::Demand);
+        assert!(s.write() && s.shadow_hit() && s.paid_bw());
+        assert_eq!(s.phase(), 5);
+        // Restamping overwrites rather than ORs.
+        assert_eq!(s.with_socket(2).socket(), 2);
+        assert_eq!(s.with_socket(0).socket(), 0);
     }
 
     #[test]

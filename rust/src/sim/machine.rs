@@ -229,6 +229,10 @@ pub struct Machine {
     pub unit: SystolicTiming,
     pub ops: OpCounters,
     core_id: usize,
+    /// NUMA socket this core sits on (0 for serial machines and
+    /// single-socket configs; assigned by [`Machine::fork_core`] from
+    /// [`crate::config::SharedMemConfig::socket_of_core`]).
+    socket_id: usize,
     cycles: f64,
     phase_cycles: [f64; NUM_PHASES],
     phase: Phase,
@@ -256,6 +260,7 @@ impl Machine {
             unit: SystolicTiming::new(cfg.unit),
             ops: OpCounters::default(),
             core_id: 0,
+            socket_id: 0,
             cycles: 0.0,
             phase_cycles: [0.0; NUM_PHASES],
             phase: Phase::Preprocess,
@@ -275,6 +280,12 @@ impl Machine {
     pub fn fork_core(&self, core_id: usize) -> Machine {
         let mut m = Machine::new(self.cfg);
         m.core_id = core_id;
+        // NUMA placement: contiguous core blocks per socket, stamped onto
+        // the hierarchy so every trace event carries its requester's socket
+        // (the replay prices LLC fills / forwards / DRAM transfers by the
+        // distance from this socket to the line's home channel group).
+        m.socket_id = self.cfg.shared.socket_of_core(core_id, self.cfg.cores.max(1));
+        m.mem.set_socket(m.socket_id as u8);
         // Each core owns a disjoint private address region (the power-of-two
         // stride keeps every cache-index bit identical to a base-region run,
         // so per-core cache behaviour is unchanged), and inherits the
@@ -395,6 +406,12 @@ impl Machine {
     /// single-core runs).
     pub fn core_id(&self) -> usize {
         self.core_id
+    }
+
+    /// Which NUMA socket this core sits on (0 for serial machines and
+    /// single-socket configs).
+    pub fn socket_id(&self) -> usize {
+        self.socket_id
     }
 
     #[inline]
@@ -689,6 +706,27 @@ mod tests {
         assert_eq!(fork.cycles(), 0.0, "forked core starts with fresh counters");
         assert_eq!(fork.ops, OpCounters::default());
         assert_eq!(base.core_id(), 0);
+    }
+
+    #[test]
+    fn fork_core_assigns_contiguous_sockets_and_stamps_traces() {
+        let mut cfg = SystemConfig { cores: 4, ..SystemConfig::default() };
+        cfg.shared.sockets = 2;
+        let base = Machine::new(cfg);
+        assert_eq!(base.socket_id(), 0, "the base machine sits on socket 0");
+        let socks: Vec<usize> = (0..4).map(|c| base.fork_core(c).socket_id()).collect();
+        assert_eq!(socks, vec![0, 0, 1, 1], "contiguous core blocks per socket");
+        // The fork's trace events carry its socket.
+        let mut f3 = base.fork_core(3);
+        f3.enable_trace();
+        let a = f3.salloc(4096);
+        f3.load(a, 4);
+        let t = f3.take_trace();
+        assert!(!t.is_empty());
+        assert_eq!(t.get(0).socket(), 1);
+        // Single-socket forks stay socket 0 everywhere.
+        let flat = Machine::new(SystemConfig { cores: 4, ..SystemConfig::default() });
+        assert!((0..4).all(|c| flat.fork_core(c).socket_id() == 0));
     }
 
     #[test]

@@ -77,17 +77,30 @@ pub enum Scheduler {
     /// never schedules worse than `ws-dyn` by its own estimate. Fully
     /// deterministic (a pure function of the matrices and core count).
     WorkStealingBw,
+    /// Socket-aware bandwidth scheduling: [`Scheduler::WorkStealingBw`]'s
+    /// pilot replay made NUMA-aware. Block line footprints (B rows + the
+    /// block's output window, the very lines the replay prices) are binned
+    /// into per-socket channel groups, a candidate plan claims blocks onto
+    /// cores whose socket keeps the footprint local (remote lines inflate a
+    /// block's effective cost by the hop-priced transfer ratio), and the
+    /// socket-stamped pilot replay then arbitrates between that candidate
+    /// and `ws-bw`'s plan — falling back to `ws-bw` whenever the pilot
+    /// predicts no win. At one socket every distance is zero and the plan
+    /// is exactly `ws-bw`'s. Same dyn block geometry, so event-count
+    /// additivity is untouched; fully deterministic.
+    WorkStealingNuma,
 }
 
 impl Scheduler {
     /// Every scheduler, in presentation order — the single source of truth
     /// the CLI help, `fig12` sweeps, and the parse error all derive from,
     /// so a new scheduler lands everywhere at once.
-    pub const ALL: [Scheduler; 4] = [
+    pub const ALL: [Scheduler; 5] = [
         Scheduler::Static,
         Scheduler::WorkStealing,
         Scheduler::WorkStealingDyn,
         Scheduler::WorkStealingBw,
+        Scheduler::WorkStealingNuma,
     ];
 
     pub const fn name(self) -> &'static str {
@@ -96,6 +109,7 @@ impl Scheduler {
             Scheduler::WorkStealing => "work-stealing",
             Scheduler::WorkStealingDyn => "ws-dyn",
             Scheduler::WorkStealingBw => "ws-bw",
+            Scheduler::WorkStealingNuma => "ws-numa",
         }
     }
 }
@@ -112,6 +126,7 @@ impl std::str::FromStr for Scheduler {
             "ws" => Ok(Scheduler::WorkStealing),
             "work-stealing-dyn" => Ok(Scheduler::WorkStealingDyn),
             "work-stealing-bw" => Ok(Scheduler::WorkStealingBw),
+            "work-stealing-numa" => Ok(Scheduler::WorkStealingNuma),
             other => {
                 let known: Vec<&str> = Scheduler::ALL.iter().map(|s| s.name()).collect();
                 Err(format!(
@@ -254,11 +269,13 @@ fn assign_blocks(
         Scheduler::Static => (0..cores)
             .map(|c| (c * nblocks / cores..(c + 1) * nblocks / cores).collect())
             .collect(),
-        // ws-bw starts from the same greedy claim replay; the driver then
-        // refines it with the pilot (see [`assign_blocks_bw`]).
-        Scheduler::WorkStealing | Scheduler::WorkStealingDyn | Scheduler::WorkStealingBw => {
-            greedy_claim(&block_work(row_work, blocks), cores, None)
-        }
+        // ws-bw and ws-numa start from the same greedy claim replay; the
+        // driver then refines it with the pilot (see [`assign_blocks_bw`]
+        // and [`assign_blocks_numa`]).
+        Scheduler::WorkStealing
+        | Scheduler::WorkStealingDyn
+        | Scheduler::WorkStealingBw
+        | Scheduler::WorkStealingNuma => greedy_claim(&block_work(row_work, blocks), cores, None),
     }
 }
 
@@ -355,15 +372,19 @@ fn block_line_ranges(
 /// genuinely ~`total_lines / stride` even when a block has many short
 /// ranges. Events carry `shadow_hit = false` and `paid_bw = false`, so the
 /// pilot prices pure contention (queueing, row-buffer interference) without
-/// sharing refunds muddying the signal.
+/// sharing refunds muddying the signal — and each core's events are stamped
+/// with its socket (`socks`), so the pilot sees the same NUMA distances the
+/// real replay will.
 fn pilot_traces(
     plan: &[Vec<usize>],
     work: &[f64],
     ranges: &[Vec<(u64, u64, bool)>],
     stride: u64,
+    socks: &[u8],
 ) -> Vec<TraceBuf> {
     plan.iter()
-        .map(|mine| {
+        .enumerate()
+        .map(|(core, mine)| {
             let mut buf = TraceBuf::new();
             let mut t = 0.0f64;
             for &bi in mine {
@@ -376,7 +397,8 @@ fn pilot_traces(
                     while next < nlines {
                         let time = t + work[bi] * k as f64 / total as f64;
                         buf.push(
-                            TraceEvent::new(first + next, TraceKind::Demand, write, false, false, 1),
+                            TraceEvent::new(first + next, TraceKind::Demand, write, false, false, 1)
+                                .with_socket(socks[core]),
                             time,
                         );
                         k += 1;
@@ -391,79 +413,218 @@ fn pilot_traces(
         .collect()
 }
 
+/// Shared machinery of the pilot-guided schedulers (`ws-bw`, `ws-numa`):
+/// the per-block work estimates, the canonical line ranges each block will
+/// stream, each core's socket, and the one-shot socket-stamped pilot replay
+/// that scores a candidate plan. A pure function of the inputs, so every
+/// plan it arbitrates is bit-reproducible.
+struct Pilot<'a> {
+    sys: &'a SystemConfig,
+    work: Vec<f64>,
+    ranges: Vec<Vec<(u64, u64, bool)>>,
+    stride: u64,
+    socks: Vec<u8>,
+    cfg: crate::config::SharedMemConfig,
+}
+
+impl<'a> Pilot<'a> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        sys: &'a SystemConfig,
+        a: &Csr,
+        b: &Csr,
+        row_work: &[u64],
+        blocks: &[(usize, usize)],
+        b_addrs: (u64, u64, u64),
+        out_addrs: (u64, u64, u64),
+        block_est: &[u64],
+        block_off: &[u64],
+        cores: usize,
+    ) -> Pilot<'a> {
+        let work = block_work(row_work, blocks);
+        let line_shift = sys.mem.l1d.line_bytes.trailing_zeros();
+        let ranges = block_line_ranges(
+            a, b, blocks, line_shift, b_addrs, out_addrs, block_est, block_off,
+        );
+        let total_lines: u64 = ranges.iter().flatten().map(|&(_, n, _)| n).sum();
+        // Keep the pilot cheap: sample every stride-th line, aiming for at
+        // most ~150k synthetic events regardless of matrix size.
+        let stride = (total_lines / 150_000 + 1).max(1);
+        let socks: Vec<u8> = (0..cores)
+            .map(|c| sys.shared.socket_of_core(c, cores) as u8)
+            .collect();
+        // One-shot pilot pass (no iteration needed for an estimate).
+        let cfg = crate::config::SharedMemConfig {
+            max_replay_iters: 1,
+            ..sys.shared
+        };
+        Pilot { sys, work, ranges, stride, socks, cfg }
+    }
+
+    /// Per-core pilot stall score for `plan`: queueing, row-buffer
+    /// interference, and hop-priced NUMA charges (zero at one socket, so
+    /// the `ws-bw` arbitration is bit-identical to the flat model there).
+    fn stalls(&self, plan: &[Vec<usize>]) -> Vec<f64> {
+        let traces = pilot_traces(plan, &self.work, &self.ranges, self.stride, &self.socks);
+        let out = shared::replay(&self.sys.mem, &self.cfg, &traces);
+        out.per_core
+            .iter()
+            .map(|s| {
+                s.llc_queue_cycles
+                    + s.dram_queue_cycles
+                    + s.row_extra_cycles.max(0.0)
+                    + s.remote_extra_cycles
+            })
+            .collect()
+    }
+
+    fn core_work(&self, plan: &[Vec<usize>]) -> Vec<f64> {
+        plan.iter()
+            .map(|mine| mine.iter().map(|&bi| self.work[bi]).sum::<f64>())
+            .collect()
+    }
+
+    /// Predicted makespan of `plan`: the slowest core's work plus its pilot
+    /// stalls.
+    fn makespan(&self, plan: &[Vec<usize>], stalls: &[f64]) -> f64 {
+        self.core_work(plan)
+            .iter()
+            .zip(stalls)
+            .map(|(&w, &s)| w + s)
+            .fold(0.0, f64::max)
+    }
+
+    /// Per-block fraction of the block's line footprint homed to each
+    /// socket (by the channel-group mapping) — what `ws-numa`'s candidate
+    /// claim keys block placement on.
+    fn socket_fractions(&self) -> Vec<Vec<f64>> {
+        let shared = &self.sys.shared;
+        let channels = shared.dram_channels as u64;
+        self.ranges
+            .iter()
+            .map(|r| {
+                let mut per = vec![0u64; shared.sockets];
+                let mut total = 0u64;
+                for &(first, nlines, _) in r {
+                    // A contiguous line range visits the channels
+                    // cyclically: every channel gets `nlines / channels`,
+                    // and the first `nlines % channels` channels starting
+                    // at `first % channels` get one more.
+                    let base = nlines / channels;
+                    let rem = nlines % channels;
+                    let start = first % channels;
+                    for ch in 0..channels {
+                        let pos = (ch + channels - start) % channels;
+                        let cnt = base + u64::from(pos < rem);
+                        per[shared.socket_of_channel(ch as usize)] += cnt;
+                    }
+                    total += nlines;
+                }
+                per.iter()
+                    .map(|&n| n as f64 / total.max(1) as f64)
+                    .collect()
+            })
+            .collect()
+    }
+}
+
 /// The `ws-bw` assignment: run the plain greedy plan, price it with a
 /// single-pass pilot replay (the same deterministic engine the driver runs
 /// on the real traces), rebalance blocks away from cores whose channels /
 /// LLC slices saturated, and keep whichever plan the pilot scores better —
-/// so by its own estimate `ws-bw` never loses to the plain plan.
-#[allow(clippy::too_many_arguments)]
+/// so by its own estimate `ws-bw` never loses to the plain plan. Returns
+/// the chosen plan with its pilot stall vector, so `ws-numa` can arbitrate
+/// against it without re-scoring the same plan. (The driver only builds a
+/// pilot — and so only calls this — with >= 2 cores and a non-empty block
+/// list; degenerate cases take the plain `assign_blocks` path there.)
 fn assign_blocks_bw(
-    sys: &SystemConfig,
-    a: &Csr,
-    b: &Csr,
+    pilot: &Pilot,
     row_work: &[u64],
     blocks: &[(usize, usize)],
-    b_addrs: (u64, u64, u64),
-    out_addrs: (u64, u64, u64),
-    block_est: &[u64],
-    block_off: &[u64],
     cores: usize,
-) -> Vec<Vec<usize>> {
+) -> (Vec<Vec<usize>>, Vec<f64>) {
     let plan0 = assign_blocks(row_work, blocks, cores, Scheduler::WorkStealing);
-    if blocks.is_empty() || cores < 2 {
-        return plan0;
-    }
-    let work = block_work(row_work, blocks);
-    let line_shift = sys.mem.l1d.line_bytes.trailing_zeros();
-    let ranges = block_line_ranges(
-        a, b, blocks, line_shift, b_addrs, out_addrs, block_est, block_off,
-    );
-    let total_lines: u64 = ranges.iter().flatten().map(|&(_, n, _)| n).sum();
-    // Keep the pilot cheap: sample every stride-th line, aiming for at most
-    // ~150k synthetic events regardless of matrix size.
-    let stride = (total_lines / 150_000 + 1).max(1);
-    // One-shot pilot pass (no iteration needed for an estimate).
-    let pilot_cfg = crate::config::SharedMemConfig {
-        max_replay_iters: 1,
-        ..sys.shared
-    };
-    let pilot = |plan: &[Vec<usize>]| -> Vec<f64> {
-        let traces = pilot_traces(plan, &work, &ranges, stride);
-        let out = shared::replay(&sys.mem, &pilot_cfg, &traces);
-        out.per_core
-            .iter()
-            .map(|s| s.llc_queue_cycles + s.dram_queue_cycles + s.row_extra_cycles.max(0.0))
-            .collect()
-    };
-    let core_work = |plan: &[Vec<usize>]| -> Vec<f64> {
-        plan.iter()
-            .map(|mine| mine.iter().map(|&bi| work[bi]).sum::<f64>())
-            .collect()
-    };
-
     // Pilot the plain plan and turn each core's observed contention into a
     // slowdown factor; then rebalance with the greedy claim replay where a
     // saturated core's queue looks longer than its raw work.
-    let stalls0 = pilot(&plan0);
-    let w0 = core_work(&plan0);
+    let stalls0 = pilot.stalls(&plan0);
+    let w0 = pilot.core_work(&plan0);
     let slow: Vec<f64> = stalls0
         .iter()
         .zip(&w0)
         .map(|(&s, &w)| 1.0 + s / w.max(1.0))
         .collect();
-    let plan_bw = greedy_claim(&work, cores, Some(&slow));
+    let plan_bw = greedy_claim(&pilot.work, cores, Some(&slow));
 
     // Keep the plan the pilot scores better (ties keep the plain plan, so
     // ws-bw degrades to exactly ws-dyn when bandwidth is not the problem).
-    let makespan = |w: &[f64], s: &[f64]| -> f64 {
-        w.iter().zip(s).map(|(&w, &s)| w + s).fold(0.0, f64::max)
-    };
-    let stalls_bw = pilot(&plan_bw);
-    let w_bw = core_work(&plan_bw);
-    if makespan(&w_bw, &stalls_bw) < makespan(&w0, &stalls0) {
-        plan_bw
+    let stalls_bw = pilot.stalls(&plan_bw);
+    if pilot.makespan(&plan_bw, &stalls_bw) < pilot.makespan(&plan0, &stalls0) {
+        (plan_bw, stalls_bw)
     } else {
-        plan0
+        (plan0, stalls0)
+    }
+}
+
+/// The `ws-numa` assignment: start from `ws-bw`'s plan, build a candidate
+/// that claims each block onto the core whose *socket* keeps the block's
+/// line footprint local (remote lines inflate the block's effective cost by
+/// the hop-priced transfer ratio), and let the socket-stamped pilot replay
+/// arbitrate — keeping `ws-bw`'s plan whenever the pilot predicts no win.
+/// At one socket every fraction is local and the candidate is never built,
+/// so `ws-numa` degrades to exactly `ws-bw`.
+fn assign_blocks_numa(
+    pilot: &Pilot,
+    row_work: &[u64],
+    blocks: &[(usize, usize)],
+    cores: usize,
+) -> Vec<Vec<usize>> {
+    let (plan_bw, stalls_bw) = assign_blocks_bw(pilot, row_work, blocks, cores);
+    let shared = &pilot.sys.shared;
+    if shared.sockets <= 1 {
+        return plan_bw;
+    }
+    // Mean hop distance of each block's footprint from each socket,
+    // tabulated once (the claim loop below is O(blocks x cores)).
+    let hops: Vec<Vec<f64>> = pilot
+        .socket_fractions()
+        .iter()
+        .map(|f| {
+            (0..shared.sockets)
+                .map(|s| {
+                    f.iter()
+                        .enumerate()
+                        .map(|(s2, &x)| x * shared.socket_distance(s, s2) as f64)
+                        .sum()
+                })
+                .collect()
+        })
+        .collect();
+    // How much a fully-remote footprint inflates a block's effective cost:
+    // the hop-priced transfer relative to the local transfer occupancy. The
+    // pilot arbitrates below; this only shapes the candidate.
+    let beta = shared.remote_transfer_cycles / shared.dram_transfer_cycles.max(1e-9);
+    let mut plan: Vec<Vec<usize>> = vec![Vec::new(); cores];
+    let mut est = vec![0.0f64; cores];
+    for bi in 0..blocks.len() {
+        let wb = pilot.work[bi];
+        let mut best = 0usize;
+        let mut best_cost = f64::INFINITY;
+        for (c, &e) in est.iter().enumerate() {
+            let cost = e + wb * (1.0 + beta * hops[bi][pilot.socks[c] as usize]);
+            if cost < best_cost {
+                best_cost = cost;
+                best = c;
+            }
+        }
+        plan[best].push(bi);
+        est[best] = best_cost;
+    }
+    let stalls_numa = pilot.stalls(&plan);
+    if pilot.makespan(&plan, &stalls_numa) < pilot.makespan(&plan_bw, &stalls_bw) {
+        plan
+    } else {
+        plan_bw
     }
 }
 
@@ -532,6 +693,9 @@ where
         "at most 64 simulated cores are supported (the shared-memory \
          replay's coherence directory uses 64-bit sharer sets), got {cores}"
     );
+    // Validate the shared-memory knobs once at this boundary (like the
+    // 64-core check above) instead of clamping deep inside the replay.
+    sys.shared.validate()?;
     let mut sys = *sys;
     sys.cores = cores;
     let mut base = Machine::new(sys);
@@ -552,7 +716,7 @@ where
     let row_work = crate::matrix::stats::row_work(a, b);
     let blocks = if matches!(
         cfg.scheduler,
-        Scheduler::WorkStealingDyn | Scheduler::WorkStealingBw
+        Scheduler::WorkStealingDyn | Scheduler::WorkStealingBw | Scheduler::WorkStealingNuma
     ) && cfg.block_rows.is_none()
     {
         dyn_blocks_from_work(a.nrows, sys.unit.n, &row_work)
@@ -579,9 +743,23 @@ where
     let out_addrs = base.shared_output().expect("shared output was just mapped");
 
     let plan = match cfg.scheduler {
-        Scheduler::WorkStealingBw => assign_blocks_bw(
-            &sys, a, b, &row_work, &blocks, b_addrs, out_addrs, &block_est, &block_off, cores,
-        ),
+        // The pilot-guided schedulers only differ from the plain greedy
+        // claim when there is something to arbitrate; at 1 core or with no
+        // blocks, skip the (O(nnz) line-range) pilot setup entirely and
+        // fall through to the claim they would have returned anyway.
+        Scheduler::WorkStealingBw | Scheduler::WorkStealingNuma
+            if cores >= 2 && !blocks.is_empty() =>
+        {
+            let pilot = Pilot::new(
+                &sys, a, b, &row_work, &blocks, b_addrs, out_addrs, &block_est, &block_off,
+                cores,
+            );
+            if cfg.scheduler == Scheduler::WorkStealingNuma {
+                assign_blocks_numa(&pilot, &row_work, &blocks, cores)
+            } else {
+                assign_blocks_bw(&pilot, &row_work, &blocks, cores).0
+            }
+        }
         _ => assign_blocks(&row_work, &blocks, cores, cfg.scheduler),
     };
     let blocks_per_core: Vec<usize> = plan.iter().map(|p| p.len()).collect();
@@ -694,6 +872,12 @@ mod tests {
         assert_eq!(Scheduler::WorkStealingDyn.to_string(), "ws-dyn");
         assert_eq!("ws-bw".parse::<Scheduler>().unwrap(), Scheduler::WorkStealingBw);
         assert_eq!(Scheduler::WorkStealingBw.to_string(), "ws-bw");
+        assert_eq!("ws-numa".parse::<Scheduler>().unwrap(), Scheduler::WorkStealingNuma);
+        assert_eq!(Scheduler::WorkStealingNuma.to_string(), "ws-numa");
+        assert_eq!(
+            "work-stealing-numa".parse::<Scheduler>().unwrap(),
+            Scheduler::WorkStealingNuma
+        );
         // Every canonical name round-trips through the one parse table.
         for s in Scheduler::ALL {
             assert_eq!(s.name().parse::<Scheduler>().unwrap(), s);
@@ -701,6 +885,7 @@ mod tests {
         let e = "greedy".parse::<Scheduler>().unwrap_err();
         assert!(e.contains("static") && e.contains("greedy") && e.contains("ws-dyn"), "{e}");
         assert!(e.contains("ws-bw"), "new schedulers must appear in the error: {e}");
+        assert!(e.contains("ws-numa"), "new schedulers must appear in the error: {e}");
     }
 
     #[test]
@@ -915,6 +1100,86 @@ mod tests {
             row_blocks_dyn(&a, &a, 16, &dy8),
             "ws-bw must not invent its own block geometry"
         );
+        let nu2 =
+            ParallelConfig { scheduler: Scheduler::WorkStealingNuma, ..ParallelConfig::new(2) };
+        assert_eq!(
+            row_blocks_dyn(&a, &a, 16, &nu2),
+            row_blocks_dyn(&a, &a, 16, &dy8),
+            "ws-numa must not invent its own block geometry either"
+        );
+    }
+
+    #[test]
+    fn ws_numa_at_one_socket_is_exactly_ws_bw() {
+        // With the default single-socket config, every distance is zero:
+        // the NUMA candidate is never built and ws-numa's plan — and every
+        // per-core cycle count — is bit-identical to ws-bw's.
+        let a = gen::rmat(256, 256, 2600, 0.62, 0.18, 0.14, 106);
+        for id in [ImplId::SclHash, ImplId::Spz] {
+            let bw = row_blocked(
+                &sys(),
+                native(id),
+                &a,
+                &a,
+                &ParallelConfig { scheduler: Scheduler::WorkStealingBw, ..ParallelConfig::new(4) },
+            )
+            .unwrap();
+            let nu = row_blocked(
+                &sys(),
+                native(id),
+                &a,
+                &a,
+                &ParallelConfig {
+                    scheduler: Scheduler::WorkStealingNuma,
+                    ..ParallelConfig::new(4)
+                },
+            )
+            .unwrap();
+            assert_eq!(nu.blocks_per_core, bw.blocks_per_core, "{}", id.name());
+            let c_bw: Vec<f64> = bw.metrics.per_core.iter().map(|m| m.cycles).collect();
+            let c_nu: Vec<f64> = nu.metrics.per_core.iter().map(|m| m.cycles).collect();
+            assert_eq!(c_nu, c_bw, "{}", id.name());
+            assert_eq!(nu.csr, bw.csr, "{}", id.name());
+        }
+    }
+
+    #[test]
+    fn ws_numa_two_sockets_is_deterministic_and_keeps_count_additivity() {
+        let mut cfgsys = sys();
+        cfgsys.shared.sockets = 2;
+        let a = gen::rmat(256, 256, 2600, 0.62, 0.18, 0.14, 107);
+        for id in [ImplId::SclHash, ImplId::Spz] {
+            let (cs, sm) = serial(id, &a);
+            let cfg = ParallelConfig {
+                scheduler: Scheduler::WorkStealingNuma,
+                ..ParallelConfig::new(4)
+            };
+            let r1 = row_blocked(&cfgsys, native(id), &a, &a, &cfg).unwrap();
+            let r2 = row_blocked(&cfgsys, native(id), &a, &a, &cfg).unwrap();
+            assert_eq!(r1.csr.indptr, cs.indptr, "{}", id.name());
+            assert_eq!(r1.csr.indices, cs.indices, "{}", id.name());
+            // Group-aligned dyn blocks: counts stay exactly serial.
+            assert_eq!(r1.metrics.total.ops, sm.ops, "{}", id.name());
+            // Pure function of the inputs: bit-reproducible.
+            assert_eq!(r1.blocks_per_core, r2.blocks_per_core, "{}", id.name());
+            let c1: Vec<f64> = r1.metrics.per_core.iter().map(|m| m.cycles).collect();
+            let c2: Vec<f64> = r2.metrics.per_core.iter().map(|m| m.cycles).collect();
+            assert_eq!(c1, c2, "{}", id.name());
+        }
+    }
+
+    #[test]
+    fn invalid_shared_config_is_a_clean_driver_error() {
+        let a = Csr::identity(32);
+        let mut bad = sys();
+        bad.shared.dram_channels = 0;
+        let e = row_blocked(&bad, native(ImplId::SclHash), &a, &a, &ParallelConfig::new(2));
+        assert!(e.is_err(), "dram_channels=0 must error, not panic");
+        assert!(format!("{:#}", e.unwrap_err()).contains("dram_channels"));
+        let mut odd = sys();
+        odd.shared.sockets = 3; // 4 channels cannot split into 3 groups
+        let e = row_blocked(&odd, native(ImplId::SclHash), &a, &a, &ParallelConfig::new(2));
+        assert!(format!("{:#}", e.unwrap_err()).contains("sockets"));
     }
 
     #[test]

@@ -1,0 +1,225 @@
+//! NUMA invariants of the socket-aware shared-memory model:
+//!
+//! * **1 socket == flat, bit for bit** — with the default single-socket
+//!   config every registry dataset's multi-core run carries structurally
+//!   zero `numa` stats, and cranking the remote-cost knobs changes nothing
+//!   (the distances are all zero, so the knobs can never leak in);
+//! * **count additivity** — `ws-numa` keeps the exact per-core event-count
+//!   additivity contract vs the serial loop (same group-aligned dyn block
+//!   geometry as ws-dyn/ws-bw);
+//! * **2-socket behaviour** — real runs report remote traffic, stay
+//!   bit-reproducible, never get *faster* than the flat model under the
+//!   same plan, and the critical path is monotone in the remote-distance
+//!   cost (the all-remote-vs-local replay-level pin lives in
+//!   `mem::shared`'s unit tests);
+//! * **pilot arbitration** — `ws-numa` beats or ties `ws-bw` on most of
+//!   the registry at 2 sockets (it falls back to ws-bw's plan whenever its
+//!   socket-aware pilot predicts no win).
+
+use anyhow::Result;
+use sparsezipper::config::SharedMemConfig;
+use sparsezipper::matrix::registry;
+use sparsezipper::sim::machine::OpCounters;
+use sparsezipper::spgemm::parallel::{self, ParallelConfig, Scheduler};
+use sparsezipper::spgemm::{ImplId, SpGemm};
+use sparsezipper::{Machine, SystemConfig};
+
+const SCALE: f64 = 0.003;
+
+fn native(id: ImplId) -> impl Fn() -> Result<Box<dyn SpGemm>> + Sync {
+    move || id.instantiate(sparsezipper::Engine::Native, std::path::Path::new("."))
+}
+
+fn two_socket_sys() -> SystemConfig {
+    let base = SystemConfig::default();
+    SystemConfig {
+        shared: SharedMemConfig { sockets: 2, ..base.shared },
+        ..base
+    }
+}
+
+#[test]
+fn one_socket_is_bit_identical_to_the_flat_model_on_every_registry_dataset() {
+    let flat = SystemConfig::default();
+    // Same single-socket topology, but with the remote-cost knobs cranked
+    // three orders of magnitude: if any NUMA charge leaked in at 1 socket,
+    // this run would diverge. Bit-identical per-core cycles and shared
+    // stats pin "sockets=1 reproduces the flat model bit for bit".
+    let cranked = SystemConfig {
+        shared: SharedMemConfig {
+            remote_transfer_cycles: 10_000.0,
+            remote_coherence_cycles: 10_000.0,
+            ..flat.shared
+        },
+        ..flat
+    };
+    for d in registry::DATASETS {
+        let a = d.build(SCALE);
+        let cfg = ParallelConfig::new(4);
+        let base = parallel::row_blocked(&flat, native(ImplId::Spz), &a, &a, &cfg).unwrap();
+        let loud = parallel::row_blocked(&cranked, native(ImplId::Spz), &a, &a, &cfg).unwrap();
+        for (c, (mb, ml)) in base
+            .metrics
+            .per_core
+            .iter()
+            .zip(&loud.metrics.per_core)
+            .enumerate()
+        {
+            let sh = &mb.shared;
+            assert_eq!(sh.remote_fills, 0, "{}: core {c} remote fills at 1 socket", d.name);
+            assert_eq!(sh.remote_forwards, 0, "{}: core {c}", d.name);
+            assert_eq!(sh.remote_extra_cycles, 0.0, "{}: core {c}", d.name);
+            assert_eq!(mb.cycles, ml.cycles, "{}: core {c} cycles drifted", d.name);
+            assert_eq!(mb.shared, ml.shared, "{}: core {c} shared stats drifted", d.name);
+        }
+        assert_eq!(
+            base.metrics.channel_busy_cycles, loud.metrics.channel_busy_cycles,
+            "{}: channel occupancy must ignore remote knobs at 1 socket",
+            d.name
+        );
+    }
+}
+
+#[test]
+fn ws_numa_keeps_exact_count_additivity_vs_serial() {
+    let sys = two_socket_sys();
+    for d in registry::DATASETS.iter().take(6) {
+        let a = d.build(SCALE);
+        for id in [ImplId::SclHash, ImplId::Spz] {
+            let serial_counts = {
+                let mut m = Machine::new(SystemConfig::default());
+                let mut im = native(id)().unwrap();
+                im.multiply(&mut m, &a, &a).unwrap();
+                m.metrics().ops
+            };
+            let cfg = ParallelConfig {
+                scheduler: Scheduler::WorkStealingNuma,
+                ..ParallelConfig::new(4)
+            };
+            let run = parallel::row_blocked(&sys, native(id), &a, &a, &cfg).unwrap();
+            let mut sum = OpCounters::default();
+            for core in &run.metrics.per_core {
+                sum.add(&core.ops);
+            }
+            assert_eq!(
+                sum, serial_counts,
+                "{} on {}: ws-numa per-core counts must sum to the serial loop's",
+                id.name(),
+                d.name
+            );
+        }
+    }
+}
+
+#[test]
+fn two_socket_runs_report_remote_traffic_and_stay_deterministic() {
+    let sys = two_socket_sys();
+    let d = registry::find("p2p").unwrap();
+    let a = d.build(0.01);
+    let cfg = ParallelConfig::new(4);
+    let r1 = parallel::row_blocked(&sys, native(ImplId::Spz), &a, &a, &cfg).unwrap();
+    let r2 = parallel::row_blocked(&sys, native(ImplId::Spz), &a, &a, &cfg).unwrap();
+    let tot = &r1.metrics.total.shared;
+    // Four cores over two sockets streaming one B: half the channel groups
+    // are remote to each core, so remote fills are the norm.
+    assert!(tot.remote_fills > 0, "no remote fills at 2 sockets: {tot:?}");
+    assert!(tot.remote_extra_cycles > 0.0);
+    // Bit-reproducible across host thread schedules.
+    assert_eq!(
+        r1.metrics.per_core.iter().map(|m| m.shared).collect::<Vec<_>>(),
+        r2.metrics.per_core.iter().map(|m| m.shared).collect::<Vec<_>>()
+    );
+    let c1: Vec<f64> = r1.metrics.per_core.iter().map(|m| m.cycles).collect();
+    let c2: Vec<f64> = r2.metrics.per_core.iter().map(|m| m.cycles).collect();
+    assert_eq!(c1, c2);
+    // NUMA only ever adds: under the same (socket-blind work-stealing)
+    // plan, the flat run lower-bounds the 2-socket critical path.
+    let flat = parallel::row_blocked(
+        &SystemConfig::default(),
+        native(ImplId::Spz),
+        &a,
+        &a,
+        &cfg,
+    )
+    .unwrap();
+    assert!(
+        r1.metrics.critical_path_cycles >= flat.metrics.critical_path_cycles,
+        "2-socket {} < flat {}: remote pricing cannot speed a run up",
+        r1.metrics.critical_path_cycles,
+        flat.metrics.critical_path_cycles
+    );
+}
+
+#[test]
+fn two_socket_critical_path_is_monotone_in_remote_distance_cost() {
+    // Under a plan that ignores the NUMA knobs (ws-dyn's geometry and claim
+    // depend only on the work estimates), pricier distances can only slow
+    // the run: near costs <= the same run with every remote hop 4x as
+    // expensive. This is the driver-level face of the replay-level
+    // "local placement beats all-remote placement" pin.
+    let near = two_socket_sys();
+    let far = SystemConfig {
+        shared: SharedMemConfig {
+            remote_transfer_cycles: near.shared.remote_transfer_cycles * 4.0,
+            remote_coherence_cycles: near.shared.remote_coherence_cycles * 4.0,
+            ..near.shared
+        },
+        ..near
+    };
+    let cfg = ParallelConfig {
+        scheduler: Scheduler::WorkStealingDyn,
+        ..ParallelConfig::new(4)
+    };
+    for d in registry::DATASETS.iter().take(4) {
+        let a = d.build(SCALE);
+        let n = parallel::row_blocked(&near, native(ImplId::Spz), &a, &a, &cfg).unwrap();
+        let f = parallel::row_blocked(&far, native(ImplId::Spz), &a, &a, &cfg).unwrap();
+        assert!(
+            n.metrics.critical_path_cycles <= f.metrics.critical_path_cycles,
+            "{}: near {} > far {}",
+            d.name,
+            n.metrics.critical_path_cycles,
+            f.metrics.critical_path_cycles
+        );
+        assert!(
+            f.metrics.total.shared.remote_extra_cycles
+                > n.metrics.total.shared.remote_extra_cycles,
+            "{}: pricier hops must charge more",
+            d.name
+        );
+    }
+}
+
+#[test]
+fn ws_numa_does_not_lose_to_ws_bw_on_most_of_the_registry_at_two_sockets() {
+    let sys = two_socket_sys();
+    let mut wins_or_ties = 0usize;
+    let sample: Vec<_> = registry::DATASETS.iter().take(8).collect();
+    for d in &sample {
+        let a = d.build(SCALE);
+        let bw = parallel::row_blocked(
+            &sys,
+            native(ImplId::Spz),
+            &a,
+            &a,
+            &ParallelConfig { scheduler: Scheduler::WorkStealingBw, ..ParallelConfig::new(4) },
+        )
+        .unwrap();
+        let nu = parallel::row_blocked(
+            &sys,
+            native(ImplId::Spz),
+            &a,
+            &a,
+            &ParallelConfig { scheduler: Scheduler::WorkStealingNuma, ..ParallelConfig::new(4) },
+        )
+        .unwrap();
+        if nu.metrics.critical_path_cycles <= bw.metrics.critical_path_cycles * (1.0 + 1e-9) {
+            wins_or_ties += 1;
+        }
+    }
+    assert!(
+        wins_or_ties * 2 >= sample.len(),
+        "ws-numa beat/tied ws-bw on only {wins_or_ties}/{} datasets",
+        sample.len()
+    );
+}
