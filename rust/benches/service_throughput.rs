@@ -1,0 +1,104 @@
+//! Bench: service-layer overhead — jobs/second through the multi-tenant
+//! `SimService` pool versus the same jobs as direct `Session::run` calls in
+//! a loop. The workload (many small SpGEMM jobs on cached datasets) makes
+//! queueing, DRR scheduling, and handle completion the measured quantity.
+//!
+//! `SPZ_BENCH_REPS=5 cargo bench --bench service_throughput` for more reps.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use sparsezipper::api::{DatasetSource, JobSpec, Session};
+use sparsezipper::matrix::gen;
+use sparsezipper::service::{Backpressure, SimService, SimServiceConfig};
+use sparsezipper::ImplId;
+use std::sync::Arc;
+
+const TENANTS: usize = 4;
+const JOBS_PER_TENANT: usize = 64;
+
+fn sources() -> Vec<DatasetSource> {
+    (0..TENANTS)
+        .map(|i| {
+            DatasetSource::in_memory(
+                format!("svc-bench{i}"),
+                Arc::new(gen::erdos_renyi(64, 64, 320, 900 + i as u64)),
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let reps = bench_util::reps();
+    let total = TENANTS * JOBS_PER_TENANT;
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
+    println!(
+        "== service throughput ({TENANTS} tenants x {JOBS_PER_TENANT} jobs, {workers} workers) =="
+    );
+
+    // Baseline: the same jobs, serial direct calls, no service layer.
+    {
+        let session = Session::new();
+        let sources = sources();
+        // Pre-build the datasets/oracles so both sides measure steady state.
+        for src in &sources {
+            session.run(&JobSpec::new(ImplId::SclHash, src.clone())).expect("warmup");
+        }
+        let times = bench_util::bench(&format!("direct Session::run x{total}"), reps, || {
+            for src in &sources {
+                for _ in 0..JOBS_PER_TENANT {
+                    session.run(&JobSpec::new(ImplId::SclHash, src.clone())).expect("job");
+                }
+            }
+        });
+        report_rate("direct", total, &times);
+    }
+
+    // Through the service: concurrent tenants, bounded queue, DRR, handles.
+    {
+        let session = Session::new();
+        let sources = sources();
+        for src in &sources {
+            session.run(&JobSpec::new(ImplId::SclHash, src.clone())).expect("warmup");
+        }
+        let times = bench_util::bench(&format!("SimService submit/wait x{total}"), reps, || {
+            let svc = SimService::start(
+                session.clone(),
+                SimServiceConfig {
+                    workers,
+                    queue_depth: 64,
+                    backpressure: Backpressure::Block,
+                    ..SimServiceConfig::default()
+                },
+            )
+            .expect("service");
+            std::thread::scope(|scope| {
+                for (i, src) in sources.iter().enumerate() {
+                    let svc = &svc;
+                    scope.spawn(move || {
+                        let tenant = format!("t{i}");
+                        let handles: Vec<_> = (0..JOBS_PER_TENANT)
+                            .map(|_| {
+                                svc.submit(&tenant, JobSpec::new(ImplId::SclHash, src.clone()))
+                                    .expect("submit")
+                            })
+                            .collect();
+                        for h in handles {
+                            h.wait().expect("job");
+                        }
+                    });
+                }
+            });
+            let stats = svc.stats();
+            assert_eq!(stats.completed, total as u64);
+        });
+        report_rate("service", total, &times);
+    }
+}
+
+fn report_rate(what: &str, total: usize, times: &[f64]) {
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = sorted[sorted.len() / 2];
+    println!("{what}: {:.0} jobs/s (median rep)", total as f64 / median.max(1e-9));
+}

@@ -6,6 +6,7 @@
 use crate::api::session::{JobResult, SuiteRun};
 use crate::matrix::MatrixStats;
 use crate::mem::SharedStats;
+use crate::service::ServiceStats;
 use crate::sim::machine::{NUM_PHASES, PHASE_NAMES};
 use crate::sim::{MulticoreMetrics, RunMetrics};
 use std::fmt::Write as _;
@@ -183,6 +184,37 @@ fn multicore_json(mc: &MulticoreMetrics) -> String {
     )
 }
 
+/// Service counters (see [`ServiceStats`]). Tenants are an *array* of
+/// fixed-key objects sorted by name, so the key sequence is schema-stable
+/// no matter what tenants call themselves.
+fn service_json(sv: &ServiceStats) -> String {
+    let mut tenants = String::from("[");
+    for (i, t) in sv.tenants.iter().enumerate() {
+        if i > 0 {
+            tenants.push(',');
+        }
+        let _ = write!(
+            tenants,
+            "{{\"tenant\":\"{}\",\"weight\":{},\"served\":{}}}",
+            escape(&t.tenant),
+            t.weight,
+            t.served
+        );
+    }
+    tenants.push(']');
+    format!(
+        "{{\"workers\":{},\"admitted\":{},\"rejected\":{},\"completed\":{},\"failed\":{},\
+         \"queue_depth_high_water\":{},\"slots_high_water\":{},\"tenants\":{tenants}}}",
+        sv.workers,
+        sv.admitted,
+        sv.rejected,
+        sv.completed,
+        sv.failed,
+        sv.queue_depth_high_water,
+        sv.slots_high_water
+    )
+}
+
 impl JobResult {
     /// One job as a single-line JSON object. New fields only ever get
     /// appended (`cores`/`sched`/`multicore` landed after `metrics`).
@@ -209,6 +241,17 @@ impl JobResult {
                 .map(multicore_json)
                 .unwrap_or_else(|| "null".to_string()),
         )
+    }
+
+    /// [`JobResult::to_json`] with the one nondeterministic field
+    /// (`wall_secs`, host wall-clock) zeroed. Two runs of the same spec on
+    /// any pool/queue/tenancy configuration compare byte-equal through this
+    /// form — the service determinism contract is stated (and tested) in
+    /// terms of it.
+    pub fn to_json_stable(&self) -> String {
+        let mut r = self.clone();
+        r.wall_secs = 0.0;
+        r.to_json()
     }
 }
 
@@ -237,7 +280,9 @@ impl SuiteRun {
                 if i + 1 < self.results.len() { "," } else { "" }
             );
         }
-        s.push_str("  ]\n}\n");
+        s.push_str("  ],\n  \"service\": ");
+        s.push_str(&service_json(&self.service));
+        s.push_str("\n}\n");
         s
     }
 }

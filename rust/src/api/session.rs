@@ -7,6 +7,7 @@ use crate::api::spec::{DatasetKey, DatasetSource, JobSpec, SuiteSpec};
 use crate::config::SystemConfig;
 use crate::matrix::{stats, Csr, MatrixStats};
 use crate::runtime::{client, Engine};
+use crate::service::{Backpressure, ServiceStats, SimService, SimServiceConfig};
 use crate::sim::{Machine, MulticoreMetrics, RunMetrics};
 use crate::spgemm::parallel::{self, Scheduler};
 use crate::spgemm::{self, ImplId, SpGemm};
@@ -70,7 +71,17 @@ type SharedEntry = Arc<Mutex<CacheEntry>>;
 /// caller-owned matrices. Datasets, their characterization, and reference
 /// products are built at most once per `(source, scale)` and shared across
 /// jobs; `&Session` is `Sync`, so one session can serve concurrent callers.
+///
+/// A `Session` is a cheap shared handle (`Clone` bumps an `Arc`): every
+/// clone sees the same caches and counters. That is what lets the
+/// [`crate::service::SimService`] worker pool, `run_suite`, and an
+/// embedding application all drive one session concurrently.
+#[derive(Clone)]
 pub struct Session {
+    inner: Arc<SessionInner>,
+}
+
+struct SessionInner {
     cfg: SessionConfig,
     /// Entry handle plus its last-use tick (for LRU eviction when
     /// [`SessionConfig::max_cached_datasets`] caps the cache).
@@ -133,6 +144,10 @@ pub struct SuiteRun {
     /// Dataset-major, implementation-minor, in the spec's order.
     pub results: Vec<JobResult>,
     pub dataset_stats: HashMap<String, MatrixStats>,
+    /// Counters of the service pool the sweep ran on (admission, fairness,
+    /// and the slots high-water witness that the host was never
+    /// oversubscribed). Exported as the `service` block of the stable JSON.
+    pub service: ServiceStats,
 }
 
 impl SuiteRun {
@@ -160,41 +175,43 @@ impl Session {
 
     pub fn with_config(cfg: SessionConfig) -> Self {
         Session {
-            cfg,
-            cache: Mutex::new(HashMap::new()),
-            cache_tick: AtomicU64::new(0),
-            cache_evictions: AtomicU64::new(0),
-            dataset_builds: AtomicU64::new(0),
-            reference_builds: AtomicU64::new(0),
+            inner: Arc::new(SessionInner {
+                cfg,
+                cache: Mutex::new(HashMap::new()),
+                cache_tick: AtomicU64::new(0),
+                cache_evictions: AtomicU64::new(0),
+                dataset_builds: AtomicU64::new(0),
+                reference_builds: AtomicU64::new(0),
+            }),
         }
     }
 
     pub fn engine(&self) -> Engine {
-        self.cfg.engine
+        self.inner.cfg.engine
     }
 
     pub fn system(&self) -> &SystemConfig {
-        &self.cfg.sys
+        &self.inner.cfg.sys
     }
 
     /// How many datasets were materialized (cache misses) so far.
     pub fn dataset_builds(&self) -> u64 {
-        self.dataset_builds.load(Ordering::Relaxed)
+        self.inner.dataset_builds.load(Ordering::Relaxed)
     }
 
     /// How many reference products were computed (cache misses) so far.
     pub fn reference_builds(&self) -> u64 {
-        self.reference_builds.load(Ordering::Relaxed)
+        self.inner.reference_builds.load(Ordering::Relaxed)
     }
 
     /// Number of cached `(source, scale)` entries currently held.
     pub fn cached_datasets(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.inner.cache.lock().unwrap().len()
     }
 
     /// How many entries the LRU cap has evicted so far (0 when unbounded).
     pub fn cache_evictions(&self) -> u64 {
-        self.cache_evictions.load(Ordering::Relaxed)
+        self.inner.cache_evictions.load(Ordering::Relaxed)
     }
 
     /// Evict one `(source, scale)` entry, dropping its matrix, stats, and
@@ -202,7 +219,7 @@ impl Session {
     /// Returns whether an entry existed. In-flight builds on the entry
     /// finish on their own handle and are simply not cached.
     pub fn evict(&self, src: &DatasetSource, scale: f64) -> bool {
-        self.cache.lock().unwrap().remove(&src.cache_key(scale)).is_some()
+        self.inner.cache.lock().unwrap().remove(&src.cache_key(scale)).is_some()
     }
 
     /// Drop every cached entry. By default the cache is unbounded (suites
@@ -210,7 +227,7 @@ impl Session {
     /// the session evict least-recently-used entries automatically instead.
     /// Build counters are not reset.
     pub fn clear_cache(&self) {
-        self.cache.lock().unwrap().clear();
+        self.inner.cache.lock().unwrap().clear();
     }
 
     /// The per-key entry handle (creating it if absent), bumping its LRU
@@ -219,14 +236,14 @@ impl Session {
     /// building is safe: the builder keeps its own `Arc` handle and simply
     /// is no longer cached.
     fn entry(&self, key: DatasetKey) -> SharedEntry {
-        let mut map = self.cache.lock().unwrap();
-        let tick = self.cache_tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut map = self.inner.cache.lock().unwrap();
+        let tick = self.inner.cache_tick.fetch_add(1, Ordering::Relaxed) + 1;
         let handle = {
             let slot = map.entry(key.clone()).or_default();
             slot.1 = tick;
             slot.0.clone()
         };
-        if let Some(cap) = self.cfg.max_cached_datasets {
+        if let Some(cap) = self.inner.cfg.max_cached_datasets {
             while map.len() > cap.max(1) {
                 // LRU victim, never the entry this caller just touched.
                 let mut victim: Option<(DatasetKey, u64)> = None;
@@ -241,7 +258,7 @@ impl Session {
                 match victim {
                     Some((v, _)) => {
                         map.remove(&v);
-                        self.cache_evictions.fetch_add(1, Ordering::Relaxed);
+                        self.inner.cache_evictions.fetch_add(1, Ordering::Relaxed);
                     }
                     None => break,
                 }
@@ -264,7 +281,7 @@ impl Session {
         let built = src
             .build(scale)
             .with_context(|| format!("build dataset '{}'", src.name()))?;
-        self.dataset_builds.fetch_add(1, Ordering::Relaxed);
+        self.inner.dataset_builds.fetch_add(1, Ordering::Relaxed);
         e.csr = Some(built.clone());
         Ok(built)
     }
@@ -276,7 +293,7 @@ impl Session {
     /// order: nothing takes an entry lock while holding the map lock.)
     fn forget_if_empty(&self, key: &DatasetKey, entry: &SharedEntry, e: &CacheEntry) {
         if e.csr.is_none() && e.stats.is_none() && e.reference.is_none() {
-            let mut map = self.cache.lock().unwrap();
+            let mut map = self.inner.cache.lock().unwrap();
             if map.get(key).is_some_and(|(cur, _)| Arc::ptr_eq(cur, entry)) {
                 map.remove(key);
             }
@@ -318,6 +335,21 @@ impl Session {
         Ok(st)
     }
 
+    /// Non-blocking peek at an already-cached characterization for
+    /// `(source, scale)`: `None` if the entry is absent, not yet
+    /// characterized, or momentarily locked by a builder. Never builds
+    /// anything and never bumps the LRU tick — the admission path of
+    /// [`crate::service::SimService`] uses this to price jobs without
+    /// stalling `submit` behind a dataset build.
+    pub fn cached_stats(&self, src: &DatasetSource, scale: f64) -> Option<MatrixStats> {
+        let entry = {
+            let map = self.inner.cache.lock().unwrap();
+            map.get(&src.cache_key(scale))?.0.clone()
+        };
+        let e = entry.try_lock().ok()?;
+        e.stats.clone()
+    }
+
     /// The reference product A*A for `(source, scale)`, memoized (the
     /// oracle all verified jobs on this dataset share), computed at most
     /// once even under concurrent callers.
@@ -344,7 +376,7 @@ impl Session {
             a.ncols
         );
         let reference = Arc::new(spgemm::reference(&a, &a));
-        self.reference_builds.fetch_add(1, Ordering::Relaxed);
+        self.inner.reference_builds.fetch_add(1, Ordering::Relaxed);
         e.reference = Some(reference.clone());
         Ok(reference)
     }
@@ -370,10 +402,10 @@ impl Session {
             b.nrows,
             b.ncols
         );
-        let mut sys = self.cfg.sys;
+        let mut sys = self.inner.cfg.sys;
         sys.cores = 1;
         let mut machine = Machine::new(sys);
-        let mut im = id.instantiate(self.cfg.engine, &self.cfg.artifact_dir)?;
+        let mut im = id.instantiate(self.inner.cfg.engine, &self.inner.cfg.artifact_dir)?;
         let csr = im
             .multiply(&mut machine, a, b)
             .with_context(|| format!("{} product", id.name()))?;
@@ -405,28 +437,28 @@ impl Session {
         )
     }
 
-    /// Run a (datasets x implementations) sweep on worker threads.
+    /// Run a (datasets x implementations) sweep on a service worker pool.
     ///
     /// Phase 1 builds datasets (plus stats and, when verifying, reference
     /// products) through the cache with a work-stealing index loop — one
-    /// slow dataset never idles the pool. Phase 2 fans the grid out the same
-    /// way. Simulations are independent (one `Machine` each), so the
-    /// parallelism does not perturb the simulated metrics.
+    /// slow dataset never idles the pool. Phase 2 submits the grid to a
+    /// private [`crate::service::SimService`] pool of `threads` core-slots
+    /// and collects spec-ordered — the same scheduler multi-tenant callers
+    /// get, so there is exactly one grid scheduler in the crate. Simulations
+    /// are independent (one `Machine` each), so the parallelism does not
+    /// perturb the simulated metrics.
     pub fn run_suite(&self, spec: &SuiteSpec) -> Result<SuiteRun> {
         anyhow::ensure!(
             spec.cores >= 1,
             "SuiteSpec.cores must be at least 1 (got {})",
             spec.cores
         );
-        let threads = spec.threads.max(1);
-        // Multi-core jobs spawn `cores` scoped threads each inside
-        // `parallel::row_blocked`; cap the phase-2 grid workers so the host
-        // sees ~`threads` real threads total instead of threads*cores.
-        let grid_workers = if spec.cores > 1 {
-            threads.div_ceil(spec.cores).max(1)
-        } else {
-            threads
-        };
+        anyhow::ensure!(
+            spec.threads >= 1,
+            "SuiteSpec.threads must be at least 1 (got {})",
+            spec.threads
+        );
+        let threads = spec.threads;
 
         // Results and stats are keyed by display name; two different
         // sources with one name would silently collide in `SuiteRun`.
@@ -475,65 +507,23 @@ impl Session {
         let errv = errs.into_inner().unwrap();
         anyhow::ensure!(errv.is_empty(), "dataset build failures: {errv:?}");
 
-        let mut dataset_stats = HashMap::new();
-        for src in &spec.datasets {
-            dataset_stats.insert(src.name(), self.dataset_stats(src, spec.scale)?);
-        }
-
-        // Phase 2: the grid (dataset-major job order, work-stealing).
-        let built: Vec<(String, Arc<Csr>, Option<Arc<Csr>>)> = spec
-            .datasets
-            .iter()
-            .map(|src| {
-                let a = self.dataset(src, spec.scale)?;
-                let r = if want_reference {
-                    Some(self.reference_product(src, spec.scale)?)
-                } else {
-                    None
-                };
-                Ok((src.name(), a, r))
-            })
-            .collect::<Result<_>>()?;
-        let jobs: Vec<(ImplId, usize)> = (0..spec.datasets.len())
-            .flat_map(|di| spec.impls.iter().map(move |&i| (i, di)))
-            .collect();
-
-        let results: Mutex<Vec<(usize, JobResult)>> = Mutex::new(Vec::new());
-        let job_errs: Mutex<Vec<String>> = Mutex::new(Vec::new());
-        let next = AtomicUsize::new(0);
-        std::thread::scope(|scope| {
-            for _ in 0..grid_workers.min(jobs.len()) {
-                let jobs = &jobs;
-                let built = &built;
-                let results = &results;
-                let job_errs = &job_errs;
-                let next = &next;
-                scope.spawn(move || loop {
-                    let j = next.fetch_add(1, Ordering::Relaxed);
-                    if j >= jobs.len() {
-                        break;
-                    }
-                    let (id, di) = jobs[j];
-                    let (name, a, reference) = &built[di];
-                    match self.execute(id, name, a, reference.as_deref(), spec.cores, spec.sched) {
-                        Ok(r) => results.lock().unwrap().push((j, r)),
-                        Err(e) => job_errs
-                            .lock()
-                            .unwrap()
-                            .push(format!("{}/{name}: {e:#}", id.name())),
-                    }
-                });
-            }
-        });
-        let errv = job_errs.into_inner().unwrap();
-        anyhow::ensure!(errv.is_empty(), "experiment failures: {errv:?}");
-
-        let mut indexed = results.into_inner().unwrap();
-        indexed.sort_by_key(|(j, _)| *j);
-        Ok(SuiteRun {
-            results: indexed.into_iter().map(|(_, r)| r).collect(),
-            dataset_stats,
-        })
+        // Phase 2: submit the grid (dataset-major job order) to a private
+        // pool of `threads` core-slots. A job's simulated `cores` count
+        // against the budget, so the host sees ~`threads` busy threads
+        // total — the service generalization of the old grid-worker cap.
+        // Every dataset was characterized in phase 1, so DRR prices each
+        // job with its real Gustavson work estimate.
+        let njobs = spec.datasets.len() * spec.impls.len();
+        let svc = SimService::start(
+            self.clone(),
+            SimServiceConfig {
+                workers: threads,
+                queue_depth: njobs.max(1),
+                backpressure: Backpressure::Block,
+                ..SimServiceConfig::default()
+            },
+        )?;
+        svc.submit_suite("suite", spec)?.collect_ordered()
     }
 
     /// One simulated run of `id` on `a * a`, verifying against `verify`
@@ -574,7 +564,7 @@ impl Session {
                 let mut best: Option<(parallel::ParallelRun, usize)> = None;
                 for be in VEC_RADIX_BLOCK_SWEEP {
                     let r = parallel::row_blocked(
-                        &self.cfg.sys,
+                        &self.inner.cfg.sys,
                         move || {
                             Ok(Box::new(spgemm::vec_radix::VecRadix { block_elems: be })
                                 as Box<dyn SpGemm>)
@@ -599,8 +589,8 @@ impl Session {
                 r
             } else {
                 parallel::row_blocked(
-                    &self.cfg.sys,
-                    || id.instantiate(self.cfg.engine, &self.cfg.artifact_dir),
+                    &self.inner.cfg.sys,
+                    || id.instantiate(self.inner.cfg.engine, &self.inner.cfg.artifact_dir),
                     a,
                     a,
                     &pcfg,
@@ -611,7 +601,7 @@ impl Session {
             (mc.total.clone(), Some(mc), csr)
         } else if id == ImplId::VecRadix {
             let mut best: Option<(RunMetrics, Csr, usize)> = None;
-            let mut serial_sys = self.cfg.sys;
+            let mut serial_sys = self.inner.cfg.sys;
             serial_sys.cores = 1;
             for be in VEC_RADIX_BLOCK_SWEEP {
                 let mut m = Machine::new(serial_sys);

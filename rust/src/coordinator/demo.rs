@@ -1,0 +1,166 @@
+//! `spz serve-demo`: exercise the [`crate::service`] subsystem end-to-end —
+//! N tenant threads firing M jobs each at one [`SimService`] — and render a
+//! fairness/throughput report.
+//!
+//! The rendered report is **deterministic** (the CI determinism gate
+//! byte-diffs it across runs): it carries only admission counters, per-tenant
+//! served counts/shares, simulated cycles, and the bit-identity verdict.
+//! Wall-clock throughput and the queue/slot high-water marks depend on host
+//! scheduling and go to stderr instead.
+
+use crate::api::{JobSpec, Session, SessionConfig};
+use crate::service::{Backpressure, QueueFull, SimService, SimServiceConfig};
+use anyhow::{ensure, Result};
+use std::fmt::Write as _;
+
+/// Knobs of one serve-demo run (argv-parsed by `spz`, defaulted for CI).
+pub struct DemoConfig {
+    /// Number of tenant submitter threads.
+    pub tenants: usize,
+    /// Jobs each tenant submits.
+    pub jobs: usize,
+    /// Worker-pool budget in core-slots.
+    pub workers: usize,
+    /// Pending-queue bound.
+    pub depth: usize,
+    /// Admission behaviour when the queue is full.
+    pub backpressure: Backpressure,
+    /// Per-tenant weights, cycled over tenants (`t0` gets `weights[0]`, ...).
+    pub weights: Vec<u32>,
+    /// The job every tenant submits (identical on purpose: it makes the
+    /// bit-identity contract checkable across every completion).
+    pub job: JobSpec,
+}
+
+/// Run the demo and render the deterministic report. `session_cfg` seeds
+/// both the serving session and the fresh single-job session the
+/// bit-identity check runs against.
+pub fn serve_demo(session_cfg: SessionConfig, demo: &DemoConfig) -> Result<String> {
+    ensure!(demo.tenants >= 1, "serve-demo needs at least 1 tenant (got {})", demo.tenants);
+    ensure!(demo.jobs >= 1, "serve-demo needs at least 1 job per tenant (got {})", demo.jobs);
+    ensure!(!demo.weights.is_empty(), "serve-demo needs at least one tenant weight");
+
+    // The ground truth: the same spec through a fresh session, no service.
+    let expected = Session::with_config(session_cfg.clone())
+        .run(&demo.job)?
+        .to_json_stable();
+
+    let svc = SimService::start(
+        Session::with_config(session_cfg),
+        SimServiceConfig {
+            workers: demo.workers,
+            queue_depth: demo.depth,
+            backpressure: demo.backpressure,
+            tenant_weights: (0..demo.tenants)
+                .map(|i| (format!("t{i}"), demo.weights[i % demo.weights.len()]))
+                .collect(),
+            ..SimServiceConfig::default()
+        },
+    )?;
+
+    let t0 = std::time::Instant::now();
+    // One submitter thread per tenant, all slamming the queue concurrently.
+    // Each returns (ok results' stable JSON matches, served, rejected,
+    // sum of simulated cycles).
+    let per_tenant: Vec<(u64, u64, u64, f64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..demo.tenants)
+            .map(|i| {
+                let svc = &svc;
+                let expected = expected.as_str();
+                let job = &demo.job;
+                scope.spawn(move || {
+                    let tenant = format!("t{i}");
+                    let mut pending = Vec::with_capacity(demo.jobs);
+                    let mut rejected = 0u64;
+                    for _ in 0..demo.jobs {
+                        match svc.submit(&tenant, job.clone()) {
+                            Ok(h) => pending.push(h),
+                            Err(e) if e.downcast_ref::<QueueFull>().is_some() => rejected += 1,
+                            Err(e) => return Err(e),
+                        }
+                    }
+                    let mut identical = 0u64;
+                    let mut served = 0u64;
+                    let mut cycles = 0.0f64;
+                    for h in pending {
+                        let r = h.wait()?;
+                        served += 1;
+                        cycles += r.time_cycles();
+                        if r.to_json_stable() == expected {
+                            identical += 1;
+                        }
+                    }
+                    Ok((identical, served, rejected, cycles))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("tenant thread panicked"))
+            .collect::<Result<_>>()
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let stats = svc.stats();
+    let total: u64 = per_tenant.iter().map(|t| t.1).sum();
+    let identical: u64 = per_tenant.iter().map(|t| t.0).sum();
+
+    // Host-dependent numbers stay off the byte-diffed report.
+    eprintln!(
+        "[spz] serve-demo: {total} jobs in {wall:.2}s ({:.0} jobs/s), queue high-water {}, \
+         slots high-water {}/{}",
+        total as f64 / wall.max(1e-9),
+        stats.queue_depth_high_water,
+        stats.slots_high_water,
+        stats.workers
+    );
+
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "spz serve-demo: {} tenants x {} jobs (workers={} depth={} backpressure={})",
+        demo.tenants,
+        demo.jobs,
+        demo.workers,
+        demo.depth,
+        match demo.backpressure {
+            Backpressure::Reject => "reject",
+            Backpressure::Block => "block",
+        }
+    );
+    let _ = writeln!(
+        s,
+        "job: impl={} dataset={} scale={} cores={}",
+        demo.job.impl_id.name(),
+        demo.job.dataset.name(),
+        demo.job.scale,
+        demo.job.cores
+    );
+    let _ = writeln!(
+        s,
+        "service: admitted={} rejected={} completed={} failed={}",
+        stats.admitted, stats.rejected, stats.completed, stats.failed
+    );
+    let _ = writeln!(s, "{:<8} {:>6} {:>6} {:>7} {:>14}", "tenant", "weight", "served", "share", "sum_cycles");
+    for (i, (_, served, _, cycles)) in per_tenant.iter().enumerate() {
+        let row = stats.tenants.iter().find(|t| t.tenant == format!("t{i}"));
+        let _ = writeln!(
+            s,
+            "{:<8} {:>6} {:>6} {:>6.1}% {:>14.0}",
+            format!("t{i}"),
+            row.map(|t| t.weight).unwrap_or(0),
+            served,
+            100.0 * *served as f64 / total.max(1) as f64,
+            cycles
+        );
+    }
+    let _ = writeln!(
+        s,
+        "determinism: {identical}/{total} results byte-identical to a direct Session::run"
+    );
+    ensure!(
+        identical == total,
+        "service determinism violated: only {identical}/{total} results matched the direct run"
+    );
+    Ok(s)
+}

@@ -7,5 +7,6 @@
 //! turns results into reports.
 
 pub mod ablate;
+pub mod demo;
 pub mod figures;
 pub mod report;

@@ -58,8 +58,17 @@
 //! thread schedules. The `spz` CLI (`src/main.rs`) is a thin argv adapter
 //! over this API, and [`coordinator`] renders [`api::SuiteRun`]s into the
 //! paper's tables and figures (including the `fig12` multi-core scaling
-//! study and the `spz mem` shared-memory report). See `rust/README.md` for
-//! a quick start, or `examples/` (quickstart, paper_pipeline,
+//! study and the `spz mem` shared-memory report).
+//!
+//! For multi-tenant hosting, the [`service`] module wraps a shared
+//! [`Session`] in a [`service::SimService`]: a bounded admission queue with
+//! reject/block backpressure, deficit-round-robin fair scheduling across
+//! tenants (weighted by the same Gustavson work estimates the `ws-*`
+//! schedulers use), a fixed worker pool that simulated cores are budgeted
+//! against, and handles that are both blocking-joinable and `.await`-able
+//! with no async runtime. `Session::run_suite` itself runs on this pool —
+//! there is one grid scheduler in the crate. See `rust/README.md` for a
+//! quick start, or `examples/` (quickstart, paper_pipeline,
 //! triangle_counting, amg_galerkin) for the API in use.
 
 pub mod api;
@@ -70,6 +79,7 @@ pub mod isa;
 pub mod matrix;
 pub mod mem;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod spgemm;
 pub mod systolic;

@@ -34,7 +34,7 @@ struct Args {
 /// at most once (a duplicate is an error, not a silent overwrite).
 const COMMANDS: &[&str] = &[
     "table3", "fig4", "fig8", "fig9", "fig10", "fig11", "fig12", "table4", "all", "run", "mem",
-    "ablate", "isa", "config", "gen",
+    "ablate", "isa", "config", "gen", "serve-demo",
 ];
 
 fn parse_argv(args: &[String]) -> Result<Args> {
@@ -111,6 +111,12 @@ fn allowed_opts(cmd: &str) -> &'static [&'static str] {
         "ablate" => &["dataset", "scale", "mtx-dir", "out-dir"],
         "gen" => &["dataset", "out", "scale"],
         "table4" => &["out-dir"],
+        // serve-demo drives the multi-tenant service layer: N tenants x M
+        // jobs against one SimService, fairness/throughput report out.
+        "serve-demo" => &[
+            "tenants", "jobs", "workers", "depth", "backpressure", "weights", "dataset", "impl",
+            "scale", "cores", "sched", "engine", "artifacts", "mtx-dir", "out-dir",
+        ],
         _ => &[],
     }
 }
@@ -125,6 +131,7 @@ fn allowed_flags(cmd: &str) -> &'static [&'static str] {
         "mem" => &["quiet"],
         "ablate" => &["quiet"],
         "table4" => &["sweep", "quiet"],
+        "serve-demo" => &["verify", "quiet"],
         _ => &[],
     }
 }
@@ -151,7 +158,13 @@ fn print_help() {
          \x20       [--datasets a,b] [--engine E] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          ablate: [--dataset NAME] [--scale F] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          gen:    --dataset NAME --out FILE.mtx [--scale F]\n\
-         table4: [--sweep] [--out-dir DIR] [--quiet]"
+         table4: [--sweep] [--out-dir DIR] [--quiet]\n\
+         serve-demo: [--tenants N] [--jobs M] [--workers N] [--depth N]\n\
+         \x20       [--backpressure reject|block] [--weights 1,2,4] [--dataset NAME]\n\
+         \x20       [--impl NAME] [--scale F] [--cores N] [--sched S] [--verify]\n\
+         \x20       [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
+         \x20       (multi-tenant service demo: N tenant threads x M jobs through one\n\
+         \x20        SimService; deterministic fairness report + bit-identity check)"
     );
 }
 
@@ -245,7 +258,11 @@ fn suite_spec(a: &Args) -> Result<SuiteSpec> {
         spec.scale = s;
     }
     if let Some(t) = a.opts.get("threads") {
-        spec.threads = t.parse().context("--threads")?;
+        let n: usize = t.parse().context("--threads")?;
+        // No silent clamping: a nonsensical thread count is an argv error
+        // (the library rejects 0 too; catching it here names the flag).
+        anyhow::ensure!(n >= 1, "--threads must be at least 1 (got {n})");
+        spec.threads = n;
     }
     if let Some(c) = cores_opt(a)? {
         spec.cores = c;
@@ -567,6 +584,73 @@ fn main() -> Result<()> {
             ));
             report::emit(&out_dir(&a), &format!("ablate_{name}.txt"), &s, quiet)?;
         }
+        "serve-demo" => {
+            use sparsezipper::coordinator::demo;
+            use sparsezipper::service::Backpressure;
+            let parse_u = |key: &str, default: usize| -> Result<usize> {
+                match a.opts.get(key) {
+                    Some(v) => {
+                        let n: usize = v.parse().with_context(|| format!("--{key}"))?;
+                        anyhow::ensure!(n >= 1, "--{key} must be at least 1 (got {n})");
+                        Ok(n)
+                    }
+                    None => Ok(default),
+                }
+            };
+            let tenants = parse_u("tenants", 4)?;
+            let jobs = parse_u("jobs", 16)?;
+            let workers = parse_u(
+                "workers",
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+            )?;
+            let depth = parse_u("depth", 64)?;
+            let backpressure = match a.opts.get("backpressure") {
+                Some(b) => b.parse::<Backpressure>()?,
+                None => Backpressure::Block,
+            };
+            let weights: Vec<u32> = match a.opts.get("weights") {
+                Some(w) => w
+                    .split(',')
+                    .map(|t| t.trim().parse::<u32>().context("--weights"))
+                    .collect::<Result<_>>()?,
+                None => vec![1],
+            };
+            anyhow::ensure!(
+                !weights.is_empty() && weights.iter().all(|&w| w >= 1),
+                "--weights entries must be at least 1"
+            );
+            let dataset = DatasetSource::parse(
+                a.opts.get("dataset").map(|s| s.as_str()).unwrap_or("p2p"),
+                mtx_dir(&a).as_deref(),
+            )?;
+            let impl_id: ImplId = a
+                .opts
+                .get("impl")
+                .map(|s| s.as_str())
+                .unwrap_or("spz")
+                .parse()
+                .map_err(anyhow::Error::msg)?;
+            let mut job = JobSpec::new(impl_id, dataset)
+                .with_scale(scale_opt(&a)?.unwrap_or(0.05))
+                .with_verify(a.flags.contains("verify"))
+                .with_cores(cores_opt(&a)?.unwrap_or(1));
+            if let Some(s) = sched_opt(&a)? {
+                anyhow::ensure!(
+                    job.cores >= 2,
+                    "--sched requires --cores >= 2 (it only affects multi-core runs)"
+                );
+                job = job.with_scheduler(s);
+            }
+            eprintln!(
+                "[spz] serve-demo: {tenants} tenants x {jobs} jobs, {workers} workers, \
+                 queue depth {depth}"
+            );
+            let rep = demo::serve_demo(
+                session_config(&a)?,
+                &demo::DemoConfig { tenants, jobs, workers, depth, backpressure, weights, job },
+            )?;
+            report::emit(&out_dir(&a), "serve_demo.txt", &rep, quiet)?;
+        }
         "gen" => {
             let name = a.opts.get("dataset").context("--dataset required")?;
             let out = a.opts.get("out").context("--out required")?;
@@ -778,6 +862,46 @@ mod tests {
             parse_scheds("ws-bw,ws-numa").unwrap(),
             vec![Scheduler::WorkStealingBw, Scheduler::WorkStealingNuma]
         );
+    }
+
+    #[test]
+    fn zero_threads_is_an_argv_error_not_a_clamp() {
+        let a = parse_argv(&v(&["fig8", "--threads", "0"])).unwrap();
+        let e = suite_spec(&a).unwrap_err().to_string();
+        assert!(e.contains("--threads must be at least 1"), "{e}");
+        let a = parse_argv(&v(&["fig8", "--threads", "3"])).unwrap();
+        assert_eq!(suite_spec(&a).unwrap().threads, 3);
+    }
+
+    #[test]
+    fn serve_demo_parses_its_options() {
+        let a = parse_argv(&v(&[
+            "serve-demo",
+            "--tenants",
+            "4",
+            "--jobs",
+            "64",
+            "--workers",
+            "2",
+            "--depth",
+            "8",
+            "--backpressure",
+            "reject",
+            "--weights",
+            "1,2,4",
+            "--quiet",
+        ]))
+        .unwrap();
+        assert_eq!(a.cmd, "serve-demo");
+        assert_eq!(a.opts.get("tenants").unwrap(), "4");
+        assert_eq!(a.opts.get("backpressure").unwrap(), "reject");
+        assert!(a.flags.contains("quiet"));
+        // serve-demo has no --threads (the pool is sized by --workers) and
+        // no --json.
+        assert!(parse_argv(&v(&["serve-demo", "--threads", "2"])).is_err());
+        assert!(parse_argv(&v(&["serve-demo", "--json"])).is_err());
+        // --tenants belongs to serve-demo only.
+        assert!(parse_argv(&v(&["fig8", "--tenants", "2"])).is_err());
     }
 
     #[test]

@@ -1,0 +1,128 @@
+//! The one-shot job completion cell behind [`JobHandle`]: blocking-joinable
+//! *and* pollable with no async-runtime dependency. A `Condvar` serves
+//! `wait()`; a stored-waker list serves `Future::poll` — both observe the
+//! same `Mutex`-guarded slot, so whichever consumer arrives first takes the
+//! result.
+
+use crate::api::JobResult;
+use anyhow::{bail, Result};
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Arc, Condvar, Mutex};
+use std::task::{Context, Poll, Waker};
+
+#[derive(Default)]
+struct Slot {
+    /// Filled exactly once by the worker that ran the job.
+    outcome: Option<Result<JobResult>>,
+    /// Whether the (single) consumer already took the outcome.
+    taken: bool,
+    /// Global completion sequence number, stamped when the outcome lands
+    /// (the dispatch order the DRR scheduler chose, observable for tests
+    /// and fairness reports).
+    seq: Option<u64>,
+    /// Wakers registered by `Future::poll` before completion.
+    wakers: Vec<Waker>,
+}
+
+/// Shared completion state: the worker side of a [`JobHandle`].
+pub(crate) struct JobState {
+    slot: Mutex<Slot>,
+    cv: Condvar,
+}
+
+impl JobState {
+    pub(crate) fn new() -> Arc<JobState> {
+        Arc::new(JobState { slot: Mutex::new(Slot::default()), cv: Condvar::new() })
+    }
+
+    /// Publish the job's outcome (exactly once): wakes blocking waiters and
+    /// every registered async waker.
+    pub(crate) fn complete(&self, seq: u64, outcome: Result<JobResult>) {
+        let wakers = {
+            let mut s = self.slot.lock().unwrap();
+            debug_assert!(s.outcome.is_none() && !s.taken, "job completed twice");
+            s.outcome = Some(outcome);
+            s.seq = Some(seq);
+            std::mem::take(&mut s.wakers)
+        };
+        self.cv.notify_all();
+        for w in wakers {
+            w.wake();
+        }
+    }
+}
+
+/// A submitted job: join it with [`JobHandle::wait`] (blocking) or `.await`
+/// it (it implements [`Future`] via a hand-rolled waker state machine —
+/// std-only, usable from any executor). The handle is the single consumer of
+/// the result; dropping it abandons the result but never cancels the job.
+pub struct JobHandle {
+    pub(crate) st: Arc<JobState>,
+    pub(crate) tenant: String,
+}
+
+impl JobHandle {
+    /// The tenant this job was submitted under.
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// Whether the job has finished (its outcome landed or was consumed).
+    pub fn is_finished(&self) -> bool {
+        let s = self.st.slot.lock().unwrap();
+        s.outcome.is_some() || s.taken
+    }
+
+    /// The global completion sequence number, once finished: the order in
+    /// which the service completed jobs (deterministic on a 1-worker pool,
+    /// where it equals the DRR dispatch order).
+    pub fn completion_seq(&self) -> Option<u64> {
+        self.st.slot.lock().unwrap().seq
+    }
+
+    /// Block until the job finishes and take its result. Errors if the
+    /// result was already consumed through `poll`.
+    pub fn wait(self) -> Result<JobResult> {
+        let mut s = self.st.slot.lock().unwrap();
+        loop {
+            if let Some(out) = s.outcome.take() {
+                s.taken = true;
+                return out;
+            }
+            if s.taken {
+                bail!("job result already taken (the handle was polled to completion)");
+            }
+            s = self.st.cv.wait(s).unwrap();
+        }
+    }
+}
+
+impl Future for JobHandle {
+    type Output = Result<JobResult>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let mut s = self.st.slot.lock().unwrap();
+        if let Some(out) = s.outcome.take() {
+            s.taken = true;
+            return Poll::Ready(out);
+        }
+        if s.taken {
+            // Futures contract: a future must not be polled after Ready.
+            panic!("JobHandle polled after completion");
+        }
+        if !s.wakers.iter().any(|w| w.will_wake(cx.waker())) {
+            s.wakers.push(cx.waker().clone());
+        }
+        Poll::Pending
+    }
+}
+
+impl std::fmt::Debug for JobHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobHandle")
+            .field("tenant", &self.tenant)
+            .field("finished", &self.is_finished())
+            .finish()
+    }
+}

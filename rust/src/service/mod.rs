@@ -1,0 +1,69 @@
+//! Simulation as a service: a multi-tenant job queue over one [`Session`].
+//!
+//! The simulator core ([`crate::api`]) is deterministic and synchronous: one
+//! [`Session::run`] call simulates one job, and [`Session::run_suite`] blocks
+//! on scoped threads until a whole sweep finishes. This module adds the layer
+//! a production deployment needs on top of that fixed substrate — admission,
+//! queueing, tenancy, and flow control — without touching the simulator:
+//!
+//! * [`SimService`] wraps a shared [`Session`] behind a **fixed worker pool**
+//!   ([`SimServiceConfig::workers`] host threads, spawned once). A job's
+//!   simulated [`cores`](crate::api::JobSpec::cores) count against the pool
+//!   budget, generalizing `run_suite`'s grid-worker cap: many small jobs pack
+//!   onto the pool, one wide job occupies it, and the host never sees a
+//!   thread explosion (the pool's slot high-water mark is exported).
+//! * [`SimService::submit`] applies **admission control**: a bounded queue of
+//!   [`SimServiceConfig::queue_depth`] pending jobs, with
+//!   [`Backpressure::Reject`] returning the typed [`QueueFull`] error and
+//!   [`Backpressure::Block`] parking the submitter until space frees.
+//! * Admitted jobs are dispatched by **deficit round robin** over per-tenant
+//!   FIFOs: each tenant has a weight, each job a cost in Gustavson multiply
+//!   units (the same per-row work estimates the `ws-*` schedulers use,
+//!   [`Session::cached_stats`]; jobs on uncharacterized datasets fall back to
+//!   [`SimServiceConfig::default_cost`]). A tenant's 10k-job burst cannot
+//!   starve the others: over any backlogged window, served work per tenant
+//!   tracks the weight ratios to within one quantum.
+//! * [`SimService::submit`] returns a [`JobHandle`] that is both
+//!   blocking-joinable ([`JobHandle::wait`]) and pollable (`JobHandle`
+//!   implements [`std::future::Future`]) with **no async runtime** — a
+//!   hand-rolled Condvar + waker one-shot, std-only.
+//! * [`SimService::submit_suite`] streams a whole sweep: a [`SuiteHandle`]
+//!   yields `JobResult`s as they land ([`SuiteHandle::results`]) or collects
+//!   them spec-ordered into a [`crate::api::SuiteRun`]
+//!   ([`SuiteHandle::collect_ordered`]). `Session::run_suite` itself runs on
+//!   this pool, so there is one grid scheduler, not two.
+//!
+//! Concurrent tenants share the session's `(source, scale)` dataset/oracle
+//! cache — the per-key entry locks make phase-1 builds dedupe across
+//! submitters. The core contract: every [`crate::api::JobResult`] produced
+//! through the service is **byte-identical** (stable JSON, `wall_secs`
+//! stripped) to [`Session::run`] of the same spec, regardless of queue
+//! interleaving, pool size, or co-tenants — the queue owns *when* a job
+//! runs, never *what* it computes.
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use sparsezipper::api::{DatasetSource, ImplId, JobSpec, Session};
+//! use sparsezipper::service::{SimService, SimServiceConfig};
+//!
+//! let svc = SimService::start(Session::new(), SimServiceConfig::default())?;
+//! let job = JobSpec::new(ImplId::Spz, DatasetSource::registry("p2p")?).with_scale(0.05);
+//! let handle = svc.submit("tenant-a", job)?;
+//! let result = handle.wait()?; // or `handle.await` from any executor
+//! println!("{:.0} cycles", result.time_cycles());
+//! # Ok(())
+//! # }
+//! ```
+
+mod handle;
+mod queue;
+#[allow(clippy::module_inception)]
+mod service;
+
+pub use handle::JobHandle;
+pub use service::{
+    Backpressure, QueueFull, ServiceStats, SimService, SimServiceConfig, SuiteHandle, TenantStats,
+};
+
+#[cfg(doc)]
+use crate::api::Session;

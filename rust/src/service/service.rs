@@ -1,0 +1,537 @@
+//! [`SimService`]: admission control, the fixed worker pool, and the
+//! streaming suite API. See the module docs ([`crate::service`]) for the
+//! architecture and the determinism contract.
+
+use super::handle::{JobHandle, JobState};
+use super::queue::{Dispatch, DrrQueue, QueuedJob};
+use crate::api::{JobResult, JobSpec, Session, SuiteRun, SuiteSpec};
+use crate::spgemm::ImplId;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// What [`SimService::submit`] does when the pending queue is at
+/// [`SimServiceConfig::queue_depth`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backpressure {
+    /// Fail the submission with the typed [`QueueFull`] error.
+    Reject,
+    /// Park the submitting thread until a slot frees (dispatch makes room).
+    Block,
+}
+
+impl std::str::FromStr for Backpressure {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "reject" => Ok(Backpressure::Reject),
+            "block" => Ok(Backpressure::Block),
+            _ => bail!("unknown backpressure mode '{s}' (expected 'reject' or 'block')"),
+        }
+    }
+}
+
+/// Typed admission failure: the bounded queue was full under
+/// [`Backpressure::Reject`]. Travels as the source of the `anyhow` error
+/// returned by [`SimService::submit`], so callers can
+/// `err.downcast_ref::<QueueFull>()` to distinguish flow control from real
+/// failures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueueFull {
+    /// The configured depth the queue was at.
+    pub depth: usize,
+}
+
+impl std::fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job queue full ({} pending jobs); retry later or use Backpressure::Block", self.depth)
+    }
+}
+
+impl std::error::Error for QueueFull {}
+
+/// Service configuration. The defaults suit an interactive host: one worker
+/// per hardware thread, a deep blocking queue, equal tenant weights.
+#[derive(Clone, Debug)]
+pub struct SimServiceConfig {
+    /// Worker pool budget in core-slots (and the number of pool threads).
+    /// A job occupies `spec.cores.min(workers)` slots while running, so
+    /// many 1-core jobs pack onto the pool while a wide job occupies it —
+    /// the host never runs more than ~`workers` simulated cores at once.
+    pub workers: usize,
+    /// Bound on *pending* (admitted, not yet dispatched) jobs.
+    pub queue_depth: usize,
+    /// Behaviour when the queue is at `queue_depth`.
+    pub backpressure: Backpressure,
+    /// DRR quantum in Gustavson work units added per ring visit (scaled by
+    /// the tenant weight). Smaller = fairer interleaving, larger = longer
+    /// per-tenant bursts.
+    pub quantum: u64,
+    /// Weight for tenants not listed in `tenant_weights`.
+    pub default_weight: u32,
+    /// Per-tenant weight overrides (first match wins); a weight-2 tenant is
+    /// served twice the work of a weight-1 tenant over any backlogged window.
+    pub tenant_weights: Vec<(String, u32)>,
+    /// DRR cost assumed for jobs whose dataset has no cached
+    /// characterization yet (see [`Session::cached_stats`]).
+    pub default_cost: u64,
+}
+
+impl Default for SimServiceConfig {
+    fn default() -> Self {
+        SimServiceConfig {
+            workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+            queue_depth: 1024,
+            backpressure: Backpressure::Block,
+            quantum: 1024,
+            default_weight: 1,
+            tenant_weights: Vec::new(),
+            default_cost: 1024,
+        }
+    }
+}
+
+impl SimServiceConfig {
+    /// Weight for `tenant` (override list, else the default; floored at 1).
+    pub fn weight_for(&self, tenant: &str) -> u32 {
+        self.tenant_weights
+            .iter()
+            .find(|(t, _)| t == tenant)
+            .map(|(_, w)| *w)
+            .unwrap_or(self.default_weight)
+            .max(1)
+    }
+
+    fn validate(&self) -> Result<()> {
+        ensure!(self.workers >= 1, "SimServiceConfig.workers must be at least 1 (got {})", self.workers);
+        ensure!(
+            self.queue_depth >= 1,
+            "SimServiceConfig.queue_depth must be at least 1 (got {})",
+            self.queue_depth
+        );
+        ensure!(self.quantum >= 1, "SimServiceConfig.quantum must be at least 1 (got 0)");
+        ensure!(self.default_weight >= 1, "SimServiceConfig.default_weight must be at least 1 (got 0)");
+        for (t, w) in &self.tenant_weights {
+            ensure!(*w >= 1, "tenant '{t}' weight must be at least 1 (got 0)");
+        }
+        ensure!(self.default_cost >= 1, "SimServiceConfig.default_cost must be at least 1 (got 0)");
+        Ok(())
+    }
+}
+
+/// Per-tenant service counters (one row of [`ServiceStats::tenants`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    pub tenant: String,
+    pub weight: u32,
+    /// Jobs dispatched and finished (successfully or not) for this tenant.
+    pub served: u64,
+}
+
+/// Snapshot of the service counters, exported through the stable JSON layer
+/// (the `service` block of a suite export).
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStats {
+    /// Configured pool budget in core-slots.
+    pub workers: u64,
+    /// Jobs accepted past admission control.
+    pub admitted: u64,
+    /// Submissions refused with [`QueueFull`].
+    pub rejected: u64,
+    /// Jobs that ran to a successful [`JobResult`].
+    pub completed: u64,
+    /// Jobs that ran and returned an error (or were abandoned at shutdown).
+    pub failed: u64,
+    /// Most pending jobs ever queued at once.
+    pub queue_depth_high_water: u64,
+    /// Most core-slots ever occupied at once (never exceeds `workers`: the
+    /// no-thread-explosion witness).
+    pub slots_high_water: u64,
+    /// Per-tenant rows, sorted by tenant name.
+    pub tenants: Vec<TenantStats>,
+}
+
+/// Everything behind the service's one mutex.
+struct PoolState {
+    q: DrrQueue,
+    /// Unoccupied core-slots out of `cfg.workers`.
+    free_slots: usize,
+    paused: bool,
+    shutdown: bool,
+    admitted: u64,
+    rejected: u64,
+    completed: u64,
+    failed: u64,
+    queue_hw: usize,
+    slots_hw: usize,
+    /// Global completion sequence (stamped into each [`JobHandle`]).
+    next_seq: u64,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for jobs / slots / resume; completions notify it.
+    work: Condvar,
+    /// Blocked submitters wait here for queue space; dispatch notifies it.
+    space: Condvar,
+    session: Session,
+    cfg: SimServiceConfig,
+}
+
+impl Shared {
+    fn snapshot(&self) -> ServiceStats {
+        let s = self.state.lock().unwrap();
+        ServiceStats {
+            workers: self.cfg.workers as u64,
+            admitted: s.admitted,
+            rejected: s.rejected,
+            completed: s.completed,
+            failed: s.failed,
+            queue_depth_high_water: s.queue_hw as u64,
+            slots_high_water: s.slots_hw as u64,
+            tenants: s
+                .q
+                .tenant_rows()
+                .into_iter()
+                .map(|(tenant, weight, served)| TenantStats { tenant, weight, served })
+                .collect(),
+        }
+    }
+}
+
+/// The multi-tenant simulation service. See [`crate::service`].
+///
+/// Dropping the service shuts it down: in-flight jobs finish, still-queued
+/// jobs complete their handles with a shutdown error, workers are joined.
+pub struct SimService {
+    sh: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl SimService {
+    /// Spawn the worker pool over a shared session handle (sessions are
+    /// cheap `Arc` clones; all clones share one dataset/oracle cache).
+    pub fn start(session: Session, cfg: SimServiceConfig) -> Result<SimService> {
+        cfg.validate()?;
+        let sh = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                q: DrrQueue::new(cfg.quantum),
+                free_slots: cfg.workers,
+                paused: false,
+                shutdown: false,
+                admitted: 0,
+                rejected: 0,
+                completed: 0,
+                failed: 0,
+                queue_hw: 0,
+                slots_hw: 0,
+                next_seq: 0,
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            session,
+            cfg,
+        });
+        let mut workers = Vec::with_capacity(sh.cfg.workers);
+        for i in 0..sh.cfg.workers {
+            let sh = sh.clone();
+            let t = std::thread::Builder::new()
+                .name(format!("spz-svc-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .context("spawn service worker")?;
+            workers.push(t);
+        }
+        Ok(SimService { sh, workers })
+    }
+
+    /// The shared session (e.g. to pre-characterize datasets so DRR costs
+    /// use real work estimates instead of [`SimServiceConfig::default_cost`]).
+    pub fn session(&self) -> &Session {
+        &self.sh.session
+    }
+
+    /// Submit one job under `tenant`. Applies admission control, then
+    /// enqueues into the tenant's DRR FIFO. The returned [`JobHandle`] can
+    /// be `wait()`ed or `.await`ed.
+    pub fn submit(&self, tenant: &str, spec: JobSpec) -> Result<JobHandle> {
+        self.submit_inner(tenant, spec, None)
+    }
+
+    fn submit_inner(
+        &self,
+        tenant: &str,
+        spec: JobSpec,
+        sink: Option<(Arc<SuiteSink>, usize)>,
+    ) -> Result<JobHandle> {
+        // Validate at admission, matching Session::run, so a bad spec is a
+        // submit-time error rather than a deferred handle error.
+        ensure!(spec.cores >= 1, "JobSpec.cores must be at least 1 (got {})", spec.cores);
+        let cost = self
+            .sh
+            .session
+            .cached_stats(&spec.dataset, spec.scale)
+            .map(|st| (st.avg_work_per_row * st.nrows as f64) as u64)
+            .unwrap_or(self.sh.cfg.default_cost)
+            .max(1);
+        let slots = spec.cores.min(self.sh.cfg.workers).max(1);
+        let weight = self.sh.cfg.weight_for(tenant);
+        let st = JobState::new();
+        let mut s = self.sh.state.lock().unwrap();
+        loop {
+            if s.shutdown {
+                bail!("service is shutting down; job not admitted");
+            }
+            if s.q.queued < self.sh.cfg.queue_depth {
+                break;
+            }
+            match self.sh.cfg.backpressure {
+                Backpressure::Reject => {
+                    s.rejected += 1;
+                    return Err(QueueFull { depth: self.sh.cfg.queue_depth }.into());
+                }
+                Backpressure::Block => s = self.sh.space.wait(s).unwrap(),
+            }
+        }
+        s.admitted += 1;
+        s.q.push(
+            QueuedJob { spec, st: st.clone(), tenant: tenant.to_string(), cost, slots, sink },
+            weight,
+        );
+        s.queue_hw = s.queue_hw.max(s.q.queued);
+        drop(s);
+        self.sh.work.notify_all();
+        Ok(JobHandle { st, tenant: tenant.to_string() })
+    }
+
+    /// Submit a whole (datasets x implementations) sweep under `tenant`,
+    /// one job per grid cell in dataset-major order. Results stream through
+    /// the returned [`SuiteHandle`] as they land; `spec.threads` is ignored
+    /// here (the pool's `workers` budget governs concurrency).
+    pub fn submit_suite(&self, tenant: &str, spec: &SuiteSpec) -> Result<SuiteHandle> {
+        ensure!(spec.cores >= 1, "SuiteSpec.cores must be at least 1 (got {})", spec.cores);
+        let mut seen = std::collections::HashSet::new();
+        for src in &spec.datasets {
+            ensure!(
+                seen.insert(src.name()),
+                "duplicate dataset name '{}' in suite (dataset names must be unique)",
+                src.name()
+            );
+        }
+        let stream = SuiteSink::new();
+        let mut jobs = Vec::with_capacity(spec.datasets.len() * spec.impls.len());
+        for src in &spec.datasets {
+            for &id in &spec.impls {
+                let job = JobSpec {
+                    impl_id: id,
+                    dataset: src.clone(),
+                    scale: spec.scale,
+                    verify: spec.verify,
+                    cores: spec.cores,
+                    sched: spec.sched,
+                };
+                let idx = jobs.len();
+                let h = self.submit_inner(tenant, job, Some((stream.clone(), idx)))?;
+                jobs.push((id, src.name(), h));
+            }
+        }
+        Ok(SuiteHandle {
+            jobs,
+            stream,
+            datasets: spec.datasets.clone(),
+            scale: spec.scale,
+            session: self.sh.session.clone(),
+            sh: self.sh.clone(),
+        })
+    }
+
+    /// Stop dispatching (in-flight jobs finish; admission stays open). With
+    /// the pool paused, queue state is fully deterministic — tests use this
+    /// to fill the queue to an exact depth or pin the DRR order.
+    pub fn pause(&self) {
+        self.sh.state.lock().unwrap().paused = true;
+    }
+
+    /// Resume dispatching after [`SimService::pause`].
+    pub fn resume(&self) {
+        self.sh.state.lock().unwrap().paused = false;
+        self.sh.work.notify_all();
+    }
+
+    /// Snapshot of the service counters.
+    pub fn stats(&self) -> ServiceStats {
+        self.sh.snapshot()
+    }
+}
+
+impl Drop for SimService {
+    fn drop(&mut self) {
+        self.sh.state.lock().unwrap().shutdown = true;
+        self.sh.work.notify_all();
+        self.sh.space.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // Workers are gone; fail the handles of jobs that never ran so no
+        // waiter hangs (deterministic tenant order from drain()).
+        let (abandoned, seq0) = {
+            let mut s = self.sh.state.lock().unwrap();
+            let jobs = s.q.drain();
+            let seq0 = s.next_seq;
+            s.next_seq += jobs.len() as u64;
+            s.failed += jobs.len() as u64;
+            (jobs, seq0)
+        };
+        for (i, job) in abandoned.into_iter().enumerate() {
+            if let Some((sink, idx)) = &job.sink {
+                sink.push(*idx, Err("service shut down before the job ran".to_string()));
+            }
+            job.st
+                .complete(seq0 + i as u64, Err(anyhow::anyhow!("service shut down before the job ran")));
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    let budget = sh.cfg.workers;
+    let mut s = sh.state.lock().unwrap();
+    loop {
+        if s.shutdown {
+            return;
+        }
+        if s.paused {
+            s = sh.work.wait(s).unwrap();
+            continue;
+        }
+        match s.q.next(s.free_slots) {
+            Dispatch::Job(job) => {
+                s.free_slots -= job.slots;
+                s.slots_hw = s.slots_hw.max(budget - s.free_slots);
+                drop(s);
+                // Dispatch frees queue space: wake blocked submitters.
+                sh.space.notify_all();
+                let outcome = sh.session.run(&job.spec);
+                let mut s2 = sh.state.lock().unwrap();
+                s2.free_slots += job.slots;
+                let seq = s2.next_seq;
+                s2.next_seq += 1;
+                match &outcome {
+                    Ok(_) => s2.completed += 1,
+                    Err(_) => s2.failed += 1,
+                }
+                s2.q.record_served(&job.tenant);
+                drop(s2);
+                if let Some((sink, idx)) = &job.sink {
+                    sink.push(
+                        *idx,
+                        match &outcome {
+                            Ok(r) => Ok(r.clone()),
+                            Err(e) => Err(format!("{e:#}")),
+                        },
+                    );
+                }
+                job.st.complete(seq, outcome);
+                // Freed slots may unblock a WaitForSlots dispatcher.
+                sh.work.notify_all();
+                s = sh.state.lock().unwrap();
+            }
+            Dispatch::WaitForSlots | Dispatch::Empty => s = sh.work.wait(s).unwrap(),
+        }
+    }
+}
+
+/// Completion funnel for a streamed suite: workers push `(index, result)`
+/// pairs as jobs land; the consumer pops them in completion order.
+pub(crate) struct SuiteSink {
+    ready: Mutex<VecDeque<(usize, Result<JobResult, String>)>>,
+    cv: Condvar,
+}
+
+impl SuiteSink {
+    fn new() -> Arc<SuiteSink> {
+        Arc::new(SuiteSink { ready: Mutex::new(VecDeque::new()), cv: Condvar::new() })
+    }
+
+    pub(crate) fn push(&self, idx: usize, r: Result<JobResult, String>) {
+        self.ready.lock().unwrap().push_back((idx, r));
+        self.cv.notify_all();
+    }
+
+    fn next_blocking(&self) -> (usize, Result<JobResult, String>) {
+        let mut q = self.ready.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                return item;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+}
+
+/// A streamed sweep from [`SimService::submit_suite`].
+///
+/// Two consumption styles: [`SuiteHandle::results`] yields each job as it
+/// completes (out of order, for progress bars and incremental writers), and
+/// [`SuiteHandle::collect_ordered`] blocks for everything and returns the
+/// classic spec-ordered [`SuiteRun`]. Both observe the same underlying
+/// completions; `collect_ordered` joins the per-job handles, so it works
+/// whether or not the stream was drained first.
+pub struct SuiteHandle {
+    /// `(impl, dataset name, handle)` in dataset-major spec order.
+    jobs: Vec<(ImplId, String, JobHandle)>,
+    stream: Arc<SuiteSink>,
+    datasets: Vec<crate::api::DatasetSource>,
+    scale: f64,
+    session: Session,
+    sh: Arc<Shared>,
+}
+
+impl SuiteHandle {
+    /// Number of jobs in the sweep.
+    pub fn total(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Stream `(spec_index, result)` pairs in completion order, blocking
+    /// for each; yields exactly [`SuiteHandle::total`] items. Errors arrive
+    /// as items (the iterator keeps going), so one failed cell does not
+    /// hide the rest of the sweep.
+    pub fn results(&self) -> impl Iterator<Item = (usize, Result<JobResult>)> + '_ {
+        let total = self.jobs.len();
+        let mut yielded = 0;
+        std::iter::from_fn(move || {
+            if yielded >= total {
+                return None;
+            }
+            yielded += 1;
+            let (idx, r) = self.stream.next_blocking();
+            Some((idx, r.map_err(anyhow::Error::msg)))
+        })
+    }
+
+    /// Block until every job finishes and assemble the spec-ordered
+    /// [`SuiteRun`] (dataset-major results, per-dataset characterization,
+    /// service counters), with `Session::run_suite`'s error aggregation.
+    pub fn collect_ordered(self) -> Result<SuiteRun> {
+        let mut results = Vec::with_capacity(self.jobs.len());
+        let mut errv = Vec::new();
+        for (id, name, h) in self.jobs {
+            match h.wait() {
+                Ok(r) => results.push(r),
+                Err(e) => errv.push(format!("{}/{name}: {e:#}", id.name())),
+            }
+        }
+        ensure!(errv.is_empty(), "experiment failures: {errv:?}");
+        let mut dataset_stats = HashMap::new();
+        for src in &self.datasets {
+            dataset_stats.insert(src.name(), self.session.dataset_stats(src, self.scale)?);
+        }
+        Ok(SuiteRun { results, dataset_stats, service: self.sh.snapshot() })
+    }
+
+    /// Service counters (live snapshot; the final numbers also ride on the
+    /// [`SuiteRun`] from [`SuiteHandle::collect_ordered`]).
+    pub fn stats(&self) -> ServiceStats {
+        self.sh.snapshot()
+    }
+}

@@ -86,6 +86,37 @@ fn suite_json_schema_matches_golden() {
 }
 
 #[test]
+fn suite_json_service_block_reports_the_pool() {
+    let session = Session::new();
+    let spec = SuiteSpec {
+        datasets: vec![DatasetSource::in_memory(
+            "svc",
+            Arc::new(gen::erdos_renyi(48, 48, 200, 11)),
+        )],
+        impls: vec![ImplId::SclHash, ImplId::Spz],
+        scale: 1.0,
+        threads: 1,
+        verify: false,
+        ..SuiteSpec::default()
+    };
+    let suite = session.run_suite(&spec).expect("suite");
+    let j = suite.to_json();
+    // The deterministic counters of the pool run_suite ran on: 1 worker
+    // (threads=1), both grid jobs admitted and completed under the internal
+    // "suite" tenant. High-water marks depend on host timing and are only
+    // bounded, not pinned.
+    assert!(
+        j.contains("\"service\": {\"workers\":1,\"admitted\":2,\"rejected\":0,\"completed\":2,\"failed\":0"),
+        "{j}"
+    );
+    assert!(j.contains("\"tenants\":[{\"tenant\":\"suite\",\"weight\":1,\"served\":2}]"), "{j}");
+    assert_eq!(suite.service.admitted, 2);
+    assert_eq!(suite.service.completed, 2);
+    assert!(suite.service.queue_depth_high_water <= 2);
+    assert!(suite.service.slots_high_water <= 1, "1-worker pool can never run 2 slots");
+}
+
+#[test]
 fn single_core_job_schema_has_null_multicore_tail() {
     let session = Session::new();
     let src = DatasetSource::in_memory("solo", Arc::new(gen::erdos_renyi(40, 40, 160, 9)));

@@ -1,0 +1,416 @@
+//! Integration tests for the multi-tenant service subsystem
+//! (`sparsezipper::service`): the determinism contract (results through the
+//! shared pool are byte-identical to direct `Session::run`), bounded-pool
+//! admission control, DRR fairness, and the runtime-free `Future` handle.
+
+use sparsezipper::api::{DatasetSource, JobSpec, Session, SuiteSpec};
+use sparsezipper::matrix::{gen, DATASETS};
+use sparsezipper::service::{Backpressure, QueueFull, SimService, SimServiceConfig};
+use sparsezipper::ImplId;
+use std::sync::Arc;
+
+fn tiny(name: &str, seed: u64) -> DatasetSource {
+    DatasetSource::in_memory(name, Arc::new(gen::erdos_renyi(40, 40, 160, seed)))
+}
+
+/// The headline contract: for **every** registry dataset, a job routed
+/// through a saturated multi-tenant queue (28 jobs, depth 4, 3 workers,
+/// interleaved tenants) produces a result byte-identical (stable JSON,
+/// wall-clock stripped) to a fresh `Session::run` of the same spec.
+#[test]
+fn every_registry_dataset_is_bit_identical_through_a_saturated_service() {
+    const SCALE: f64 = 0.008;
+    let svc = SimService::start(
+        Session::new(),
+        SimServiceConfig {
+            workers: 3,
+            queue_depth: 4,
+            backpressure: Backpressure::Block,
+            ..SimServiceConfig::default()
+        },
+    )
+    .unwrap();
+
+    let mut handles = Vec::new();
+    for (i, d) in DATASETS.iter().enumerate() {
+        for id in [ImplId::SclHash, ImplId::Spz] {
+            let spec = JobSpec::new(id, DatasetSource::registry(d.name).unwrap()).with_scale(SCALE);
+            handles.push((d.name, svc.submit(&format!("t{}", i % 3), spec).unwrap()));
+        }
+    }
+    let through_service: Vec<(&str, String)> = handles
+        .into_iter()
+        .map(|(name, h)| (name, h.wait().unwrap().to_json_stable()))
+        .collect();
+
+    // Ground truth from a session the service never touched.
+    let direct = Session::new();
+    let mut idx = 0;
+    for d in DATASETS.iter() {
+        for id in [ImplId::SclHash, ImplId::Spz] {
+            let spec = JobSpec::new(id, DatasetSource::registry(d.name).unwrap()).with_scale(SCALE);
+            let expected = direct.run(&spec).unwrap().to_json_stable();
+            let (name, got) = &through_service[idx];
+            assert_eq!(*got, expected, "{name}/{} diverged through the service", id.name());
+            idx += 1;
+        }
+    }
+
+    let stats = svc.stats();
+    assert_eq!(stats.admitted, 28);
+    assert_eq!(stats.completed, 28);
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.failed, 0);
+    assert!(stats.queue_depth_high_water <= 4, "depth bound violated: {stats:?}");
+    assert!(stats.slots_high_water <= 3, "pool budget violated: {stats:?}");
+}
+
+/// ~2k 1-core jobs from 8 concurrent tenants on a 4-slot pool with a bounded
+/// blocking queue: everything completes, every result is bit-identical to a
+/// direct run, and the pool's own high-water counters prove neither the
+/// worker budget nor the queue bound was ever exceeded.
+#[test]
+fn two_thousand_jobs_from_eight_tenants_stay_on_the_bounded_pool() {
+    const TENANTS: usize = 8;
+    const JOBS: usize = 250;
+    const WORKERS: usize = 4;
+    const DEPTH: usize = 32;
+
+    let sources: Vec<DatasetSource> =
+        (0..TENANTS).map(|i| tiny(&format!("stress{i}"), 100 + i as u64)).collect();
+    // Ground truth per dataset, from an independent session.
+    let direct = Session::new();
+    let expected: Vec<String> = sources
+        .iter()
+        .map(|src| {
+            direct.run(&JobSpec::new(ImplId::SclHash, src.clone())).unwrap().to_json_stable()
+        })
+        .collect();
+
+    let svc = SimService::start(
+        Session::new(),
+        SimServiceConfig {
+            workers: WORKERS,
+            queue_depth: DEPTH,
+            backpressure: Backpressure::Block,
+            ..SimServiceConfig::default()
+        },
+    )
+    .unwrap();
+
+    std::thread::scope(|scope| {
+        for (i, src) in sources.iter().enumerate() {
+            let svc = &svc;
+            let expected = expected[i].as_str();
+            scope.spawn(move || {
+                let tenant = format!("t{i}");
+                let handles: Vec<_> = (0..JOBS)
+                    .map(|_| svc.submit(&tenant, JobSpec::new(ImplId::SclHash, src.clone())).unwrap())
+                    .collect();
+                for h in handles {
+                    assert_eq!(h.wait().unwrap().to_json_stable(), expected, "tenant {i}");
+                }
+            });
+        }
+    });
+
+    let stats = svc.stats();
+    assert_eq!(stats.admitted, (TENANTS * JOBS) as u64);
+    assert_eq!(stats.completed, (TENANTS * JOBS) as u64);
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.failed, 0);
+    assert!(
+        stats.slots_high_water <= WORKERS as u64,
+        "core-slot budget exceeded: {} > {WORKERS}",
+        stats.slots_high_water
+    );
+    assert!(
+        stats.queue_depth_high_water <= DEPTH as u64,
+        "queue bound exceeded: {} > {DEPTH}",
+        stats.queue_depth_high_water
+    );
+    assert_eq!(stats.tenants.len(), TENANTS);
+    for t in &stats.tenants {
+        assert_eq!(t.served, JOBS as u64, "tenant {} served count", t.tenant);
+    }
+}
+
+/// `Backpressure::Reject` fires at exactly the configured depth, with the
+/// typed `QueueFull` error, and the service still drains the admitted jobs.
+#[test]
+fn reject_fires_at_exactly_the_configured_depth() {
+    const DEPTH: usize = 5;
+    let svc = SimService::start(
+        Session::new(),
+        SimServiceConfig {
+            workers: 1,
+            queue_depth: DEPTH,
+            backpressure: Backpressure::Reject,
+            ..SimServiceConfig::default()
+        },
+    )
+    .unwrap();
+    // Paused pool: nothing dispatches, so the pending depth is exact.
+    svc.pause();
+
+    let src = tiny("reject", 7);
+    let handles: Vec<_> = (0..DEPTH)
+        .map(|_| svc.submit("t0", JobSpec::new(ImplId::SclHash, src.clone())).unwrap())
+        .collect();
+
+    let err = svc.submit("t0", JobSpec::new(ImplId::SclHash, src.clone())).unwrap_err();
+    let qf = err.downcast_ref::<QueueFull>().expect("typed QueueFull error");
+    assert_eq!(*qf, QueueFull { depth: DEPTH });
+    assert!(err.to_string().contains("job queue full (5 pending jobs)"), "{err}");
+
+    let stats = svc.stats();
+    assert_eq!(stats.admitted, DEPTH as u64);
+    assert_eq!(stats.rejected, 1);
+
+    svc.resume();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    assert_eq!(svc.stats().completed, DEPTH as u64);
+}
+
+/// DRR fairness, pinned exactly: on a 1-worker pool (completion order ==
+/// dispatch order) with quantum == job cost, tenants weighted 1/2/4 are
+/// served 1/2/4 jobs per round — every 7-dispatch window of the backlogged
+/// phase splits exactly along the weights.
+#[test]
+fn drr_serves_backlogged_tenants_in_weight_ratio() {
+    const JOBS: usize = 20;
+    let svc = SimService::start(
+        Session::new(),
+        SimServiceConfig {
+            workers: 1,
+            queue_depth: 3 * JOBS,
+            backpressure: Backpressure::Block,
+            quantum: 1024,
+            default_cost: 1024, // every job costs exactly one quantum
+            tenant_weights: vec![
+                ("a".to_string(), 1),
+                ("b".to_string(), 2),
+                ("c".to_string(), 4),
+            ],
+            ..SimServiceConfig::default()
+        },
+    )
+    .unwrap();
+    svc.pause();
+
+    let src = tiny("drr", 21);
+    let mut handles = Vec::new();
+    for tenant in ["a", "b", "c"] {
+        for _ in 0..JOBS {
+            handles
+                .push((tenant, svc.submit(tenant, JobSpec::new(ImplId::SclHash, src.clone())).unwrap()));
+        }
+    }
+    svc.resume();
+
+    // `wait()` consumes a handle, but the seq must be read from it — so
+    // join on the pool counter and then read every seq by reference.
+    loop {
+        let s = svc.stats();
+        if s.completed + s.failed == (3 * JOBS) as u64 {
+            assert_eq!(s.failed, 0, "no job may fail: {s:?}");
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    let mut seqs: Vec<(u64, &str)> = handles
+        .iter()
+        .map(|(tenant, h)| (h.completion_seq().expect("finished job has a seq"), *tenant))
+        .collect();
+    seqs.sort_unstable();
+    assert_eq!(seqs.len(), 3 * JOBS);
+    assert_eq!(seqs.last().unwrap().0, (3 * JOBS - 1) as u64, "seqs are dense 0..N");
+
+    // All three tenants stay backlogged through 5 full rounds (c, weight 4,
+    // drains fastest: 20 jobs / 4 per round). Each round serves a:1 b:2 c:4.
+    for round in 1..=5usize {
+        let window = &seqs[..7 * round];
+        let count = |t: &str| window.iter().filter(|(_, tn)| *tn == t).count();
+        assert_eq!(count("a"), round, "tenant a after {round} rounds: {seqs:?}");
+        assert_eq!(count("b"), 2 * round, "tenant b after {round} rounds");
+        assert_eq!(count("c"), 4 * round, "tenant c after {round} rounds");
+    }
+
+    let stats = svc.stats();
+    let by_name: Vec<(String, u32, u64)> =
+        stats.tenants.iter().map(|t| (t.tenant.clone(), t.weight, t.served)).collect();
+    assert_eq!(
+        by_name,
+        vec![
+            ("a".to_string(), 1, JOBS as u64),
+            ("b".to_string(), 2, JOBS as u64),
+            ("c".to_string(), 4, JOBS as u64),
+        ]
+    );
+}
+
+/// Minimal hand-rolled executor machinery for the `Future` tests.
+mod exec {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::task::{Wake, Waker};
+    use std::thread::Thread;
+
+    pub struct ThreadWaker {
+        thread: Thread,
+        pub wakes: AtomicUsize,
+    }
+
+    impl ThreadWaker {
+        pub fn pair() -> (Arc<ThreadWaker>, Waker) {
+            let tw = Arc::new(ThreadWaker {
+                thread: std::thread::current(),
+                wakes: AtomicUsize::new(0),
+            });
+            (tw.clone(), Waker::from(tw))
+        }
+    }
+
+    impl Wake for ThreadWaker {
+        fn wake(self: Arc<Self>) {
+            self.wakes.fetch_add(1, Ordering::SeqCst);
+            self.thread.unpark();
+        }
+    }
+}
+
+/// `JobHandle` is a real `Future`: pollable with a bare `Waker`, no async
+/// runtime anywhere. Pending while queued, woken on completion, Ready with
+/// the result — and a post-poll `wait()` reports the result as consumed.
+#[test]
+fn handles_can_be_awaited_without_a_runtime() {
+    use std::future::Future;
+    use std::pin::Pin;
+    use std::sync::atomic::Ordering;
+    use std::task::{Context, Poll};
+
+    let svc = SimService::start(
+        Session::new(),
+        SimServiceConfig { workers: 1, ..SimServiceConfig::default() },
+    )
+    .unwrap();
+    svc.pause();
+    let mut h = svc.submit("t0", JobSpec::new(ImplId::SclHash, tiny("await", 31))).unwrap();
+
+    let (tw, waker) = exec::ThreadWaker::pair();
+    let mut cx = Context::from_waker(&waker);
+    assert!(Pin::new(&mut h).poll(&mut cx).is_pending(), "job cannot finish on a paused pool");
+    assert_eq!(tw.wakes.load(Ordering::SeqCst), 0);
+
+    svc.resume();
+    // Park until the service's completion path calls our waker.
+    while tw.wakes.load(Ordering::SeqCst) == 0 {
+        std::thread::park_timeout(std::time::Duration::from_millis(50));
+    }
+    match Pin::new(&mut h).poll(&mut cx) {
+        Poll::Ready(r) => assert!(r.is_ok(), "{r:?}"),
+        Poll::Pending => panic!("woken future must be ready"),
+    }
+    // The poll consumed the one-shot result; the blocking join says so.
+    let err = h.wait().unwrap_err();
+    assert!(err.to_string().contains("already taken"), "{err}");
+}
+
+/// `submit_suite` streams every cell as it lands, and `collect_ordered`
+/// reassembles the exact `Session::run_suite` output (same results, same
+/// spec order) — one scheduler, two consumption styles.
+#[test]
+fn suite_streams_and_collects_in_spec_order() {
+    let spec = SuiteSpec {
+        datasets: vec![tiny("s0", 41), tiny("s1", 42)],
+        impls: vec![ImplId::SclHash, ImplId::Spz],
+        scale: 1.0,
+        threads: 2,
+        verify: true,
+        ..SuiteSpec::default()
+    };
+
+    let svc = SimService::start(
+        Session::new(),
+        SimServiceConfig { workers: 2, ..SimServiceConfig::default() },
+    )
+    .unwrap();
+
+    // Streaming: exactly total() items, indices covering the grid, all Ok.
+    let sweep = svc.submit_suite("tenant-a", &spec).unwrap();
+    assert_eq!(sweep.total(), 4);
+    let mut seen: Vec<usize> = sweep
+        .results()
+        .map(|(idx, r)| {
+            r.unwrap();
+            idx
+        })
+        .collect();
+    seen.sort_unstable();
+    assert_eq!(seen, vec![0, 1, 2, 3]);
+
+    // Ordered collection == the classic API, byte for byte.
+    let via_service = svc.submit_suite("tenant-a", &spec).unwrap().collect_ordered().unwrap();
+    let classic = Session::new().run_suite(&spec).unwrap();
+    assert_eq!(via_service.results.len(), classic.results.len());
+    for (a, b) in via_service.results.iter().zip(&classic.results) {
+        assert_eq!(a.to_json_stable(), b.to_json_stable());
+        assert_eq!(a.dataset, b.dataset);
+        assert_eq!(a.impl_id, b.impl_id);
+    }
+    assert_eq!(via_service.dataset_stats.len(), 2);
+}
+
+/// `SuiteSpec.threads == 0` is a hard error now, not a silent clamp.
+#[test]
+fn zero_threads_suite_is_an_error_not_a_clamp() {
+    let spec = SuiteSpec {
+        datasets: vec![tiny("z", 5)],
+        impls: vec![ImplId::SclHash],
+        scale: 1.0,
+        threads: 0,
+        verify: false,
+        ..SuiteSpec::default()
+    };
+    let err = Session::new().run_suite(&spec).unwrap_err();
+    assert!(err.to_string().contains("SuiteSpec.threads must be at least 1"), "{err}");
+}
+
+/// Dropping the service fails still-queued handles deterministically instead
+/// of hanging their waiters; in-flight work is never aborted mid-simulation.
+#[test]
+fn dropping_the_service_fails_still_queued_jobs() {
+    let svc = SimService::start(
+        Session::new(),
+        SimServiceConfig { workers: 1, ..SimServiceConfig::default() },
+    )
+    .unwrap();
+    svc.pause();
+    let src = tiny("drop", 55);
+    let handles: Vec<_> = (0..3)
+        .map(|_| svc.submit("t0", JobSpec::new(ImplId::SclHash, src.clone())).unwrap())
+        .collect();
+    drop(svc);
+    for h in handles {
+        let err = h.wait().unwrap_err();
+        assert!(err.to_string().contains("service shut down before the job ran"), "{err}");
+    }
+}
+
+/// Submitting a 0-core job is a submit-time error (admission validates the
+/// spec like `Session::run` does), and the string `Backpressure` parser used
+/// by the CLI round-trips both modes.
+#[test]
+fn admission_validates_specs_and_backpressure_parses() {
+    let svc = SimService::start(Session::new(), SimServiceConfig::default()).unwrap();
+    let mut bad = JobSpec::new(ImplId::SclHash, tiny("bad", 3));
+    bad.cores = 0;
+    let err = svc.submit("t0", bad).unwrap_err();
+    assert!(err.to_string().contains("cores must be at least 1"), "{err}");
+
+    assert_eq!("reject".parse::<Backpressure>().unwrap(), Backpressure::Reject);
+    assert_eq!("block".parse::<Backpressure>().unwrap(), Backpressure::Block);
+    assert!("drop".parse::<Backpressure>().is_err());
+}
