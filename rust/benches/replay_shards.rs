@@ -1,0 +1,68 @@
+//! Bench: sharded replay wall-time — the `ReplayEngine` run in isolation
+//! (no phase-1 simulation) over a deterministic synthetic coherence-heavy
+//! trace set, at 1/2/4/8 shards. Every shard count is asserted bit-identical
+//! to serial before it is timed, so a speedup can never be bought with a
+//! results drift.
+//!
+//! `SPZ_BENCH_EVENTS` scales the per-core event count (default 300k);
+//! `SPZ_BENCH_REPS` the repetitions. Medians land in `BENCH_replay.json`
+//! via `tools/perf_baseline.py record`.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use sparsezipper::config::SharedMemConfig;
+use sparsezipper::mem::{replay, TraceBuf, TraceEvent, TraceKind};
+use sparsezipper::SystemConfig;
+
+/// Deterministic per-core trace: a streaming sweep interleaved with writes
+/// into a shared hot window (every core touches the same `hot` lines, so
+/// the replay sees upgrades, invalidations, forwards, and demand misses —
+/// the full merge-phase workload, not a hit-only fast path).
+fn synth_traces(cores: usize, events: usize) -> Vec<TraceBuf> {
+    let hot = 4096u64;
+    (0..cores)
+        .map(|c| {
+            let mut buf = TraceBuf::new();
+            let mut x = 0x9e3779b97f4a7c15u64.wrapping_mul(c as u64 + 1) | 1;
+            for i in 0..events {
+                // xorshift64* — cheap, deterministic, and seeded per core.
+                x ^= x >> 12;
+                x ^= x << 25;
+                x ^= x >> 27;
+                let r = x.wrapping_mul(0x2545f4914f6cdd1d);
+                let (line, write) = if r % 3 == 0 {
+                    (1 << 30 | (r >> 8) % hot, r % 2 == 0) // shared hot window
+                } else {
+                    ((c as u64) << 24 | i as u64, false) // private stream
+                };
+                let shadow_hit = r % 5 == 0;
+                let e = TraceEvent::new(line, TraceKind::Demand, write, shadow_hit, !shadow_hit, 2);
+                buf.push(e, i as f64 * 4.0);
+            }
+            buf
+        })
+        .collect()
+}
+
+fn main() {
+    let events: usize = std::env::var("SPZ_BENCH_EVENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300_000);
+    let reps = bench_util::reps();
+    let cores = 8;
+    let sys = SystemConfig::default();
+    let traces = synth_traces(cores, events);
+    println!("== replay shards ({cores} cores x {events} events) ==");
+
+    let serial = replay(&sys.mem, &sys.shared, &traces);
+    for shards in [1usize, 2, 4, 8] {
+        let cfg = SharedMemConfig { replay_shards: shards, ..sys.shared };
+        // Correctness gate first: the knob must not move a single bit.
+        assert_eq!(replay(&sys.mem, &cfg, &traces), serial, "shards={shards} diverged");
+        bench_util::bench(&format!("replay shards={shards}"), reps, || {
+            std::hint::black_box(replay(&sys.mem, &cfg, &traces));
+        });
+    }
+}

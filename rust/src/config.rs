@@ -88,6 +88,18 @@ pub struct SharedMemConfig {
     /// stall correction (the cycles the next iteration would reclassify)
     /// falls to or below this many cycles.
     pub replay_epsilon: f64,
+    /// Worker shards the replay engine spreads each pass across (`spz ...
+    /// --replay-shards N`). Lines partition by `line % replay_shards`, a
+    /// power of two that divides the LLC set count, so every shard owns a
+    /// disjoint slice of LLC sets, directory lines, and demotion triggers;
+    /// the order-coupled accounting (queue tails, DRAM banks, every float
+    /// accumulation) stays in a serial canonical-order merge pass consuming
+    /// the shards' discrete outcomes. The result is **bit-identical at
+    /// every shard count** — sharding is purely a wall-clock knob, which is
+    /// why it never appears in the JSON exports. Must be a power of two in
+    /// `1..=64` ([`SharedMemConfig::validate`] rejects anything else; the
+    /// engine never clamps).
+    pub replay_shards: usize,
     /// Shared LLC capacity policy: `true` models a sliced LLC whose
     /// capacity scales with the active core count — each core brings its
     /// Table II slice, added as extra sets (power-of-two slicings; odd core
@@ -150,6 +162,7 @@ impl Default for SharedMemConfig {
             row_conflict_cycles: 50.0,
             max_replay_iters: 2,
             replay_epsilon: 1e-6,
+            replay_shards: 1,
             llc_sliced: true,
             llc_service_cycles: 2.0,
             dram_transfer_cycles: DRAM_BW_CYCLES,
@@ -184,6 +197,23 @@ impl SharedMemConfig {
             self.row_buffer_lines >= 1,
             "SharedMemConfig.row_buffer_lines must be at least 1 (got {})",
             self.row_buffer_lines
+        );
+        anyhow::ensure!(
+            self.max_replay_iters >= 1,
+            "SharedMemConfig.max_replay_iters must be at least 1 (got {}); use 1 to \
+             select the one-shot model",
+            self.max_replay_iters
+        );
+        anyhow::ensure!(
+            self.replay_epsilon >= 0.0 && self.replay_epsilon.is_finite(),
+            "SharedMemConfig.replay_epsilon must be finite and non-negative (got {})",
+            self.replay_epsilon
+        );
+        anyhow::ensure!(
+            (1..=64).contains(&self.replay_shards) && self.replay_shards.is_power_of_two(),
+            "SharedMemConfig.replay_shards must be a power of two between 1 and 64 \
+             (got {}): the line partition must tile the power-of-two LLC set index",
+            self.replay_shards
         );
         anyhow::ensure!(
             (1..=MAX_SOCKETS).contains(&self.sockets),
@@ -490,5 +520,16 @@ mod tests {
                 .validate()
                 .is_err()
         );
+        // The iteration budget and epsilon are validated, never clamped.
+        assert!(SharedMemConfig { max_replay_iters: 0, ..base }.validate().is_err());
+        assert!(SharedMemConfig { replay_epsilon: -1.0, ..base }.validate().is_err());
+        assert!(SharedMemConfig { replay_epsilon: f64::NAN, ..base }.validate().is_err());
+        // Shard counts: powers of two in 1..=64 only.
+        assert!(SharedMemConfig { replay_shards: 0, ..base }.validate().is_err());
+        assert!(SharedMemConfig { replay_shards: 3, ..base }.validate().is_err());
+        assert!(SharedMemConfig { replay_shards: 128, ..base }.validate().is_err());
+        for s in [1usize, 2, 4, 8, 16, 32, 64] {
+            assert!(SharedMemConfig { replay_shards: s, ..base }.validate().is_ok(), "{s}");
+        }
     }
 }

@@ -81,31 +81,31 @@ fn parse_argv(args: &[String]) -> Result<Args> {
 fn allowed_opts(cmd: &str) -> &'static [&'static str] {
     const SUITE: &[&str] = &[
         "scale", "threads", "datasets", "engine", "artifacts", "mtx-dir", "out-dir", "cores",
-        "sched", "sockets",
+        "sched", "sockets", "replay-shards",
     ];
     match cmd {
         // Only fig8/all honor --impls; the other figures fix their own
         // implementation set, so accepting it would silently discard it.
         "fig8" | "all" => &[
             "scale", "threads", "datasets", "impls", "engine", "artifacts", "mtx-dir", "out-dir",
-            "cores", "sched", "sockets",
+            "cores", "sched", "sockets", "replay-shards",
         ],
         "table3" | "fig9" | "fig10" | "fig11" => SUITE,
         // fig12 sweeps a *list* of core counts and, by default, every
         // scheduler; --sched narrows it to a comma list.
         "fig12" => &[
             "scale", "datasets", "impl", "cores", "sched", "engine", "artifacts", "mtx-dir",
-            "out-dir", "sockets",
+            "out-dir", "sockets", "replay-shards",
         ],
         "run" => &[
             "dataset", "impl", "scale", "engine", "artifacts", "mtx-dir", "cores", "sched",
-            "sockets",
+            "sockets", "replay-shards",
         ],
         // mem runs one multi-core job and renders the shared-memory report
         // (per-core LLC/coherence/queueing + DRAM channel occupancy).
         "mem" => &[
             "dataset", "impl", "scale", "engine", "artifacts", "mtx-dir", "cores", "sched",
-            "channels", "sockets", "out-dir",
+            "channels", "sockets", "replay-shards", "out-dir",
         ],
         // ablate sweeps are engine-independent (hardwired NativeEngine).
         "ablate" => &["dataset", "scale", "mtx-dir", "out-dir"],
@@ -116,6 +116,7 @@ fn allowed_opts(cmd: &str) -> &'static [&'static str] {
         "serve-demo" => &[
             "tenants", "jobs", "workers", "depth", "backpressure", "weights", "dataset", "impl",
             "scale", "cores", "sched", "engine", "artifacts", "mtx-dir", "out-dir",
+            "replay-shards",
         ],
         _ => &[],
     }
@@ -146,16 +147,19 @@ fn print_help() {
          \x20   --mtx-dir DIR --out-dir DIR --artifacts DIR --verify --quiet --json\n\
          \x20   --cores N --sched static|work-stealing|ws-dyn|ws-bw|ws-numa (simulated\n\
          \x20   multi-core) --sockets N (NUMA sockets; channels split into per-socket groups)\n\
-         \x20   (fig8 and all also take --impls a,b)\n\
+         \x20   --replay-shards N (parallel deterministic replay; power of two, results\n\
+         \x20   bit-identical at any value) (fig8 and all also take --impls a,b)\n\
          run:    --dataset NAME [--impl NAME] [--scale F] [--engine native|xla]\n\
          \x20       [--mtx-dir DIR] [--artifacts DIR] [--cores N] [--sched S] [--sockets N]\n\
-         \x20       [--verify] [--json]\n\
+         \x20       [--replay-shards N] [--verify] [--json]\n\
          mem:    --dataset NAME [--impl NAME] [--cores N] [--sched S] [--channels N]\n\
-         \x20       [--sockets N] [--scale F] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
+         \x20       [--sockets N] [--replay-shards N] [--scale F] [--mtx-dir DIR]\n\
+         \x20       [--out-dir DIR] [--quiet]\n\
          \x20       (shared-memory report: per-core LLC/coherence/queueing + banked DRAM\n\
          \x20        channels + NUMA remote traffic + iterative-replay convergence)\n\
-         fig12:  [--impl NAME] [--cores 1,2,4,8] [--sched a,b] [--sockets N] [--scale F]\n\
-         \x20       [--datasets a,b] [--engine E] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
+         fig12:  [--impl NAME] [--cores 1,2,4,8] [--sched a,b] [--sockets N]\n\
+         \x20       [--replay-shards N] [--scale F] [--datasets a,b] [--engine E]\n\
+         \x20       [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          ablate: [--dataset NAME] [--scale F] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          gen:    --dataset NAME --out FILE.mtx [--scale F]\n\
          table4: [--sweep] [--out-dir DIR] [--quiet]\n\
@@ -188,9 +192,15 @@ fn session_config(a: &Args) -> Result<SessionConfig> {
     if let Some(s) = a.opts.get("sockets") {
         cfg.sys.shared.sockets = s.parse().context("--sockets")?;
     }
-    if a.opts.contains_key("sockets") || a.opts.contains_key("channels") {
-        // Validate at the argv boundary (like --cores) so a bad topology is
-        // a clean CLI error, not a deep replay panic.
+    // --replay-shards parallelizes the deterministic replay; results are
+    // bit-identical at any value (a pure wall-clock knob, which is why it
+    // never appears in the JSON exports).
+    if let Some(s) = a.opts.get("replay-shards") {
+        cfg.sys.shared.replay_shards = s.parse().context("--replay-shards")?;
+    }
+    if ["sockets", "channels", "replay-shards"].iter().any(|k| a.opts.contains_key(*k)) {
+        // Validate at the argv boundary (like --cores) so a bad topology or
+        // shard count is a clean CLI error, not a deep replay panic.
         cfg.sys.shared.validate()?;
     }
     Ok(cfg)
@@ -850,6 +860,33 @@ mod tests {
         assert!(session_config(&a).is_err(), "3 channels cannot split across 2 sockets");
         // gen/table4 do not take --sockets.
         assert!(parse_argv(&v(&["gen", "--sockets", "2"])).is_err());
+    }
+
+    #[test]
+    fn replay_shards_option_parses_and_validates() {
+        // --replay-shards rides the same session_config path as --sockets:
+        // accepted by every command that runs the replay, validated (not
+        // clamped) at the argv boundary.
+        for cmd in [
+            vec!["run", "--replay-shards", "8"],
+            vec!["mem", "--dataset", "p2p", "--replay-shards", "8"],
+            vec!["fig12", "--replay-shards", "8"],
+            vec!["fig8", "--replay-shards", "8"],
+            vec!["serve-demo", "--replay-shards", "8"],
+        ] {
+            let a = parse_argv(&v(&cmd)).unwrap();
+            let cfg = session_config(&a).unwrap();
+            assert_eq!(cfg.sys.shared.replay_shards, 8, "{cmd:?}");
+        }
+        // Zero and non-power-of-two shard counts are clean CLI errors.
+        for bad in ["0", "3", "128"] {
+            let a = parse_argv(&v(&["run", "--replay-shards", bad])).unwrap();
+            let e = format!("{:#}", session_config(&a).unwrap_err());
+            assert!(e.contains("replay_shards"), "--replay-shards {bad}: {e}");
+        }
+        // gen/table4 never replay, so they do not take the knob.
+        assert!(parse_argv(&v(&["gen", "--replay-shards", "4"])).is_err());
+        assert!(parse_argv(&v(&["table4", "--replay-shards", "4"])).is_err());
     }
 
     #[test]

@@ -118,6 +118,15 @@ impl Cache {
         self.evictions = 0;
         self.writebacks = 0;
     }
+
+    /// Return to the just-constructed state (all lines invalid, stats zero)
+    /// without reallocating — the replay engine reuses its per-shard LLC
+    /// replicas across iteration passes.
+    pub fn reset(&mut self) {
+        self.tags.iter_mut().for_each(|t| *t = u64::MAX);
+        self.dirty.iter_mut().for_each(|d| *d = false);
+        self.reset_stats();
+    }
 }
 
 #[cfg(test)]
@@ -200,6 +209,24 @@ mod tests {
             let (hit, _) = c.access_line(line, false);
             assert!(hit);
         }
+    }
+
+    #[test]
+    fn reset_restores_the_constructed_state() {
+        let mut c = tiny();
+        c.access_line(0, true);
+        c.access_line(4, false);
+        c.access_line(8, false); // evicts dirty 0
+        assert!(c.resident_lines() > 0);
+        c.reset();
+        assert_eq!(c.resident_lines(), 0);
+        assert_eq!(c.accesses + c.hits + c.misses + c.evictions + c.writebacks, 0);
+        // No stale dirty bit: refilling and evicting line 0's set must not
+        // write back a line the reset already dropped.
+        c.access_line(0, false);
+        c.access_line(4, false);
+        let (_, wb) = c.access_line(8, false);
+        assert_eq!(wb, None);
     }
 
     #[test]

@@ -76,6 +76,40 @@
 //! identical geometry, so predictions never diverge and every cost class
 //! vanishes — the differential tests pin that the 1-core model reproduces
 //! the seed cycle-for-cycle.
+//!
+//! ## Sharded execution (`replay_shards`)
+//!
+//! The replay is the hot path of every multi-core job, and most of its
+//! per-event cost is *line-local*: the LLC way scan, the directory lookup,
+//! and the demotion-trigger bookkeeping all depend only on earlier events
+//! touching the **same line's** state. Each pass therefore splits into two
+//! sub-phases:
+//!
+//! 1. **Shard phase** (parallel across
+//!    [`crate::config::SharedMemConfig::replay_shards`] scoped threads):
+//!    lines partition by `line % replay_shards`. Because the shard count is
+//!    a power of two no larger than the LLC set count, and the set index is
+//!    `line & (sets - 1)`, every LLC set — and every directory line and
+//!    trigger map entry — belongs to exactly one shard, so each shard's
+//!    full-geometry LLC/directory replica evolves exactly as the serial
+//!    structures restricted to its lines. Each shard walks its slice of the
+//!    canonical order and emits one discrete [`EventOutcome`] per demand
+//!    event (hit/miss, invalidated sharers, forward hops, demotion flags).
+//!    **No floating-point accumulation happens here.**
+//! 2. **Merge phase** (serial, canonical order): walks the full interleaved
+//!    order, consumes each event's outcome through a per-shard cursor, and
+//!    performs every order-coupled update — occupancy tails, DRAM
+//!    bank/row-buffer state, and **all** `f64` accumulation — in exactly
+//!    the order the serial engine used.
+//!
+//! Float addition is not associative, so the split is what makes the result
+//! **bit-identical at every shard count** (1 shard runs the same two-phase
+//! code inline): shards only ever produce discrete facts, and the merge
+//! adds cycles in one canonical sequence. Sharding is purely a wall-clock
+//! knob — which is also why `replay_shards` never appears in the JSON
+//! exports. The per-run [`Scratch`] arena (canonical order, shard
+//! partition, shard LLC/directory replicas, bank/occupancy vectors) is
+//! allocated once and reused across iteration passes.
 
 use crate::config::{MemConfig, SharedMemConfig, DRAM_BW_CYCLES};
 use crate::mem::cache::Cache;
@@ -255,6 +289,122 @@ struct Pass {
     pending: f64,
 }
 
+/// Every discrete fact a shard's line-local replay of one demand event
+/// hands the merge pass: the shared-LLC outcome, the coherence transitions,
+/// and the demotion classification. Deliberately contains no `f64` — all
+/// cycle accumulation happens in the serial merge, in canonical order, so
+/// the result cannot depend on the shard count.
+#[derive(Clone, Copy, Default)]
+struct EventOutcome {
+    /// Sharers a write-upgrade invalidated (0 = no upgrade happened).
+    inval_mask: u64,
+    /// Shared-LLC lookup outcome.
+    hit: bool,
+    /// Max hop distance to the invalidated sharers (upgrade round-trip).
+    coh_hops: u8,
+    /// The read hit dirty data last written by another core.
+    fwd: bool,
+    /// Hop distance to that forwarding owner's socket.
+    fwd_hops: u8,
+    /// Demotion on a line an earlier pass already invalidated (pays the
+    /// bandwidth floor only).
+    demote_invalidated: bool,
+    /// Repeat demotion within this pass whose exposure penalty the next
+    /// pass would drop (feeds the pending correction).
+    demote_repeat: bool,
+}
+
+/// One shard's private replay state: a full-geometry LLC replica and
+/// directory that only ever see this shard's lines (whole sets are
+/// shard-private — see the module docs), the shard's slice of the demotion
+/// trigger maps, and the outcome stream it feeds the merge. Reused across
+/// iteration passes via [`ShardState::reset`].
+struct ShardState {
+    llc: Cache,
+    directory: HashMap<u64, LineState>,
+    /// Per-core demotion trigger points for lines this shard owns.
+    triggers: Vec<InvalMap>,
+    /// One entry per demand event of this shard, in canonical order.
+    outcomes: Vec<EventOutcome>,
+}
+
+impl ShardState {
+    fn reset(&mut self) {
+        self.llc.reset();
+        self.directory.clear();
+        for t in &mut self.triggers {
+            t.clear();
+        }
+        self.outcomes.clear();
+    }
+}
+
+/// The per-run replay arena: everything allocated once in [`ReplayEngine::
+/// run`] and reused by every iteration pass — the canonical order, the
+/// per-shard position partition, the shard LLC/directory replicas, and the
+/// merge phase's occupancy/bank scratch vectors.
+struct Scratch {
+    /// Canonical `(time, core, index)` interleaving, computed once per run.
+    order: Vec<(f64, u32, u32)>,
+    /// Canonical positions owned by each shard (`line % shards`).
+    shard_pos: Vec<Vec<u32>>,
+    states: Vec<ShardState>,
+    /// Socket of each core (locates the remote party of coherence events).
+    core_socket: Vec<usize>,
+    // --- merge-phase scratch, reset at the start of every pass ---
+    /// Next unconsumed outcome per shard.
+    cursor: Vec<usize>,
+    /// Shared-LLC tag-pipeline occupancy tail per core.
+    llc_busy: Vec<f64>,
+    /// DRAM transfer occupancy tail per channel per core.
+    chan_busy: Vec<Vec<f64>>,
+    /// Shared bank state (all cores interleaved).
+    bank: Vec<BankState>,
+    /// Per-core shadow bank state (the core running alone).
+    shadow_bank: Vec<Vec<u64>>,
+}
+
+impl Scratch {
+    fn reset_merge(&mut self) {
+        self.cursor.iter_mut().for_each(|x| *x = 0);
+        self.llc_busy.iter_mut().for_each(|x| *x = 0.0);
+        for cb in &mut self.chan_busy {
+            cb.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.bank
+            .iter_mut()
+            .for_each(|b| *b = BankState { open_row: NO_ROW, owner: NO_OWNER });
+        for sb in &mut self.shadow_bank {
+            sb.iter_mut().for_each(|r| *r = NO_ROW);
+        }
+    }
+}
+
+/// The shared LLC's geometry for `cores` active cores. In sliced mode every
+/// active core brings one Table II slice of capacity, scaled through the
+/// *set count* (power-of-two slices keep the sets a power of two and the
+/// per-lookup way scan O(base ways)); odd core counts round up to the next
+/// power-of-two slicing via a second way bank. At 1 core both modes are
+/// exactly the shadow geometry.
+fn scaled_llc_cfg(
+    mem: &MemConfig,
+    cfg: &SharedMemConfig,
+    cores: usize,
+) -> crate::config::CacheConfig {
+    let mut llc_cfg = mem.llc;
+    if cfg.llc_sliced {
+        let sets_scale = if cores.is_power_of_two() {
+            cores
+        } else {
+            cores.next_power_of_two() / 2
+        };
+        let ways_scale = cores.div_ceil(sets_scale);
+        llc_cfg.size_bytes *= sets_scale * ways_scale;
+        llc_cfg.ways *= ways_scale;
+    }
+    llc_cfg
+}
+
 /// The iterative trace-replay engine (see the module docs). Construct with
 /// [`ReplayEngine::new`] and call [`ReplayEngine::run`]; the free function
 /// [`replay`] is the one-call convenience wrapper.
@@ -291,19 +441,12 @@ impl<'a> ReplayEngine<'a> {
     /// line's owner, an upgrade's sharers). The requester's own socket is
     /// read per event (events are self-describing), so a trace whose stamps
     /// vary mid-stream still prices each access correctly. Cores with empty
-    /// traces — and any stamp a hand-built trace put out of range — resolve
-    /// to socket 0 / the last socket, so the distance math can never leave
-    /// `[0, sockets)`.
+    /// traces resolve to socket 0; every stamp is validated against the
+    /// topology when the canonical order is built (no silent clamping).
     fn core_sockets(&self) -> Vec<usize> {
-        let sockets = self.cfg.sockets.max(1);
         self.traces
             .iter()
-            .map(|t| {
-                t.iter()
-                    .next()
-                    .map(|e| (e.socket() as usize).min(sockets - 1))
-                    .unwrap_or(0)
-            })
+            .map(|t| t.iter().next().map(|e| e.socket() as usize).unwrap_or(0))
             .collect()
     }
 
@@ -312,13 +455,15 @@ impl<'a> ReplayEngine<'a> {
     /// the final pass's outcome with `replay_iters`/`replay_residual`
     /// stamped on every core's [`SharedStats`].
     pub fn run(&self) -> ReplayOutcome {
-        let order = self.merge_order();
         let cores = self.traces.len();
-        let max_iters = self.cfg.max_replay_iters.max(1);
-        let eps = self.cfg.replay_epsilon.max(0.0);
+        // Both guaranteed by `SharedMemConfig::validate` in `new` — used
+        // directly, never clamped.
+        let max_iters = self.cfg.max_replay_iters;
+        let eps = self.cfg.replay_epsilon;
 
+        let mut scratch = self.scratch();
         let mut inval: Vec<InvalMap> = vec![InvalMap::new(); cores];
-        let mut pass = self.pass(&order, &inval);
+        let mut pass = self.pass(&mut scratch, &inval);
         let mut iters = 1u32;
         while pass.pending > eps && iters < max_iters {
             // Fold this pass's demotion points into the invalidation set
@@ -329,7 +474,7 @@ impl<'a> ReplayEngine<'a> {
                     *e = (*e).min(pos);
                 }
             }
-            pass = self.pass(&order, &inval);
+            pass = self.pass(&mut scratch, &inval);
             iters += 1;
         }
         let mut outcome = pass.outcome;
@@ -341,107 +486,281 @@ impl<'a> ReplayEngine<'a> {
     }
 
     /// The canonical deterministic interleaving: `(time, core, index)`
-    /// sorted by local time, ties breaking toward the lower core id, then
-    /// program order. Computed once and shared by every pass.
+    /// ordered by local time, ties breaking toward the lower core id, then
+    /// program order. Built as a k-way merge of the per-core streams (each
+    /// core's decoded times are monotone, so this is O(N log cores) and
+    /// produces exactly the sequence a full sort under the same comparator
+    /// would). Computed once and shared by every pass.
+    ///
+    /// This is also the construction boundary for the self-describing
+    /// socket stamps: every event's stamp is asserted against the topology
+    /// here, once per run. A hard assert (not `debug_assert!`) because an
+    /// out-of-range stamp would wrap the ring-distance arithmetic in
+    /// release builds and charge phantom NUMA hops silently.
     fn merge_order(&self) -> Vec<(f64, u32, u32)> {
-        let total: usize = self.traces.iter().map(|t| t.len()).sum();
-        let mut order: Vec<(f64, u32, u32)> = Vec::with_capacity(total);
-        for (c, t) in self.traces.iter().enumerate() {
-            // The order entries pack per-core event indices into u32; a
-            // trace past that would need >64GB of packed events, but fail
-            // loudly rather than silently aliasing events if it happens.
-            assert!(
-                t.len() <= u32::MAX as usize,
-                "core {c}: trace of {} events overflows the replay index",
-                t.len()
-            );
-            for (i, (time, _)) in t.iter_timed().enumerate() {
-                order.push((time, c as u32, i as u32));
+        use std::cmp::{Ordering, Reverse};
+        use std::collections::BinaryHeap;
+
+        /// Head of one core's timed stream, ordered by the canonical
+        /// `(time, core, index)` key.
+        struct Head(f64, u32, u32);
+        impl PartialEq for Head {
+            fn eq(&self, o: &Head) -> bool {
+                self.cmp(o) == Ordering::Equal
             }
         }
-        order.sort_unstable_by(|&(ta, ca, ia), &(tb, cb, ib)| {
-            ta.total_cmp(&tb).then(ca.cmp(&cb)).then(ia.cmp(&ib))
-        });
+        impl Eq for Head {}
+        impl PartialOrd for Head {
+            fn partial_cmp(&self, o: &Head) -> Option<Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for Head {
+            fn cmp(&self, o: &Head) -> Ordering {
+                self.0.total_cmp(&o.0).then(self.1.cmp(&o.1)).then(self.2.cmp(&o.2))
+            }
+        }
+
+        let sockets = self.cfg.sockets;
+        let check = |c: u32, socket: u8| {
+            assert!(
+                (socket as usize) < sockets,
+                "core {c}: trace-stamped socket {socket} is out of range for \
+                 {sockets} socket(s) — stamp sockets in [0, sockets)"
+            );
+        };
+        let total: usize = self.traces.iter().map(|t| t.len()).sum();
+        // Canonical positions (and per-core event indices) pack into u32;
+        // a run past that would need >64GB of packed events, but fail
+        // loudly rather than silently aliasing events if it happens.
+        assert!(
+            total <= u32::MAX as usize,
+            "replay of {total} events overflows the canonical position index"
+        );
+        let mut streams: Vec<_> = self.traces.iter().map(|t| t.iter_timed()).collect();
+        let mut heap: BinaryHeap<Reverse<Head>> = BinaryHeap::with_capacity(streams.len());
+        for (c, s) in streams.iter_mut().enumerate() {
+            assert!(
+                self.traces[c].len() <= u32::MAX as usize,
+                "core {c}: trace of {} events overflows the replay index",
+                self.traces[c].len()
+            );
+            if let Some((time, e)) = s.next() {
+                check(c as u32, e.socket());
+                heap.push(Reverse(Head(time, c as u32, 0)));
+            }
+        }
+        let mut order: Vec<(f64, u32, u32)> = Vec::with_capacity(total);
+        while let Some(Reverse(Head(t, c, i))) = heap.pop() {
+            order.push((t, c, i));
+            if let Some((time, e)) = streams[c as usize].next() {
+                check(c, e.socket());
+                heap.push(Reverse(Head(time, c, i + 1)));
+            }
+        }
         order
     }
 
-    /// One deterministic pass over the merged traces. `inval` carries the
-    /// demotion-derived shadow invalidations of earlier passes; the pass
-    /// reports its own demotion points and the pending correction a further
-    /// pass would apply.
-    fn pass(&self, order: &[(f64, u32, u32)], inval: &[InvalMap]) -> Pass {
-        let traces = self.traces;
-        let (mem, cfg) = (self.mem, self.cfg);
-        let cores = traces.len();
-
-        // The shared LLC. Same geometry as each core's Table II shadow
-        // slice; in sliced mode every active core brings one slice of
-        // capacity. Capacity scales through the *set count* (power-of-two
-        // slices keep the sets a power of two and the per-lookup way scan
-        // O(base ways)); odd core counts round up to the next power-of-two
-        // slicing via a second way bank. At 1 core both modes are exactly
-        // the shadow geometry.
-        let mut llc_cfg = mem.llc;
-        if cfg.llc_sliced {
-            let sets_scale = if cores.is_power_of_two() {
-                cores
-            } else {
-                cores.next_power_of_two() / 2
-            };
-            let ways_scale = cores.div_ceil(sets_scale);
-            llc_cfg.size_bytes *= sets_scale * ways_scale;
-            llc_cfg.ways *= ways_scale;
+    /// Build the per-run arena: the canonical order, the shard partition of
+    /// it, one LLC/directory replica per shard, and the merge scratch.
+    fn scratch(&self) -> Scratch {
+        let cores = self.traces.len();
+        let cfg = self.cfg;
+        let order = self.merge_order();
+        let shards = cfg.replay_shards;
+        let llc_cfg = scaled_llc_cfg(self.mem, cfg, cores);
+        // The partition is only set-consistent while whole LLC sets stay
+        // shard-private (see the module docs); a hand-shrunk LLC with fewer
+        // sets than shards is a construction error, not something to clamp.
+        assert!(
+            shards <= llc_cfg.sets(),
+            "replay_shards ({shards}) must not exceed the shared LLC's {} sets: \
+             the line partition must keep whole sets shard-private",
+            llc_cfg.sets()
+        );
+        let mask = (shards - 1) as u64;
+        let mut shard_pos: Vec<Vec<u32>> = vec![Vec::new(); shards];
+        for (pos, &(_, ci, ei)) in order.iter().enumerate() {
+            let line = self.traces[ci as usize].get(ei as usize).line();
+            shard_pos[(line & mask) as usize].push(pos as u32);
         }
-        let mut llc = Cache::new(llc_cfg);
+        let states = (0..shards)
+            .map(|_| ShardState {
+                llc: Cache::new(llc_cfg),
+                directory: HashMap::new(),
+                triggers: vec![InvalMap::new(); cores],
+                outcomes: Vec::new(),
+            })
+            .collect();
+        let (channels, banks) = (cfg.dram_channels, cfg.dram_banks);
+        Scratch {
+            order,
+            shard_pos,
+            states,
+            core_socket: self.core_sockets(),
+            cursor: vec![0; shards],
+            llc_busy: vec![0.0; cores],
+            chan_busy: vec![vec![0.0; cores]; channels],
+            bank: vec![BankState { open_row: NO_ROW, owner: NO_OWNER }; channels * banks],
+            shadow_bank: vec![vec![NO_ROW; channels * banks]; cores],
+        }
+    }
 
-        // Validated in `new` — no silent clamping here.
+    /// One deterministic pass over the merged traces: the parallel shard
+    /// phase followed by the serial canonical-order merge (see the module
+    /// docs). `inval` carries the demotion-derived shadow invalidations of
+    /// earlier passes; the pass reports its own demotion points and the
+    /// pending correction a further pass would apply.
+    fn pass(&self, sc: &mut Scratch, inval: &[InvalMap]) -> Pass {
+        let traces = self.traces;
+        let cfg = self.cfg;
+        let cores = traces.len();
+        let shards = sc.states.len();
+
+        // ---- Shard phase: the line-local heavy lifting (LLC way scans,
+        // directory hashing, trigger maps), emitting discrete outcomes.
+        {
+            let order = &sc.order;
+            let core_socket = &sc.core_socket;
+            let shard_run = |state: &mut ShardState, positions: &[u32]| {
+                state.reset();
+                for &p in positions {
+                    let pos = p as usize;
+                    let (_, ci, ei) = order[pos];
+                    let c = ci as usize;
+                    let e = traces[c].get(ei as usize);
+                    let line = e.line();
+                    match e.kind() {
+                        TraceKind::Writeback => {
+                            // The install updates the shared LLC exactly as
+                            // it did the shadow and means the line has left
+                            // this core's private caches; the occupancy and
+                            // counter side live in the merge.
+                            let _ = state.llc.access_line(line, true);
+                            if let Some(st) = state.directory.get_mut(&line) {
+                                st.sharers &= !(1u64 << c);
+                                if st.owner == c as u8 {
+                                    st.owner = NO_OWNER;
+                                }
+                            }
+                        }
+                        TraceKind::Demand => {
+                            // The event's own stamp (validated at order
+                            // construction — never clamped).
+                            let my_sock = e.socket() as usize;
+                            // The lookup itself — the same fill the shadow
+                            // performed.
+                            let (hit, _victim) = state.llc.access_line(line, false);
+                            let mut o = EventOutcome { hit, ..EventOutcome::default() };
+
+                            // MESI-lite coherence bookkeeping.
+                            let st = state.directory.entry(line).or_insert(LineState {
+                                sharers: 0,
+                                owner: NO_OWNER,
+                                dirty: false,
+                            });
+                            if e.write() {
+                                let others = st.sharers & !(1u64 << c);
+                                if others != 0 {
+                                    o.inval_mask = others;
+                                    // The upgrade round-trip is bounded by
+                                    // the furthest sharer it must
+                                    // invalidate.
+                                    let mut hops = 0usize;
+                                    for (k, &sock) in core_socket.iter().enumerate() {
+                                        if (others >> k) & 1 == 1 {
+                                            hops = hops.max(cfg.socket_distance(my_sock, sock));
+                                        }
+                                    }
+                                    o.coh_hops = hops as u8;
+                                }
+                                st.sharers = 1u64 << c;
+                                st.owner = c as u8;
+                                st.dirty = true;
+                            } else {
+                                if st.dirty && st.owner != NO_OWNER && st.owner != c as u8 {
+                                    // A forward from a core on another
+                                    // socket crosses the interconnect.
+                                    o.fwd = true;
+                                    o.fwd_hops = cfg
+                                        .socket_distance(my_sock, core_socket[st.owner as usize])
+                                        as u8;
+                                    // Forwarded and downgraded to shared.
+                                    st.dirty = false;
+                                }
+                                st.sharers |= 1u64 << c;
+                            }
+
+                            if !hit && e.shadow_hit() {
+                                // Demotion classification against the
+                                // earlier passes' invalidation points and
+                                // this pass's own trigger map (both keyed
+                                // by the *global* canonical position).
+                                o.demote_invalidated =
+                                    inval[c].get(&line).map(|&q| q < pos).unwrap_or(false);
+                                match state.triggers[c].get(&line).copied() {
+                                    Some(q) if q < pos => {
+                                        if !o.demote_invalidated {
+                                            o.demote_repeat = true;
+                                        }
+                                    }
+                                    _ => {
+                                        state.triggers[c].entry(line).or_insert(pos);
+                                    }
+                                }
+                            }
+                            state.outcomes.push(o);
+                        }
+                    }
+                }
+            };
+            if shards == 1 {
+                shard_run(&mut sc.states[0], &sc.shard_pos[0]);
+            } else {
+                let shard_run = &shard_run;
+                std::thread::scope(|scope| {
+                    for (state, positions) in sc.states.iter_mut().zip(&sc.shard_pos) {
+                        scope.spawn(move || shard_run(state, positions));
+                    }
+                });
+            }
+        }
+
+        // ---- Merge phase: serial walk of the full canonical order,
+        // consuming each demand event's outcome through its shard cursor.
+        // Every f64 accumulation and every order-coupled structure (queue
+        // tails, shared/shadow banks) lives here, in exactly the sequence
+        // the serial engine used — bit-identical at any shard count.
+        sc.reset_merge();
         let channels = cfg.dram_channels;
         let banks = cfg.dram_banks;
         let row_lines = cfg.row_buffer_lines as u64;
-        let sockets = cfg.sockets.max(1);
-        // Per-core sockets for the remote parties of coherence events; the
-        // requester's socket is read off each event itself.
-        let core_socket = self.core_sockets();
-        let mut directory: HashMap<u64, LineState> = HashMap::new();
-        // Occupancy tails, split per core so a core only ever queues behind
-        // *other* cores (self-throughput is phase 1's business).
-        let mut llc_busy = vec![0.0f64; cores];
-        let mut chan_busy = vec![vec![0.0f64; cores]; channels];
+        let shard_mask = (shards - 1) as u64;
         let mut channel_busy_cycles = vec![0.0f64; channels];
-        // Shared bank state (all cores interleaved) and each core's shadow
-        // bank state (the core running alone). Identical evolution at one
-        // core, so the delta pricing is exactly zero there.
-        let mut bank = vec![BankState { open_row: NO_ROW, owner: NO_OWNER }; channels * banks];
-        let mut shadow_bank = vec![vec![NO_ROW; channels * banks]; cores];
         let mut stats = vec![SharedStats::default(); cores];
         let mut phase_stalls = vec![[0.0f64; MAX_PHASES]; cores];
-        let mut triggers: Vec<InvalMap> = vec![InvalMap::new(); cores];
         let mut pending = 0.0f64;
 
-        for (pos, &(t, ci, ei)) in order.iter().enumerate() {
+        for &(t, ci, ei) in &sc.order {
             let c = ci as usize;
             let e = traces[c].get(ei as usize);
             let line = e.line();
             match e.kind() {
                 TraceKind::Writeback => {
-                    // State + occupancy only: the write buffer hides latency,
-                    // but the install updates the shared LLC exactly as it
-                    // did the shadow, occupies the tag pipeline, and means
-                    // the line has left this core's private caches.
+                    // State + occupancy only: the write buffer hides the
+                    // latency, but the install occupies the tag pipeline.
                     stats[c].writeback_installs += 1;
-                    let (_, _victim) = llc.access_line(line, true);
-                    llc_busy[c] = t.max(llc_busy[c]) + cfg.llc_service_cycles;
-                    if let Some(st) = directory.get_mut(&line) {
-                        st.sharers &= !(1u64 << c);
-                        if st.owner == c as u8 {
-                            st.owner = NO_OWNER;
-                        }
-                    }
+                    sc.llc_busy[c] = t.max(sc.llc_busy[c]) + cfg.llc_service_cycles;
                 }
                 TraceKind::Demand => {
+                    let o = {
+                        let s = (line & shard_mask) as usize;
+                        let o = sc.states[s].outcomes[sc.cursor[s]];
+                        sc.cursor[s] += 1;
+                        o
+                    };
                     stats[c].llc_accesses += 1;
-                    // The event's own stamp (clamped like `core_sockets`).
-                    let my_sock = (e.socket() as usize).min(sockets - 1);
+                    let my_sock = e.socket() as usize;
                     let mut extra = 0.0f64;
 
                     // (1) Queue behind other cores' outstanding LLC lookups.
@@ -452,7 +771,7 @@ impl<'a> ReplayEngine<'a> {
                     // waits at most for the bounded queue (MSHRs) ahead of
                     // it.
                     let mut other = 0.0f64;
-                    for (k, &b) in llc_busy.iter().enumerate() {
+                    for (k, &b) in sc.llc_busy.iter().enumerate() {
                         if k != c && b > other {
                             other = b;
                         }
@@ -462,64 +781,38 @@ impl<'a> ReplayEngine<'a> {
                         .min((cores - 1) as f64 * cfg.llc_service_cycles);
                     stats[c].llc_queue_cycles += wait;
                     extra += wait;
-                    llc_busy[c] = t.max(llc_busy[c]).max(other) + cfg.llc_service_cycles;
+                    sc.llc_busy[c] = t.max(sc.llc_busy[c]).max(other) + cfg.llc_service_cycles;
 
-                    // (2) The lookup itself — the same fill the shadow
-                    // performed.
-                    let (hit, _victim) = llc.access_line(line, false);
-
-                    // (3) MESI-lite coherence bookkeeping.
-                    let st = directory.entry(line).or_insert(LineState {
-                        sharers: 0,
-                        owner: NO_OWNER,
-                        dirty: false,
-                    });
+                    // (2)+(3) The lookup and the MESI-lite transitions ran
+                    // in the shard phase; settle their costs here.
                     if e.write() {
-                        let others = st.sharers & !(1u64 << c);
-                        if others != 0 {
+                        if o.inval_mask != 0 {
                             stats[c].upgrades += 1;
-                            stats[c].invalidations_sent += others.count_ones() as u64;
+                            stats[c].invalidations_sent += o.inval_mask.count_ones() as u64;
                             stats[c].coherence_cycles += cfg.upgrade_cycles;
                             extra += cfg.upgrade_cycles;
-                            // The upgrade round-trip is bounded by the
-                            // furthest sharer it must invalidate.
-                            let mut hops = 0usize;
                             for (k, s) in stats.iter_mut().enumerate() {
-                                if k != c && (others >> k) & 1 == 1 {
+                                if k != c && (o.inval_mask >> k) & 1 == 1 {
                                     s.invalidations_received += 1;
-                                    hops =
-                                        hops.max(cfg.socket_distance(my_sock, core_socket[k]));
                                 }
                             }
-                            if hops > 0 {
+                            if o.coh_hops > 0 {
                                 stats[c].remote_forwards += 1;
-                                let x = hops as f64 * cfg.remote_coherence_cycles;
+                                let x = o.coh_hops as f64 * cfg.remote_coherence_cycles;
                                 stats[c].remote_extra_cycles += x;
                                 extra += x;
                             }
                         }
-                        st.sharers = 1u64 << c;
-                        st.owner = c as u8;
-                        st.dirty = true;
-                    } else {
-                        if st.dirty && st.owner != NO_OWNER && st.owner != c as u8 {
-                            stats[c].dirty_forwards += 1;
-                            stats[c].coherence_cycles += cfg.dirty_forward_cycles;
-                            extra += cfg.dirty_forward_cycles;
-                            // A forward from a core on another socket
-                            // crosses the interconnect.
-                            let hops =
-                                cfg.socket_distance(my_sock, core_socket[st.owner as usize]);
-                            if hops > 0 {
-                                stats[c].remote_forwards += 1;
-                                let x = hops as f64 * cfg.remote_coherence_cycles;
-                                stats[c].remote_extra_cycles += x;
-                                extra += x;
-                            }
-                            // Forwarded and downgraded to shared.
-                            st.dirty = false;
+                    } else if o.fwd {
+                        stats[c].dirty_forwards += 1;
+                        stats[c].coherence_cycles += cfg.dirty_forward_cycles;
+                        extra += cfg.dirty_forward_cycles;
+                        if o.fwd_hops > 0 {
+                            stats[c].remote_forwards += 1;
+                            let x = o.fwd_hops as f64 * cfg.remote_coherence_cycles;
+                            stats[c].remote_extra_cycles += x;
+                            extra += x;
                         }
-                        st.sharers |= 1u64 << c;
                     }
 
                     // DRAM bank/row-buffer geometry (used by both branches
@@ -538,7 +831,7 @@ impl<'a> ReplayEngine<'a> {
 
                     // (4) Settle the shadow prediction against the shared
                     // truth.
-                    if hit {
+                    if o.hit {
                         stats[c].llc_hits += 1;
                         if home_hops > 0 {
                             // The hit is served by a remote socket's LLC
@@ -558,7 +851,7 @@ impl<'a> ReplayEngine<'a> {
                             // DRAM, so its shadow bank state advances even
                             // though the shared system never did.
                             stats[c].shared_fills += 1;
-                            shadow_bank[c][bk] = row;
+                            sc.shadow_bank[c][bk] = row;
                             if e.paid_bw() {
                                 stats[c].sharing_saved_cycles += DRAM_BW_CYCLES;
                                 extra -= DRAM_BW_CYCLES;
@@ -567,7 +860,7 @@ impl<'a> ReplayEngine<'a> {
                     } else {
                         stats[c].llc_misses += 1;
                         let mut otherb = 0.0f64;
-                        for (k, &b) in chan_busy[ch].iter().enumerate() {
+                        for (k, &b) in sc.chan_busy[ch].iter().enumerate() {
                             if k != c && b > otherb {
                                 otherb = b;
                             }
@@ -579,8 +872,8 @@ impl<'a> ReplayEngine<'a> {
                             .min((cores - 1) as f64 * cfg.dram_transfer_cycles);
                         stats[c].dram_queue_cycles += dwait;
                         extra += dwait;
-                        chan_busy[ch][c] =
-                            t.max(chan_busy[ch][c]).max(otherb) + cfg.dram_transfer_cycles;
+                        sc.chan_busy[ch][c] =
+                            t.max(sc.chan_busy[ch][c]).max(otherb) + cfg.dram_transfer_cycles;
                         channel_busy_cycles[ch] += cfg.dram_transfer_cycles;
                         if home_hops > 0 {
                             // Remote memory access: the transfer pays the
@@ -590,7 +883,7 @@ impl<'a> ReplayEngine<'a> {
                             let x = home_hops as f64 * cfg.remote_transfer_cycles;
                             stats[c].remote_extra_cycles += x;
                             extra += x;
-                            chan_busy[ch][c] += x;
+                            sc.chan_busy[ch][c] += x;
                             channel_busy_cycles[ch] += x;
                         }
 
@@ -604,7 +897,7 @@ impl<'a> ReplayEngine<'a> {
                         // already priced by the sharing corrections below,
                         // and charging its row service too would
                         // double-count.
-                        let b = &mut bank[bk];
+                        let b = &mut sc.bank[bk];
                         let shared_cost = if b.open_row == row {
                             stats[c].row_hits += 1;
                             cfg.row_hit_cycles
@@ -618,12 +911,12 @@ impl<'a> ReplayEngine<'a> {
                         b.open_row = row;
                         b.owner = c as u8;
                         if !e.shadow_hit() {
-                            let shadow_cost = if shadow_bank[c][bk] == row {
+                            let shadow_cost = if sc.shadow_bank[c][bk] == row {
                                 cfg.row_hit_cycles
                             } else {
                                 cfg.row_miss_cycles
                             };
-                            shadow_bank[c][bk] = row;
+                            sc.shadow_bank[c][bk] = row;
                             let delta = shared_cost - shadow_cost;
                             stats[c].row_extra_cycles += delta;
                             extra += delta;
@@ -638,31 +931,19 @@ impl<'a> ReplayEngine<'a> {
                             // core overlaps like any other (the shadow
                             // invalidation the iterative engine applies).
                             stats[c].demotions += 1;
-                            let invalidated =
-                                inval[c].get(&line).map(|&q| q < pos).unwrap_or(false);
-                            let pay = if invalidated {
+                            let pay = if o.demote_invalidated {
                                 DRAM_BW_CYCLES
                             } else {
                                 DRAM_BW_CYCLES + cfg.demotion_cycles
                             };
                             stats[c].demotion_cycles += pay;
                             extra += pay;
-                            // Record the demotion point; if an earlier
-                            // demotion on this line already happened in
-                            // *this* pass (and prior passes had not yet
-                            // invalidated it), the next pass would drop this
-                            // event's exposure penalty — that difference is
-                            // the pending correction.
-                            let prior = triggers[c].get(&line).copied();
-                            match prior {
-                                Some(q) if q < pos => {
-                                    if !invalidated {
-                                        pending += cfg.demotion_cycles;
-                                    }
-                                }
-                                _ => {
-                                    triggers[c].entry(line).or_insert(pos);
-                                }
+                            // A repeat demotion this pass (on a line prior
+                            // passes had not yet invalidated) is exactly
+                            // what the next pass would drop the exposure
+                            // penalty for — the pending correction.
+                            if o.demote_repeat {
+                                pending += cfg.demotion_cycles;
                             }
                         }
                     }
@@ -670,6 +951,15 @@ impl<'a> ReplayEngine<'a> {
                     let p = (e.phase() as usize).min(MAX_PHASES - 1);
                     phase_stalls[c][p] += extra;
                 }
+            }
+        }
+
+        // The shard trigger maps are line-disjoint by construction: union
+        // them into the per-core maps the iteration loop folds from.
+        let mut triggers: Vec<InvalMap> = vec![InvalMap::new(); cores];
+        for st in &mut sc.states {
+            for (c, trig) in st.triggers.iter_mut().enumerate() {
+                triggers[c].extend(trig.drain());
             }
         }
 
@@ -694,7 +984,7 @@ pub fn replay(mem: &MemConfig, cfg: &SharedMemConfig, traces: &[TraceBuf]) -> Re
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::SystemConfig;
+    use crate::config::{CacheConfig, SystemConfig};
     use crate::mem::trace::TraceEvent;
     use crate::mem::{AccessKind, Hierarchy};
 
@@ -710,6 +1000,10 @@ mod tests {
 
     fn buf(events: impl IntoIterator<Item = (f64, TraceEvent)>) -> TraceBuf {
         TraceBuf::from_events(events)
+    }
+
+    fn with_shards(cfg: &SharedMemConfig, shards: usize) -> SharedMemConfig {
+        SharedMemConfig { replay_shards: shards, ..*cfg }
     }
 
     #[test]
@@ -759,6 +1053,11 @@ mod tests {
         // row), they just cost nothing extra.
         assert_eq!(s.row_hits + s.row_misses + s.row_conflicts, s.llc_misses);
         assert_eq!(s.row_conflicts, 0);
+
+        // The same real trace (demands *and* writebacks) sharded 8 ways is
+        // the same replay, bit for bit.
+        let sharded = replay(&c.mem, &with_shards(&c.shared, 8), std::slice::from_ref(&trace));
+        assert_eq!(sharded, out);
     }
 
     #[test]
@@ -769,6 +1068,83 @@ mod tests {
         let a = replay(&c.mem, &c.shared, &[t0.clone(), t1.clone()]);
         let b = replay(&c.mem, &c.shared, &[t0, t1]);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sharded_replay_is_bit_identical_to_serial_at_every_shard_count() {
+        // Coherence-heavy traffic — overlapping line sets, mixed reads and
+        // writes, three cores with interleaved times — replayed at every
+        // supported shard count must produce *exactly* the serial outcome:
+        // the merge pass performs all float accumulation in canonical
+        // order, so there is no tolerance here, only `assert_eq!`.
+        let c = sys();
+        let t0 = buf((0..512u64).map(|i| (i as f64, demand(i % 64, i % 3 == 0, false))));
+        let t1 = buf(
+            (0..512u64)
+                .map(|i| (0.5 + i as f64, demand(i % 64 + (i % 5) * 31, i % 4 == 0, false))),
+        );
+        let t2 = buf((0..512u64).map(|i| (0.25 + i as f64, demand((i * 7) % 256, false, false))));
+        let traces = [t0, t1, t2];
+        let serial = replay(&c.mem, &c.shared, &traces);
+        // The traffic must actually exercise the coherence/queueing paths,
+        // or the invariance proves nothing.
+        let tot: u64 = serial.per_core.iter().map(|s| s.coherence_events()).sum();
+        assert!(tot > 0, "the fixture must generate coherence traffic");
+        for shards in [2usize, 4, 8, 16, 32, 64] {
+            let out = replay(&c.mem, &with_shards(&c.shared, shards), &traces);
+            assert_eq!(out, serial, "shard count {shards} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn sharded_replay_matches_serial_through_the_iterative_fixed_point() {
+        // The repeat-demotion fixture needs a second corrective pass: the
+        // shard partition, trigger maps, and invalidation points must all
+        // survive the iteration loop unchanged.
+        let c = sys();
+        let llc_lines = (c.mem.llc.size_bytes / c.mem.l1d.line_bytes) as u64;
+        let t1 = buf([
+            (0.0, demand(7, false, true)),
+            (1_000_000.0, demand(7, false, true)),
+        ]);
+        let t0 = buf(
+            (0..llc_lines * 8)
+                .map(|i| (10.0 + i as f64 * 0.05, demand(1_000_000 + i, false, false))),
+        );
+        let traces = [t0, t1];
+        let serial = replay(&c.mem, &c.shared, &traces);
+        assert_eq!(
+            serial.per_core[1].replay_iters, 2,
+            "the fixture must exercise the corrective pass"
+        );
+        for shards in [2usize, 8] {
+            let out = replay(&c.mem, &with_shards(&c.shared, shards), &traces);
+            assert_eq!(out, serial, "x{shards}");
+        }
+    }
+
+    #[test]
+    fn sharded_replay_matches_serial_with_numa_stamps() {
+        // 2-socket, socket-stamped traces with remote fills and forwards:
+        // the hop pricing flows shard -> outcome -> merge without drift.
+        let c = sys();
+        let cfg = two_socket_cfg();
+        let mk = |base: u64, sock: u8, t0: f64| {
+            TraceBuf::from_events((0..96u64).map(move |i| {
+                (
+                    t0 + i as f64,
+                    demand(base + i % 24, i % 6 == 0, false).with_socket(sock),
+                )
+            }))
+        };
+        let traces = [mk(0, 0, 0.0), mk(2, 1, 0.5), mk(0, 1, 0.25)];
+        let serial = replay(&c.mem, &cfg, &traces);
+        let remote: u64 = serial.per_core.iter().map(|s| s.remote_fills + s.remote_forwards).sum();
+        assert!(remote > 0, "the fixture must generate remote traffic");
+        for shards in [2usize, 4, 8] {
+            let out = replay(&c.mem, &with_shards(&cfg, shards), &traces);
+            assert_eq!(out, serial, "x{shards}");
+        }
     }
 
     #[test]
@@ -1141,19 +1517,57 @@ mod tests {
     }
 
     #[test]
-    fn numa_charges_are_zero_at_one_socket_even_with_socket_stamps() {
-        // Stamps out of range for the socket count clamp safely, and at one
-        // socket every distance is zero regardless of the stamps.
+    fn local_socket_stamps_carry_no_numa_charges() {
+        // A NUMA topology with every access stamped on — and homed to —
+        // socket 0: all distances are zero, so no remote charge may appear
+        // even though the topology itself is multi-socket. (Out-of-range
+        // stamps are a loud construction error now, not a clamp: see
+        // `replay_rejects_out_of_range_socket_stamps`.)
         let c = sys();
-        let t0 = buf((0..32).map(|i| (i as f64, demand(i * 2, false, false))));
-        let t1 = TraceBuf::from_events(
-            (0..32).map(|i| (i as f64, demand(i * 2 + 1, false, false).with_socket(7))),
+        let cfg = two_socket_cfg();
+        // Lines 4i and 4i+1 live on channels 0 and 1 — socket 0's group.
+        let t0 = TraceBuf::from_events(
+            (0..32u64).map(|i| (i as f64, demand(4 * i, false, false).with_socket(0))),
         );
-        let out = replay(&c.mem, &c.shared, &[t0, t1]);
+        let t1 = TraceBuf::from_events(
+            (0..32u64).map(|i| (i as f64, demand(4 * i + 1, false, false).with_socket(0))),
+        );
+        let out = replay(&c.mem, &cfg, &[t0, t1]);
         for s in &out.per_core {
             assert_eq!(s.remote_fills + s.remote_forwards, 0);
             assert_eq!(s.remote_extra_cycles, 0.0);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn replay_rejects_out_of_range_socket_stamps() {
+        // A socket-7 stamp in a 1-socket topology used to clamp silently to
+        // socket 0; in release builds an unclamped stamp would underflow
+        // the ring distance and charge phantom NUMA hops. It is a
+        // construction error and must fail loudly.
+        let c = sys();
+        let t = TraceBuf::from_events([(0.0, demand(1, false, false).with_socket(7))]);
+        let _ = replay(&c.mem, &c.shared, std::slice::from_ref(&t));
+    }
+
+    #[test]
+    #[should_panic(expected = "replay_shards")]
+    fn replay_rejects_more_shards_than_llc_sets() {
+        // The line partition is only set-consistent while whole LLC sets
+        // stay shard-private; a hand-shrunk LLC with fewer sets than shards
+        // must fail loudly.
+        let mut c = sys();
+        c.mem.llc = CacheConfig {
+            size_bytes: 512,
+            ways: 2,
+            line_bytes: 64,
+            hit_latency: 10,
+        }; // 4 sets
+        c.shared.llc_sliced = false;
+        c.shared.replay_shards = 8;
+        let t = buf([(0.0, demand(1, false, false))]);
+        let _ = replay(&c.mem, &c.shared, std::slice::from_ref(&t));
     }
 
     #[test]

@@ -32,7 +32,7 @@
 //! core, so the in-memory format matters. Each [`TraceEvent`] is a packed
 //! 16-byte record: the line id and all flag bits (kind, write intent, shadow
 //! outcome, bandwidth attribution, phase) share one `u64`, and the local
-//! timestamp is a `u32` *delta* from the previous event of the same core in
+//! timestamp is a 48-bit *delta* from the previous event of the same core in
 //! 1/64-cycle fixed point. [`TraceBuf`] stores events in fixed-size chunks
 //! (no doubling reallocation, so peak memory stays within one chunk of the
 //! live data) and decodes absolute times by sequential accumulation.
@@ -44,11 +44,17 @@ pub const MAX_PHASES: usize = 8;
 /// Events per [`TraceBuf`] chunk (64KB of packed events per chunk).
 pub const TRACE_CHUNK: usize = 4096;
 
-/// Fixed-point shift for trace time deltas: 1/64-cycle resolution, so a
-/// `u32` delta spans ~67M cycles between consecutive LLC-level events of one
-/// core (far beyond any real gap; larger gaps saturate deterministically).
+/// Fixed-point shift for trace time deltas: 1/64-cycle resolution, so the
+/// 48-bit delta spans ~4.4 trillion cycles between consecutive LLC-level
+/// events of one core. A `u32` delta used to saturate silently here at ~67M
+/// cycles — enough for a long service-queue wait between a job's phases to
+/// quietly compress, corrupting the canonical merge order with no signal —
+/// so gaps beyond the (absurd) 48-bit span are now a hard error, not a
+/// clamp.
 const TIME_SHIFT: u32 = 6;
 const TIME_SCALE: f64 = (1u64 << TIME_SHIFT) as f64;
+/// Max representable quantized delta (48 bits: `dt` low word + `dt_hi`).
+const MAX_DT: u64 = (1u64 << 48) - 1;
 
 /// What a traced LLC-level access was doing.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -84,9 +90,12 @@ const PHASE_SHIFT: u32 = 61;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TraceEvent {
     bits: u64,
-    /// Time delta to the previous event of the same trace, 1/64-cycle
-    /// fixed point (filled in by [`TraceBuf::push`]).
+    /// Low 32 bits of the time delta to the previous event of the same
+    /// trace, 1/64-cycle fixed point (filled in by [`TraceBuf::push`]).
     dt: u32,
+    /// High 16 bits of the delta (48 bits total; the padding the old
+    /// u32-delta layout wasted anyway, put to work).
+    dt_hi: u16,
 }
 
 // The whole point of the packed layout: one event is 16 bytes, not the ~32
@@ -126,7 +135,7 @@ impl TraceEvent {
             bits |= PAID_BIT;
         }
         bits |= ((phase as u64) & (MAX_PHASES as u64 - 1)) << PHASE_SHIFT;
-        TraceEvent { bits, dt: 0 }
+        TraceEvent { bits, dt: 0, dt_hi: 0 }
     }
 
     /// Stamp the requesting core's socket id (`< MAX_SOCKETS`): the replay
@@ -225,11 +234,21 @@ impl TraceBuf {
     /// monotone per core; quantized to 1/64-cycle deltas).
     pub fn push(&mut self, mut e: TraceEvent, time: f64) {
         let q = (time * TIME_SCALE).max(0.0) as u64;
-        // Local times are monotone per core; saturate both directions so a
-        // pathological stamp can never panic or run time backwards.
-        let dt = q.saturating_sub(self.last_q).min(u32::MAX as u64) as u32;
-        self.last_q += dt as u64;
-        e.dt = dt;
+        // Local times are monotone per core; a backwards stamp saturates to
+        // the previous time (the clock can stall but never run in reverse).
+        // A *forward* gap past the 48-bit span, by contrast, cannot be
+        // represented — clamping it would silently reorder this core's
+        // events against every other core's in the canonical merge, so it
+        // fails loudly instead.
+        let dt = q.saturating_sub(self.last_q);
+        assert!(
+            dt <= MAX_DT,
+            "trace time gap of {dt} quantized units overflows the 48-bit \
+             delta encoding (~4.4e12 cycles between consecutive events)"
+        );
+        self.last_q += dt;
+        e.dt = dt as u32;
+        e.dt_hi = (dt >> 32) as u16;
         if self.chunks.last().map(|c| c.len() >= TRACE_CHUNK).unwrap_or(true) {
             self.chunks.push(Vec::with_capacity(TRACE_CHUNK));
         }
@@ -248,7 +267,7 @@ impl TraceBuf {
     pub fn iter_timed(&self) -> impl Iterator<Item = (f64, TraceEvent)> + '_ {
         let mut acc = 0u64;
         self.chunks.iter().flatten().map(move |&e| {
-            acc += e.dt as u64;
+            acc += e.dt as u64 | ((e.dt_hi as u64) << 32);
             (acc as f64 / TIME_SCALE, e)
         })
     }
@@ -347,6 +366,33 @@ mod tests {
         ]);
         let ts: Vec<f64> = b.iter_timed().map(|(t, _)| t).collect();
         assert_eq!(ts, vec![0.25, 0.75], "quarter cycles are exactly representable");
+    }
+
+    #[test]
+    fn gaps_past_the_old_u32_delta_no_longer_saturate() {
+        // Regression: a >u32::MAX quantized gap (~67M cycles) used to clamp
+        // silently, compressing this core's later events backwards in time
+        // and corrupting the canonical merge order. The widened delta must
+        // round-trip it exactly.
+        let gap_cycles = 1e9; // 6.4e10 quantized units, far past u32::MAX
+        let b = TraceBuf::from_events([
+            (0.0, TraceEvent::new(1, TraceKind::Demand, false, false, true, 1)),
+            (gap_cycles, TraceEvent::new(2, TraceKind::Demand, false, false, true, 1)),
+            (gap_cycles + 0.5, TraceEvent::new(3, TraceKind::Demand, false, false, true, 1)),
+        ]);
+        let ts: Vec<f64> = b.iter_timed().map(|(t, _)| t).collect();
+        assert_eq!(ts, vec![0.0, gap_cycles, gap_cycles + 0.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows the 48-bit")]
+    fn gaps_past_the_48_bit_delta_fail_loudly() {
+        let _ = TraceBuf::from_events([
+            (0.0, TraceEvent::new(1, TraceKind::Demand, false, false, true, 1)),
+            // 2^43 cycles = 2^49 quantized units: unrepresentable, and a
+            // clamp here would silently reorder the merged replay.
+            ((1u64 << 43) as f64, TraceEvent::new(2, TraceKind::Demand, false, false, true, 1)),
+        ]);
     }
 
     #[test]

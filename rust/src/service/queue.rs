@@ -67,15 +67,22 @@ pub(crate) struct DrrQueue {
 
 impl DrrQueue {
     pub fn new(quantum: u64) -> DrrQueue {
-        DrrQueue { tenants: HashMap::new(), ring: VecDeque::new(), quantum: quantum.max(1), queued: 0 }
+        // `SimServiceConfig::validate` guarantees this at the construction
+        // boundary; a zero quantum would deadlock `next()` (deficits never
+        // grow), so fail loudly here rather than clamp silently.
+        assert!(quantum >= 1, "DRR quantum must be at least 1 (got {quantum})");
+        DrrQueue { tenants: HashMap::new(), ring: VecDeque::new(), quantum, queued: 0 }
     }
 
     /// Enqueue a job under its tenant (creating the tenant with `weight` on
     /// first contact; the weight is fixed thereafter).
     pub fn push(&mut self, job: QueuedJob, weight: u32) {
+        // Weights are validated with the service config (a zero weight
+        // would starve the tenant forever); not clamped here.
+        debug_assert!(weight >= 1, "tenant weight must be at least 1 (got {weight})");
         let t = self.tenants.entry(job.tenant.clone()).or_insert_with(|| TenantState {
             queue: VecDeque::new(),
-            weight: weight.max(1),
+            weight,
             deficit: 0,
             served: 0,
             in_ring: false,
@@ -255,6 +262,14 @@ mod tests {
             Dispatch::Job(j) => assert_eq!(j.slots, 4),
             _ => panic!("expected the wide job"),
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "quantum must be at least 1")]
+    fn zero_quantum_is_a_construction_error() {
+        // Used to clamp to 1 silently; the config boundary validates it, so
+        // a zero reaching here is a bug and must fail loudly.
+        let _ = DrrQueue::new(0);
     }
 
     #[test]

@@ -41,6 +41,8 @@ use crate::sim::{Machine, MulticoreMetrics};
 use crate::spgemm::{CsrAddrs, SpGemm};
 use crate::util::round_up;
 use anyhow::{ensure, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::sync::Mutex;
 
 /// How row blocks are assigned to cores.
@@ -425,6 +427,13 @@ struct Pilot<'a> {
     stride: u64,
     socks: Vec<u8>,
     cfg: crate::config::SharedMemConfig,
+    /// Pilot-replay scores memoized by plan: `ws-bw` and `ws-numa` arbitrate
+    /// overlapping candidate sets (the rebalanced plan often *is* the plain
+    /// plan, and `ws-numa` starts from `ws-bw`'s winner), so without this
+    /// the same synthetic trace set gets replayed several times per job.
+    /// Scoring stays a pure function of the plan — the cache only skips
+    /// recomputation.
+    memo: RefCell<HashMap<Vec<Vec<usize>>, Vec<f64>>>,
 }
 
 impl<'a> Pilot<'a> {
@@ -458,16 +467,22 @@ impl<'a> Pilot<'a> {
             max_replay_iters: 1,
             ..sys.shared
         };
-        Pilot { sys, work, ranges, stride, socks, cfg }
+        Pilot { sys, work, ranges, stride, socks, cfg, memo: RefCell::new(HashMap::new()) }
     }
 
     /// Per-core pilot stall score for `plan`: queueing, row-buffer
     /// interference, and hop-priced NUMA charges (zero at one socket, so
     /// the `ws-bw` arbitration is bit-identical to the flat model there).
+    /// Memoized per plan — a plan scored once during `ws-bw`'s arbitration
+    /// is not re-replayed when `ws-numa` considers it again.
     fn stalls(&self, plan: &[Vec<usize>]) -> Vec<f64> {
+        if let Some(scores) = self.memo.borrow().get(plan) {
+            return scores.clone();
+        }
         let traces = pilot_traces(plan, &self.work, &self.ranges, self.stride, &self.socks);
         let out = shared::replay(&self.sys.mem, &self.cfg, &traces);
-        out.per_core
+        let scores: Vec<f64> = out
+            .per_core
             .iter()
             .map(|s| {
                 s.llc_queue_cycles
@@ -475,7 +490,9 @@ impl<'a> Pilot<'a> {
                     + s.row_extra_cycles.max(0.0)
                     + s.remote_extra_cycles
             })
-            .collect()
+            .collect();
+        self.memo.borrow_mut().insert(plan.to_vec(), scores.clone());
+        scores
     }
 
     fn core_work(&self, plan: &[Vec<usize>]) -> Vec<f64> {

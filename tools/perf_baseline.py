@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Record or diff BENCH_*.json perf baselines from bench_util output.
+
+The rust benches print one line per measurement in one of two shapes:
+
+    bench <name>    median   12.345 ms   mean   13.0 ms   min   11.9 ms   (3 reps)
+    bench <name>       42.7 ns/op   (123456 ops)
+
+`record` fills the matching `series` entries of a baseline JSON in place
+(plus `host`, `recorded_utc`, and `status: "measured"`); `delta` prints a
+markdown table comparing fresh output against the stored medians without
+touching the file. Both read bench output from stdin:
+
+    cargo bench --bench replay_shards 2>&1 \
+        | python3 tools/perf_baseline.py record BENCH_replay.json
+    cargo bench --bench replay_shards 2>&1 \
+        | python3 tools/perf_baseline.py delta BENCH_replay.json
+"""
+
+import json
+import re
+import socket
+import sys
+from datetime import datetime, timezone
+
+MEDIAN_RE = re.compile(r"^bench\s+(.*?)\s+median\s+([0-9.]+)\s+ms\b")
+NSOP_RE = re.compile(r"^bench\s+(.*?)\s+([0-9.]+)\s+ns/op\b")
+
+
+def norm(s):
+    """Fold a bench name / series key to a comparable token string."""
+    return re.sub(r"[^a-z0-9=]+", "_", s.lower()).strip("_")
+
+
+def parse(stream):
+    """-> {printed bench name: measured value} (ms medians and ns/op)."""
+    out = {}
+    for line in stream:
+        m = MEDIAN_RE.match(line.strip()) or NSOP_RE.match(line.strip())
+        if m:
+            out[m.group(1).strip()] = float(m.group(2))
+    return out
+
+
+def match(key, measured):
+    """Find the measured value for a series key (exact, then normalized)."""
+    if key in measured:
+        return measured[key]
+    nk = norm(key)
+    for name, v in measured.items():
+        if norm(name) == nk:
+            return v
+    # Runtime-formatted suffixes ("SimService submit/wait x256"): accept a
+    # unique prefix match.
+    pref = [v for name, v in measured.items() if norm(name).startswith(nk)]
+    if len(pref) == 1:
+        return pref[0]
+    return None
+
+
+def each_series(doc):
+    for bench_name, bench in doc.get("benches", {}).items():
+        for key in bench.get("series", {}):
+            yield bench_name, bench, key
+
+
+def cmd_record(path, measured):
+    with open(path) as f:
+        doc = json.load(f)
+    filled, missing = 0, []
+    for bench_name, bench, key in each_series(doc):
+        v = match(key, measured)
+        if v is None:
+            missing.append(f"{bench_name}/{key}")
+        else:
+            bench["series"][key] = v
+            filled += 1
+    # Derived ratios: serial-over-N-shard speedups where both ends landed.
+    for bench in doc.get("benches", {}).values():
+        derived = bench.get("derived", {})
+        series = bench.get("series", {})
+        for dkey in derived:
+            m = re.match(r"speedup_(\d+)shard_over_serial", dkey)
+            if not m:
+                continue
+            base = match("replay shards=1", series) if series else None
+            shard = match(f"replay shards={m.group(1)}", series) if series else None
+            if base and shard:
+                derived[dkey] = round(base / shard, 3)
+    if filled:
+        doc["status"] = "measured"
+        doc["host"] = socket.gethostname()
+        doc["recorded_utc"] = datetime.now(timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"{path}: filled {filled} series entr{'y' if filled == 1 else 'ies'}")
+    for key in missing:
+        print(f"  no measurement matched {key}", file=sys.stderr)
+    return 0 if filled else 1
+
+
+def cmd_delta(path, measured):
+    with open(path) as f:
+        doc = json.load(f)
+    rows = []
+    for bench_name, bench, key in each_series(doc):
+        base = bench["series"][key]
+        fresh = match(key, measured)
+        unit = bench.get("unit", "")
+        if fresh is None:
+            continue
+        if base is None:
+            rows.append((f"{bench_name}/{key}", "n/a", f"{fresh:.3f}", unit, "baseline unmeasured"))
+        else:
+            pct = 100.0 * (fresh - base) / base if base else 0.0
+            rows.append((f"{bench_name}/{key}", f"{base:.3f}", f"{fresh:.3f}", unit, f"{pct:+.1f}%"))
+    if not rows:
+        print("no bench lines matched the baseline series", file=sys.stderr)
+        return 1
+    print("| bench | baseline | fresh | unit | delta |")
+    print("|---|---:|---:|---|---:|")
+    for r in rows:
+        print("| " + " | ".join(r) + " |")
+    return 0
+
+
+def main(argv):
+    if len(argv) != 3 or argv[1] not in ("record", "delta"):
+        print(__doc__, file=sys.stderr)
+        return 2
+    measured = parse(sys.stdin)
+    if argv[1] == "record":
+        return cmd_record(argv[2], measured)
+    return cmd_delta(argv[2], measured)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
