@@ -1,0 +1,105 @@
+//! Bench: `ws-adapt`'s *decision* cost in isolation — barrier-aware plan
+//! construction ([`phase_aware_claims`] + [`phase_makespan`] scoring) over
+//! synthetic per-block phase costs, and the pilot's replay over a
+//! deterministic coherence-heavy trace set — never the SpGEMM kernels
+//! themselves. This is the overhead a job pays for adaptive scheduling, so
+//! it is tracked separately from the kernel figures.
+//!
+//! `SPZ_BENCH_EVENTS` scales the per-core pilot-trace event count (default
+//! 100k); `SPZ_BENCH_REPS` the repetitions. Medians land in
+//! `BENCH_adapt.json` via `tools/perf_baseline.py record`.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use sparsezipper::config::SharedMemConfig;
+use sparsezipper::mem::{replay, TraceBuf, TraceEvent, TraceKind};
+use sparsezipper::sim::machine::NUM_PHASES;
+use sparsezipper::spgemm::parallel::{phase_aware_claims, phase_makespan};
+use sparsezipper::SystemConfig;
+
+/// Deterministic per-block, per-phase costs with a skewed distribution
+/// (xorshift64*), shaped like the probe output on a hub-heavy matrix.
+fn synth_costs(nblocks: usize) -> Vec<[f64; NUM_PHASES]> {
+    let mut x = 0x243f6a8885a308d3u64 | 1;
+    (0..nblocks)
+        .map(|bi| {
+            let mut p = [0.0f64; NUM_PHASES];
+            for v in p.iter_mut() {
+                x ^= x >> 12;
+                x ^= x << 25;
+                x ^= x >> 27;
+                let r = x.wrapping_mul(0x2545f4914f6cdd1d);
+                // Every 8th block is a "hub": ~16x the base cost.
+                let hub = if bi % 8 == 0 { 16.0 } else { 1.0 };
+                *v = hub * ((r >> 40) as f64 + 1.0);
+            }
+            p
+        })
+        .collect()
+}
+
+/// Deterministic coherence-heavy traces (same shape as the replay bench):
+/// a private stream interleaved with writes into a shared hot window.
+fn synth_traces(cores: usize, events: usize) -> Vec<TraceBuf> {
+    let hot = 4096u64;
+    (0..cores)
+        .map(|c| {
+            let mut buf = TraceBuf::new();
+            let mut x = 0x9e3779b97f4a7c15u64.wrapping_mul(c as u64 + 1) | 1;
+            for i in 0..events {
+                x ^= x >> 12;
+                x ^= x << 25;
+                x ^= x >> 27;
+                let r = x.wrapping_mul(0x2545f4914f6cdd1d);
+                let (line, write) = if r % 3 == 0 {
+                    (1 << 30 | (r >> 8) % hot, r % 2 == 0)
+                } else {
+                    ((c as u64) << 24 | i as u64, false)
+                };
+                let shadow_hit = r % 5 == 0;
+                let e = TraceEvent::new(line, TraceKind::Demand, write, shadow_hit, !shadow_hit, 2);
+                buf.push(e, i as f64 * 4.0);
+            }
+            buf
+        })
+        .collect()
+}
+
+fn main() {
+    let events: usize = std::env::var("SPZ_BENCH_EVENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+    let reps = bench_util::reps();
+    let cores = 8;
+    println!("== adapt scheduler decisions ({cores} cores) ==");
+
+    // Plan construction: the barrier-aware claim plus one makespan scoring
+    // pass per fixed-candidate slot (ws-adapt scores four).
+    for &nblocks in &[64usize, 512] {
+        let costs = synth_costs(nblocks);
+        let stalls: Vec<f64> = (0..cores).map(|c| (c * 37) as f64).collect();
+        bench_util::bench_ns(&format!("adapt plan blocks={nblocks}"), || {
+            let plan = phase_aware_claims(&costs, cores);
+            for _ in 0..4 {
+                std::hint::black_box(phase_makespan(&costs, &plan, &stalls));
+            }
+            1
+        });
+    }
+
+    // Pilot replay: the other half of the decision cost. Sharding is gated
+    // on bit-identity before it is timed, as in the replay bench.
+    let sys = SystemConfig::default();
+    let traces = synth_traces(cores, events);
+    let serial = replay(&sys.mem, &sys.shared, &traces);
+    let sharded_cfg = SharedMemConfig { replay_shards: 4, ..sys.shared };
+    assert_eq!(replay(&sys.mem, &sharded_cfg, &traces), serial, "4-shard pilot diverged");
+    bench_util::bench("pilot serial", reps, || {
+        std::hint::black_box(replay(&sys.mem, &sys.shared, &traces));
+    });
+    bench_util::bench("pilot sharded=4", reps, || {
+        std::hint::black_box(replay(&sys.mem, &sharded_cfg, &traces));
+    });
+}

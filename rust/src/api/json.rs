@@ -215,14 +215,34 @@ fn service_json(sv: &ServiceStats) -> String {
     )
 }
 
+/// `ws-adapt`'s decision summary as a JSON object.
+fn sched_decisions_json(d: &crate::spgemm::parallel::SchedDecisions) -> String {
+    format!(
+        "{{\"total_blocks\":{},\"blocks_scl_array\":{},\"blocks_scl_hash\":{},\
+         \"blocks_spz\":{},\"blocks_other\":{},\"swapped_blocks\":{},\
+         \"split_blocks\":{},\"predicted_stall_cycles\":{},\
+         \"achieved_stall_cycles\":{}}}",
+        d.total_blocks,
+        d.blocks_scl_array,
+        d.blocks_scl_hash,
+        d.blocks_spz,
+        d.blocks_other,
+        d.swapped_blocks,
+        d.split_blocks,
+        num(d.predicted_stall_cycles),
+        num(d.achieved_stall_cycles),
+    )
+}
+
 impl JobResult {
     /// One job as a single-line JSON object. New fields only ever get
-    /// appended (`cores`/`sched`/`multicore` landed after `metrics`).
+    /// appended (`cores`/`sched`/`multicore` landed after `metrics`;
+    /// `sched_decisions` after `multicore`).
     pub fn to_json(&self) -> String {
         format!(
             "{{\"impl\":\"{}\",\"dataset\":\"{}\",\"out_nnz\":{},\"verified\":{},\
              \"wall_secs\":{},\"block_elems\":{},\"metrics\":{},\"cores\":{},\
-             \"sched\":{},\"multicore\":{}}}",
+             \"sched\":{},\"multicore\":{},\"sched_decisions\":{}}}",
             self.impl_id.name(),
             escape(&self.dataset),
             self.out_nnz,
@@ -239,6 +259,10 @@ impl JobResult {
             self.multicore
                 .as_ref()
                 .map(multicore_json)
+                .unwrap_or_else(|| "null".to_string()),
+            self.sched_decisions
+                .as_ref()
+                .map(sched_decisions_json)
                 .unwrap_or_else(|| "null".to_string()),
         )
     }

@@ -124,6 +124,9 @@ pub struct JobResult {
     pub sched: Option<Scheduler>,
     /// Per-core breakdown + critical path (multi-core jobs only).
     pub multicore: Option<MulticoreMetrics>,
+    /// `ws-adapt`'s per-block decision summary (kernel swap / split counts
+    /// and predicted-vs-achieved stalls); `None` under fixed schedulers.
+    pub sched_decisions: Option<parallel::SchedDecisions>,
 }
 
 impl JobResult {
@@ -558,8 +561,13 @@ impl Session {
             a.ncols
         );
 
-        let (metrics, multicore, product) = if cores > 1 {
-            let pcfg = parallel::ParallelConfig { cores, scheduler: sched, block_rows: None };
+        let (metrics, multicore, product, sched_decisions) = if cores > 1 {
+            let pcfg = parallel::ParallelConfig {
+                cores,
+                scheduler: sched,
+                block_rows: None,
+                impl_id: Some(id),
+            };
             let run = if id == ImplId::VecRadix {
                 let mut best: Option<(parallel::ParallelRun, usize)> = None;
                 for be in VEC_RADIX_BLOCK_SWEEP {
@@ -597,8 +605,8 @@ impl Session {
                 )
                 .with_context(|| format!("{} on {dataset} ({cores} cores)", id.name()))?
             };
-            let parallel::ParallelRun { csr, metrics: mc, .. } = run;
-            (mc.total.clone(), Some(mc), csr)
+            let parallel::ParallelRun { csr, metrics: mc, decisions, .. } = run;
+            (mc.total.clone(), Some(mc), csr, decisions)
         } else if id == ImplId::VecRadix {
             let mut best: Option<(RunMetrics, Csr, usize)> = None;
             let mut serial_sys = self.inner.cfg.sys;
@@ -616,12 +624,12 @@ impl Session {
             }
             let (met, c, be) = best.unwrap();
             block = Some(be);
-            (met, None, c)
+            (met, None, c, None)
         } else {
             let p = self
                 .spgemm(id, a, a)
                 .with_context(|| format!("{} on {dataset}", id.name()))?;
-            (p.metrics, None, p.csr)
+            (p.metrics, None, p.csr, None)
         };
 
         let verified = match verify {
@@ -649,6 +657,7 @@ impl Session {
             cores: cores.max(1),
             sched: if cores > 1 { Some(sched) } else { None },
             multicore,
+            sched_decisions,
         })
     }
 }

@@ -372,6 +372,12 @@ pub struct ScalingPoint {
     pub remote_fills: u64,
     /// Hop-priced NUMA extra cycles summed over cores; 0 at one socket.
     pub remote_extra_cycles: f64,
+    /// Blocks `ws-adapt` ran on a kernel other than the job's own
+    /// implementation (its mixed-impl decision count); 0 under every fixed
+    /// scheduler and on the serial baseline.
+    pub mixed_impl_blocks: usize,
+    /// Blocks `ws-adapt` split in two for bandwidth/balance; 0 otherwise.
+    pub split_blocks: usize,
 }
 
 /// Run the Figure 12 scaling study: `impl_id` on every dataset at each core
@@ -407,6 +413,8 @@ pub fn scaling_sweep(
             dram_queue_cycles: 0.0,
             remote_fills: 0,
             remote_extra_cycles: 0.0,
+            mixed_impl_blocks: 0,
+            split_blocks: 0,
         });
         for &c in cores.iter().filter(|&&c| c > 1) {
             for &sched in scheds {
@@ -417,6 +425,7 @@ pub fn scaling_sweep(
                         .with_scheduler(sched),
                 )?;
                 let cycles = r.time_cycles();
+                let dec = r.sched_decisions;
                 let sh = &r.metrics.shared;
                 out.push(ScalingPoint {
                     dataset: r.dataset.clone(),
@@ -431,6 +440,8 @@ pub fn scaling_sweep(
                     dram_queue_cycles: sh.dram_queue_cycles,
                     remote_fills: sh.remote_fills,
                     remote_extra_cycles: sh.remote_extra_cycles,
+                    mixed_impl_blocks: dec.map(|d| d.swapped_blocks).unwrap_or(0),
+                    split_blocks: dec.map(|d| d.split_blocks).unwrap_or(0),
                 });
             }
         }
@@ -447,13 +458,19 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
     let mut cores: Vec<usize> = points.iter().map(|p| p.cores).collect();
     cores.sort_unstable();
     cores.dedup();
+    // The scheduler list (and the row ordering below) derives from
+    // Scheduler::ALL, the same source as fig12_tsv, so a new scheduler
+    // cannot desynchronize the two renderings.
+    let sched_list =
+        Scheduler::ALL.iter().map(|sc| sc.name()).collect::<Vec<_>>().join(" vs ");
     let _ = writeln!(
         s,
         "Figure 12. Multi-core scaling ({impl_name}): speedup over 1 core \
-         (row-blocked driver; static vs work-stealing vs ws-dyn vs \
-         bandwidth-aware ws-bw vs socket-aware ws-numa block schedule; \
+         (row-blocked driver; {sched_list} block schedule; \
          llc-hit/coh/dram-q/numa-cyc from the shared-memory replay at the \
-         largest core count — numa-cyc is 0 unless --sockets >= 2)"
+         largest core count — numa-cyc is 0 unless --sockets >= 2; \
+         mixed/split are ws-adapt's kernel swaps and block splits, 0 under \
+         every fixed scheduler)"
     );
     let _ = write!(s, "{:<10} {:<14}", "Matrix", "sched");
     for c in &cores {
@@ -462,8 +479,8 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
     }
     let _ = writeln!(
         s,
-        " {:>10} {:>8} {:>8} {:>10} {:>10}",
-        "imbalance", "llc-hit", "coh", "dram-q", "numa-cyc"
+        " {:>10} {:>8} {:>8} {:>10} {:>10} {:>6} {:>6}",
+        "imbalance", "llc-hit", "coh", "dram-q", "numa-cyc", "mixed", "split"
     );
     let mut datasets: Vec<&str> = Vec::new();
     for p in points {
@@ -503,18 +520,20 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
                 Some(p) => {
                     let _ = writeln!(
                         s,
-                        " {worst_imb:>9.2}x {:>7.1}% {:>8} {:>10.0} {:>10.0}",
+                        " {worst_imb:>9.2}x {:>7.1}% {:>8} {:>10.0} {:>10.0} {:>6} {:>6}",
                         100.0 * p.llc_hit_rate,
                         p.coherence_events,
                         p.dram_queue_cycles,
-                        p.remote_extra_cycles
+                        p.remote_extra_cycles,
+                        p.mixed_impl_blocks,
+                        p.split_blocks
                     );
                 }
                 None => {
                     let _ = writeln!(
                         s,
-                        " {worst_imb:>9.2}x {:>8} {:>8} {:>10} {:>10}",
-                        "-", "-", "-", "-"
+                        " {worst_imb:>9.2}x {:>8} {:>8} {:>10} {:>10} {:>6} {:>6}",
+                        "-", "-", "-", "-", "-", "-"
                     );
                 }
             }
@@ -524,29 +543,51 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
 }
 
 /// TSV series for the scaling study (`fig12.tsv`). Columns only ever get
-/// appended (the NUMA pair landed after `dram_queue_cycles`).
+/// appended (the NUMA pair landed after `dram_queue_cycles`; the ws-adapt
+/// decision pair after `remote_extra_cycles`). Row ordering derives from
+/// `Scheduler::ALL` — the same source as the text table — so a new
+/// scheduler cannot desynchronize the two renderings.
 pub fn fig12_tsv(points: &[ScalingPoint]) -> String {
     let mut t = String::from(
         "matrix\timpl\tsched\tcores\tcycles\tspeedup\timbalance\tllc_hit_rate\t\
-         coherence_events\tdram_queue_cycles\tremote_fills\tremote_extra_cycles\n",
+         coherence_events\tdram_queue_cycles\tremote_fills\tremote_extra_cycles\t\
+         mixed_impl_blocks\tsplit_blocks\n",
     );
+    let mut datasets: Vec<&str> = Vec::new();
     for p in points {
-        let _ = writeln!(
-            t,
-            "{}\t{}\t{}\t{}\t{:.1}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.1}\t{}\t{:.1}",
-            p.dataset,
-            p.impl_id,
-            p.scheduler.map(|s| s.name()).unwrap_or("serial"),
-            p.cores,
-            p.cycles,
-            p.speedup,
-            p.imbalance,
-            p.llc_hit_rate,
-            p.coherence_events,
-            p.dram_queue_cycles,
-            p.remote_fills,
-            p.remote_extra_cycles
-        );
+        if !datasets.contains(&p.dataset.as_str()) {
+            datasets.push(&p.dataset);
+        }
+    }
+    for d in datasets {
+        let mut emit = |p: &ScalingPoint| {
+            let _ = writeln!(
+                t,
+                "{}\t{}\t{}\t{}\t{:.1}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.1}\t{}\t{:.1}\t{}\t{}",
+                p.dataset,
+                p.impl_id,
+                p.scheduler.map(|s| s.name()).unwrap_or("serial"),
+                p.cores,
+                p.cycles,
+                p.speedup,
+                p.imbalance,
+                p.llc_hit_rate,
+                p.coherence_events,
+                p.dram_queue_cycles,
+                p.remote_fills,
+                p.remote_extra_cycles,
+                p.mixed_impl_blocks,
+                p.split_blocks
+            );
+        };
+        for p in points.iter().filter(|p| p.dataset == d && p.scheduler.is_none()) {
+            emit(p);
+        }
+        for sched in Scheduler::ALL {
+            for p in points.iter().filter(|p| p.dataset == d && p.scheduler == Some(sched)) {
+                emit(p);
+            }
+        }
     }
     t
 }
@@ -639,6 +680,22 @@ pub fn mem_report(r: &crate::api::JobResult) -> String {
          (all zero at 1 socket)",
         tot.remote_fills, tot.remote_forwards, tot.remote_extra_cycles
     );
+    if let Some(d) = &r.sched_decisions {
+        let _ = writeln!(
+            s,
+            "ws-adapt  | {} blocks (scl-array {}, scl-hash {}, spz {}, other {}), \
+             {} swapped, {} split | stalls predicted {:.0} vs achieved {:.0}",
+            d.total_blocks,
+            d.blocks_scl_array,
+            d.blocks_scl_hash,
+            d.blocks_spz,
+            d.blocks_other,
+            d.swapped_blocks,
+            d.split_blocks,
+            d.predicted_stall_cycles,
+            d.achieved_stall_cycles
+        );
+    }
     let _ = writeln!(
         s,
         "critical path {:.0} cycles, efficiency {:.2}x, imbalance {:.2}x",

@@ -47,9 +47,13 @@
 //! [`DatasetSource`] covers registry synthetics, `.mtx` files, and in-memory
 //! [`Csr`]s. [`JobSpec::with_cores`] switches a job onto the row-blocked
 //! multi-core driver ([`spgemm::parallel`]): row blocks of A on real worker
-//! threads, one forked [`Machine`] per simulated core, static /
-//! work-stealing / work-proportional (`ws-dyn`) block scheduling, per-core
-//! metrics and critical-path cycles in [`MulticoreMetrics`]. The memory
+//! threads, one forked [`Machine`] per simulated core, per-core metrics and
+//! critical-path cycles in [`MulticoreMetrics`], and six deterministic
+//! block schedulers — static, work-stealing, work-proportional (`ws-dyn`),
+//! the pilot-replay-guided bandwidth/NUMA pair (`ws-bw`/`ws-numa`), and the
+//! adaptive `ws-adapt`, which picks the kernel *and* the block geometry per
+//! block from probe passes and the pilot, falling back bit-identically to
+//! the best fixed plan whenever it predicts no win. The memory
 //! system behind the cores is modeled end-to-end: private L1/L2 per core
 //! and one shared LLC with MESI-lite coherence bookkeeping plus a
 //! multi-channel DRAM back end, priced by deterministic trace-and-replay

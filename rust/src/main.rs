@@ -145,7 +145,7 @@ fn print_help() {
          suite commands (table3 fig8 fig9 fig10 fig11 all):\n\
          \x20   --scale F --threads N --datasets a,b --engine native|xla\n\
          \x20   --mtx-dir DIR --out-dir DIR --artifacts DIR --verify --quiet --json\n\
-         \x20   --cores N --sched static|work-stealing|ws-dyn|ws-bw|ws-numa (simulated\n\
+         \x20   --cores N --sched static|work-stealing|ws-dyn|ws-bw|ws-numa|ws-adapt (simulated\n\
          \x20   multi-core) --sockets N (NUMA sockets; channels split into per-socket groups)\n\
          \x20   --replay-shards N (parallel deterministic replay; power of two, results\n\
          \x20   bit-identical at any value) (fig8 and all also take --impls a,b)\n\
@@ -887,6 +887,33 @@ mod tests {
         // gen/table4 never replay, so they do not take the knob.
         assert!(parse_argv(&v(&["gen", "--replay-shards", "4"])).is_err());
         assert!(parse_argv(&v(&["table4", "--replay-shards", "4"])).is_err());
+    }
+
+    #[test]
+    fn ws_adapt_parses_like_every_other_scheduler() {
+        // run / suites / mem / fig12 / serve-demo all go through the same
+        // two parsers (sched_opt + parse_scheds), so the adaptive scheduler
+        // lands everywhere at once.
+        let a = parse_argv(&v(&["run", "--cores", "4", "--sched", "ws-adapt"])).unwrap();
+        assert_eq!(sched_opt(&a).unwrap(), Some(Scheduler::WorkStealingAdapt));
+        let a = parse_argv(&v(&["fig8", "--cores", "4", "--sched", "ws-adapt"])).unwrap();
+        assert_eq!(suite_spec(&a).unwrap().sched, Scheduler::WorkStealingAdapt);
+        let a = parse_argv(&v(&[
+            "mem", "--dataset", "p2p", "--sched", "ws-adapt", "--cores", "2",
+        ]))
+        .unwrap();
+        assert_eq!(sched_opt(&a).unwrap(), Some(Scheduler::WorkStealingAdapt));
+        let a = parse_argv(&v(&[
+            "serve-demo", "--cores", "2", "--sched", "ws-adapt",
+        ]))
+        .unwrap();
+        assert_eq!(sched_opt(&a).unwrap(), Some(Scheduler::WorkStealingAdapt));
+        assert_eq!(
+            parse_scheds("ws-numa,ws-adapt").unwrap(),
+            vec![Scheduler::WorkStealingNuma, Scheduler::WorkStealingAdapt]
+        );
+        // The fig12 default sweep includes ws-adapt via Scheduler::ALL.
+        assert!(Scheduler::ALL.contains(&Scheduler::WorkStealingAdapt));
     }
 
     #[test]

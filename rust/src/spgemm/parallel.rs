@@ -91,18 +91,35 @@ pub enum Scheduler {
     /// is exactly `ws-bw`'s. Same dyn block geometry, so event-count
     /// additivity is untouched; fully deterministic.
     WorkStealingNuma,
+    /// Adaptive dataflow scheduling: pick the *kernel* and the *geometry*
+    /// per block, not just the core. Deterministic serial probe passes
+    /// (simulated cycles on a scratch fork at the canonical shared
+    /// addresses — never host timing) measure each candidate kernel's
+    /// per-block, per-phase cost; Table III-style gates (row-work
+    /// histogram, within-block work variance, accumulator footprint) bound
+    /// which kernels are probed where. Heavy or channel-concentrated
+    /// blocks are split at group-aligned cuts, and a barrier-aware claim
+    /// places the resulting heterogeneous blocks so no single phase's
+    /// critical path inflates. The pilot replay arbitrates the adaptive
+    /// plan against the exact plans of the fixed schedulers and falls back
+    /// to the best of them — bit-identically — whenever it predicts no
+    /// win. Group alignment keeps exact per-core count additivity against
+    /// the serial loop *of each chosen impl*; at 1 core the plan degrades
+    /// to exactly `ws-dyn`.
+    WorkStealingAdapt,
 }
 
 impl Scheduler {
     /// Every scheduler, in presentation order — the single source of truth
     /// the CLI help, `fig12` sweeps, and the parse error all derive from,
     /// so a new scheduler lands everywhere at once.
-    pub const ALL: [Scheduler; 5] = [
+    pub const ALL: [Scheduler; 6] = [
         Scheduler::Static,
         Scheduler::WorkStealing,
         Scheduler::WorkStealingDyn,
         Scheduler::WorkStealingBw,
         Scheduler::WorkStealingNuma,
+        Scheduler::WorkStealingAdapt,
     ];
 
     pub const fn name(self) -> &'static str {
@@ -112,6 +129,7 @@ impl Scheduler {
             Scheduler::WorkStealingDyn => "ws-dyn",
             Scheduler::WorkStealingBw => "ws-bw",
             Scheduler::WorkStealingNuma => "ws-numa",
+            Scheduler::WorkStealingAdapt => "ws-adapt",
         }
     }
 }
@@ -129,6 +147,7 @@ impl std::str::FromStr for Scheduler {
             "work-stealing-dyn" => Ok(Scheduler::WorkStealingDyn),
             "work-stealing-bw" => Ok(Scheduler::WorkStealingBw),
             "work-stealing-numa" => Ok(Scheduler::WorkStealingNuma),
+            "work-stealing-adapt" => Ok(Scheduler::WorkStealingAdapt),
             other => {
                 let known: Vec<&str> = Scheduler::ALL.iter().map(|s| s.name()).collect();
                 Err(format!(
@@ -155,6 +174,13 @@ pub struct ParallelConfig {
     /// Rows of A per block (rounded up to the matrix-unit group size);
     /// `None` picks [`block_rows_for`]'s core-count-independent default.
     pub block_rows: Option<usize>,
+    /// Which implementation `make_impl` constructs, when the caller knows.
+    /// Only `ws-adapt` consults it: per-block kernel swaps are enabled only
+    /// when the job's own kernel is one of the paper trio (scl-array,
+    /// scl-hash, spz), whose group-aligned counts are exactly serial — so a
+    /// heterogeneous run stays count-additive per chosen impl. `None`
+    /// disables swapping (geometry + placement adaptation still apply).
+    pub impl_id: Option<crate::spgemm::ImplId>,
 }
 
 impl ParallelConfig {
@@ -163,8 +189,35 @@ impl ParallelConfig {
             cores,
             scheduler: Scheduler::WorkStealing,
             block_rows: None,
+            impl_id: None,
         }
     }
+}
+
+/// What `ws-adapt` decided for one job (`None` on every fixed scheduler):
+/// how many blocks ran on each paper kernel, how many were swapped off the
+/// job's own kernel or split for bandwidth, and the pilot's predicted stall
+/// cycles next to the replay's achieved ones — the honesty signal: a large
+/// gap means the pilot is misleading the planner.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SchedDecisions {
+    /// Blocks actually executed (after any splits).
+    pub total_blocks: usize,
+    pub blocks_scl_array: usize,
+    pub blocks_scl_hash: usize,
+    pub blocks_spz: usize,
+    /// Blocks on a job kernel outside the paper trio (vec-radix, spz-rsort,
+    /// or an unknown `impl_id`) — never swapped.
+    pub blocks_other: usize,
+    /// Blocks whose kernel differs from the job's own implementation.
+    pub swapped_blocks: usize,
+    /// Heavy / channel-concentrated blocks split in two at a group-aligned
+    /// cut (each contributes one extra entry to `total_blocks`).
+    pub split_blocks: usize,
+    /// Sum over cores of the pilot's stall score for the chosen plan.
+    pub predicted_stall_cycles: f64,
+    /// Sum over cores of the replay's folded per-phase stalls.
+    pub achieved_stall_cycles: f64,
 }
 
 /// Result of a parallel run: the stitched product, the per-core metrics
@@ -175,6 +228,15 @@ pub struct ParallelRun {
     pub csr: Csr,
     pub metrics: MulticoreMetrics,
     pub blocks_per_core: Vec<usize>,
+    /// `ws-adapt`'s decision summary; `None` under every fixed scheduler
+    /// (and on `ws-adapt`'s degenerate 1-core / empty-matrix paths).
+    pub decisions: Option<SchedDecisions>,
+    /// The executed block geometry with the kernel that ran each block:
+    /// `(lo, hi, impl)`, where `None` means the job's own implementation.
+    /// Under fixed schedulers every entry is `None`; `ws-adapt` records its
+    /// swaps here so tests can check count additivity *per chosen impl*
+    /// exactly (sum of per-impl serial slab counts == parallel totals).
+    pub block_plan: Vec<(usize, usize, Option<crate::spgemm::ImplId>)>,
 }
 
 /// Target block count for both the uniform and the work-proportional
@@ -271,13 +333,16 @@ fn assign_blocks(
         Scheduler::Static => (0..cores)
             .map(|c| (c * nblocks / cores..(c + 1) * nblocks / cores).collect())
             .collect(),
-        // ws-bw and ws-numa start from the same greedy claim replay; the
-        // driver then refines it with the pilot (see [`assign_blocks_bw`]
-        // and [`assign_blocks_numa`]).
+        // ws-bw, ws-numa, and ws-adapt start from the same greedy claim
+        // replay; the driver then refines it with the pilot (see
+        // [`assign_blocks_bw`], [`assign_blocks_numa`], [`adapt_plan`]).
+        // This is also ws-adapt's degenerate path (1 core / no blocks),
+        // which makes it bit-identical to ws-dyn there.
         Scheduler::WorkStealing
         | Scheduler::WorkStealingDyn
         | Scheduler::WorkStealingBw
-        | Scheduler::WorkStealingNuma => greedy_claim(&block_work(row_work, blocks), cores, None),
+        | Scheduler::WorkStealingNuma
+        | Scheduler::WorkStealingAdapt => greedy_claim(&block_work(row_work, blocks), cores, None),
     }
 }
 
@@ -415,42 +480,71 @@ fn pilot_traces(
         .collect()
 }
 
-/// Shared machinery of the pilot-guided schedulers (`ws-bw`, `ws-numa`):
-/// the per-block work estimates, the canonical line ranges each block will
-/// stream, each core's socket, and the one-shot socket-stamped pilot replay
-/// that scores a candidate plan. A pure function of the inputs, so every
-/// plan it arbitrates is bit-reproducible.
+/// Per-block shared-output windows: each block owns the element span its
+/// Gustavson estimate bounds (`max(1, work)` so even an empty block gets a
+/// window). Returns `(block_est, block_off, total_est)` — used both for the
+/// real run's `bind_output_block` and for the pilot's line ranges, so the
+/// two always agree on the canonical addresses.
+fn block_windows(row_work: &[u64], blocks: &[(usize, usize)]) -> (Vec<u64>, Vec<u64>, u64) {
+    let mut block_est: Vec<u64> = Vec::with_capacity(blocks.len());
+    let mut block_off: Vec<u64> = Vec::with_capacity(blocks.len());
+    let mut total_est = 0u64;
+    for &(lo, hi) in blocks {
+        let est = row_work[lo..hi].iter().sum::<u64>().max(1);
+        block_off.push(total_est);
+        block_est.push(est);
+        total_est += est;
+    }
+    (block_est, block_off, total_est)
+}
+
+/// One pilot-score memo shared by *every* pilot a single job builds, keyed
+/// by `(block geometry, per-block work bits, plan)`. `ws-bw` and `ws-numa`
+/// arbitrate overlapping candidate sets over one geometry, and `ws-adapt`
+/// additionally scores split geometries and probe-weighted variants of the
+/// same plans — a single cache key covering all three means no synthetic
+/// trace set is ever replayed twice per job. Scoring stays a pure function
+/// of the key; the cache only skips recomputation.
+type PilotKey = (Vec<(usize, usize)>, Vec<u64>, Vec<Vec<usize>>);
+type PilotMemo = RefCell<HashMap<PilotKey, Vec<f64>>>;
+
+/// Shared machinery of the pilot-guided schedulers (`ws-bw`, `ws-numa`,
+/// `ws-adapt`): the per-block work estimates, the canonical line ranges
+/// each block will stream, each core's socket, and the one-shot
+/// socket-stamped pilot replay that scores a candidate plan. A pure
+/// function of the inputs, so every plan it arbitrates is bit-reproducible.
 struct Pilot<'a> {
     sys: &'a SystemConfig,
+    blocks: Vec<(usize, usize)>,
     work: Vec<f64>,
     ranges: Vec<Vec<(u64, u64, bool)>>,
     stride: u64,
     socks: Vec<u8>,
     cfg: crate::config::SharedMemConfig,
-    /// Pilot-replay scores memoized by plan: `ws-bw` and `ws-numa` arbitrate
-    /// overlapping candidate sets (the rebalanced plan often *is* the plain
-    /// plan, and `ws-numa` starts from `ws-bw`'s winner), so without this
-    /// the same synthetic trace set gets replayed several times per job.
-    /// Scoring stays a pure function of the plan — the cache only skips
-    /// recomputation.
-    memo: RefCell<HashMap<Vec<Vec<usize>>, Vec<f64>>>,
+    memo: &'a PilotMemo,
 }
 
 impl<'a> Pilot<'a> {
+    /// The one entry point every pilot-guided scheduler builds its synthetic
+    /// traces through. `work` is the per-block cost the trace events are
+    /// time-spread by: the Gustavson estimate (`block_work`) for the fixed
+    /// schedulers — whose plans must reproduce bit-for-bit — or `ws-adapt`'s
+    /// probed per-block cycles, which time the same line ranges more
+    /// honestly for heterogeneous kernels.
     #[allow(clippy::too_many_arguments)]
-    fn new(
+    fn build(
         sys: &'a SystemConfig,
         a: &Csr,
         b: &Csr,
-        row_work: &[u64],
+        work: Vec<f64>,
         blocks: &[(usize, usize)],
         b_addrs: (u64, u64, u64),
         out_addrs: (u64, u64, u64),
         block_est: &[u64],
         block_off: &[u64],
         cores: usize,
+        memo: &'a PilotMemo,
     ) -> Pilot<'a> {
-        let work = block_work(row_work, blocks);
         let line_shift = sys.mem.l1d.line_bytes.trailing_zeros();
         let ranges = block_line_ranges(
             a, b, blocks, line_shift, b_addrs, out_addrs, block_est, block_off,
@@ -467,16 +561,22 @@ impl<'a> Pilot<'a> {
             max_replay_iters: 1,
             ..sys.shared
         };
-        Pilot { sys, work, ranges, stride, socks, cfg, memo: RefCell::new(HashMap::new()) }
+        Pilot { sys, blocks: blocks.to_vec(), work, ranges, stride, socks, cfg, memo }
     }
 
     /// Per-core pilot stall score for `plan`: queueing, row-buffer
     /// interference, and hop-priced NUMA charges (zero at one socket, so
     /// the `ws-bw` arbitration is bit-identical to the flat model there).
-    /// Memoized per plan — a plan scored once during `ws-bw`'s arbitration
-    /// is not re-replayed when `ws-numa` considers it again.
+    /// Memoized in the job-wide cache — a plan scored once during `ws-bw`'s
+    /// arbitration is not re-replayed when `ws-numa` or `ws-adapt`
+    /// considers it again under the same geometry and work weights.
     fn stalls(&self, plan: &[Vec<usize>]) -> Vec<f64> {
-        if let Some(scores) = self.memo.borrow().get(plan) {
+        let key: PilotKey = (
+            self.blocks.clone(),
+            self.work.iter().map(|w| w.to_bits()).collect(),
+            plan.to_vec(),
+        );
+        if let Some(scores) = self.memo.borrow().get(&key) {
             return scores.clone();
         }
         let traces = pilot_traces(plan, &self.work, &self.ranges, self.stride, &self.socks);
@@ -491,7 +591,7 @@ impl<'a> Pilot<'a> {
                     + s.remote_extra_cycles
             })
             .collect();
-        self.memo.borrow_mut().insert(plan.to_vec(), scores.clone());
+        self.memo.borrow_mut().insert(key, scores.clone());
         scores
     }
 
@@ -540,6 +640,53 @@ impl<'a> Pilot<'a> {
                 per.iter()
                     .map(|&n| n as f64 / total.max(1) as f64)
                     .collect()
+            })
+            .collect()
+    }
+
+    /// Mean hop distance of each block's footprint from each socket,
+    /// tabulated once so claim loops stay O(blocks x cores). All-zero rows
+    /// at one socket.
+    fn socket_hops(&self) -> Vec<Vec<f64>> {
+        let shared = &self.sys.shared;
+        self.socket_fractions()
+            .iter()
+            .map(|f| {
+                (0..shared.sockets)
+                    .map(|s| {
+                        f.iter()
+                            .enumerate()
+                            .map(|(s2, &x)| x * shared.socket_distance(s, s2) as f64)
+                            .sum()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Per-block peak single-channel fraction of the block's line footprint
+    /// — the bandwidth-concentration signal `ws-adapt`'s split pass keys
+    /// on. A block whose lines pile onto one DRAM channel serializes behind
+    /// that channel no matter which core runs it; cutting it in two lets
+    /// the halves' windows interleave across channels.
+    fn channel_peak(&self) -> Vec<f64> {
+        let channels = self.sys.shared.dram_channels as u64;
+        self.ranges
+            .iter()
+            .map(|r| {
+                let mut per = vec![0u64; channels as usize];
+                let mut total = 0u64;
+                for &(first, nlines, _) in r {
+                    let base = nlines / channels;
+                    let rem = nlines % channels;
+                    let start = first % channels;
+                    for ch in 0..channels {
+                        let pos = (ch + channels - start) % channels;
+                        per[ch as usize] += base + u64::from(pos < rem);
+                    }
+                    total += nlines;
+                }
+                per.iter().copied().max().unwrap_or(0) as f64 / total.max(1) as f64
             })
             .collect()
     }
@@ -601,22 +748,7 @@ fn assign_blocks_numa(
     if shared.sockets <= 1 {
         return plan_bw;
     }
-    // Mean hop distance of each block's footprint from each socket,
-    // tabulated once (the claim loop below is O(blocks x cores)).
-    let hops: Vec<Vec<f64>> = pilot
-        .socket_fractions()
-        .iter()
-        .map(|f| {
-            (0..shared.sockets)
-                .map(|s| {
-                    f.iter()
-                        .enumerate()
-                        .map(|(s2, &x)| x * shared.socket_distance(s, s2) as f64)
-                        .sum()
-                })
-                .collect()
-        })
-        .collect();
+    let hops = pilot.socket_hops();
     // How much a fully-remote footprint inflates a block's effective cost:
     // the hop-priced transfer relative to the local transfer occupancy. The
     // pilot arbitrates below; this only shapes the candidate.
@@ -642,6 +774,553 @@ fn assign_blocks_numa(
         plan
     } else {
         plan_bw
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ws-adapt: per-block kernel + geometry adaptation
+// ---------------------------------------------------------------------------
+
+/// Which kernel executes one row block under `ws-adapt`. `Job` is the
+/// implementation the job asked for; the other three are the paper kernels
+/// the planner may swap a block onto (all group-local, so their per-block
+/// counts are exactly the serial loop's for the same rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BlockKernel {
+    Job,
+    SclArray,
+    SclHash,
+    Spz,
+}
+
+/// A swap must beat the job's own kernel on probed cycles by this margin —
+/// below it the difference is within the probe's cross-block cache-carryover
+/// noise and the planner keeps the homogeneous choice.
+const ADAPT_SWAP_MARGIN: f64 = 0.02;
+
+/// The adaptive plan must beat the best fixed candidate's score by this
+/// margin, otherwise `ws-adapt` executes that fixed plan bit-identically
+/// (the "pilot predicts no win" fallback).
+const ADAPT_PLAN_MARGIN: f64 = 0.005;
+
+/// Measure one kernel's per-block, per-phase cycle profile by running it
+/// serially over the gated blocks on a scratch fork of the base machine.
+/// The fork sees the same canonical B and shared-output addresses as the
+/// real workers, so the profile is the kernel's true simulated cost before
+/// contention — a probe in the pilot's sense: pure simulation, never host
+/// timing, bit-reproducible. Ungated blocks return `None`.
+#[allow(clippy::too_many_arguments)]
+fn probe_blocks(
+    base: &Machine,
+    mut im: Box<dyn SpGemm>,
+    a: &Csr,
+    b: &Csr,
+    blocks: &[(usize, usize)],
+    block_est: &[u64],
+    block_off: &[u64],
+    gate: &[bool],
+) -> Result<Vec<Option<[f64; NUM_PHASES]>>> {
+    let mut m = base.fork_core(0);
+    let mut out = Vec::with_capacity(blocks.len());
+    let mut prev = m.metrics().phase_cycles;
+    for (bi, &(lo, hi)) in blocks.iter().enumerate() {
+        if !gate[bi] {
+            out.push(None);
+            continue;
+        }
+        m.bind_output_block(lo, block_off[bi], block_est[bi]);
+        let slab = row_slab(a, lo, hi);
+        im.multiply(&mut m, &slab, b)
+            .with_context(|| format!("ws-adapt probe, rows {lo}..{hi}"))?;
+        let cur = m.metrics().phase_cycles;
+        let mut d = [0.0f64; NUM_PHASES];
+        for (p, v) in d.iter_mut().enumerate() {
+            *v = cur[p] - prev[p];
+        }
+        prev = cur;
+        out.push(Some(d));
+    }
+    Ok(out)
+}
+
+/// Apportion a block's probed phase profile onto a sub-range of its rows,
+/// proportional to the rows' share of the block's work estimate (`+1` per
+/// row for the fixed row overheads, mirroring [`block_work`]).
+fn apportion(
+    phase: &[f64; NUM_PHASES],
+    row_work: &[u64],
+    block: (usize, usize),
+    part: (usize, usize),
+) -> [f64; NUM_PHASES] {
+    let w = |lo: usize, hi: usize| (row_work[lo..hi].iter().sum::<u64>() + (hi - lo) as u64) as f64;
+    let frac = w(part.0, part.1) / w(block.0, block.1).max(1.0);
+    let mut out = *phase;
+    for v in &mut out {
+        *v *= frac;
+    }
+    out
+}
+
+/// Barrier-per-phase makespan of a candidate plan. The multi-core metrics
+/// charge each phase's critical path as the max over cores
+/// ([`MulticoreMetrics::from_cores`]), so a plan is scored as the sum over
+/// phases of the slowest core's phase load — per-core pilot stalls are
+/// spread over the core's phases proportionally to its load. This is what
+/// makes heterogeneous plans honest: mixing kernels with different phase
+/// shapes can inflate a phase barrier even when per-core *totals* balance,
+/// and a total-work score would never see it. Public (with
+/// [`phase_aware_claims`]) for the scheduler-decision bench.
+pub fn phase_makespan(
+    phase_cost: &[[f64; NUM_PHASES]],
+    plan: &[Vec<usize>],
+    stalls: &[f64],
+) -> f64 {
+    let cores = plan.len();
+    let mut load = vec![[0.0f64; NUM_PHASES]; cores];
+    for (c, mine) in plan.iter().enumerate() {
+        for &bi in mine {
+            for (p, l) in load[c].iter_mut().enumerate() {
+                *l += phase_cost[bi][p];
+            }
+        }
+    }
+    let totals: Vec<f64> = load.iter().map(|l| l.iter().sum()).collect();
+    (0..NUM_PHASES)
+        .map(|p| {
+            (0..cores)
+                .map(|c| {
+                    let stall = if totals[c] > 0.0 {
+                        stalls.get(c).copied().unwrap_or(0.0) * load[c][p] / totals[c]
+                    } else {
+                        0.0
+                    };
+                    load[c][p] + stall
+                })
+                .fold(0.0, f64::max)
+        })
+        .sum()
+}
+
+/// Deterministic barrier-aware greedy claim: walk blocks in order, handing
+/// each to the core that minimizes the resulting [`phase_makespan`]
+/// objective (no stall term — the pilot arbitrates afterwards). Ties break
+/// toward the lowest core id. Public for the scheduler-decision bench.
+pub fn phase_aware_claims(phase_cost: &[[f64; NUM_PHASES]], cores: usize) -> Vec<Vec<usize>> {
+    phase_claims_scaled(phase_cost, cores, |_, _| 1.0)
+}
+
+/// [`phase_aware_claims`] with a per-(block, core) cost inflation — the
+/// NUMA candidate passes hop-priced factors, mirroring
+/// [`assign_blocks_numa`]'s effective-cost claim.
+fn phase_claims_scaled(
+    phase_cost: &[[f64; NUM_PHASES]],
+    cores: usize,
+    scale: impl Fn(usize, usize) -> f64,
+) -> Vec<Vec<usize>> {
+    let mut plan: Vec<Vec<usize>> = vec![Vec::new(); cores];
+    let mut load = vec![[0.0f64; NUM_PHASES]; cores];
+    for (bi, pc) in phase_cost.iter().enumerate() {
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for c in 0..cores {
+            let f = scale(bi, c);
+            let mut score = 0.0;
+            for p in 0..NUM_PHASES {
+                let mut worst = load[c][p] + pc[p] * f;
+                for (c2, l2) in load.iter().enumerate() {
+                    if c2 != c {
+                        worst = worst.max(l2[p]);
+                    }
+                }
+                score += worst;
+            }
+            if score < best_score {
+                best_score = score;
+                best = c;
+            }
+        }
+        let f = scale(bi, best);
+        for (p, l) in load[best].iter_mut().enumerate() {
+            *l += phase_cost[bi][p] * f;
+        }
+        plan[best].push(bi);
+    }
+    plan
+}
+
+/// Contiguous equal-work segments of the block list — `ws-adapt`'s
+/// surrogate for the `static` scheduler's placement (contiguous row spans
+/// per core, so B-row reuse stays core-local), but balanced by probed cost
+/// instead of block count, on the same dyn geometry so the shared-output
+/// mapping is untouched.
+fn contiguous_claims(work: &[f64], cores: usize) -> Vec<Vec<usize>> {
+    let mut plan: Vec<Vec<usize>> = vec![Vec::new(); cores];
+    let total: f64 = work.iter().sum();
+    let mut c = 0usize;
+    let mut acc = 0.0f64;
+    let mut spent = 0.0f64;
+    for (i, &w) in work.iter().enumerate() {
+        plan[c].push(i);
+        acc += w;
+        let target = (total - spent) / (cores - c) as f64;
+        if c + 1 < cores && acc >= target {
+            spent += acc;
+            acc = 0.0;
+            c += 1;
+        }
+    }
+    plan
+}
+
+/// `ws-adapt`'s chosen execution: possibly-split geometry with its output
+/// windows, the block-to-core plan, the per-block kernels, and the decision
+/// summary (`achieved_stall_cycles` is filled by the driver after the real
+/// replay).
+struct AdaptPlan {
+    blocks: Vec<(usize, usize)>,
+    block_est: Vec<u64>,
+    block_off: Vec<u64>,
+    plan: Vec<Vec<usize>>,
+    kernels: Vec<BlockKernel>,
+    decisions: SchedDecisions,
+}
+
+/// The `ws-adapt` planner. Deterministic end to end: every input is either
+/// matrix structure, the Table III work estimates, a probe (simulated
+/// cycles), or the pilot replay — never host timing.
+///
+/// 1. **Probe** the job's kernel on every block, and each gated alternative
+///    kernel (gates from the row-work histogram, within-block density, and
+///    the accumulator footprint) on the blocks where it could plausibly
+///    win. A swap must beat the job kernel by [`ADAPT_SWAP_MARGIN`].
+/// 2. **Split** heavy or channel-concentrated blocks at a group-aligned,
+///    work-balanced cut; the children tile the parent's output window, so
+///    the shared-output mapping (and count additivity) is untouched.
+/// 3. **Place** the heterogeneous blocks with the barrier-aware claim (and
+///    a hop-scaled NUMA variant at >1 socket), then let the pilot-backed
+///    [`phase_makespan`] arbitrate against the *exact* plans of the fixed
+///    schedulers (ws-dyn's greedy claim, ws-bw, ws-numa, and a contiguous
+///    static surrogate). Unless the adaptive plan wins by
+///    [`ADAPT_PLAN_MARGIN`], the best fixed plan executes bit-identically.
+#[allow(clippy::too_many_arguments)]
+fn adapt_plan<F>(
+    sys: &SystemConfig,
+    base: &Machine,
+    make_impl: &F,
+    a: &Csr,
+    b: &Csr,
+    row_work: &[u64],
+    blocks: &[(usize, usize)],
+    block_est: &[u64],
+    block_off: &[u64],
+    b_addrs: (u64, u64, u64),
+    out_addrs: (u64, u64, u64),
+    cores: usize,
+    impl_id: Option<crate::spgemm::ImplId>,
+    memo: &PilotMemo,
+) -> Result<AdaptPlan>
+where
+    F: Fn() -> Result<Box<dyn SpGemm>> + Sync,
+{
+    use crate::spgemm::ImplId;
+    let nblocks = blocks.len();
+    let group = sys.unit.n.max(1);
+
+    // --- Table III gating stats, per block --------------------------------
+    let bwork = block_work(row_work, blocks);
+    let mean_work = bwork.iter().sum::<f64>() / nblocks as f64;
+    let avg_wpr: Vec<f64> = blocks
+        .iter()
+        .map(|&(lo, hi)| row_work[lo..hi].iter().sum::<u64>() as f64 / (hi - lo) as f64)
+        .collect();
+
+    // The job's own kernel, when it is one of the paper trio.
+    let job_kernel = match impl_id {
+        Some(ImplId::SclArray) => Some(BlockKernel::SclArray),
+        Some(ImplId::SclHash) => Some(BlockKernel::SclHash),
+        Some(ImplId::Spz) => Some(BlockKernel::Spz),
+        _ => None,
+    };
+
+    // --- Probe passes -----------------------------------------------------
+    let job_phase: Vec<[f64; NUM_PHASES]> =
+        probe_blocks(base, make_impl()?, a, b, blocks, block_est, block_off, &vec![
+            true;
+            nblocks
+        ])?
+        .into_iter()
+        .map(|p| p.expect("all blocks gated on for the job probe"))
+        .collect();
+
+    let mut cand: Vec<(BlockKernel, Vec<Option<[f64; NUM_PHASES]>>)> = Vec::new();
+    if job_kernel.is_some() {
+        // scl-array: only when its dense accumulator (acc + stamp + touched,
+        // 12 bytes per B column) stays cache-resident; pointless on empty
+        // blocks.
+        if job_kernel != Some(BlockKernel::SclArray)
+            && b.ncols as u64 * 12 <= sys.mem.l2.size_bytes as u64
+        {
+            let gate: Vec<bool> = bwork
+                .iter()
+                .zip(blocks)
+                .map(|(&w, &(lo, hi))| w > (hi - lo) as f64)
+                .collect();
+            if gate.iter().any(|&g| g) {
+                let probe = probe_blocks(
+                    base,
+                    Box::new(crate::spgemm::scl_array::SclArray),
+                    a,
+                    b,
+                    blocks,
+                    block_est,
+                    block_off,
+                    &gate,
+                )?;
+                cand.push((BlockKernel::SclArray, probe));
+            }
+        }
+        // scl-hash: wins on light rows, where its probe table stays small
+        // and spz's per-group fixed costs dominate.
+        if job_kernel != Some(BlockKernel::SclHash) {
+            let gate: Vec<bool> = avg_wpr.iter().map(|&w| w <= (4 * group) as f64).collect();
+            if gate.iter().any(|&g| g) {
+                let probe = probe_blocks(
+                    base,
+                    Box::new(crate::spgemm::scl_hash::SclHash),
+                    a,
+                    b,
+                    blocks,
+                    block_est,
+                    block_off,
+                    &gate,
+                )?;
+                cand.push((BlockKernel::SclHash, probe));
+            }
+        }
+        // spz: vectorized expansion pays off once rows carry real work.
+        if job_kernel != Some(BlockKernel::Spz) {
+            let gate: Vec<bool> = avg_wpr.iter().map(|&w| w >= group as f64).collect();
+            if gate.iter().any(|&g| g) {
+                let probe = probe_blocks(
+                    base,
+                    Box::new(crate::spgemm::spz::Spz::native()),
+                    a,
+                    b,
+                    blocks,
+                    block_est,
+                    block_off,
+                    &gate,
+                )?;
+                cand.push((BlockKernel::Spz, probe));
+            }
+        }
+    }
+
+    // --- Per-block kernel choice (with margin) ----------------------------
+    let mut kernels = vec![BlockKernel::Job; nblocks];
+    let mut chosen: Vec<[f64; NUM_PHASES]> = job_phase.clone();
+    for bi in 0..nblocks {
+        let jt: f64 = job_phase[bi].iter().sum();
+        let mut best_t = jt;
+        for (k, probe) in &cand {
+            if let Some(p) = probe[bi] {
+                let t: f64 = p.iter().sum();
+                if t < best_t && t < jt * (1.0 - ADAPT_SWAP_MARGIN) {
+                    best_t = t;
+                    kernels[bi] = *k;
+                    chosen[bi] = p;
+                }
+            }
+        }
+    }
+
+    // --- Pilot on the dyn geometry (fixed-plan candidates) ----------------
+    let pilot = Pilot::build(
+        sys,
+        a,
+        b,
+        bwork.clone(),
+        blocks,
+        b_addrs,
+        out_addrs,
+        block_est,
+        block_off,
+        cores,
+        memo,
+    );
+
+    // --- Split pass: heavy or channel-concentrated blocks -----------------
+    let peak = pilot.channel_peak();
+    let conc = 1.5 / sys.shared.dram_channels as f64;
+    let mut blocks2 = Vec::with_capacity(nblocks);
+    let mut est2 = Vec::with_capacity(nblocks);
+    let mut off2 = Vec::with_capacity(nblocks);
+    let mut kernels2 = Vec::with_capacity(nblocks);
+    let mut phase2: Vec<[f64; NUM_PHASES]> = Vec::with_capacity(nblocks);
+    let mut split = 0usize;
+    for bi in 0..nblocks {
+        let (lo, hi) = blocks[bi];
+        let want = bwork[bi] >= 2.0 * mean_work || (peak[bi] >= conc && bwork[bi] >= mean_work);
+        let mut cut = 0usize;
+        if want && hi - lo >= 2 * group {
+            // Group-aligned, work-balanced cut.
+            let total = bwork[bi];
+            let mut acc = 0.0f64;
+            let mut r = lo;
+            while r + group < hi {
+                let g = (r + group).min(hi);
+                acc += (row_work[r..g].iter().sum::<u64>() + (g - r) as u64) as f64;
+                r = g;
+                if acc * 2.0 >= total {
+                    break;
+                }
+            }
+            if r > lo && r < hi {
+                let w1: u64 = row_work[lo..r].iter().sum();
+                let w2: u64 = row_work[r..hi].iter().sum();
+                // Both windows must stay non-empty so the children tile the
+                // parent's output span exactly.
+                if w1 >= 1 && w2 >= 1 {
+                    cut = r;
+                }
+            }
+        }
+        if cut != 0 {
+            let w1: u64 = row_work[lo..cut].iter().sum();
+            blocks2.push((lo, cut));
+            est2.push(w1);
+            off2.push(block_off[bi]);
+            kernels2.push(kernels[bi]);
+            phase2.push(apportion(&chosen[bi], row_work, (lo, hi), (lo, cut)));
+            blocks2.push((cut, hi));
+            est2.push(block_est[bi] - w1);
+            off2.push(block_off[bi] + w1);
+            kernels2.push(kernels[bi]);
+            phase2.push(apportion(&chosen[bi], row_work, (lo, hi), (cut, hi)));
+            split += 1;
+        } else {
+            blocks2.push((lo, hi));
+            est2.push(block_est[bi]);
+            off2.push(block_off[bi]);
+            kernels2.push(kernels[bi]);
+            phase2.push(chosen[bi]);
+        }
+    }
+
+    // --- Fixed candidates: the exact plans the fixed schedulers run -------
+    let job_only: Vec<[f64; NUM_PHASES]> = job_phase;
+    let plan_dyn = assign_blocks(row_work, blocks, cores, Scheduler::WorkStealingDyn);
+    let (plan_bw, _) = assign_blocks_bw(&pilot, row_work, blocks, cores);
+    let plan_numa = assign_blocks_numa(&pilot, row_work, blocks, cores);
+    let job_tot: Vec<f64> = job_only.iter().map(|p| p.iter().sum()).collect();
+    let plan_contig = contiguous_claims(&job_tot, cores);
+    let fixed = [plan_dyn, plan_bw, plan_numa, plan_contig];
+    let mut best_fixed = 0usize;
+    let mut best_fixed_score = f64::INFINITY;
+    let mut fixed_stalls = 0.0f64;
+    for (i, plan) in fixed.iter().enumerate() {
+        let stalls = pilot.stalls(plan);
+        let score = phase_makespan(&job_only, plan, &stalls);
+        if score < best_fixed_score {
+            best_fixed_score = score;
+            best_fixed = i;
+            fixed_stalls = stalls.iter().sum();
+        }
+    }
+
+    // --- Adaptive candidates on the (possibly split) geometry -------------
+    let adapt_work: Vec<f64> = phase2.iter().map(|p| p.iter().sum()).collect();
+    let pilot2 = Pilot::build(
+        sys,
+        a,
+        b,
+        adapt_work,
+        &blocks2,
+        b_addrs,
+        out_addrs,
+        &est2,
+        &off2,
+        cores,
+        memo,
+    );
+    let mut adapt_cands = vec![phase_aware_claims(&phase2, cores)];
+    if sys.shared.sockets > 1 {
+        let hops = pilot2.socket_hops();
+        let shared = &sys.shared;
+        let beta = shared.remote_transfer_cycles / shared.dram_transfer_cycles.max(1e-9);
+        let socks = pilot2.socks.clone();
+        adapt_cands.push(phase_claims_scaled(&phase2, cores, |bi, c| {
+            1.0 + beta * hops[bi][socks[c] as usize]
+        }));
+    }
+    let mut best_adapt = 0usize;
+    let mut best_adapt_score = f64::INFINITY;
+    let mut adapt_stalls = 0.0f64;
+    for (i, plan) in adapt_cands.iter().enumerate() {
+        let stalls = pilot2.stalls(plan);
+        let score = phase_makespan(&phase2, plan, &stalls);
+        if score < best_adapt_score {
+            best_adapt_score = score;
+            best_adapt = i;
+            adapt_stalls = stalls.iter().sum();
+        }
+    }
+
+    // --- Arbitrate --------------------------------------------------------
+    let count = |kernels: &[BlockKernel], d: &mut SchedDecisions| {
+        for &k in kernels {
+            let eff = if k == BlockKernel::Job { job_kernel } else { Some(k) };
+            match eff {
+                Some(BlockKernel::SclArray) => d.blocks_scl_array += 1,
+                Some(BlockKernel::SclHash) => d.blocks_scl_hash += 1,
+                Some(BlockKernel::Spz) => d.blocks_spz += 1,
+                _ => d.blocks_other += 1,
+            }
+            if k != BlockKernel::Job {
+                d.swapped_blocks += 1;
+            }
+        }
+    };
+    if best_adapt_score < best_fixed_score * (1.0 - ADAPT_PLAN_MARGIN) {
+        let mut d = SchedDecisions {
+            total_blocks: blocks2.len(),
+            split_blocks: split,
+            predicted_stall_cycles: adapt_stalls,
+            ..SchedDecisions::default()
+        };
+        count(&kernels2, &mut d);
+        Ok(AdaptPlan {
+            blocks: blocks2,
+            block_est: est2,
+            block_off: off2,
+            plan: adapt_cands.swap_remove(best_adapt),
+            kernels: kernels2,
+            decisions: d,
+        })
+    } else {
+        // No predicted win: execute the best fixed plan bit-identically
+        // (original geometry, job kernel everywhere).
+        let mut d = SchedDecisions {
+            total_blocks: nblocks,
+            predicted_stall_cycles: fixed_stalls,
+            ..SchedDecisions::default()
+        };
+        count(&vec![BlockKernel::Job; nblocks], &mut d);
+        let [p0, p1, p2, p3] = fixed;
+        let plan = match best_fixed {
+            0 => p0,
+            1 => p1,
+            2 => p2,
+            _ => p3,
+        };
+        Ok(AdaptPlan {
+            blocks: blocks.to_vec(),
+            block_est: block_est.to_vec(),
+            block_off: block_off.to_vec(),
+            plan,
+            kernels: vec![BlockKernel::Job; nblocks],
+            decisions: d,
+        })
     }
 }
 
@@ -733,7 +1412,10 @@ where
     let row_work = crate::matrix::stats::row_work(a, b);
     let blocks = if matches!(
         cfg.scheduler,
-        Scheduler::WorkStealingDyn | Scheduler::WorkStealingBw | Scheduler::WorkStealingNuma
+        Scheduler::WorkStealingDyn
+            | Scheduler::WorkStealingBw
+            | Scheduler::WorkStealingNuma
+            | Scheduler::WorkStealingAdapt
     ) && cfg.block_rows.is_none()
     {
         dyn_blocks_from_work(a.nrows, sys.unit.n, &row_work)
@@ -746,20 +1428,20 @@ where
     // block owning the element window its Gustavson estimate bounds. Blocks
     // on different cores then write-share the boundary lines, so phase-3
     // output traffic exercises the replay's upgrade/invalidation path the
-    // way a real parallel SpGEMM stresses its shared C arrays.
-    let mut block_est: Vec<u64> = Vec::with_capacity(blocks.len());
-    let mut block_off: Vec<u64> = Vec::with_capacity(blocks.len());
-    let mut total_est = 0u64;
-    for &(lo, hi) in &blocks {
-        let est = row_work[lo..hi].iter().sum::<u64>().max(1);
-        block_off.push(total_est);
-        block_est.push(est);
-        total_est += est;
-    }
+    // way a real parallel SpGEMM stresses its shared C arrays. (When
+    // ws-adapt splits a block, the children tile the parent's window, so
+    // this mapping — fixed before planning — stays valid for any geometry
+    // the planner picks.)
+    let (block_est, block_off, total_est) = block_windows(&row_work, &blocks);
     base.map_shared_output(a.nrows, total_est as usize);
     let out_addrs = base.shared_output().expect("shared output was just mapped");
 
-    let plan = match cfg.scheduler {
+    // One memo shared by every pilot this job builds (ws-bw/ws-numa
+    // arbitration and all of ws-adapt's candidate geometries).
+    let memo = PilotMemo::default();
+    let mut kernels: Vec<BlockKernel> = Vec::new(); // empty = job kernel everywhere
+    let mut decisions: Option<SchedDecisions> = None;
+    let (plan, blocks, block_est, block_off) = match cfg.scheduler {
         // The pilot-guided schedulers only differ from the plain greedy
         // claim when there is something to arbitrate; at 1 core or with no
         // blocks, skip the (O(nnz) line-range) pilot setup entirely and
@@ -767,17 +1449,54 @@ where
         Scheduler::WorkStealingBw | Scheduler::WorkStealingNuma
             if cores >= 2 && !blocks.is_empty() =>
         {
-            let pilot = Pilot::new(
-                &sys, a, b, &row_work, &blocks, b_addrs, out_addrs, &block_est, &block_off,
+            let pilot = Pilot::build(
+                &sys,
+                a,
+                b,
+                block_work(&row_work, &blocks),
+                &blocks,
+                b_addrs,
+                out_addrs,
+                &block_est,
+                &block_off,
                 cores,
+                &memo,
             );
-            if cfg.scheduler == Scheduler::WorkStealingNuma {
+            let plan = if cfg.scheduler == Scheduler::WorkStealingNuma {
                 assign_blocks_numa(&pilot, &row_work, &blocks, cores)
             } else {
                 assign_blocks_bw(&pilot, &row_work, &blocks, cores).0
-            }
+            };
+            drop(pilot);
+            (plan, blocks, block_est, block_off)
         }
-        _ => assign_blocks(&row_work, &blocks, cores, cfg.scheduler),
+        Scheduler::WorkStealingAdapt if cores >= 2 && !blocks.is_empty() => {
+            let ap = adapt_plan(
+                &sys,
+                &base,
+                &make_impl,
+                a,
+                b,
+                &row_work,
+                &blocks,
+                &block_est,
+                &block_off,
+                b_addrs,
+                out_addrs,
+                cores,
+                cfg.impl_id,
+                &memo,
+            )?;
+            decisions = Some(ap.decisions);
+            kernels = ap.kernels;
+            (ap.plan, ap.blocks, ap.block_est, ap.block_off)
+        }
+        _ => (
+            assign_blocks(&row_work, &blocks, cores, cfg.scheduler),
+            blocks,
+            block_est,
+            block_off,
+        ),
     };
     let blocks_per_core: Vec<usize> = plan.iter().map(|p| p.len()).collect();
 
@@ -795,16 +1514,33 @@ where
             let block_off = &block_off;
             let results = &results;
             let make_impl = &make_impl;
+            let kernels = &kernels;
             handles.push(scope.spawn(
                 move || -> Result<(crate::sim::RunMetrics, TraceBuf)> {
                     let mut machine = machine;
                     machine.enable_trace();
                     let mut im = make_impl()?;
+                    // ws-adapt's swapped kernels, built lazily per worker
+                    // (the spz engines are `&mut`-stateful, so cores cannot
+                    // share instances).
+                    let mut alts: [Option<Box<dyn SpGemm>>; 3] = [None, None, None];
                     for &bi in mine {
                         let (lo, hi) = blocks[bi];
                         machine.bind_output_block(lo, block_off[bi], block_est[bi]);
                         let slab = row_slab(a, lo, hi);
-                        let c = im
+                        let run_im = match kernels.get(bi).copied().unwrap_or(BlockKernel::Job) {
+                            BlockKernel::Job => &mut im,
+                            BlockKernel::SclArray => alts[0].get_or_insert_with(|| {
+                                Box::new(crate::spgemm::scl_array::SclArray)
+                            }),
+                            BlockKernel::SclHash => alts[1].get_or_insert_with(|| {
+                                Box::new(crate::spgemm::scl_hash::SclHash)
+                            }),
+                            BlockKernel::Spz => alts[2].get_or_insert_with(|| {
+                                Box::new(crate::spgemm::spz::Spz::native())
+                            }),
+                        };
+                        let c = run_im
                             .multiply(&mut machine, &slab, b)
                             .with_context(|| format!("rows {lo}..{hi} on core {core}"))?;
                         results.lock().unwrap()[bi] = Some(c);
@@ -844,14 +1580,36 @@ where
             m.cycles += stall;
         }
     }
+    if let Some(d) = decisions.as_mut() {
+        d.achieved_stall_cycles = outcome
+            .per_core_phase_stalls
+            .iter()
+            .flat_map(|s| s.iter().take(NUM_PHASES))
+            .sum();
+    }
     let mut metrics = MulticoreMetrics::from_cores(per_core);
     metrics.channel_busy_cycles = outcome.channel_busy_cycles;
 
     let csr = stitch(a.nrows, b.ncols, results.into_inner().unwrap())?;
+    let block_plan: Vec<(usize, usize, Option<crate::spgemm::ImplId>)> = blocks
+        .iter()
+        .enumerate()
+        .map(|(bi, &(lo, hi))| {
+            let id = match kernels.get(bi).copied().unwrap_or(BlockKernel::Job) {
+                BlockKernel::Job => None,
+                BlockKernel::SclArray => Some(crate::spgemm::ImplId::SclArray),
+                BlockKernel::SclHash => Some(crate::spgemm::ImplId::SclHash),
+                BlockKernel::Spz => Some(crate::spgemm::ImplId::Spz),
+            };
+            (lo, hi, id)
+        })
+        .collect();
     Ok(ParallelRun {
         csr,
         metrics,
         blocks_per_core,
+        decisions,
+        block_plan,
     })
 }
 
@@ -895,6 +1653,12 @@ mod tests {
             "work-stealing-numa".parse::<Scheduler>().unwrap(),
             Scheduler::WorkStealingNuma
         );
+        assert_eq!("ws-adapt".parse::<Scheduler>().unwrap(), Scheduler::WorkStealingAdapt);
+        assert_eq!(Scheduler::WorkStealingAdapt.to_string(), "ws-adapt");
+        assert_eq!(
+            "work-stealing-adapt".parse::<Scheduler>().unwrap(),
+            Scheduler::WorkStealingAdapt
+        );
         // Every canonical name round-trips through the one parse table.
         for s in Scheduler::ALL {
             assert_eq!(s.name().parse::<Scheduler>().unwrap(), s);
@@ -903,6 +1667,7 @@ mod tests {
         assert!(e.contains("static") && e.contains("greedy") && e.contains("ws-dyn"), "{e}");
         assert!(e.contains("ws-bw"), "new schedulers must appear in the error: {e}");
         assert!(e.contains("ws-numa"), "new schedulers must appear in the error: {e}");
+        assert!(e.contains("ws-adapt"), "new schedulers must appear in the error: {e}");
     }
 
     #[test]
@@ -1302,6 +2067,125 @@ mod tests {
         // The boundary itself works.
         assert!(row_blocked(&sys(), native(ImplId::SclHash), &a, &a, &ParallelConfig::new(64))
             .is_ok());
+    }
+
+    fn adapt_cfg(cores: usize, id: ImplId) -> ParallelConfig {
+        ParallelConfig {
+            scheduler: Scheduler::WorkStealingAdapt,
+            impl_id: Some(id),
+            ..ParallelConfig::new(cores)
+        }
+    }
+
+    #[test]
+    fn ws_adapt_matches_serial_product_and_stays_deterministic() {
+        let a = gen::rmat(256, 256, 2600, 0.62, 0.18, 0.14, 108);
+        for id in [ImplId::SclArray, ImplId::SclHash, ImplId::Spz] {
+            let (cs, _) = serial(id, &a);
+            let cfg = adapt_cfg(4, id);
+            let r1 = row_blocked(&sys(), native(id), &a, &a, &cfg).unwrap();
+            let r2 = row_blocked(&sys(), native(id), &a, &a, &cfg).unwrap();
+            assert_eq!(r1.csr.indptr, cs.indptr, "{}", id.name());
+            assert_eq!(r1.csr.indices, cs.indices, "{}", id.name());
+            assert!(same_product(&r1.csr, &cs, 1e-5), "{}", id.name());
+            // Pure function of the inputs: bit-reproducible, decisions too.
+            assert_eq!(r1.blocks_per_core, r2.blocks_per_core, "{}", id.name());
+            assert_eq!(r1.decisions, r2.decisions, "{}", id.name());
+            let c1: Vec<f64> = r1.metrics.per_core.iter().map(|m| m.cycles).collect();
+            let c2: Vec<f64> = r2.metrics.per_core.iter().map(|m| m.cycles).collect();
+            assert_eq!(c1, c2, "{}", id.name());
+            let d = r1.decisions.expect("ws-adapt at 4 cores reports decisions");
+            assert_eq!(
+                d.blocks_scl_array + d.blocks_scl_hash + d.blocks_spz + d.blocks_other,
+                d.total_blocks,
+                "{}",
+                id.name()
+            );
+            assert!(d.total_blocks >= r1.blocks_per_core.iter().sum::<usize>().min(1));
+        }
+    }
+
+    #[test]
+    fn ws_adapt_at_one_core_is_exactly_ws_dyn() {
+        let a = gen::rmat(160, 160, 1400, 0.58, 0.2, 0.14, 109);
+        for id in [ImplId::SclHash, ImplId::Spz] {
+            let dy = row_blocked(
+                &sys(),
+                native(id),
+                &a,
+                &a,
+                &ParallelConfig {
+                    scheduler: Scheduler::WorkStealingDyn,
+                    ..ParallelConfig::new(1)
+                },
+            )
+            .unwrap();
+            let ad = row_blocked(&sys(), native(id), &a, &a, &adapt_cfg(1, id)).unwrap();
+            assert_eq!(ad.csr, dy.csr, "{}", id.name());
+            assert_eq!(ad.blocks_per_core, dy.blocks_per_core, "{}", id.name());
+            let c_dy: Vec<f64> = dy.metrics.per_core.iter().map(|m| m.cycles).collect();
+            let c_ad: Vec<f64> = ad.metrics.per_core.iter().map(|m| m.cycles).collect();
+            assert_eq!(c_ad, c_dy, "{}: 1-core ws-adapt must be ws-dyn", id.name());
+            assert!(ad.decisions.is_none(), "degenerate path reports no decisions");
+        }
+    }
+
+    #[test]
+    fn ws_adapt_without_impl_id_never_swaps_kernels() {
+        let a = gen::rmat(256, 256, 2600, 0.62, 0.18, 0.14, 110);
+        let cfg = ParallelConfig {
+            scheduler: Scheduler::WorkStealingAdapt,
+            ..ParallelConfig::new(4)
+        };
+        let run = row_blocked(&sys(), native(ImplId::Spz), &a, &a, &cfg).unwrap();
+        let d = run.decisions.expect("decisions still reported");
+        assert_eq!(d.swapped_blocks, 0, "unknown impl_id must disable swapping");
+        assert_eq!(d.blocks_other, d.total_blocks);
+        // The product is still exactly the serial one.
+        let (cs, _) = serial(ImplId::Spz, &a);
+        assert_eq!(run.csr.indptr, cs.indptr);
+        assert_eq!(run.csr.indices, cs.indices);
+    }
+
+    #[test]
+    fn ws_adapt_counts_are_additive_per_chosen_impl() {
+        // Sum of per-core matrix-unit ops must equal the sum over blocks of
+        // the chosen impl's serial ops — group alignment guarantees it for
+        // every kernel in the trio, whatever mix the planner picked.
+        let a = gen::rmat(256, 256, 2600, 0.62, 0.18, 0.14, 111);
+        let id = ImplId::Spz;
+        let run = row_blocked(&sys(), native(id), &a, &a, &adapt_cfg(4, id)).unwrap();
+        let one = row_blocked(&sys(), native(id), &a, &a, &adapt_cfg(1, id)).unwrap();
+        // 1-core ws-adapt degrades to ws-dyn (same geometry, job kernel
+        // everywhere), so comparing totals only makes sense when no blocks
+        // were swapped; with swaps, additivity is pinned by the dedicated
+        // integration test against per-impl serial slabs.
+        let d = run.decisions.unwrap();
+        if d.swapped_blocks == 0 && d.split_blocks == 0 {
+            assert_eq!(run.metrics.total.ops, one.metrics.total.ops);
+        }
+        // Per-core cycles always sum to phase totals after stall folding.
+        for m in &run.metrics.per_core {
+            let ps: f64 = m.phase_cycles.iter().sum();
+            assert!((ps - m.cycles).abs() <= 1e-9 * m.cycles.max(1.0));
+        }
+    }
+
+    #[test]
+    fn phase_aware_claims_balance_the_barrier_objective() {
+        // Two heavy blocks with disjoint phase shapes: a total-work claim
+        // would happily co-locate them; the barrier-aware claim must not.
+        let mut costs = vec![[0.0; NUM_PHASES]; 4];
+        costs[0][1] = 100.0; // expand-heavy
+        costs[1][2] = 100.0; // sort-heavy
+        costs[2][1] = 100.0;
+        costs[3][2] = 100.0;
+        let plan = phase_aware_claims(&costs, 2);
+        assert_eq!(plan.iter().map(|p| p.len()).sum::<usize>(), 4);
+        let score = phase_makespan(&costs, &plan, &[0.0, 0.0]);
+        // Optimal: each core gets one expand-heavy and one sort-heavy block
+        // (barrier 100 + 100); the naive pairing scores 400.
+        assert!(score <= 200.0 + 1e-9, "barrier-aware claim scored {score}");
     }
 
     #[test]

@@ -127,5 +127,8 @@ fn single_core_job_schema_has_null_multicore_tail() {
     // The multi-core fields exist at every core count (null when serial), so
     // parsers see one shape.
     assert!(j.contains("\"cores\":1"), "{j}");
-    assert!(j.ends_with("\"sched\":null,\"multicore\":null}"), "{j}");
+    assert!(
+        j.ends_with("\"sched\":null,\"multicore\":null,\"sched_decisions\":null}"),
+        "{j}"
+    );
 }

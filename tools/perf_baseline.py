@@ -75,16 +75,24 @@ def cmd_record(path, measured):
         else:
             bench["series"][key] = v
             filled += 1
-    # Derived ratios: serial-over-N-shard speedups where both ends landed.
+    # Derived ratios where both ends landed: the historical
+    # speedup_<N>shard_over_serial form, plus the generic
+    # speedup_<X>_over_<Y> (= time(Y) / time(X), both resolved against the
+    # same bench's series keys through the usual normalization).
     for bench in doc.get("benches", {}).values():
         derived = bench.get("derived", {})
         series = bench.get("series", {})
         for dkey in derived:
-            m = re.match(r"speedup_(\d+)shard_over_serial", dkey)
-            if not m:
-                continue
-            base = match("replay shards=1", series) if series else None
-            shard = match(f"replay shards={m.group(1)}", series) if series else None
+            m = re.match(r"speedup_(\d+)shard_over_serial$", dkey)
+            if m:
+                base = match("replay shards=1", series) if series else None
+                shard = match(f"replay shards={m.group(1)}", series) if series else None
+            else:
+                m = re.match(r"speedup_(.+)_over_(.+)$", dkey)
+                if not m:
+                    continue
+                base = match(m.group(2), series) if series else None
+                shard = match(m.group(1), series) if series else None
             if base and shard:
                 derived[dkey] = round(base / shard, 3)
     if filled:
