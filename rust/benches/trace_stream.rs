@@ -1,0 +1,124 @@
+//! Bench: streaming trace replay — the materialize-then-replay `TraceBuf`
+//! path against the bounded-ring streaming pipeline (producer threads
+//! feeding `TraceWriter`s while the `ReplayEngine` consumes concurrently),
+//! at 1/4/8 replay shards and with a spill-forced 4-chunk ring. Every
+//! configuration is asserted bit-identical to the materialized baseline
+//! before it is timed (modulo the two ring-shaped footprint counters, which
+//! are zeroed exactly as the stable JSON does), so a speedup can never be
+//! bought with a results drift.
+//!
+//! `SPZ_BENCH_EVENTS` scales the per-core event count (default 300k);
+//! `SPZ_BENCH_REPS` the repetitions. Medians land in `BENCH_trace.json`
+//! via `tools/perf_baseline.py record`.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use sparsezipper::config::{MemConfig, SharedMemConfig};
+use sparsezipper::mem::{
+    replay, ReplayEngine, ReplayOutcome, TraceBuf, TraceEvent, TraceKind, TraceSource, TraceStream,
+};
+use sparsezipper::SystemConfig;
+
+/// Deterministic per-core trace: a streaming sweep interleaved with writes
+/// into a shared hot window (same generator as the `replay_shards` bench,
+/// so the two baselines stay comparable).
+fn synth_traces(cores: usize, events: usize) -> Vec<TraceBuf> {
+    let hot = 4096u64;
+    (0..cores)
+        .map(|c| {
+            let mut buf = TraceBuf::new();
+            let mut x = 0x9e3779b97f4a7c15u64.wrapping_mul(c as u64 + 1) | 1;
+            for i in 0..events {
+                x ^= x >> 12;
+                x ^= x << 25;
+                x ^= x >> 27;
+                let r = x.wrapping_mul(0x2545f4914f6cdd1d);
+                let (line, write) = if r % 3 == 0 {
+                    (1 << 30 | (r >> 8) % hot, r % 2 == 0) // shared hot window
+                } else {
+                    ((c as u64) << 24 | i as u64, false) // private stream
+                };
+                let shadow_hit = r % 5 == 0;
+                let e = TraceEvent::new(line, TraceKind::Demand, write, shadow_hit, !shadow_hit, 2);
+                buf.push(e, i as f64 * 4.0);
+            }
+            buf
+        })
+        .collect()
+}
+
+/// Replay through the streaming pipeline: one producer thread per core
+/// re-emits its materialized trace into a `ring`-chunk `TraceWriter` while
+/// the engine consumes the streams concurrently — the same shape the
+/// parallel SpGEMM driver runs, minus the simulation itself.
+fn replay_streamed(
+    mem: &MemConfig,
+    cfg: &SharedMemConfig,
+    traces: &[TraceBuf],
+    ring: usize,
+) -> ReplayOutcome {
+    let (writers, streams): (Vec<_>, Vec<_>) =
+        (0..traces.len()).map(|_| TraceStream::channel(ring)).unzip();
+    std::thread::scope(|scope| {
+        for (t, mut w) in traces.iter().zip(writers) {
+            scope.spawn(move || {
+                for (time, e) in t.iter_timed() {
+                    w.push(e, time);
+                }
+                w.finish();
+            });
+        }
+        ReplayEngine::from_source(mem, cfg, TraceSource::Streams(&streams)).run()
+    })
+}
+
+/// Zero the ring-shaped footprint counters (resident peak and spill count),
+/// exactly as `to_json_stable` does: they describe *how* the trace was
+/// held, never what the replay computed.
+fn strip_ring_counters(mut o: ReplayOutcome) -> ReplayOutcome {
+    for s in &mut o.per_core {
+        s.trace_peak_resident_chunks = 0;
+        s.spilled_chunks = 0;
+    }
+    o
+}
+
+fn main() {
+    let events: usize = std::env::var("SPZ_BENCH_EVENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300_000);
+    let reps = bench_util::reps();
+    let cores = 8;
+    let sys = SystemConfig::default();
+    let traces = synth_traces(cores, events);
+    println!("== trace streaming ({cores} cores x {events} events) ==");
+
+    for shards in [1usize, 4, 8] {
+        let cfg = SharedMemConfig { replay_shards: shards, ..sys.shared };
+        let materialized = replay(&sys.mem, &cfg, &traces);
+        // Correctness gates first: an unbounded ring is fully bit-identical
+        // (footprint counters included); a spill-forced 4-chunk ring matches
+        // everywhere but the ring-shaped counters it exists to change.
+        assert_eq!(
+            replay_streamed(&sys.mem, &cfg, &traces, 0),
+            materialized,
+            "shards={shards}: streamed replay diverged"
+        );
+        assert_eq!(
+            strip_ring_counters(replay_streamed(&sys.mem, &cfg, &traces, 4)),
+            strip_ring_counters(materialized.clone()),
+            "shards={shards}: spill-forced replay diverged"
+        );
+        bench_util::bench(&format!("trace materialized shards={shards}"), reps, || {
+            std::hint::black_box(replay(&sys.mem, &cfg, &traces));
+        });
+        bench_util::bench(&format!("trace streamed shards={shards}"), reps, || {
+            std::hint::black_box(replay_streamed(&sys.mem, &cfg, &traces, 0));
+        });
+        bench_util::bench(&format!("trace streamed ring=4 shards={shards}"), reps, || {
+            std::hint::black_box(replay_streamed(&sys.mem, &cfg, &traces, 4));
+        });
+    }
+}

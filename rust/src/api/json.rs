@@ -103,9 +103,11 @@ fn metrics_json(m: &RunMetrics) -> String {
 /// Shared-memory replay results (all-zero for serial runs, so parsers see
 /// one shape at every core count). Append-only: the iterative-engine and
 /// row-buffer fields (`replay_iters` .. `row_extra_cycles`) extend the
-/// PR 3 schema after `stall_cycles`, and the NUMA `numa` block (remote
+/// PR 3 schema after `stall_cycles`, the NUMA `numa` block (remote
 /// fills / forwards / hop-priced extra cycles — structurally zero at one
-/// socket) extends it again after `row_extra_cycles`.
+/// socket) extends it again after `row_extra_cycles`, and the streaming
+/// trace counters (`trace_bytes_total` .. `spilled_chunks`) extend it once
+/// more after `numa`.
 fn shared_json(s: &SharedStats) -> String {
     format!(
         "{{\"llc_accesses\":{},\"llc_hits\":{},\"llc_misses\":{},\"writeback_installs\":{},\
@@ -115,7 +117,8 @@ fn shared_json(s: &SharedStats) -> String {
          \"demotion_cycles\":{},\"sharing_saved_cycles\":{},\"stall_cycles\":{},\
          \"replay_iters\":{},\"replay_residual\":{},\"row_hits\":{},\"row_misses\":{},\
          \"row_conflicts\":{},\"row_extra_cycles\":{},\
-         \"numa\":{{\"remote_fills\":{},\"remote_forwards\":{},\"remote_extra_cycles\":{}}}}}",
+         \"numa\":{{\"remote_fills\":{},\"remote_forwards\":{},\"remote_extra_cycles\":{}}},\
+         \"trace_bytes_total\":{},\"trace_peak_resident_chunks\":{},\"spilled_chunks\":{}}}",
         s.llc_accesses,
         s.llc_hits,
         s.llc_misses,
@@ -141,7 +144,10 @@ fn shared_json(s: &SharedStats) -> String {
         num(s.row_extra_cycles),
         s.remote_fills,
         s.remote_forwards,
-        num(s.remote_extra_cycles)
+        num(s.remote_extra_cycles),
+        s.trace_bytes_total,
+        s.trace_peak_resident_chunks,
+        s.spilled_chunks
     )
 }
 
@@ -267,14 +273,27 @@ impl JobResult {
         )
     }
 
-    /// [`JobResult::to_json`] with the one nondeterministic field
-    /// (`wall_secs`, host wall-clock) zeroed. Two runs of the same spec on
-    /// any pool/queue/tenancy configuration compare byte-equal through this
-    /// form — the service determinism contract is stated (and tested) in
-    /// terms of it.
+    /// [`JobResult::to_json`] with the nondeterministic/configuration-shaped
+    /// fields zeroed: `wall_secs` (host wall-clock) and the two ring-shaped
+    /// trace counters (`trace_peak_resident_chunks`, `spilled_chunks`, which
+    /// depend on `trace_ring_chunks` but never on the simulated result —
+    /// `trace_bytes_total` is ring-independent and stays). Two runs of the
+    /// same spec on any pool/queue/tenancy/ring configuration compare
+    /// byte-equal through this form — the service and streaming-replay
+    /// determinism contracts are stated (and tested) in terms of it.
     pub fn to_json_stable(&self) -> String {
         let mut r = self.clone();
         r.wall_secs = 0.0;
+        r.metrics.shared.trace_peak_resident_chunks = 0;
+        r.metrics.shared.spilled_chunks = 0;
+        if let Some(mc) = r.multicore.as_mut() {
+            mc.total.shared.trace_peak_resident_chunks = 0;
+            mc.total.shared.spilled_chunks = 0;
+            for m in &mut mc.per_core {
+                m.shared.trace_peak_resident_chunks = 0;
+                m.shared.spilled_chunks = 0;
+            }
+        }
         r.to_json()
     }
 }

@@ -419,10 +419,27 @@ impl Session {
     /// `job.cores >= 2` runs the row-blocked multi-core driver
     /// ([`crate::spgemm::parallel`]) and fills [`JobResult::multicore`].
     pub fn run(&self, job: &JobSpec) -> Result<JobResult> {
+        self.run_with_trace_ring(job, 0)
+    }
+
+    /// [`Session::run`] with a per-job trace-ring budget. `ring == 0`
+    /// inherits the session's configured
+    /// [`crate::config::SharedMemConfig::trace_ring_chunks`]; a nonzero
+    /// `ring` replaces it for this job only, so a service hosting many
+    /// concurrent jobs can bound each job's resident trace footprint to
+    /// `cores * ring * 64KB` regardless of what the session was built with.
+    /// The override is a pure memory knob: results are bit-identical at
+    /// every ring size (overflow chunks spill to disk and the stable JSON
+    /// zeroes the ring-dependent counters).
+    pub fn run_with_trace_ring(&self, job: &JobSpec, ring: usize) -> Result<JobResult> {
         ensure!(
             job.cores >= 1,
             "JobSpec.cores must be at least 1 (got {})",
             job.cores
+        );
+        ensure!(
+            ring != 1,
+            "trace-ring override must be 0 (inherit) or at least 2 (got 1)"
         );
         let a = self.dataset(&job.dataset, job.scale)?;
         let reference = if job.verify {
@@ -430,7 +447,12 @@ impl Session {
         } else {
             None
         };
+        let mut sys = self.inner.cfg.sys;
+        if ring != 0 {
+            sys.shared.trace_ring_chunks = ring;
+        }
         self.execute(
+            &sys,
             job.impl_id,
             &job.dataset.name(),
             &a,
@@ -542,8 +564,10 @@ impl Session {
     /// pilot-replay-driven `ws-bw`) is a pure function of the inputs, so
     /// repeated jobs on one session are bit-reproducible even though the
     /// grid itself runs on work-stealing host threads.
+    #[allow(clippy::too_many_arguments)]
     fn execute(
         &self,
+        sys: &SystemConfig,
         id: ImplId,
         dataset: &str,
         a: &Csr,
@@ -572,7 +596,7 @@ impl Session {
                 let mut best: Option<(parallel::ParallelRun, usize)> = None;
                 for be in VEC_RADIX_BLOCK_SWEEP {
                     let r = parallel::row_blocked(
-                        &self.inner.cfg.sys,
+                        sys,
                         move || {
                             Ok(Box::new(spgemm::vec_radix::VecRadix { block_elems: be })
                                 as Box<dyn SpGemm>)
@@ -597,7 +621,7 @@ impl Session {
                 r
             } else {
                 parallel::row_blocked(
-                    &self.inner.cfg.sys,
+                    sys,
                     || id.instantiate(self.inner.cfg.engine, &self.inner.cfg.artifact_dir),
                     a,
                     a,
@@ -609,7 +633,7 @@ impl Session {
             (mc.total.clone(), Some(mc), csr, decisions)
         } else if id == ImplId::VecRadix {
             let mut best: Option<(RunMetrics, Csr, usize)> = None;
-            let mut serial_sys = self.inner.cfg.sys;
+            let mut serial_sys = *sys;
             serial_sys.cores = 1;
             for be in VEC_RADIX_BLOCK_SWEEP {
                 let mut m = Machine::new(serial_sys);

@@ -100,6 +100,20 @@ pub struct SharedMemConfig {
     /// `1..=64` ([`SharedMemConfig::validate`] rejects anything else; the
     /// engine never clamps).
     pub replay_shards: usize,
+    /// Per-core trace ring budget for the streaming pipeline (`spz ...
+    /// --trace-ring-chunks N`): the maximum sealed 64KB trace chunks a
+    /// core's stream keeps resident before the oldest chunks spill to a
+    /// temp file (demand-loaded back in merge order), bounding peak trace
+    /// memory at `cores * N` chunks for >RAM jobs. `0` (the default) means
+    /// unbounded — everything stays resident and nothing spills. Spilling
+    /// never changes results (the stream replays the identical event
+    /// sequence), so like `replay_shards` this is a pure footprint knob;
+    /// unlike it, the two ring-dependent footprint *counters* do surface in
+    /// the JSON and are zeroed in its stable form. Must be `0` or at least
+    /// `2` ([`SharedMemConfig::validate`] rejects `1`; the writer always
+    /// needs one chunk open plus one sealed to make progress without
+    /// thrashing the spill file).
+    pub trace_ring_chunks: usize,
     /// Shared LLC capacity policy: `true` models a sliced LLC whose
     /// capacity scales with the active core count — each core brings its
     /// Table II slice, added as extra sets (power-of-two slicings; odd core
@@ -163,6 +177,7 @@ impl Default for SharedMemConfig {
             max_replay_iters: 2,
             replay_epsilon: 1e-6,
             replay_shards: 1,
+            trace_ring_chunks: 0,
             llc_sliced: true,
             llc_service_cycles: 2.0,
             dram_transfer_cycles: DRAM_BW_CYCLES,
@@ -214,6 +229,11 @@ impl SharedMemConfig {
             "SharedMemConfig.replay_shards must be a power of two between 1 and 64 \
              (got {}): the line partition must tile the power-of-two LLC set index",
             self.replay_shards
+        );
+        anyhow::ensure!(
+            self.trace_ring_chunks != 1,
+            "SharedMemConfig.trace_ring_chunks must be 0 (unbounded) or at least 2 \
+             (got 1): a ring of one chunk would spill every seal"
         );
         anyhow::ensure!(
             (1..=MAX_SOCKETS).contains(&self.sockets),
@@ -530,6 +550,11 @@ mod tests {
         assert!(SharedMemConfig { replay_shards: 128, ..base }.validate().is_err());
         for s in [1usize, 2, 4, 8, 16, 32, 64] {
             assert!(SharedMemConfig { replay_shards: s, ..base }.validate().is_ok(), "{s}");
+        }
+        // Trace ring budgets: 0 = unbounded, otherwise at least 2.
+        assert!(SharedMemConfig { trace_ring_chunks: 1, ..base }.validate().is_err());
+        for r in [0usize, 2, 3, 16, 1024] {
+            assert!(SharedMemConfig { trace_ring_chunks: r, ..base }.validate().is_ok(), "{r}");
         }
     }
 }

@@ -680,6 +680,15 @@ pub fn mem_report(r: &crate::api::JobResult) -> String {
          (all zero at 1 socket)",
         tot.remote_fills, tot.remote_forwards, tot.remote_extra_cycles
     );
+    let _ = writeln!(
+        s,
+        "trace     | {:.1} MB recorded, peak resident {} chunk{} ({} KB), {} spilled to disk",
+        tot.trace_bytes_total as f64 / (1024.0 * 1024.0),
+        tot.trace_peak_resident_chunks,
+        if tot.trace_peak_resident_chunks == 1 { "" } else { "s" },
+        tot.trace_peak_resident_chunks * 64,
+        tot.spilled_chunks
+    );
     if let Some(d) = &r.sched_decisions {
         let _ = writeln!(
             s,

@@ -56,10 +56,14 @@
 //! the best fixed plan whenever it predicts no win. The memory
 //! system behind the cores is modeled end-to-end: private L1/L2 per core
 //! and one shared LLC with MESI-lite coherence bookkeeping plus a
-//! multi-channel DRAM back end, priced by deterministic trace-and-replay
-//! ([`mem::trace`] records during execution, [`mem::shared`] replays after
-//! the workers join) so per-core results stay bit-reproducible across host
-//! thread schedules. The `spz` CLI (`src/main.rs`) is a thin argv adapter
+//! multi-channel DRAM back end, priced by deterministic trace-and-replay.
+//! The trace is a *streaming pipeline*: each core publishes sealed 64KB
+//! event chunks into a bounded ring ([`mem::trace`]) while the replay
+//! engine ([`mem::shared`]) consumes the streams concurrently in canonical
+//! `(time, core, program-order)` interleaving — overflow chunks spill to a
+//! temp file and are demand-loaded back, so peak trace memory is bounded
+//! (`SharedMemConfig::trace_ring_chunks`) and per-core results stay
+//! bit-reproducible across host thread schedules *and* ring sizes. The `spz` CLI (`src/main.rs`) is a thin argv adapter
 //! over this API, and [`coordinator`] renders [`api::SuiteRun`]s into the
 //! paper's tables and figures (including the `fig12` multi-core scaling
 //! study and the `spz mem` shared-memory report).

@@ -81,31 +81,31 @@ fn parse_argv(args: &[String]) -> Result<Args> {
 fn allowed_opts(cmd: &str) -> &'static [&'static str] {
     const SUITE: &[&str] = &[
         "scale", "threads", "datasets", "engine", "artifacts", "mtx-dir", "out-dir", "cores",
-        "sched", "sockets", "replay-shards",
+        "sched", "sockets", "replay-shards", "trace-ring-chunks",
     ];
     match cmd {
         // Only fig8/all honor --impls; the other figures fix their own
         // implementation set, so accepting it would silently discard it.
         "fig8" | "all" => &[
             "scale", "threads", "datasets", "impls", "engine", "artifacts", "mtx-dir", "out-dir",
-            "cores", "sched", "sockets", "replay-shards",
+            "cores", "sched", "sockets", "replay-shards", "trace-ring-chunks",
         ],
         "table3" | "fig9" | "fig10" | "fig11" => SUITE,
         // fig12 sweeps a *list* of core counts and, by default, every
         // scheduler; --sched narrows it to a comma list.
         "fig12" => &[
             "scale", "datasets", "impl", "cores", "sched", "engine", "artifacts", "mtx-dir",
-            "out-dir", "sockets", "replay-shards",
+            "out-dir", "sockets", "replay-shards", "trace-ring-chunks",
         ],
         "run" => &[
             "dataset", "impl", "scale", "engine", "artifacts", "mtx-dir", "cores", "sched",
-            "sockets", "replay-shards",
+            "sockets", "replay-shards", "trace-ring-chunks",
         ],
         // mem runs one multi-core job and renders the shared-memory report
         // (per-core LLC/coherence/queueing + DRAM channel occupancy).
         "mem" => &[
             "dataset", "impl", "scale", "engine", "artifacts", "mtx-dir", "cores", "sched",
-            "channels", "sockets", "replay-shards", "out-dir",
+            "channels", "sockets", "replay-shards", "trace-ring-chunks", "out-dir",
         ],
         // ablate sweeps are engine-independent (hardwired NativeEngine).
         "ablate" => &["dataset", "scale", "mtx-dir", "out-dir"],
@@ -116,7 +116,7 @@ fn allowed_opts(cmd: &str) -> &'static [&'static str] {
         "serve-demo" => &[
             "tenants", "jobs", "workers", "depth", "backpressure", "weights", "dataset", "impl",
             "scale", "cores", "sched", "engine", "artifacts", "mtx-dir", "out-dir",
-            "replay-shards",
+            "replay-shards", "trace-ring-chunks",
         ],
         _ => &[],
     }
@@ -148,18 +148,20 @@ fn print_help() {
          \x20   --cores N --sched static|work-stealing|ws-dyn|ws-bw|ws-numa|ws-adapt (simulated\n\
          \x20   multi-core) --sockets N (NUMA sockets; channels split into per-socket groups)\n\
          \x20   --replay-shards N (parallel deterministic replay; power of two, results\n\
-         \x20   bit-identical at any value) (fig8 and all also take --impls a,b)\n\
+         \x20   bit-identical at any value) --trace-ring-chunks N (resident 64KB trace\n\
+         \x20   chunks per core, 0=unbounded, >=2 spills overflow to disk; bit-identical\n\
+         \x20   at any ring) (fig8 and all also take --impls a,b)\n\
          run:    --dataset NAME [--impl NAME] [--scale F] [--engine native|xla]\n\
          \x20       [--mtx-dir DIR] [--artifacts DIR] [--cores N] [--sched S] [--sockets N]\n\
-         \x20       [--replay-shards N] [--verify] [--json]\n\
+         \x20       [--replay-shards N] [--trace-ring-chunks N] [--verify] [--json]\n\
          mem:    --dataset NAME [--impl NAME] [--cores N] [--sched S] [--channels N]\n\
-         \x20       [--sockets N] [--replay-shards N] [--scale F] [--mtx-dir DIR]\n\
-         \x20       [--out-dir DIR] [--quiet]\n\
+         \x20       [--sockets N] [--replay-shards N] [--trace-ring-chunks N] [--scale F]\n\
+         \x20       [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          \x20       (shared-memory report: per-core LLC/coherence/queueing + banked DRAM\n\
          \x20        channels + NUMA remote traffic + iterative-replay convergence)\n\
          fig12:  [--impl NAME] [--cores 1,2,4,8] [--sched a,b] [--sockets N]\n\
-         \x20       [--replay-shards N] [--scale F] [--datasets a,b] [--engine E]\n\
-         \x20       [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
+         \x20       [--replay-shards N] [--trace-ring-chunks N] [--scale F]\n\
+         \x20       [--datasets a,b] [--engine E] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          ablate: [--dataset NAME] [--scale F] [--mtx-dir DIR] [--out-dir DIR] [--quiet]\n\
          gen:    --dataset NAME --out FILE.mtx [--scale F]\n\
          table4: [--sweep] [--out-dir DIR] [--quiet]\n\
@@ -198,7 +200,17 @@ fn session_config(a: &Args) -> Result<SessionConfig> {
     if let Some(s) = a.opts.get("replay-shards") {
         cfg.sys.shared.replay_shards = s.parse().context("--replay-shards")?;
     }
-    if ["sockets", "channels", "replay-shards"].iter().any(|k| a.opts.contains_key(*k)) {
+    // --trace-ring-chunks bounds the resident trace footprint per core
+    // (overflow chunks spill to a temp file); like --replay-shards it is a
+    // pure footprint knob — results are bit-identical at any ring size, and
+    // the ring-dependent counters are zeroed in the stable JSON.
+    if let Some(s) = a.opts.get("trace-ring-chunks") {
+        cfg.sys.shared.trace_ring_chunks = s.parse().context("--trace-ring-chunks")?;
+    }
+    if ["sockets", "channels", "replay-shards", "trace-ring-chunks"]
+        .iter()
+        .any(|k| a.opts.contains_key(*k))
+    {
         // Validate at the argv boundary (like --cores) so a bad topology or
         // shard count is a clean CLI error, not a deep replay panic.
         cfg.sys.shared.validate()?;
@@ -887,6 +899,36 @@ mod tests {
         // gen/table4 never replay, so they do not take the knob.
         assert!(parse_argv(&v(&["gen", "--replay-shards", "4"])).is_err());
         assert!(parse_argv(&v(&["table4", "--replay-shards", "4"])).is_err());
+    }
+
+    #[test]
+    fn trace_ring_chunks_option_parses_and_validates() {
+        // --trace-ring-chunks rides the same session_config path as
+        // --replay-shards: accepted wherever the replay runs, validated (not
+        // clamped) at the argv boundary.
+        for cmd in [
+            vec!["run", "--trace-ring-chunks", "4"],
+            vec!["mem", "--dataset", "p2p", "--trace-ring-chunks", "4"],
+            vec!["fig12", "--trace-ring-chunks", "4"],
+            vec!["fig8", "--trace-ring-chunks", "4"],
+            vec!["serve-demo", "--trace-ring-chunks", "4"],
+        ] {
+            let a = parse_argv(&v(&cmd)).unwrap();
+            let cfg = session_config(&a).unwrap();
+            assert_eq!(cfg.sys.shared.trace_ring_chunks, 4, "{cmd:?}");
+        }
+        // 0 (unbounded) and any ring >= 2 are fine; exactly 1 is a clean
+        // CLI error, never a silent clamp.
+        for ok in ["0", "2", "1024"] {
+            let a = parse_argv(&v(&["run", "--trace-ring-chunks", ok])).unwrap();
+            assert!(session_config(&a).is_ok(), "--trace-ring-chunks {ok}");
+        }
+        let a = parse_argv(&v(&["run", "--trace-ring-chunks", "1"])).unwrap();
+        let e = format!("{:#}", session_config(&a).unwrap_err());
+        assert!(e.contains("trace_ring_chunks"), "{e}");
+        // gen/table4 never replay, so they do not take the knob.
+        assert!(parse_argv(&v(&["gen", "--trace-ring-chunks", "4"])).is_err());
+        assert!(parse_argv(&v(&["table4", "--trace-ring-chunks", "4"])).is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@
 
 use crate::config::MemConfig;
 use crate::mem::cache::Cache;
-use crate::mem::trace::{TraceBuf, TraceEvent, TraceKind};
+use crate::mem::trace::{TraceBuf, TraceEvent, TraceKind, TraceWriter};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AccessKind {
@@ -81,6 +81,11 @@ pub struct Hierarchy {
     /// Shared-memory access trace (`None` = tracing off, the serial
     /// default). Records every LLC-level access for phase-2 replay.
     trace: Option<TraceBuf>,
+    /// Streaming trace sink (`None` = materialized/off). Takes precedence
+    /// over `trace`: with a writer attached, every LLC-level access is
+    /// published straight into the bounded per-core ring the concurrent
+    /// replay engine is already draining, instead of materializing.
+    trace_writer: Option<TraceWriter>,
     /// Core-local logical time stamped onto trace events (set by the
     /// machine before each access group).
     now: f64,
@@ -111,6 +116,7 @@ impl Hierarchy {
             pf_idx: 0,
             prefetch_hits: 0,
             trace: None,
+            trace_writer: None,
             now: 0.0,
             phase: 0,
             socket: 0,
@@ -132,13 +138,32 @@ impl Hierarchy {
     }
 
     pub fn trace_enabled(&self) -> bool {
-        self.trace.is_some()
+        self.trace.is_some() || self.trace_writer.is_some()
     }
 
     /// Take the recorded trace (empty if tracing was never enabled).
     /// Tracing stays enabled with a fresh buffer.
     pub fn take_trace(&mut self) -> TraceBuf {
         self.trace.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    /// Attach a streaming trace sink: subsequent LLC-level accesses are
+    /// published into the writer's chunk ring (and consumed concurrently by
+    /// the replay engine) instead of a materialized [`TraceBuf`]. Replaces
+    /// any previous sink or buffer.
+    pub fn attach_trace_writer(&mut self, w: TraceWriter) {
+        self.trace = None;
+        self.trace_writer = Some(w);
+    }
+
+    /// Finish and detach the streaming sink, marking this core's stream
+    /// complete so the replay's merge can drain past it. (A panic unwinds
+    /// through [`TraceWriter`]'s `Drop` to the same effect.) No-op when no
+    /// writer is attached.
+    pub fn finish_trace(&mut self) {
+        if let Some(mut w) = self.trace_writer.take() {
+            w.finish();
+        }
     }
 
     /// Stamp the core-local logical time onto subsequent trace events.
@@ -166,7 +191,13 @@ impl Hierarchy {
         let now = self.now;
         let phase = self.phase;
         let socket = self.socket;
-        if let Some(t) = self.trace.as_mut() {
+        if let Some(w) = self.trace_writer.as_mut() {
+            w.push(
+                TraceEvent::new(line, kind, write, shadow_hit, paid_bw, phase)
+                    .with_socket(socket),
+                now,
+            );
+        } else if let Some(t) = self.trace.as_mut() {
             t.push(
                 TraceEvent::new(line, kind, write, shadow_hit, paid_bw, phase)
                     .with_socket(socket),

@@ -15,5 +15,8 @@ pub mod trace;
 pub use alloc::SimAlloc;
 pub use cache::Cache;
 pub use hierarchy::{AccessKind, Hierarchy, MemStats};
-pub use shared::{replay, ReplayEngine, ReplayOutcome, SharedStats};
-pub use trace::{TraceBuf, TraceEvent, TraceKind, MAX_PHASES, TRACE_CHUNK};
+pub use shared::{replay, ReplayEngine, ReplayOutcome, SharedStats, TraceSource};
+pub use trace::{
+    TraceBuf, TraceEvent, TraceKind, TraceReader, TraceStream, TraceStreamStats, TraceWriter,
+    MAX_PHASES, TRACE_CHUNK,
+};

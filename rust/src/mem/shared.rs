@@ -107,14 +107,40 @@
 //! code inline): shards only ever produce discrete facts, and the merge
 //! adds cycles in one canonical sequence. Sharding is purely a wall-clock
 //! knob — which is also why `replay_shards` never appears in the JSON
-//! exports. The per-run [`Scratch`] arena (canonical order, shard
-//! partition, shard LLC/directory replicas, bank/occupancy vectors) is
-//! allocated once and reused across iteration passes.
+//! exports. The per-run [`Scratch`] arena (shard LLC/directory replicas,
+//! bank/occupancy vectors) is allocated once and reused across iteration
+//! passes.
+//!
+//! ## Streaming sources (bounded-memory replay)
+//!
+//! The engine reads its events through a [`TraceSource`]: either fully
+//! materialized per-core [`TraceBuf`]s (pilot replays, tests) or live
+//! [`TraceStream`]s the kernel cores are still producing. No materialized
+//! canonical-order vector exists anymore — every walk (each shard thread
+//! and the serial merge) runs its own incremental k-way merge over fresh
+//! per-core cursors, consuming chunks as producers seal them, so the
+//! replay *overlaps* kernel execution and peak trace memory is bounded by
+//! the per-core ring budget
+//! ([`crate::config::SharedMemConfig::trace_ring_chunks`]) instead of
+//! growing with the event count. Shards hand the merge their
+//! [`EventOutcome`]s through small bounded batch channels; producers never
+//! block (a full ring spills to disk), shards block only on producers and
+//! on merge backpressure, and the merge blocks only on data that is still
+//! being produced — an acyclic dependency chain, so the pipeline cannot
+//! deadlock. Every cursor decodes times with the same fixed-point
+//! expression and every consumer walks the same canonical `(time, core,
+//! program-order)` interleaving, so the streamed result is bit-identical
+//! to the materialized one at every shard count and every ring budget —
+//! spilling is purely a footprint knob, like sharding is a wall-clock one.
 
 use crate::config::{MemConfig, SharedMemConfig, DRAM_BW_CYCLES};
 use crate::mem::cache::Cache;
-use crate::mem::trace::{TraceBuf, TraceKind, MAX_PHASES};
+use crate::mem::trace::{
+    decode_time, TraceBuf, TraceEvent, TraceKind, TraceStream, TraceStreamStats, MAX_PHASES,
+    TRACE_CHUNK,
+};
 use std::collections::HashMap;
+use std::sync::mpsc;
 
 /// Per-core shared-memory counters and stall cycles from one replay.
 /// Counters are exact; stall fields are replay-derived cycles. Everything is
@@ -182,6 +208,18 @@ pub struct SharedStats {
     /// Pending stall correction left when iteration stopped (cycles the
     /// next pass would still have reclassified; 0 at the fixed point).
     pub replay_residual: f64,
+    /// Packed trace bytes this core recorded in phase 1 (16 per event) —
+    /// the footprint the streaming pipeline bounds. Independent of the
+    /// ring budget.
+    pub trace_bytes_total: u64,
+    /// Peak sealed 64KB trace chunks resident in memory for this core
+    /// (`<=` the ring budget whenever one is set; cores sum, so the
+    /// aggregate bounds the job's whole resident trace footprint).
+    /// Ring-dependent — the stable JSON zeroes it alongside `wall_secs`.
+    pub trace_peak_resident_chunks: u64,
+    /// Trace chunks this core spilled to disk (0 unless a ring budget
+    /// forced eviction). Ring-dependent, zeroed in the stable JSON.
+    pub spilled_chunks: u64,
 }
 
 impl SharedStats {
@@ -213,6 +251,9 @@ impl SharedStats {
         self.remote_extra_cycles += o.remote_extra_cycles;
         self.replay_iters = self.replay_iters.max(o.replay_iters);
         self.replay_residual = self.replay_residual.max(o.replay_residual);
+        self.trace_bytes_total += o.trace_bytes_total;
+        self.trace_peak_resident_chunks += o.trace_peak_resident_chunks;
+        self.spilled_chunks += o.spilled_chunks;
     }
 
     /// Shared-LLC demand hit rate.
@@ -316,16 +357,14 @@ struct EventOutcome {
 
 /// One shard's private replay state: a full-geometry LLC replica and
 /// directory that only ever see this shard's lines (whole sets are
-/// shard-private — see the module docs), the shard's slice of the demotion
-/// trigger maps, and the outcome stream it feeds the merge. Reused across
-/// iteration passes via [`ShardState::reset`].
+/// shard-private — see the module docs) and the shard's slice of the
+/// demotion trigger maps. Reused across iteration passes via
+/// [`ShardState::reset`].
 struct ShardState {
     llc: Cache,
     directory: HashMap<u64, LineState>,
     /// Per-core demotion trigger points for lines this shard owns.
     triggers: Vec<InvalMap>,
-    /// One entry per demand event of this shard, in canonical order.
-    outcomes: Vec<EventOutcome>,
 }
 
 impl ShardState {
@@ -335,25 +374,17 @@ impl ShardState {
         for t in &mut self.triggers {
             t.clear();
         }
-        self.outcomes.clear();
     }
 }
 
 /// The per-run replay arena: everything allocated once in [`ReplayEngine::
-/// run`] and reused by every iteration pass — the canonical order, the
-/// per-shard position partition, the shard LLC/directory replicas, and the
-/// merge phase's occupancy/bank scratch vectors.
+/// run`] and reused by every iteration pass — the shard LLC/directory
+/// replicas and the merge phase's occupancy/bank scratch vectors.
 struct Scratch {
-    /// Canonical `(time, core, index)` interleaving, computed once per run.
-    order: Vec<(f64, u32, u32)>,
-    /// Canonical positions owned by each shard (`line % shards`).
-    shard_pos: Vec<Vec<u32>>,
     states: Vec<ShardState>,
     /// Socket of each core (locates the remote party of coherence events).
     core_socket: Vec<usize>,
     // --- merge-phase scratch, reset at the start of every pass ---
-    /// Next unconsumed outcome per shard.
-    cursor: Vec<usize>,
     /// Shared-LLC tag-pipeline occupancy tail per core.
     llc_busy: Vec<f64>,
     /// DRAM transfer occupancy tail per channel per core.
@@ -366,7 +397,6 @@ struct Scratch {
 
 impl Scratch {
     fn reset_merge(&mut self) {
-        self.cursor.iter_mut().for_each(|x| *x = 0);
         self.llc_busy.iter_mut().for_each(|x| *x = 0.0);
         for cb in &mut self.chan_busy {
             cb.iter_mut().for_each(|x| *x = 0.0);
@@ -377,6 +407,205 @@ impl Scratch {
         for sb in &mut self.shadow_bank {
             sb.iter_mut().for_each(|r| *r = NO_ROW);
         }
+    }
+}
+
+/// Where the engine's events come from: fully materialized per-core
+/// [`TraceBuf`]s (pilot replays, tests, synthetic fixtures) or live
+/// bounded-memory [`TraceStream`]s still being produced by the kernel
+/// cores. Index = core id in both arms. Every walk re-reads the source
+/// through fresh [`EventCursor`]s, so streams must be re-readable — sealed
+/// chunks stay addressable (resident or spilled) for the engine's later
+/// corrective passes.
+pub enum TraceSource<'a> {
+    Bufs(&'a [TraceBuf]),
+    Streams(&'a [TraceStream]),
+}
+
+impl<'a> TraceSource<'a> {
+    fn cores(&self) -> usize {
+        match self {
+            TraceSource::Bufs(b) => b.len(),
+            TraceSource::Streams(s) => s.len(),
+        }
+    }
+
+    /// A fresh sequential cursor over one core's events.
+    fn cursor(&self, core: usize, sockets: usize) -> EventCursor<'a> {
+        match self {
+            TraceSource::Bufs(bufs) => EventCursor::Buf {
+                buf: &bufs[core],
+                core: core as u32,
+                sockets,
+                i: 0,
+                acc_q: 0,
+            },
+            TraceSource::Streams(streams) => EventCursor::Stream {
+                reader: streams[core].reader(),
+                core: core as u32,
+                sockets,
+            },
+        }
+    }
+
+    /// Phase-1 footprint accounting for one core, stamped into its
+    /// [`SharedStats`] after the run. A materialized buffer is, by
+    /// definition, fully resident and never spilled.
+    fn trace_stats(&self, core: usize) -> TraceStreamStats {
+        match self {
+            TraceSource::Bufs(bufs) => {
+                let len = bufs[core].len();
+                TraceStreamStats {
+                    bytes_total: 16 * len as u64,
+                    peak_resident_chunks: len.div_ceil(TRACE_CHUNK) as u64,
+                    spilled_chunks: 0,
+                }
+            }
+            TraceSource::Streams(streams) => streams[core].stats(),
+        }
+    }
+}
+
+/// A sequential walk of one core's trace with absolute times decoded — a
+/// per-core head of the canonical merge. Both arms share the exact decode
+/// expression ([`decode_time`] over the accumulated quantized deltas), so
+/// merge keys and every downstream `f64` are bit-identical across sources.
+///
+/// The cursor is also the construction boundary for the self-describing
+/// socket stamps (the job the materialized order-building pass used to
+/// own): every event's stamp is asserted against the topology. A hard
+/// assert (not `debug_assert!`) because an out-of-range stamp would wrap
+/// the ring-distance arithmetic in release builds and charge phantom NUMA
+/// hops silently.
+enum EventCursor<'a> {
+    Buf { buf: &'a TraceBuf, core: u32, sockets: usize, i: usize, acc_q: u64 },
+    Stream { reader: crate::mem::trace::TraceReader, core: u32, sockets: usize },
+}
+
+impl EventCursor<'_> {
+    fn next(&mut self) -> Option<(f64, TraceEvent)> {
+        let (core, sockets, item) = match self {
+            EventCursor::Buf { buf, core, sockets, i, acc_q } => {
+                let item = if *i < buf.len() {
+                    let e = buf.get(*i);
+                    *i += 1;
+                    *acc_q += e.dt_q();
+                    Some((decode_time(*acc_q), e))
+                } else {
+                    None
+                };
+                (*core, *sockets, item)
+            }
+            EventCursor::Stream { reader, core, sockets } => (*core, *sockets, reader.next()),
+        };
+        if let Some((_, e)) = item {
+            let socket = e.socket();
+            assert!(
+                (socket as usize) < sockets,
+                "core {core}: trace-stamped socket {socket} is out of range for \
+                 {sockets} socket(s) — stamp sockets in [0, sockets)"
+            );
+        }
+        item
+    }
+}
+
+/// The canonical deterministic interleaving as an *incremental* k-way
+/// merge: `(time, core, index)` ordered by local time, ties breaking toward
+/// the lower core id, then program order — exactly the sequence the old
+/// materialized order vector held, but produced lazily so no O(events)
+/// index is ever built and streaming sources are consumed as their
+/// producers seal chunks. Each core's decoded times are monotone, so the
+/// heap walk is O(N log cores) and yields the sequence a full sort under
+/// the same comparator would.
+struct CanonicalMerge<'a> {
+    cursors: Vec<EventCursor<'a>>,
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<Head>>,
+}
+
+/// Head of one core's timed stream, ordered by the canonical
+/// `(time, core, index)` key and carrying the decoded event.
+struct Head {
+    time: f64,
+    core: u32,
+    index: u64,
+    event: TraceEvent,
+}
+
+impl PartialEq for Head {
+    fn eq(&self, o: &Head) -> bool {
+        self.cmp(o) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Head {}
+impl PartialOrd for Head {
+    fn partial_cmp(&self, o: &Head) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Head {
+    fn cmp(&self, o: &Head) -> std::cmp::Ordering {
+        self.time
+            .total_cmp(&o.time)
+            .then(self.core.cmp(&o.core))
+            .then(self.index.cmp(&o.index))
+    }
+}
+
+impl<'a> CanonicalMerge<'a> {
+    fn new(source: &TraceSource<'a>, sockets: usize) -> CanonicalMerge<'a> {
+        let mut cursors: Vec<EventCursor<'a>> =
+            (0..source.cores()).map(|c| source.cursor(c, sockets)).collect();
+        let mut heap = std::collections::BinaryHeap::with_capacity(cursors.len());
+        for (c, cur) in cursors.iter_mut().enumerate() {
+            if let Some((time, event)) = cur.next() {
+                heap.push(std::cmp::Reverse(Head { time, core: c as u32, index: 0, event }));
+            }
+        }
+        CanonicalMerge { cursors, heap }
+    }
+
+    fn next(&mut self) -> Option<(f64, u32, TraceEvent)> {
+        let std::cmp::Reverse(h) = self.heap.pop()?;
+        if let Some((time, event)) = self.cursors[h.core as usize].next() {
+            self.heap.push(std::cmp::Reverse(Head {
+                time,
+                core: h.core,
+                index: h.index + 1,
+                event,
+            }));
+        }
+        Some((h.time, h.core, h.event))
+    }
+}
+
+/// Events per [`EventOutcome`] batch a shard sends the merge, and the
+/// bounded batch-queue depth per shard. Bounding the queue is what keeps
+/// the *outcome* side O(1) per shard too: a shard that runs far ahead of
+/// the merge parks on `send` instead of buffering the whole run.
+const OUTCOME_BATCH: usize = 1024;
+const OUTCOME_QUEUE_BATCHES: usize = 64;
+
+/// The merge's view of one shard's outcome stream: batches pulled off the
+/// channel, consumed strictly in canonical order.
+struct OutcomeCursor {
+    rx: mpsc::Receiver<Vec<EventOutcome>>,
+    batch: Vec<EventOutcome>,
+    i: usize,
+}
+
+impl OutcomeCursor {
+    fn next(&mut self) -> EventOutcome {
+        while self.i >= self.batch.len() {
+            self.batch = self
+                .rx
+                .recv()
+                .expect("shard outcome stream ended before its events were consumed");
+            self.i = 0;
+        }
+        let o = self.batch[self.i];
+        self.i += 1;
+        o
     }
 }
 
@@ -411,21 +640,34 @@ fn scaled_llc_cfg(
 pub struct ReplayEngine<'a> {
     mem: &'a MemConfig,
     cfg: &'a SharedMemConfig,
-    traces: &'a [TraceBuf],
+    source: TraceSource<'a>,
 }
 
 impl<'a> ReplayEngine<'a> {
-    /// An engine over the merged per-core traces (index = core id).
-    /// Supports up to 64 cores (directory bitmaps). The configuration must
-    /// satisfy [`SharedMemConfig::validate`] — the driver and CLI `ensure!`
-    /// it with a clean error; the engine asserts it rather than silently
-    /// clamping.
+    /// An engine over the merged per-core materialized traces (index =
+    /// core id): the historical constructor, now a thin wrapper over
+    /// [`ReplayEngine::from_source`].
     pub fn new(
         mem: &'a MemConfig,
         cfg: &'a SharedMemConfig,
         traces: &'a [TraceBuf],
     ) -> ReplayEngine<'a> {
-        let cores = traces.len();
+        ReplayEngine::from_source(mem, cfg, TraceSource::Bufs(traces))
+    }
+
+    /// An engine over any per-core [`TraceSource`] (index = core id).
+    /// Supports up to 64 cores (directory bitmaps). The configuration must
+    /// satisfy [`SharedMemConfig::validate`] — the driver and CLI `ensure!`
+    /// it with a clean error; the engine asserts it rather than silently
+    /// clamping. With a [`TraceSource::Streams`] source, [`ReplayEngine::
+    /// run`] may be called while producers are still writing: it consumes
+    /// chunks as they seal and returns only after every stream finished.
+    pub fn from_source(
+        mem: &'a MemConfig,
+        cfg: &'a SharedMemConfig,
+        source: TraceSource<'a>,
+    ) -> ReplayEngine<'a> {
+        let cores = source.cores();
         assert!(
             (1..=64).contains(&cores),
             "replay supports 1..=64 cores, got {cores}"
@@ -433,7 +675,7 @@ impl<'a> ReplayEngine<'a> {
         if let Err(e) = cfg.validate() {
             panic!("invalid SharedMemConfig handed to the replay engine: {e}");
         }
-        ReplayEngine { mem, cfg, traces }
+        ReplayEngine { mem, cfg, source }
     }
 
     /// Socket of each core, read back from its trace's first event — used
@@ -442,12 +684,20 @@ impl<'a> ReplayEngine<'a> {
     /// read per event (events are self-describing), so a trace whose stamps
     /// vary mid-stream still prices each access correctly. Cores with empty
     /// traces resolve to socket 0; every stamp is validated against the
-    /// topology when the canonical order is built (no silent clamping).
+    /// topology by the merge cursors (no silent clamping). On a streaming
+    /// source this blocks until each core seals its first chunk or
+    /// finishes — the same data dependency the first pass has anyway.
     fn core_sockets(&self) -> Vec<usize> {
-        self.traces
-            .iter()
-            .map(|t| t.iter().next().map(|e| e.socket() as usize).unwrap_or(0))
-            .collect()
+        match &self.source {
+            TraceSource::Bufs(bufs) => bufs
+                .iter()
+                .map(|t| t.iter().next().map(|e| e.socket() as usize).unwrap_or(0))
+                .collect(),
+            TraceSource::Streams(streams) => streams
+                .iter()
+                .map(|s| s.reader().next().map(|(_, e)| e.socket() as usize).unwrap_or(0))
+                .collect(),
+        }
     }
 
     /// Run passes until the pending correction falls under
@@ -455,7 +705,7 @@ impl<'a> ReplayEngine<'a> {
     /// the final pass's outcome with `replay_iters`/`replay_residual`
     /// stamped on every core's [`SharedStats`].
     pub fn run(&self) -> ReplayOutcome {
-        let cores = self.traces.len();
+        let cores = self.source.cores();
         // Both guaranteed by `SharedMemConfig::validate` in `new` — used
         // directly, never clamped.
         let max_iters = self.cfg.max_replay_iters;
@@ -478,95 +728,26 @@ impl<'a> ReplayEngine<'a> {
             iters += 1;
         }
         let mut outcome = pass.outcome;
-        for s in &mut outcome.per_core {
+        for (c, s) in outcome.per_core.iter_mut().enumerate() {
             s.replay_iters = iters;
             s.replay_residual = pass.pending;
+            // Phase-1 footprint accounting (final here: the first pass
+            // drained every stream, so all producers have finished).
+            let ts = self.source.trace_stats(c);
+            s.trace_bytes_total = ts.bytes_total;
+            s.trace_peak_resident_chunks = ts.peak_resident_chunks;
+            s.spilled_chunks = ts.spilled_chunks;
         }
         outcome
     }
 
-    /// The canonical deterministic interleaving: `(time, core, index)`
-    /// ordered by local time, ties breaking toward the lower core id, then
-    /// program order. Built as a k-way merge of the per-core streams (each
-    /// core's decoded times are monotone, so this is O(N log cores) and
-    /// produces exactly the sequence a full sort under the same comparator
-    /// would). Computed once and shared by every pass.
-    ///
-    /// This is also the construction boundary for the self-describing
-    /// socket stamps: every event's stamp is asserted against the topology
-    /// here, once per run. A hard assert (not `debug_assert!`) because an
-    /// out-of-range stamp would wrap the ring-distance arithmetic in
-    /// release builds and charge phantom NUMA hops silently.
-    fn merge_order(&self) -> Vec<(f64, u32, u32)> {
-        use std::cmp::{Ordering, Reverse};
-        use std::collections::BinaryHeap;
-
-        /// Head of one core's timed stream, ordered by the canonical
-        /// `(time, core, index)` key.
-        struct Head(f64, u32, u32);
-        impl PartialEq for Head {
-            fn eq(&self, o: &Head) -> bool {
-                self.cmp(o) == Ordering::Equal
-            }
-        }
-        impl Eq for Head {}
-        impl PartialOrd for Head {
-            fn partial_cmp(&self, o: &Head) -> Option<Ordering> {
-                Some(self.cmp(o))
-            }
-        }
-        impl Ord for Head {
-            fn cmp(&self, o: &Head) -> Ordering {
-                self.0.total_cmp(&o.0).then(self.1.cmp(&o.1)).then(self.2.cmp(&o.2))
-            }
-        }
-
-        let sockets = self.cfg.sockets;
-        let check = |c: u32, socket: u8| {
-            assert!(
-                (socket as usize) < sockets,
-                "core {c}: trace-stamped socket {socket} is out of range for \
-                 {sockets} socket(s) — stamp sockets in [0, sockets)"
-            );
-        };
-        let total: usize = self.traces.iter().map(|t| t.len()).sum();
-        // Canonical positions (and per-core event indices) pack into u32;
-        // a run past that would need >64GB of packed events, but fail
-        // loudly rather than silently aliasing events if it happens.
-        assert!(
-            total <= u32::MAX as usize,
-            "replay of {total} events overflows the canonical position index"
-        );
-        let mut streams: Vec<_> = self.traces.iter().map(|t| t.iter_timed()).collect();
-        let mut heap: BinaryHeap<Reverse<Head>> = BinaryHeap::with_capacity(streams.len());
-        for (c, s) in streams.iter_mut().enumerate() {
-            assert!(
-                self.traces[c].len() <= u32::MAX as usize,
-                "core {c}: trace of {} events overflows the replay index",
-                self.traces[c].len()
-            );
-            if let Some((time, e)) = s.next() {
-                check(c as u32, e.socket());
-                heap.push(Reverse(Head(time, c as u32, 0)));
-            }
-        }
-        let mut order: Vec<(f64, u32, u32)> = Vec::with_capacity(total);
-        while let Some(Reverse(Head(t, c, i))) = heap.pop() {
-            order.push((t, c, i));
-            if let Some((time, e)) = streams[c as usize].next() {
-                check(c, e.socket());
-                heap.push(Reverse(Head(time, c, i + 1)));
-            }
-        }
-        order
-    }
-
-    /// Build the per-run arena: the canonical order, the shard partition of
-    /// it, one LLC/directory replica per shard, and the merge scratch.
+    /// Build the per-run arena: one LLC/directory replica per shard and the
+    /// merge scratch. No event is read here except each core's first (for
+    /// the socket table) — the canonical order is merged incrementally by
+    /// every pass, never materialized.
     fn scratch(&self) -> Scratch {
-        let cores = self.traces.len();
+        let cores = self.source.cores();
         let cfg = self.cfg;
-        let order = self.merge_order();
         let shards = cfg.replay_shards;
         let llc_cfg = scaled_llc_cfg(self.mem, cfg, cores);
         // The partition is only set-consistent while whole LLC sets stay
@@ -578,27 +759,17 @@ impl<'a> ReplayEngine<'a> {
              the line partition must keep whole sets shard-private",
             llc_cfg.sets()
         );
-        let mask = (shards - 1) as u64;
-        let mut shard_pos: Vec<Vec<u32>> = vec![Vec::new(); shards];
-        for (pos, &(_, ci, ei)) in order.iter().enumerate() {
-            let line = self.traces[ci as usize].get(ei as usize).line();
-            shard_pos[(line & mask) as usize].push(pos as u32);
-        }
         let states = (0..shards)
             .map(|_| ShardState {
                 llc: Cache::new(llc_cfg),
                 directory: HashMap::new(),
                 triggers: vec![InvalMap::new(); cores],
-                outcomes: Vec::new(),
             })
             .collect();
         let (channels, banks) = (cfg.dram_channels, cfg.dram_banks);
         Scratch {
-            order,
-            shard_pos,
             states,
             core_socket: self.core_sockets(),
-            cursor: vec![0; shards],
             llc_busy: vec![0.0; cores],
             chan_busy: vec![vec![0.0; cores]; channels],
             bank: vec![BankState { open_row: NO_ROW, owner: NO_OWNER }; channels * banks],
@@ -607,29 +778,42 @@ impl<'a> ReplayEngine<'a> {
     }
 
     /// One deterministic pass over the merged traces: the parallel shard
-    /// phase followed by the serial canonical-order merge (see the module
-    /// docs). `inval` carries the demotion-derived shadow invalidations of
-    /// earlier passes; the pass reports its own demotion points and the
-    /// pending correction a further pass would apply.
+    /// walks pipelined into the serial canonical-order merge (see the
+    /// module docs). Every consumer runs its own incremental k-way merge
+    /// over the source; shards emit discrete outcomes through bounded batch
+    /// channels the merge drains concurrently. `inval` carries the
+    /// demotion-derived shadow invalidations of earlier passes; the pass
+    /// reports its own demotion points and the pending correction a further
+    /// pass would apply.
     fn pass(&self, sc: &mut Scratch, inval: &[InvalMap]) -> Pass {
-        let traces = self.traces;
         let cfg = self.cfg;
-        let cores = traces.len();
+        let cores = self.source.cores();
+        let sockets = cfg.sockets;
         let shards = sc.states.len();
+        let shard_mask = (shards - 1) as u64;
 
-        // ---- Shard phase: the line-local heavy lifting (LLC way scans,
-        // directory hashing, trigger maps), emitting discrete outcomes.
-        {
-            let order = &sc.order;
-            let core_socket = &sc.core_socket;
-            let shard_run = |state: &mut ShardState, positions: &[u32]| {
+        sc.reset_merge();
+        let Scratch { states, core_socket, llc_busy, chan_busy, bank, shadow_bank } = sc;
+
+        // ---- Shard walk: the line-local heavy lifting (LLC way scans,
+        // directory hashing, trigger maps). Walks the *full* canonical
+        // order (it needs the global positions anyway) and processes only
+        // its own lines, emitting one discrete outcome per demand event.
+        let shard_walk =
+            |state: &mut ShardState, shard_ix: usize, emit: &mut dyn FnMut(EventOutcome)| {
                 state.reset();
-                for &p in positions {
-                    let pos = p as usize;
-                    let (_, ci, ei) = order[pos];
-                    let c = ci as usize;
-                    let e = traces[c].get(ei as usize);
+                let mut merge = CanonicalMerge::new(&self.source, sockets);
+                let mut next_pos = 0usize;
+                while let Some((_, ci, e)) = merge.next() {
+                    // Global canonical position (counts every core's
+                    // writebacks and demands — identical in every walk).
+                    let pos = next_pos;
+                    next_pos += 1;
                     let line = e.line();
+                    if (line & shard_mask) as usize != shard_ix {
+                        continue;
+                    }
+                    let c = ci as usize;
                     match e.kind() {
                         TraceKind::Writeback => {
                             // The install updates the shared LLC exactly as
@@ -645,8 +829,8 @@ impl<'a> ReplayEngine<'a> {
                             }
                         }
                         TraceKind::Demand => {
-                            // The event's own stamp (validated at order
-                            // construction — never clamped).
+                            // The event's own stamp (validated by the merge
+                            // cursors — never clamped).
                             let my_sock = e.socket() as usize;
                             // The lookup itself — the same fill the shadow
                             // performed.
@@ -709,255 +893,303 @@ impl<'a> ReplayEngine<'a> {
                                     }
                                 }
                             }
-                            state.outcomes.push(o);
+                            emit(o);
                         }
                     }
                 }
             };
-            if shards == 1 {
-                shard_run(&mut sc.states[0], &sc.shard_pos[0]);
-            } else {
-                let shard_run = &shard_run;
-                std::thread::scope(|scope| {
-                    for (state, positions) in sc.states.iter_mut().zip(&sc.shard_pos) {
-                        scope.spawn(move || shard_run(state, positions));
-                    }
-                });
-            }
-        }
 
-        // ---- Merge phase: serial walk of the full canonical order,
-        // consuming each demand event's outcome through its shard cursor.
-        // Every f64 accumulation and every order-coupled structure (queue
-        // tails, shared/shadow banks) lives here, in exactly the sequence
-        // the serial engine used — bit-identical at any shard count.
-        sc.reset_merge();
+        // ---- Merge walk: its own pass over the full canonical order,
+        // consuming each demand event's outcome from its shard. Every f64
+        // accumulation and every order-coupled structure (queue tails,
+        // shared/shadow banks) lives here, in exactly the sequence the
+        // serial engine used — bit-identical at any shard count and ring
+        // budget.
         let channels = cfg.dram_channels;
         let banks = cfg.dram_banks;
         let row_lines = cfg.row_buffer_lines as u64;
-        let shard_mask = (shards - 1) as u64;
-        let mut channel_busy_cycles = vec![0.0f64; channels];
-        let mut stats = vec![SharedStats::default(); cores];
-        let mut phase_stalls = vec![[0.0f64; MAX_PHASES]; cores];
-        let mut pending = 0.0f64;
-
-        for &(t, ci, ei) in &sc.order {
-            let c = ci as usize;
-            let e = traces[c].get(ei as usize);
-            let line = e.line();
-            match e.kind() {
-                TraceKind::Writeback => {
-                    // State + occupancy only: the write buffer hides the
-                    // latency, but the install occupies the tag pipeline.
-                    stats[c].writeback_installs += 1;
-                    sc.llc_busy[c] = t.max(sc.llc_busy[c]) + cfg.llc_service_cycles;
-                }
-                TraceKind::Demand => {
-                    let o = {
-                        let s = (line & shard_mask) as usize;
-                        let o = sc.states[s].outcomes[sc.cursor[s]];
-                        sc.cursor[s] += 1;
-                        o
-                    };
-                    stats[c].llc_accesses += 1;
-                    let my_sock = e.socket() as usize;
-                    let mut extra = 0.0f64;
-
-                    // (1) Queue behind other cores' outstanding LLC lookups.
-                    // The charged wait is capped at one service slot per
-                    // other core: phase-1 issue times feel no backpressure,
-                    // so under sustained overload the raw tail-minus-arrival
-                    // gap would compound without bound, while a real core
-                    // waits at most for the bounded queue (MSHRs) ahead of
-                    // it.
-                    let mut other = 0.0f64;
-                    for (k, &b) in sc.llc_busy.iter().enumerate() {
-                        if k != c && b > other {
-                            other = b;
-                        }
+        let merge_walk = |next_outcome: &mut dyn FnMut(usize) -> EventOutcome| -> (
+            Vec<SharedStats>,
+            Vec<[f64; MAX_PHASES]>,
+            Vec<f64>,
+            f64,
+        ) {
+            let mut channel_busy_cycles = vec![0.0f64; channels];
+            let mut stats = vec![SharedStats::default(); cores];
+            let mut phase_stalls = vec![[0.0f64; MAX_PHASES]; cores];
+            let mut pending = 0.0f64;
+            let mut merge = CanonicalMerge::new(&self.source, sockets);
+            while let Some((t, ci, e)) = merge.next() {
+                let c = ci as usize;
+                let line = e.line();
+                match e.kind() {
+                    TraceKind::Writeback => {
+                        // State + occupancy only: the write buffer hides the
+                        // latency, but the install occupies the tag pipeline.
+                        stats[c].writeback_installs += 1;
+                        llc_busy[c] = t.max(llc_busy[c]) + cfg.llc_service_cycles;
                     }
-                    let wait = (other - t)
-                        .max(0.0)
-                        .min((cores - 1) as f64 * cfg.llc_service_cycles);
-                    stats[c].llc_queue_cycles += wait;
-                    extra += wait;
-                    sc.llc_busy[c] = t.max(sc.llc_busy[c]).max(other) + cfg.llc_service_cycles;
+                    TraceKind::Demand => {
+                        let o = next_outcome((line & shard_mask) as usize);
+                        stats[c].llc_accesses += 1;
+                        let my_sock = e.socket() as usize;
+                        let mut extra = 0.0f64;
 
-                    // (2)+(3) The lookup and the MESI-lite transitions ran
-                    // in the shard phase; settle their costs here.
-                    if e.write() {
-                        if o.inval_mask != 0 {
-                            stats[c].upgrades += 1;
-                            stats[c].invalidations_sent += o.inval_mask.count_ones() as u64;
-                            stats[c].coherence_cycles += cfg.upgrade_cycles;
-                            extra += cfg.upgrade_cycles;
-                            for (k, s) in stats.iter_mut().enumerate() {
-                                if k != c && (o.inval_mask >> k) & 1 == 1 {
-                                    s.invalidations_received += 1;
+                        // (1) Queue behind other cores' outstanding LLC
+                        // lookups. The charged wait is capped at one service
+                        // slot per other core: phase-1 issue times feel no
+                        // backpressure, so under sustained overload the raw
+                        // tail-minus-arrival gap would compound without
+                        // bound, while a real core waits at most for the
+                        // bounded queue (MSHRs) ahead of it.
+                        let mut other = 0.0f64;
+                        for (k, &b) in llc_busy.iter().enumerate() {
+                            if k != c && b > other {
+                                other = b;
+                            }
+                        }
+                        let wait = (other - t)
+                            .max(0.0)
+                            .min((cores - 1) as f64 * cfg.llc_service_cycles);
+                        stats[c].llc_queue_cycles += wait;
+                        extra += wait;
+                        llc_busy[c] = t.max(llc_busy[c]).max(other) + cfg.llc_service_cycles;
+
+                        // (2)+(3) The lookup and the MESI-lite transitions
+                        // ran in the shard walk; settle their costs here.
+                        if e.write() {
+                            if o.inval_mask != 0 {
+                                stats[c].upgrades += 1;
+                                stats[c].invalidations_sent += o.inval_mask.count_ones() as u64;
+                                stats[c].coherence_cycles += cfg.upgrade_cycles;
+                                extra += cfg.upgrade_cycles;
+                                for (k, s) in stats.iter_mut().enumerate() {
+                                    if k != c && (o.inval_mask >> k) & 1 == 1 {
+                                        s.invalidations_received += 1;
+                                    }
+                                }
+                                if o.coh_hops > 0 {
+                                    stats[c].remote_forwards += 1;
+                                    let x = o.coh_hops as f64 * cfg.remote_coherence_cycles;
+                                    stats[c].remote_extra_cycles += x;
+                                    extra += x;
                                 }
                             }
-                            if o.coh_hops > 0 {
+                        } else if o.fwd {
+                            stats[c].dirty_forwards += 1;
+                            stats[c].coherence_cycles += cfg.dirty_forward_cycles;
+                            extra += cfg.dirty_forward_cycles;
+                            if o.fwd_hops > 0 {
                                 stats[c].remote_forwards += 1;
-                                let x = o.coh_hops as f64 * cfg.remote_coherence_cycles;
+                                let x = o.fwd_hops as f64 * cfg.remote_coherence_cycles;
                                 stats[c].remote_extra_cycles += x;
                                 extra += x;
                             }
                         }
-                    } else if o.fwd {
-                        stats[c].dirty_forwards += 1;
-                        stats[c].coherence_cycles += cfg.dirty_forward_cycles;
-                        extra += cfg.dirty_forward_cycles;
-                        if o.fwd_hops > 0 {
-                            stats[c].remote_forwards += 1;
-                            let x = o.fwd_hops as f64 * cfg.remote_coherence_cycles;
-                            stats[c].remote_extra_cycles += x;
-                            extra += x;
-                        }
-                    }
 
-                    // DRAM bank/row-buffer geometry (used by both branches
-                    // below): within a channel, consecutive lines fill one
-                    // bank's row for `row_buffer_lines` lines before
-                    // rotating banks.
-                    let ch = (line % channels as u64) as usize;
-                    let in_chan = line / channels as u64;
-                    let bk = ch * banks + ((in_chan / row_lines) % banks as u64) as usize;
-                    let row = in_chan / (row_lines * banks as u64);
-                    // NUMA: hop distance from the requesting core's socket
-                    // to the line's home channel group. 0 everywhere at one
-                    // socket, so every charge below vanishes and the flat
-                    // model is reproduced bit for bit.
-                    let home_hops = cfg.socket_distance(my_sock, cfg.socket_of_channel(ch));
+                        // DRAM bank/row-buffer geometry (used by both
+                        // branches below): within a channel, consecutive
+                        // lines fill one bank's row for `row_buffer_lines`
+                        // lines before rotating banks.
+                        let ch = (line % channels as u64) as usize;
+                        let in_chan = line / channels as u64;
+                        let bk = ch * banks + ((in_chan / row_lines) % banks as u64) as usize;
+                        let row = in_chan / (row_lines * banks as u64);
+                        // NUMA: hop distance from the requesting core's
+                        // socket to the line's home channel group. 0
+                        // everywhere at one socket, so every charge below
+                        // vanishes and the flat model is reproduced bit for
+                        // bit.
+                        let home_hops = cfg.socket_distance(my_sock, cfg.socket_of_channel(ch));
 
-                    // (4) Settle the shadow prediction against the shared
-                    // truth.
-                    if o.hit {
-                        stats[c].llc_hits += 1;
-                        if home_hops > 0 {
-                            // The hit is served by a remote socket's LLC
-                            // slice: the line crosses the interconnect.
-                            stats[c].remote_fills += 1;
-                            let x = home_hops as f64 * cfg.remote_coherence_cycles;
-                            stats[c].remote_extra_cycles += x;
-                            extra += x;
-                        }
-                        if !e.shadow_hit() {
-                            // Constructive sharing: another core already
-                            // pulled the line in. Refund the bandwidth floor
-                            // — but only where phase 1 really charged it
-                            // (stream-prefetched accesses were clamped to an
-                            // L1 hit and never paid). The core-alone
-                            // baseline *would* have taken this access to
-                            // DRAM, so its shadow bank state advances even
-                            // though the shared system never did.
-                            stats[c].shared_fills += 1;
-                            sc.shadow_bank[c][bk] = row;
-                            if e.paid_bw() {
-                                stats[c].sharing_saved_cycles += DRAM_BW_CYCLES;
-                                extra -= DRAM_BW_CYCLES;
+                        // (4) Settle the shadow prediction against the
+                        // shared truth.
+                        if o.hit {
+                            stats[c].llc_hits += 1;
+                            if home_hops > 0 {
+                                // The hit is served by a remote socket's LLC
+                                // slice: the line crosses the interconnect.
+                                stats[c].remote_fills += 1;
+                                let x = home_hops as f64 * cfg.remote_coherence_cycles;
+                                stats[c].remote_extra_cycles += x;
+                                extra += x;
                             }
-                        }
-                    } else {
-                        stats[c].llc_misses += 1;
-                        let mut otherb = 0.0f64;
-                        for (k, &b) in sc.chan_busy[ch].iter().enumerate() {
-                            if k != c && b > otherb {
-                                otherb = b;
+                            if !e.shadow_hit() {
+                                // Constructive sharing: another core already
+                                // pulled the line in. Refund the bandwidth
+                                // floor — but only where phase 1 really
+                                // charged it (stream-prefetched accesses
+                                // were clamped to an L1 hit and never paid).
+                                // The core-alone baseline *would* have taken
+                                // this access to DRAM, so its shadow bank
+                                // state advances even though the shared
+                                // system never did.
+                                stats[c].shared_fills += 1;
+                                shadow_bank[c][bk] = row;
+                                if e.paid_bw() {
+                                    stats[c].sharing_saved_cycles += DRAM_BW_CYCLES;
+                                    extra -= DRAM_BW_CYCLES;
+                                }
                             }
-                        }
-                        // Same bounded-queue cap as the LLC: at most one
-                        // in-flight transfer per other core ahead of us.
-                        let dwait = (otherb - t)
-                            .max(0.0)
-                            .min((cores - 1) as f64 * cfg.dram_transfer_cycles);
-                        stats[c].dram_queue_cycles += dwait;
-                        extra += dwait;
-                        sc.chan_busy[ch][c] =
-                            t.max(sc.chan_busy[ch][c]).max(otherb) + cfg.dram_transfer_cycles;
-                        channel_busy_cycles[ch] += cfg.dram_transfer_cycles;
-                        if home_hops > 0 {
-                            // Remote memory access: the transfer pays the
-                            // interconnect traversal and occupies the
-                            // channel end-to-end for that much longer.
-                            stats[c].remote_fills += 1;
-                            let x = home_hops as f64 * cfg.remote_transfer_cycles;
-                            stats[c].remote_extra_cycles += x;
-                            extra += x;
-                            sc.chan_busy[ch][c] += x;
-                            channel_busy_cycles[ch] += x;
-                        }
-
-                        // (5) Bank/row-buffer state. The *shared* bank
-                        // always advances — this is a real DRAM access —
-                        // while the core-alone *shadow* bank advances only
-                        // on accesses the core would have issued running
-                        // alone (shadow-LLC misses). The service delta is
-                        // charged only where both models agree the access
-                        // reaches DRAM: a demotion's whole extra trip is
-                        // already priced by the sharing corrections below,
-                        // and charging its row service too would
-                        // double-count.
-                        let b = &mut sc.bank[bk];
-                        let shared_cost = if b.open_row == row {
-                            stats[c].row_hits += 1;
-                            cfg.row_hit_cycles
-                        } else if b.open_row != NO_ROW && b.owner != c as u8 {
-                            stats[c].row_conflicts += 1;
-                            cfg.row_conflict_cycles
                         } else {
-                            stats[c].row_misses += 1;
-                            cfg.row_miss_cycles
-                        };
-                        b.open_row = row;
-                        b.owner = c as u8;
-                        if !e.shadow_hit() {
-                            let shadow_cost = if sc.shadow_bank[c][bk] == row {
+                            stats[c].llc_misses += 1;
+                            let mut otherb = 0.0f64;
+                            for (k, &b) in chan_busy[ch].iter().enumerate() {
+                                if k != c && b > otherb {
+                                    otherb = b;
+                                }
+                            }
+                            // Same bounded-queue cap as the LLC: at most one
+                            // in-flight transfer per other core ahead of us.
+                            let dwait = (otherb - t)
+                                .max(0.0)
+                                .min((cores - 1) as f64 * cfg.dram_transfer_cycles);
+                            stats[c].dram_queue_cycles += dwait;
+                            extra += dwait;
+                            chan_busy[ch][c] =
+                                t.max(chan_busy[ch][c]).max(otherb) + cfg.dram_transfer_cycles;
+                            channel_busy_cycles[ch] += cfg.dram_transfer_cycles;
+                            if home_hops > 0 {
+                                // Remote memory access: the transfer pays
+                                // the interconnect traversal and occupies
+                                // the channel end-to-end for that much
+                                // longer.
+                                stats[c].remote_fills += 1;
+                                let x = home_hops as f64 * cfg.remote_transfer_cycles;
+                                stats[c].remote_extra_cycles += x;
+                                extra += x;
+                                chan_busy[ch][c] += x;
+                                channel_busy_cycles[ch] += x;
+                            }
+
+                            // (5) Bank/row-buffer state. The *shared* bank
+                            // always advances — this is a real DRAM access —
+                            // while the core-alone *shadow* bank advances
+                            // only on accesses the core would have issued
+                            // running alone (shadow-LLC misses). The service
+                            // delta is charged only where both models agree
+                            // the access reaches DRAM: a demotion's whole
+                            // extra trip is already priced by the sharing
+                            // corrections below, and charging its row
+                            // service too would double-count.
+                            let b = &mut bank[bk];
+                            let shared_cost = if b.open_row == row {
+                                stats[c].row_hits += 1;
                                 cfg.row_hit_cycles
+                            } else if b.open_row != NO_ROW && b.owner != c as u8 {
+                                stats[c].row_conflicts += 1;
+                                cfg.row_conflict_cycles
                             } else {
+                                stats[c].row_misses += 1;
                                 cfg.row_miss_cycles
                             };
-                            sc.shadow_bank[c][bk] = row;
-                            let delta = shared_cost - shadow_cost;
-                            stats[c].row_extra_cycles += delta;
-                            extra += delta;
-                        }
+                            b.open_row = row;
+                            b.owner = c as u8;
+                            if !e.shadow_hit() {
+                                let shadow_cost = if shadow_bank[c][bk] == row {
+                                    cfg.row_hit_cycles
+                                } else {
+                                    cfg.row_miss_cycles
+                                };
+                                shadow_bank[c][bk] = row;
+                                let delta = shared_cost - shadow_cost;
+                                stats[c].row_extra_cycles += delta;
+                                extra += delta;
+                            }
 
-                        if e.shadow_hit() {
-                            // Destructive interference: phase 1 charged no
-                            // bandwidth floor for this access — pay it now.
-                            // The exposed-latency penalty applies only to
-                            // the *first* demotion on a line: once demoted,
-                            // later misses on it are predicted misses the
-                            // core overlaps like any other (the shadow
-                            // invalidation the iterative engine applies).
-                            stats[c].demotions += 1;
-                            let pay = if o.demote_invalidated {
-                                DRAM_BW_CYCLES
-                            } else {
-                                DRAM_BW_CYCLES + cfg.demotion_cycles
-                            };
-                            stats[c].demotion_cycles += pay;
-                            extra += pay;
-                            // A repeat demotion this pass (on a line prior
-                            // passes had not yet invalidated) is exactly
-                            // what the next pass would drop the exposure
-                            // penalty for — the pending correction.
-                            if o.demote_repeat {
-                                pending += cfg.demotion_cycles;
+                            if e.shadow_hit() {
+                                // Destructive interference: phase 1 charged
+                                // no bandwidth floor for this access — pay
+                                // it now. The exposed-latency penalty
+                                // applies only to the *first* demotion on a
+                                // line: once demoted, later misses on it are
+                                // predicted misses the core overlaps like
+                                // any other (the shadow invalidation the
+                                // iterative engine applies).
+                                stats[c].demotions += 1;
+                                let pay = if o.demote_invalidated {
+                                    DRAM_BW_CYCLES
+                                } else {
+                                    DRAM_BW_CYCLES + cfg.demotion_cycles
+                                };
+                                stats[c].demotion_cycles += pay;
+                                extra += pay;
+                                // A repeat demotion this pass (on a line
+                                // prior passes had not yet invalidated) is
+                                // exactly what the next pass would drop the
+                                // exposure penalty for — the pending
+                                // correction.
+                                if o.demote_repeat {
+                                    pending += cfg.demotion_cycles;
+                                }
                             }
                         }
-                    }
 
-                    let p = (e.phase() as usize).min(MAX_PHASES - 1);
-                    phase_stalls[c][p] += extra;
+                        let p = (e.phase() as usize).min(MAX_PHASES - 1);
+                        phase_stalls[c][p] += extra;
+                    }
                 }
             }
-        }
+            (stats, phase_stalls, channel_busy_cycles, pending)
+        };
+
+        // ---- Execution. A materialized single-shard replay (pilots, most
+        // tests) stays thread- and channel-free: run the one shard to
+        // completion, then merge over the buffered outcomes. (This also
+        // keeps a socket-stamp construction error surfacing on the caller's
+        // own thread with its precise message.) Everything else pipelines:
+        // shard threads and the merge run concurrently in one scope,
+        // outcomes flowing through the bounded batch channels.
+        let inline = shards == 1 && matches!(self.source, TraceSource::Bufs(_));
+        let (stats, phase_stalls, channel_busy_cycles, pending) = if inline {
+            let mut outcomes = Vec::new();
+            shard_walk(&mut states[0], 0, &mut |o| outcomes.push(o));
+            let mut i = 0usize;
+            merge_walk(&mut |_| {
+                let o = outcomes[i];
+                i += 1;
+                o
+            })
+        } else {
+            let mut txs = Vec::with_capacity(shards);
+            let mut cursors = Vec::with_capacity(shards);
+            for _ in 0..shards {
+                let (tx, rx) = mpsc::sync_channel::<Vec<EventOutcome>>(OUTCOME_QUEUE_BATCHES);
+                txs.push(tx);
+                cursors.push(OutcomeCursor { rx, batch: Vec::new(), i: 0 });
+            }
+            let shard_walk = &shard_walk;
+            std::thread::scope(|scope| {
+                for (shard_ix, (state, tx)) in states.iter_mut().zip(txs).enumerate() {
+                    scope.spawn(move || {
+                        let mut batch = Vec::with_capacity(OUTCOME_BATCH);
+                        shard_walk(state, shard_ix, &mut |o| {
+                            batch.push(o);
+                            if batch.len() >= OUTCOME_BATCH {
+                                let full = std::mem::replace(
+                                    &mut batch,
+                                    Vec::with_capacity(OUTCOME_BATCH),
+                                );
+                                // A failed send means the merge is already
+                                // unwinding; keep draining quietly.
+                                let _ = tx.send(full);
+                            }
+                        });
+                        if !batch.is_empty() {
+                            let _ = tx.send(batch);
+                        }
+                    });
+                }
+                // The serial merge runs concurrently on this thread,
+                // consuming outcome batches as the shards produce them.
+                merge_walk(&mut |s| cursors[s].next())
+            })
+        };
 
         // The shard trigger maps are line-disjoint by construction: union
         // them into the per-core maps the iteration loop folds from.
         let mut triggers: Vec<InvalMap> = vec![InvalMap::new(); cores];
-        for st in &mut sc.states {
+        for st in states.iter_mut() {
             for (c, trig) in st.triggers.iter_mut().enumerate() {
                 triggers[c].extend(trig.drain());
             }
@@ -1381,6 +1613,9 @@ mod tests {
             remote_extra_cycles: 4.0,
             replay_iters: 1,
             replay_residual: 0.0,
+            trace_bytes_total: 160,
+            trace_peak_resident_chunks: 2,
+            spilled_chunks: 1,
             ..SharedStats::default()
         };
         let b = SharedStats {
@@ -1392,6 +1627,9 @@ mod tests {
             remote_extra_cycles: 6.0,
             replay_iters: 2,
             replay_residual: 7.0,
+            trace_bytes_total: 320,
+            trace_peak_resident_chunks: 3,
+            spilled_chunks: 4,
             ..SharedStats::default()
         };
         a.add(&b);
@@ -1404,6 +1642,77 @@ mod tests {
         assert_eq!(a.remote_extra_cycles, 10.0);
         assert_eq!(a.replay_iters, 2, "iters aggregate with max, not sum");
         assert_eq!(a.replay_residual, 7.0);
+        assert_eq!(a.trace_bytes_total, 480, "footprint counters sum");
+        assert_eq!(a.trace_peak_resident_chunks, 5);
+        assert_eq!(a.spilled_chunks, 5);
+    }
+
+    /// Replay the given materialized traces again through live
+    /// [`TraceStream`]s (pushed from a producer thread, with the given ring
+    /// budget) and return the streamed outcome.
+    fn replay_streamed(
+        c: &SystemConfig,
+        cfg: &SharedMemConfig,
+        traces: &[TraceBuf],
+        ring: usize,
+    ) -> ReplayOutcome {
+        let mut writers = Vec::new();
+        let mut streams = Vec::new();
+        for _ in traces {
+            let (w, s) = TraceStream::channel(ring);
+            writers.push(w);
+            streams.push(s);
+        }
+        std::thread::scope(|scope| {
+            scope.spawn(move || {
+                for (t, mut w) in traces.iter().zip(writers) {
+                    for (time, e) in t.iter_timed() {
+                        w.push(e, time);
+                    }
+                    w.finish();
+                }
+            });
+            ReplayEngine::from_source(&c.mem, cfg, TraceSource::Streams(&streams)).run()
+        })
+    }
+
+    #[test]
+    fn streamed_replay_is_bit_identical_to_materialized() {
+        // The same coherence-heavy fixture as the shard-count sweep, fed
+        // once as materialized bufs and once through live streams while the
+        // engine is already running — at several shard counts and ring
+        // budgets. The two ring-dependent footprint counters are the *only*
+        // tolerated difference (the stable JSON zeroes them); with an
+        // unbounded ring even those agree, so the whole outcome is
+        // `assert_eq!`-identical.
+        let c = sys();
+        // Three chunks per core, so a ring of 2 genuinely spills.
+        let n = (TRACE_CHUNK * 2 + 100) as u64;
+        let t0 = buf((0..n).map(|i| (i as f64, demand(i % 64, i % 3 == 0, false))));
+        let t1 = buf(
+            (0..n).map(|i| (0.5 + i as f64, demand(i % 64 + (i % 5) * 31, i % 4 == 0, false))),
+        );
+        let t2 = buf((0..n).map(|i| (0.25 + i as f64, demand((i * 7) % 256, false, false))));
+        let traces = [t0, t1, t2];
+        for shards in [1usize, 4, 8] {
+            let cfg = with_shards(&c.shared, shards);
+            let materialized = replay(&c.mem, &cfg, &traces);
+            // Unbounded ring: nothing spills and the peak equals the
+            // buf-derived chunk count, so everything matches bit for bit.
+            let streamed = replay_streamed(&c, &cfg, &traces, 0);
+            assert_eq!(streamed, materialized, "x{shards} unbounded ring");
+            // Tiny ring: identical modulo the zeroed footprint counters.
+            let mut spilled = replay_streamed(&c, &cfg, &traces, 2);
+            for s in &spilled.per_core {
+                assert!(s.spilled_chunks > 0, "3 chunks through a ring of 2 must spill");
+                assert!(s.trace_peak_resident_chunks <= 2, "the ring budget is a hard cap");
+            }
+            for (s, m) in spilled.per_core.iter_mut().zip(&materialized.per_core) {
+                s.trace_peak_resident_chunks = m.trace_peak_resident_chunks;
+                s.spilled_chunks = m.spilled_chunks;
+            }
+            assert_eq!(spilled, materialized, "x{shards} ring=2");
+        }
     }
 
     /// Two one-event traces on distinct sockets of a 2-socket, 4-channel

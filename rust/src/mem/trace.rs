@@ -36,6 +36,27 @@
 //! 1/64-cycle fixed point. [`TraceBuf`] stores events in fixed-size chunks
 //! (no doubling reallocation, so peak memory stays within one chunk of the
 //! live data) and decodes absolute times by sequential accumulation.
+//!
+//! ## Streaming (bounded-memory handoff to the replay)
+//!
+//! Materializing whole traces makes peak memory O(events) and serializes
+//! the pipeline behind the slowest kernel core. [`TraceStream`] is the
+//! bounded alternative: the producing core's [`TraceWriter`] seals events
+//! into the same fixed-size chunks and publishes each sealed chunk
+//! immediately, while any number of independent [`TraceReader`]s (the
+//! replay's shard and merge walks) consume `(time, event)` pairs in program
+//! order, blocking only until the chunk they need is sealed. When a ring
+//! budget is set (`SharedMemConfig::trace_ring_chunks`), sealing past the
+//! budget transparently evicts the oldest resident chunk to an unlinked
+//! temp file as raw 16-byte little-endian records; readers demand-load
+//! spilled chunks back through the stream's free list. The producer never
+//! blocks, eviction happens only at seal time, and the resident/spill
+//! accounting is producer-side only — so `peak_resident`/`spilled` are a
+//! pure function of the seal sequence (deterministic, and `peak_resident
+//! <= ring` by construction) no matter how consumers are scheduled. Sealed
+//! chunks are never mutated and stay addressable (resident or spilled) for
+//! the engine's later corrective passes, which re-read the stream from the
+//! start through fresh readers.
 
 /// Upper bound on [`TraceEvent::phase`] values ( >= the machine model's
 /// `NUM_PHASES`; replay buckets stalls per phase in arrays of this size).
@@ -202,6 +223,44 @@ impl TraceEvent {
     pub fn phase(self) -> u8 {
         (self.bits >> PHASE_SHIFT) as u8
     }
+
+    /// The encoder-filled 48-bit quantized time delta to the previous event
+    /// of the same trace (decode support for the replay's cursors).
+    #[inline]
+    pub(crate) fn dt_q(self) -> u64 {
+        self.dt as u64 | ((self.dt_hi as u64) << 32)
+    }
+}
+
+/// Absolute time from an accumulated quantized timestamp. This is *the*
+/// decode expression: every consumer ([`TraceBuf::iter_timed`], the replay
+/// engine's buffer and stream cursors) must share it so decoded times — and
+/// therefore the canonical merge order and every `f64` accumulation — are
+/// bit-identical across trace stores.
+#[inline]
+pub(crate) fn decode_time(acc_q: u64) -> f64 {
+    acc_q as f64 / TIME_SCALE
+}
+
+/// Quantize one core-local timestamp and delta-encode it against the
+/// encoder state `last_q`, returning the split 48-bit delta. Shared by
+/// [`TraceBuf::push`] and [`TraceWriter::push`] so the two stores can never
+/// drift apart. Local times are monotone per core; a backwards stamp
+/// saturates to the previous time (the clock can stall but never run in
+/// reverse). A *forward* gap past the 48-bit span, by contrast, cannot be
+/// represented — clamping it would silently reorder this core's events
+/// against every other core's in the canonical merge, so it fails loudly
+/// instead.
+fn encode_delta(last_q: &mut u64, time: f64) -> (u32, u16) {
+    let q = (time * TIME_SCALE).max(0.0) as u64;
+    let dt = q.saturating_sub(*last_q);
+    assert!(
+        dt <= MAX_DT,
+        "trace time gap of {dt} quantized units overflows the 48-bit \
+         delta encoding (~4.4e12 cycles between consecutive events)"
+    );
+    *last_q += dt;
+    (dt as u32, (dt >> 32) as u16)
 }
 
 /// A core's recorded trace: packed events in fixed-size chunks plus the
@@ -215,6 +274,11 @@ pub struct TraceBuf {
     /// Quantized timestamp of the last pushed event (encoder state; kept in
     /// quantized units so encode and decode can never drift apart).
     last_q: u64,
+    /// Chunk buffers recycled by [`TraceBuf::clear`]: a cleared-and-refilled
+    /// buffer (the pilot replays and iterative passes clear traces between
+    /// uses) reuses its old chunks instead of reallocating one 64KB block
+    /// per [`TRACE_CHUNK`] events.
+    free: Vec<Vec<TraceEvent>>,
 }
 
 impl TraceBuf {
@@ -231,26 +295,18 @@ impl TraceBuf {
     }
 
     /// Append an event issued at core-local `time` (simulated cycles,
-    /// monotone per core; quantized to 1/64-cycle deltas).
+    /// monotone per core; quantized to 1/64-cycle deltas — see
+    /// [`encode_delta`] for the saturation/overflow contract).
     pub fn push(&mut self, mut e: TraceEvent, time: f64) {
-        let q = (time * TIME_SCALE).max(0.0) as u64;
-        // Local times are monotone per core; a backwards stamp saturates to
-        // the previous time (the clock can stall but never run in reverse).
-        // A *forward* gap past the 48-bit span, by contrast, cannot be
-        // represented — clamping it would silently reorder this core's
-        // events against every other core's in the canonical merge, so it
-        // fails loudly instead.
-        let dt = q.saturating_sub(self.last_q);
-        assert!(
-            dt <= MAX_DT,
-            "trace time gap of {dt} quantized units overflows the 48-bit \
-             delta encoding (~4.4e12 cycles between consecutive events)"
-        );
-        self.last_q += dt;
-        e.dt = dt as u32;
-        e.dt_hi = (dt >> 32) as u16;
+        let (dt, dt_hi) = encode_delta(&mut self.last_q, time);
+        e.dt = dt;
+        e.dt_hi = dt_hi;
         if self.chunks.last().map(|c| c.len() >= TRACE_CHUNK).unwrap_or(true) {
-            self.chunks.push(Vec::with_capacity(TRACE_CHUNK));
+            let chunk = self
+                .free
+                .pop()
+                .unwrap_or_else(|| Vec::with_capacity(TRACE_CHUNK));
+            self.chunks.push(chunk);
         }
         self.chunks.last_mut().unwrap().push(e);
         self.len += 1;
@@ -267,8 +323,8 @@ impl TraceBuf {
     pub fn iter_timed(&self) -> impl Iterator<Item = (f64, TraceEvent)> + '_ {
         let mut acc = 0u64;
         self.chunks.iter().flatten().map(move |&e| {
-            acc += e.dt as u64 | ((e.dt_hi as u64) << 32);
-            (acc as f64 / TIME_SCALE, e)
+            acc += e.dt_q();
+            (decode_time(acc), e)
         })
     }
 
@@ -277,9 +333,13 @@ impl TraceBuf {
         self.chunks.iter().flatten().copied()
     }
 
-    /// Drop all recorded events (encoder time state resets too).
+    /// Drop all recorded events (encoder time state resets too). The chunk
+    /// buffers are kept on a free list for reuse by later pushes.
     pub fn clear(&mut self) {
-        self.chunks.clear();
+        for mut c in self.chunks.drain(..) {
+            c.clear();
+            self.free.push(c);
+        }
         self.len = 0;
         self.last_q = 0;
     }
@@ -291,6 +351,410 @@ impl TraceBuf {
             b.push(e, t);
         }
         b
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming: bounded-memory chunk handoff with spill-to-disk
+// ---------------------------------------------------------------------------
+
+/// Serialized size of one packed event in the spill file: the in-memory 16
+/// bytes made explicit-endian (`u64` bits, `u32` dt, `u16` dt_hi, `u16`
+/// zero pad), all little-endian.
+const SPILL_EVENT_BYTES: usize = 16;
+
+/// Encode a sealed chunk as raw 16-byte little-endian spill records into
+/// `out` (cleared first).
+fn encode_chunk(events: &[TraceEvent], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(events.len() * SPILL_EVENT_BYTES);
+    for e in events {
+        out.extend_from_slice(&e.bits.to_le_bytes());
+        out.extend_from_slice(&e.dt.to_le_bytes());
+        out.extend_from_slice(&e.dt_hi.to_le_bytes());
+        out.extend_from_slice(&[0u8; 2]);
+    }
+}
+
+/// Decode spill records back into packed events in `out` (cleared first).
+/// Exact inverse of [`encode_chunk`]: the delta stream round-trips bit for
+/// bit, so a spilled chunk replays identically to a resident one.
+fn decode_chunk(bytes: &[u8], out: &mut Vec<TraceEvent>) {
+    debug_assert_eq!(bytes.len() % SPILL_EVENT_BYTES, 0);
+    out.clear();
+    out.reserve(bytes.len() / SPILL_EVENT_BYTES);
+    for rec in bytes.chunks_exact(SPILL_EVENT_BYTES) {
+        out.push(TraceEvent {
+            bits: u64::from_le_bytes(rec[0..8].try_into().unwrap()),
+            dt: u32::from_le_bytes(rec[8..12].try_into().unwrap()),
+            dt_hi: u16::from_le_bytes(rec[12..14].try_into().unwrap()),
+        });
+    }
+}
+
+/// A fresh spill file in the system temp directory, unlinked as soon as it
+/// is created so the storage can never outlive the process (the open handle
+/// keeps it alive; the name exists only long enough to create it).
+fn open_spill_file() -> std::fs::File {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    loop {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("spz-trace-{}-{n}.spill", std::process::id()));
+        match std::fs::OpenOptions::new()
+            .create_new(true)
+            .read(true)
+            .write(true)
+            .open(&path)
+        {
+            Ok(file) => {
+                let _ = std::fs::remove_file(&path);
+                return file;
+            }
+            // A stale name from a crashed run with a recycled pid: try the
+            // next counter value.
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => continue,
+            Err(e) => panic!("cannot create trace spill file {}: {e}", path.display()),
+        }
+    }
+}
+
+/// Footprint accounting for one stream (see [`TraceStream::stats`]). The
+/// byte total is ring-independent; the peak and spill counts are a pure
+/// function of the seal sequence under the configured ring budget.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceStreamStats {
+    /// Total packed event bytes this stream carried (16 per event).
+    pub bytes_total: u64,
+    /// Peak sealed chunks resident in memory at once (`<=` the ring budget
+    /// whenever one is set).
+    pub peak_resident_chunks: u64,
+    /// Sealed chunks evicted to the spill file.
+    pub spilled_chunks: u64,
+}
+
+/// One sealed chunk's location in the stream's store.
+enum ChunkSlot {
+    /// Resident in memory; readers share it by `Arc` clone (sealed chunks
+    /// are immutable).
+    Resident(std::sync::Arc<Vec<TraceEvent>>),
+    /// Evicted to the spill file: `len` events starting at byte `off`.
+    Spilled { off: u64, len: u32 },
+}
+
+/// Mutex-guarded store behind one [`TraceStream`].
+struct StreamState {
+    chunks: Vec<ChunkSlot>,
+    /// Total events sealed so far.
+    len: u64,
+    /// The producer finished (its partial final chunk, if any, is sealed).
+    finished: bool,
+    /// Sealed chunks currently resident. Producer-side accounting only:
+    /// readers never touch it, so `peak_resident`/`spilled` cannot depend
+    /// on consumer scheduling.
+    resident: usize,
+    peak_resident: usize,
+    spilled: u64,
+    /// Index of the oldest chunk not yet considered for eviction.
+    spill_cursor: usize,
+    /// Lazily created, already-unlinked spill file.
+    spill: Option<std::fs::File>,
+    /// Bytes written to the spill file so far (the next chunk's offset).
+    spill_len: u64,
+    /// Scratch byte buffer for spill encode/decode (reused under the lock).
+    spill_buf: Vec<u8>,
+    /// Cleared chunk buffers recycled between the writer's seals, evicted
+    /// chunks, and readers' demand-loads.
+    free: Vec<Vec<TraceEvent>>,
+}
+
+impl StreamState {
+    /// Evict the oldest resident sealed chunk to the spill file. Called at
+    /// seal time when the ring is full; the 64KB write happens under the
+    /// state lock, which is what keeps the eviction and its accounting one
+    /// atomic, deterministic step.
+    fn spill_oldest(&mut self) {
+        while self.spill_cursor < self.chunks.len() {
+            let idx = self.spill_cursor;
+            self.spill_cursor += 1;
+            if !matches!(self.chunks[idx], ChunkSlot::Resident(_)) {
+                continue;
+            }
+            let off = self.spill_len;
+            let mut bytes = std::mem::take(&mut self.spill_buf);
+            let len;
+            {
+                use std::io::{Seek, SeekFrom, Write};
+                let ChunkSlot::Resident(arc) = &self.chunks[idx] else {
+                    unreachable!()
+                };
+                len = arc.len() as u32;
+                encode_chunk(arc, &mut bytes);
+                let file = self.spill.get_or_insert_with(open_spill_file);
+                file.seek(SeekFrom::Start(off)).expect("trace spill seek failed");
+                file.write_all(&bytes).expect("trace spill write failed");
+            }
+            self.spill_len += bytes.len() as u64;
+            bytes.clear();
+            self.spill_buf = bytes;
+            let old = std::mem::replace(&mut self.chunks[idx], ChunkSlot::Spilled { off, len });
+            if let ChunkSlot::Resident(arc) = old {
+                // Recycle the buffer unless a reader still holds it.
+                if let Ok(mut v) = std::sync::Arc::try_unwrap(arc) {
+                    v.clear();
+                    self.free.push(v);
+                }
+            }
+            self.resident -= 1;
+            self.spilled += 1;
+            return;
+        }
+        unreachable!("spill_oldest called with no resident chunk in the ring");
+    }
+
+    /// Read one spilled chunk back into a (recycled) event buffer.
+    fn load_spilled(&mut self, off: u64, len: u32) -> Vec<TraceEvent> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut bytes = std::mem::take(&mut self.spill_buf);
+        bytes.resize(len as usize * SPILL_EVENT_BYTES, 0);
+        let file = self.spill.as_mut().expect("spilled chunk without a spill file");
+        file.seek(SeekFrom::Start(off)).expect("trace spill seek failed");
+        file.read_exact(&mut bytes).expect("trace spill read failed");
+        let mut v = self.free.pop().unwrap_or_default();
+        decode_chunk(&bytes, &mut v);
+        bytes.clear();
+        self.spill_buf = bytes;
+        v
+    }
+}
+
+struct StreamShared {
+    state: std::sync::Mutex<StreamState>,
+    cv: std::sync::Condvar,
+    /// Ring budget in sealed chunks (0 = unbounded: nothing ever spills).
+    ring: usize,
+}
+
+/// The consumer-side handle of one core's streaming trace (see the module
+/// docs): a store of sealed immutable chunks that [`TraceReader`]s walk in
+/// program order while the producing [`TraceWriter`] is still appending.
+/// Cheap to share by reference; re-readable any number of times (the
+/// replay's corrective passes re-walk it from the start).
+pub struct TraceStream {
+    shared: std::sync::Arc<StreamShared>,
+}
+
+impl TraceStream {
+    /// A producer/consumer pair with the given ring budget in sealed chunks
+    /// (`0` = unbounded, nothing ever spills; otherwise `>= 2`, validated
+    /// upstream by `SharedMemConfig::validate`).
+    pub fn channel(ring_chunks: usize) -> (TraceWriter, TraceStream) {
+        let shared = std::sync::Arc::new(StreamShared {
+            state: std::sync::Mutex::new(StreamState {
+                chunks: Vec::new(),
+                len: 0,
+                finished: false,
+                resident: 0,
+                peak_resident: 0,
+                spilled: 0,
+                spill_cursor: 0,
+                spill: None,
+                spill_len: 0,
+                spill_buf: Vec::new(),
+                free: Vec::new(),
+            }),
+            cv: std::sync::Condvar::new(),
+            ring: ring_chunks,
+        });
+        let writer = TraceWriter {
+            shared: shared.clone(),
+            open: Vec::with_capacity(TRACE_CHUNK),
+            last_q: 0,
+            finished: false,
+        };
+        (writer, TraceStream { shared })
+    }
+
+    /// A fresh sequential reader positioned at the first event.
+    pub fn reader(&self) -> TraceReader {
+        TraceReader {
+            shared: self.shared.clone(),
+            chunk: 0,
+            i: 0,
+            current: None,
+            acc_q: 0,
+        }
+    }
+
+    /// Total events sealed so far (final once the producer finished).
+    pub fn len(&self) -> u64 {
+        self.shared.state.lock().unwrap().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Footprint accounting. Stable once the producer finished; the replay
+    /// engine stamps these into the per-core [`crate::mem::SharedStats`].
+    pub fn stats(&self) -> TraceStreamStats {
+        let st = self.shared.state.lock().unwrap();
+        TraceStreamStats {
+            bytes_total: st.len * SPILL_EVENT_BYTES as u64,
+            peak_resident_chunks: st.peak_resident as u64,
+            spilled_chunks: st.spilled,
+        }
+    }
+}
+
+/// The producer side of a [`TraceStream`]: the same push/encode contract as
+/// [`TraceBuf::push`], sealing each filled [`TRACE_CHUNK`]-event chunk into
+/// the stream as it completes. Pushing never blocks — a full ring evicts
+/// its oldest chunk to disk instead of stalling the simulated core.
+pub struct TraceWriter {
+    shared: std::sync::Arc<StreamShared>,
+    open: Vec<TraceEvent>,
+    last_q: u64,
+    finished: bool,
+}
+
+impl TraceWriter {
+    /// Append an event issued at core-local `time` (same encoding and
+    /// monotonicity contract as [`TraceBuf::push`]).
+    pub fn push(&mut self, mut e: TraceEvent, time: f64) {
+        debug_assert!(!self.finished, "push after finish");
+        let (dt, dt_hi) = encode_delta(&mut self.last_q, time);
+        e.dt = dt;
+        e.dt_hi = dt_hi;
+        self.open.push(e);
+        if self.open.len() >= TRACE_CHUNK {
+            self.seal(false);
+        }
+    }
+
+    /// Seal the partial final chunk and mark the stream finished. Idempotent;
+    /// also runs on drop, so a panicking producer still ends its stream and
+    /// readers never block forever.
+    pub fn finish(&mut self) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        self.seal(true);
+    }
+
+    fn seal(&mut self, finish: bool) {
+        let mut st = self.shared.state.lock().unwrap();
+        if !self.open.is_empty() {
+            if self.shared.ring > 0 && st.resident >= self.shared.ring {
+                st.spill_oldest();
+            }
+            let chunk = std::mem::take(&mut self.open);
+            st.len += chunk.len() as u64;
+            st.chunks.push(ChunkSlot::Resident(std::sync::Arc::new(chunk)));
+            st.resident += 1;
+            st.peak_resident = st.peak_resident.max(st.resident);
+            if !finish {
+                self.open = st
+                    .free
+                    .pop()
+                    .unwrap_or_else(|| Vec::with_capacity(TRACE_CHUNK));
+            }
+        }
+        if finish {
+            st.finished = true;
+        }
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for TraceWriter {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+/// A sequential consumer of one [`TraceStream`]: yields `(absolute_time,
+/// event)` pairs in program order with exactly [`TraceBuf::iter_timed`]'s
+/// decode, blocking until the producer seals the chunk it needs (or
+/// finishes). Readers are independent — each shard walk and the serial
+/// merge hold their own.
+pub struct TraceReader {
+    shared: std::sync::Arc<StreamShared>,
+    /// Next chunk index to load.
+    chunk: usize,
+    /// Position within the loaded chunk.
+    i: usize,
+    current: Option<LoadedChunk>,
+    acc_q: u64,
+}
+
+enum LoadedChunk {
+    /// A resident chunk, shared with the store.
+    Shared(std::sync::Arc<Vec<TraceEvent>>),
+    /// A spilled chunk demand-loaded for this reader alone.
+    Owned(Vec<TraceEvent>),
+}
+
+impl LoadedChunk {
+    fn events(&self) -> &[TraceEvent] {
+        match self {
+            LoadedChunk::Shared(a) => a,
+            LoadedChunk::Owned(v) => v,
+        }
+    }
+}
+
+impl TraceReader {
+    /// Next `(absolute_time, event)` pair, or `None` once the stream has
+    /// finished and every sealed event was consumed.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Option<(f64, TraceEvent)> {
+        loop {
+            if let Some(cur) = &self.current {
+                if let Some(&e) = cur.events().get(self.i) {
+                    self.i += 1;
+                    self.acc_q += e.dt_q();
+                    return Some((decode_time(self.acc_q), e));
+                }
+            }
+            if !self.advance() {
+                return None;
+            }
+        }
+    }
+
+    /// Block until the next sealed chunk exists (or the stream is finished)
+    /// and load it — by `Arc` clone if resident, decoded back through the
+    /// stream's free list if spilled.
+    fn advance(&mut self) -> bool {
+        let mut st = self.shared.state.lock().unwrap();
+        // Return the previous demand-loaded buffer before taking the next.
+        if let Some(LoadedChunk::Owned(mut v)) = self.current.take() {
+            v.clear();
+            st.free.push(v);
+        }
+        while self.chunk >= st.chunks.len() {
+            if st.finished {
+                return false;
+            }
+            st = self.shared.cv.wait(st).unwrap();
+        }
+        let spilled_at = match &st.chunks[self.chunk] {
+            ChunkSlot::Resident(arc) => {
+                self.current = Some(LoadedChunk::Shared(arc.clone()));
+                None
+            }
+            &ChunkSlot::Spilled { off, len } => Some((off, len)),
+        };
+        if let Some((off, len)) = spilled_at {
+            self.current = Some(LoadedChunk::Owned(st.load_spilled(off, len)));
+        }
+        self.chunk += 1;
+        self.i = 0;
+        true
     }
 }
 
@@ -403,5 +867,156 @@ mod tests {
         ]);
         let ts: Vec<f64> = b.iter_timed().map(|(t, _)| t).collect();
         assert_eq!(ts[1], ts[0], "clock can stall but never run backwards");
+    }
+
+    #[test]
+    fn clear_recycles_chunk_buffers_through_the_free_list() {
+        let mut b = TraceBuf::new();
+        for i in 0..TRACE_CHUNK * 2 + 5 {
+            b.push(TraceEvent::new(i as u64, TraceKind::Demand, false, false, true, 1), i as f64);
+        }
+        assert_eq!(b.chunks.len(), 3);
+        b.clear();
+        assert_eq!(b.free.len(), 3, "cleared chunks land on the free list");
+        assert!(b.free.iter().all(|c| c.is_empty() && c.capacity() >= TRACE_CHUNK));
+        for i in 0..TRACE_CHUNK + 1 {
+            b.push(TraceEvent::new(i as u64, TraceKind::Demand, false, false, true, 1), i as f64);
+        }
+        assert_eq!(b.free.len(), 1, "refilling reuses recycled chunks first");
+        assert_eq!(b.len(), TRACE_CHUNK + 1);
+    }
+
+    #[test]
+    fn spill_records_encode_and_decode_exactly() {
+        let mut b = TraceBuf::new();
+        b.push(TraceEvent::new(3, TraceKind::Demand, true, true, false, 5).with_socket(9), 0.25);
+        b.push(TraceEvent::new((1 << 50) + 1, TraceKind::Writeback, true, false, false, 2), 1e9);
+        let events: Vec<TraceEvent> = b.iter().collect();
+        let mut bytes = Vec::new();
+        encode_chunk(&events, &mut bytes);
+        assert_eq!(bytes.len(), events.len() * SPILL_EVENT_BYTES);
+        let mut back = Vec::new();
+        decode_chunk(&bytes, &mut back);
+        assert_eq!(back, events, "bits and the split 48-bit delta round-trip");
+    }
+
+    /// Events streamed through a writer decode exactly like the same events
+    /// pushed into a `TraceBuf` — including with a tiny ring forcing every
+    /// early chunk through the spill file.
+    #[test]
+    fn stream_round_trips_like_a_buf_resident_and_spilled() {
+        let n = TRACE_CHUNK * 4 + 123;
+        let ev = |i: usize| {
+            (
+                i as f64 * 0.75,
+                TraceEvent::new(i as u64 % 977, TraceKind::Demand, i % 3 == 0, i % 5 == 0, true, 1)
+                    .with_socket((i % 2) as u8),
+            )
+        };
+        let buf = TraceBuf::from_events((0..n).map(ev));
+        for ring in [0usize, 2] {
+            let (mut w, stream) = TraceStream::channel(ring);
+            for i in 0..n {
+                let (t, e) = ev(i);
+                w.push(e, t);
+            }
+            w.finish();
+            assert_eq!(stream.len(), n as u64);
+            let stats = stream.stats();
+            assert_eq!(stats.bytes_total, 16 * n as u64);
+            if ring == 0 {
+                assert_eq!(stats.spilled_chunks, 0);
+                assert_eq!(stats.peak_resident_chunks, 5, "ceil(n / TRACE_CHUNK) chunks");
+            } else {
+                assert!(stats.spilled_chunks > 0, "a 2-chunk ring must spill 5 chunks' worth");
+                assert!(stats.peak_resident_chunks <= ring as u64);
+            }
+            // Two passes: streams are re-readable (the replay's corrective
+            // passes re-walk them), and reading must not perturb the
+            // producer-side footprint accounting.
+            for pass in 0..2 {
+                let mut r = stream.reader();
+                let mut got = 0usize;
+                let mut it = buf.iter_timed();
+                while let Some((t, e)) = r.next() {
+                    let (bt, be) = it.next().expect("stream yielded extra events");
+                    assert_eq!(t.to_bits(), bt.to_bits(), "pass {pass}: time decode must be bit-identical");
+                    assert_eq!(e, be);
+                    got += 1;
+                }
+                assert_eq!(got, n);
+                assert!(it.next().is_none());
+            }
+            assert_eq!(stream.stats(), stats, "readers never change the accounting");
+        }
+    }
+
+    /// The satellite pin: a 48-bit (>u32) time delta landing exactly on a
+    /// chunk boundary must survive the spill encode/decode round trip.
+    #[test]
+    fn spilled_chunk_round_trips_a_48_bit_delta_at_a_chunk_boundary() {
+        let gap_cycles = 1e9; // 6.4e10 quantized units: needs dt_hi
+        let time = |i: usize| {
+            if i < TRACE_CHUNK {
+                i as f64
+            } else {
+                gap_cycles + i as f64
+            }
+        };
+        // The boundary delta is the first event of chunk 1; sealing chunks 2
+        // and 3 into a 2-chunk ring evicts chunks 0 *and* 1, so the delta is
+        // read back through the spill file.
+        let n = TRACE_CHUNK * 4;
+        let ev = |i: usize| TraceEvent::new(i as u64, TraceKind::Demand, false, false, true, 1);
+        let (mut w, stream) = TraceStream::channel(2);
+        for i in 0..n {
+            w.push(ev(i), time(i));
+        }
+        w.finish();
+        assert!(stream.stats().spilled_chunks >= 2, "the boundary chunk must have spilled");
+        let mut r = stream.reader();
+        for i in 0..n {
+            let (t, e) = r.next().expect("missing event");
+            assert_eq!(e.line(), i as u64);
+            assert_eq!(
+                t.to_bits(),
+                time(i).to_bits(),
+                "event {i}: the 48-bit boundary delta must decode exactly"
+            );
+        }
+        assert!(r.next().is_none());
+    }
+
+    /// A reader started before any data exists blocks until the producer
+    /// seals, and a dropped writer finishes its stream (no deadlock when a
+    /// producer unwinds mid-run).
+    #[test]
+    fn reader_blocks_until_seal_and_writer_drop_finishes() {
+        let (mut w, stream) = TraceStream::channel(0);
+        let consumer = std::thread::spawn({
+            let mut r = stream.reader();
+            move || {
+                let mut n = 0u64;
+                while r.next().is_some() {
+                    n += 1;
+                }
+                n
+            }
+        });
+        for i in 0..(TRACE_CHUNK + 7) {
+            w.push(TraceEvent::new(i as u64, TraceKind::Demand, false, false, true, 1), i as f64);
+        }
+        drop(w); // no explicit finish
+        assert_eq!(consumer.join().unwrap(), TRACE_CHUNK as u64 + 7);
+        assert_eq!(stream.len(), TRACE_CHUNK as u64 + 7);
+    }
+
+    #[test]
+    fn empty_stream_finishes_clean() {
+        let (mut w, stream) = TraceStream::channel(2);
+        w.finish();
+        assert!(stream.is_empty());
+        assert!(stream.reader().next().is_none());
+        assert_eq!(stream.stats(), TraceStreamStats::default());
     }
 }

@@ -76,6 +76,16 @@ pub struct SimServiceConfig {
     /// DRR cost assumed for jobs whose dataset has no cached
     /// characterization yet (see [`Session::cached_stats`]).
     pub default_cost: u64,
+    /// Per-job trace-ring budget, in 64KB chunks per simulated core.
+    /// `0` (the default) inherits the session's configured
+    /// [`crate::config::SharedMemConfig::trace_ring_chunks`]; a nonzero
+    /// value overrides it for every job this service runs, so a saturated
+    /// pool's aggregate resident trace memory is bounded by roughly
+    /// `workers * trace_ring_chunks * 64KB` (each job holds at most
+    /// `cores * ring` chunks, and jobs occupy `cores` slots). Must be 0 or
+    /// at least 2. Purely a footprint knob: results are bit-identical at
+    /// every ring size (overflow spills to disk).
+    pub trace_ring_chunks: usize,
 }
 
 impl Default for SimServiceConfig {
@@ -88,6 +98,7 @@ impl Default for SimServiceConfig {
             default_weight: 1,
             tenant_weights: Vec::new(),
             default_cost: 1024,
+            trace_ring_chunks: 0,
         }
     }
 }
@@ -116,6 +127,10 @@ impl SimServiceConfig {
             ensure!(*w >= 1, "tenant '{t}' weight must be at least 1 (got 0)");
         }
         ensure!(self.default_cost >= 1, "SimServiceConfig.default_cost must be at least 1 (got 0)");
+        ensure!(
+            self.trace_ring_chunks != 1,
+            "SimServiceConfig.trace_ring_chunks must be 0 (inherit) or at least 2 (got 1)"
+        );
         Ok(())
     }
 }
@@ -410,7 +425,7 @@ fn worker_loop(sh: &Shared) {
                 drop(s);
                 // Dispatch frees queue space: wake blocked submitters.
                 sh.space.notify_all();
-                let outcome = sh.session.run(&job.spec);
+                let outcome = sh.session.run_with_trace_ring(&job.spec, sh.cfg.trace_ring_chunks);
                 let mut s2 = sh.state.lock().unwrap();
                 s2.free_slots += job.slots;
                 let seq = s2.next_seq;

@@ -402,6 +402,20 @@ impl Machine {
         self.mem.take_trace()
     }
 
+    /// Stream this machine's shared-memory trace into `w` instead of
+    /// materializing it: sealed chunks are consumed concurrently by the
+    /// replay engine, bounded by the ring budget the writer was created
+    /// with ([`crate::mem::TraceStream::channel`]).
+    pub fn attach_trace_writer(&mut self, w: crate::mem::TraceWriter) {
+        self.mem.attach_trace_writer(w);
+    }
+
+    /// Finish and detach the streaming trace sink (marks the stream
+    /// complete; the replay merge can then drain past this core).
+    pub fn finish_trace(&mut self) {
+        self.mem.finish_trace();
+    }
+
     /// Which core of the simulated system this machine models (0 for
     /// single-core runs).
     pub fn core_id(&self) -> usize {

@@ -25,17 +25,23 @@
 //!   batches per block and `spz-rsort` work-sorts within a block, so their
 //!   counts match the 1-core *driver* run, not the serial loop.)
 //!
-//! After the workers join, the driver runs the **shared-memory replay**
-//! ([`crate::mem::shared::replay`]): each core recorded its LLC-level access
-//! trace during execution, and the deterministic replay prices the shared
-//! LLC (queueing + MESI-lite coherence) and the multi-channel DRAM back end,
-//! folding per-core stall cycles into the per-phase metrics. Everything
-//! stays bit-reproducible across host thread schedules, and at 1 core the
-//! replay is an exact no-op on the cycle counts.
+//! The **shared-memory replay** ([`crate::mem::shared`]) runs *concurrently*
+//! with the workers: each core publishes its LLC-level access trace into a
+//! bounded per-core chunk ring ([`crate::mem::TraceStream`]) as it executes,
+//! and the deterministic replay engine consumes the streams in canonical
+//! merge order on its own scoped thread, pricing the shared LLC (queueing +
+//! MESI-lite coherence) and the multi-channel DRAM back end before folding
+//! per-core stall cycles into the per-phase metrics. Peak trace memory is
+//! bounded by the ring budget
+//! ([`crate::config::SharedMemConfig::trace_ring_chunks`]; overflow spills
+//! to disk), production and replay overlap in wall-clock time, and the
+//! result is bit-identical to materialize-then-replay — everything stays
+//! bit-reproducible across host thread schedules, and at 1 core the replay
+//! is an exact no-op on the cycle counts.
 
 use crate::config::SystemConfig;
 use crate::matrix::Csr;
-use crate::mem::{shared, TraceBuf, TraceEvent, TraceKind};
+use crate::mem::{shared, TraceBuf, TraceEvent, TraceKind, TraceStream};
 use crate::sim::machine::NUM_PHASES;
 use crate::sim::{Machine, MulticoreMetrics};
 use crate::spgemm::{CsrAddrs, SpGemm};
@@ -1502,76 +1508,93 @@ where
 
     let results: Mutex<Vec<Option<Csr>>> = Mutex::new(vec![None; blocks.len()]);
     let mut per_core = Vec::with_capacity(cores);
-    let mut traces: Vec<TraceBuf> = Vec::with_capacity(cores);
     let mut failures: Vec<String> = Vec::new();
 
-    std::thread::scope(|scope| {
+    // One bounded chunk ring per core: workers publish sealed trace chunks
+    // as they run and the replay engine (phase 2) consumes them
+    // *concurrently* on its own scoped thread, so peak trace memory is
+    // O(ring) and the replay overlaps kernel execution instead of waiting
+    // for the slowest core. A worker that errors or panics still finishes
+    // its stream on drop, so the engine always terminates; its outcome is
+    // then discarded by the failure check below.
+    let ring = sys.shared.trace_ring_chunks;
+    let (mut writers, streams): (Vec<_>, Vec<_>) =
+        (0..cores).map(|_| TraceStream::channel(ring)).unzip();
+
+    let replayed = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(cores);
         for (core, mine) in plan.iter().enumerate() {
             let machine = base.fork_core(core);
+            let writer = writers.remove(0);
             let blocks = &blocks;
             let block_est = &block_est;
             let block_off = &block_off;
             let results = &results;
             let make_impl = &make_impl;
             let kernels = &kernels;
-            handles.push(scope.spawn(
-                move || -> Result<(crate::sim::RunMetrics, TraceBuf)> {
-                    let mut machine = machine;
-                    machine.enable_trace();
-                    let mut im = make_impl()?;
-                    // ws-adapt's swapped kernels, built lazily per worker
-                    // (the spz engines are `&mut`-stateful, so cores cannot
-                    // share instances).
-                    let mut alts: [Option<Box<dyn SpGemm>>; 3] = [None, None, None];
-                    for &bi in mine {
-                        let (lo, hi) = blocks[bi];
-                        machine.bind_output_block(lo, block_off[bi], block_est[bi]);
-                        let slab = row_slab(a, lo, hi);
-                        let run_im = match kernels.get(bi).copied().unwrap_or(BlockKernel::Job) {
-                            BlockKernel::Job => &mut im,
-                            BlockKernel::SclArray => alts[0].get_or_insert_with(|| {
-                                Box::new(crate::spgemm::scl_array::SclArray)
-                            }),
-                            BlockKernel::SclHash => alts[1].get_or_insert_with(|| {
-                                Box::new(crate::spgemm::scl_hash::SclHash)
-                            }),
-                            BlockKernel::Spz => alts[2].get_or_insert_with(|| {
-                                Box::new(crate::spgemm::spz::Spz::native())
-                            }),
-                        };
-                        let c = run_im
-                            .multiply(&mut machine, &slab, b)
-                            .with_context(|| format!("rows {lo}..{hi} on core {core}"))?;
-                        results.lock().unwrap()[bi] = Some(c);
-                    }
-                    let trace = machine.take_trace();
-                    Ok((machine.metrics(), trace))
-                },
-            ));
+            handles.push(scope.spawn(move || -> Result<crate::sim::RunMetrics> {
+                let mut machine = machine;
+                machine.attach_trace_writer(writer);
+                let mut im = make_impl()?;
+                // ws-adapt's swapped kernels, built lazily per worker
+                // (the spz engines are `&mut`-stateful, so cores cannot
+                // share instances).
+                let mut alts: [Option<Box<dyn SpGemm>>; 3] = [None, None, None];
+                for &bi in mine {
+                    let (lo, hi) = blocks[bi];
+                    machine.bind_output_block(lo, block_off[bi], block_est[bi]);
+                    let slab = row_slab(a, lo, hi);
+                    let run_im = match kernels.get(bi).copied().unwrap_or(BlockKernel::Job) {
+                        BlockKernel::Job => &mut im,
+                        BlockKernel::SclArray => alts[0].get_or_insert_with(|| {
+                            Box::new(crate::spgemm::scl_array::SclArray)
+                        }),
+                        BlockKernel::SclHash => alts[1].get_or_insert_with(|| {
+                            Box::new(crate::spgemm::scl_hash::SclHash)
+                        }),
+                        BlockKernel::Spz => alts[2].get_or_insert_with(|| {
+                            Box::new(crate::spgemm::spz::Spz::native())
+                        }),
+                    };
+                    let c = run_im
+                        .multiply(&mut machine, &slab, b)
+                        .with_context(|| format!("rows {lo}..{hi} on core {core}"))?;
+                    results.lock().unwrap()[bi] = Some(c);
+                }
+                machine.finish_trace();
+                Ok(machine.metrics())
+            }));
         }
+        // Phase 2, pipelined: the deterministic replay engine drains the
+        // live streams in canonical merge order, pricing the shared LLC
+        // (queueing + MESI-lite coherence) and the banked DRAM channels and
+        // iterating until the demotion-derived corrections reach a fixed
+        // point. Bit-identical to replaying materialized traces after the
+        // join (the streams carry the same events in the same order), so at
+        // 1 core every replay-derived cost is still exactly zero and the
+        // differential tests keep pinning the seed model.
+        let replay = scope.spawn(|| {
+            shared::ReplayEngine::from_source(
+                &sys.mem,
+                &sys.shared,
+                shared::TraceSource::Streams(&streams),
+            )
+            .run()
+        });
         for (core, h) in handles.into_iter().enumerate() {
             match h.join() {
-                Ok(Ok((m, t))) => {
-                    per_core.push(m);
-                    traces.push(t);
-                }
+                Ok(Ok(m)) => per_core.push(m),
                 Ok(Err(e)) => failures.push(format!("core {core}: {e:#}")),
                 Err(_) => failures.push(format!("core {core}: worker panicked")),
             }
         }
+        replay.join()
     });
     ensure!(failures.is_empty(), "parallel SpGEMM failed: {failures:?}");
-
-    // Phase 2: the deterministic shared-memory replay engine. The merged
-    // per-core traces price the shared LLC (queueing + MESI-lite coherence)
-    // and the banked DRAM channels, iterating until the demotion-derived
-    // corrections reach a fixed point; the resulting per-core stalls fold
-    // into the same per-phase buckets the accesses charged in phase 1. At 1
-    // core every replay-derived cost is exactly zero, so this stage is an
-    // identity on the seed model's numbers (the differential tests pin
-    // that).
-    let outcome = shared::ReplayEngine::new(&sys.mem, &sys.shared, &traces).run();
+    let outcome = match replayed {
+        Ok(o) => o,
+        Err(_) => anyhow::bail!("shared-memory replay engine panicked"),
+    };
     for (c, m) in per_core.iter_mut().enumerate() {
         m.shared = outcome.per_core[c];
         let stalls = &outcome.per_core_phase_stalls[c];

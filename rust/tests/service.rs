@@ -414,3 +414,32 @@ fn admission_validates_specs_and_backpressure_parses() {
     assert_eq!("block".parse::<Backpressure>().unwrap(), Backpressure::Block);
     assert!("drop".parse::<Backpressure>().is_err());
 }
+
+/// The service's per-job trace-ring budget is a pure footprint knob: a pool
+/// forcing every job onto a 2-chunk ring (spilling overflow to disk) returns
+/// results byte-identical (stable JSON) to an unconstrained direct run. A
+/// 1-chunk ring is rejected at service start, mirroring
+/// `SharedMemConfig::validate`.
+#[test]
+fn service_trace_ring_budget_is_bit_identical_and_validated() {
+    let err = SimService::start(
+        Session::new(),
+        SimServiceConfig { trace_ring_chunks: 1, ..SimServiceConfig::default() },
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("trace_ring_chunks"), "{err}");
+
+    let svc = SimService::start(
+        Session::new(),
+        SimServiceConfig {
+            workers: 2,
+            trace_ring_chunks: 2,
+            ..SimServiceConfig::default()
+        },
+    )
+    .unwrap();
+    let spec = JobSpec::new(ImplId::Spz, tiny("ring", 7)).with_cores(4);
+    let got = svc.submit("t0", spec.clone()).unwrap().wait().unwrap().to_json_stable();
+    let expected = Session::new().run(&spec).unwrap().to_json_stable();
+    assert_eq!(got, expected, "ring-budgeted service run diverged from direct run");
+}
