@@ -105,9 +105,11 @@ fn metrics_json(m: &RunMetrics) -> String {
 /// row-buffer fields (`replay_iters` .. `row_extra_cycles`) extend the
 /// PR 3 schema after `stall_cycles`, the NUMA `numa` block (remote
 /// fills / forwards / hop-priced extra cycles — structurally zero at one
-/// socket) extends it again after `row_extra_cycles`, and the streaming
+/// socket) extends it again after `row_extra_cycles`, the streaming
 /// trace counters (`trace_bytes_total` .. `spilled_chunks`) extend it once
-/// more after `numa`.
+/// more after `numa`, and the compulsory-traffic oracle triple
+/// (`achieved_dram_lines` / `oracle_dram_lines` / `oracle_ratio`) extends
+/// it again after the trace counters.
 fn shared_json(s: &SharedStats) -> String {
     format!(
         "{{\"llc_accesses\":{},\"llc_hits\":{},\"llc_misses\":{},\"writeback_installs\":{},\
@@ -118,7 +120,8 @@ fn shared_json(s: &SharedStats) -> String {
          \"replay_iters\":{},\"replay_residual\":{},\"row_hits\":{},\"row_misses\":{},\
          \"row_conflicts\":{},\"row_extra_cycles\":{},\
          \"numa\":{{\"remote_fills\":{},\"remote_forwards\":{},\"remote_extra_cycles\":{}}},\
-         \"trace_bytes_total\":{},\"trace_peak_resident_chunks\":{},\"spilled_chunks\":{}}}",
+         \"trace_bytes_total\":{},\"trace_peak_resident_chunks\":{},\"spilled_chunks\":{},\
+         \"achieved_dram_lines\":{},\"oracle_dram_lines\":{},\"oracle_ratio\":{}}}",
         s.llc_accesses,
         s.llc_hits,
         s.llc_misses,
@@ -147,7 +150,10 @@ fn shared_json(s: &SharedStats) -> String {
         num(s.remote_extra_cycles),
         s.trace_bytes_total,
         s.trace_peak_resident_chunks,
-        s.spilled_chunks
+        s.spilled_chunks,
+        s.achieved_dram_lines,
+        s.oracle_dram_lines,
+        num(s.oracle_ratio())
     )
 }
 

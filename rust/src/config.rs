@@ -16,6 +16,43 @@ pub const DRAM_BW_CYCLES: f64 = 6.0;
 /// requesting core's socket id in 4 packed bits (see [`crate::mem::trace`]).
 pub const MAX_SOCKETS: usize = 16;
 
+/// DRAM page-placement policy: which socket's channel group a line's page
+/// is served from (`spz ... --page-placement`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PagePlacement {
+    /// The historical blind interleave: line `l` goes to channel
+    /// `l % dram_channels` regardless of who touches it, so at more than
+    /// one socket a page's lines are striped across *all* sockets and
+    /// every core pays remote hops for most of its traffic — the model
+    /// `ws-numa` had to fight rather than cooperate with.
+    Interleave,
+    /// First-touch (the OS default on real NUMA parts): a 4KB page's home
+    /// is the socket of the core that first demands any of its lines (in
+    /// deterministic canonical merge order), and the page's lines
+    /// interleave over that socket's channel group only. At one socket
+    /// this degenerates to exactly the blind interleave bit for bit.
+    FirstTouch,
+}
+
+impl PagePlacement {
+    /// CLI/debug name (`interleave` / `first-touch`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PagePlacement::Interleave => "interleave",
+            PagePlacement::FirstTouch => "first-touch",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<PagePlacement> {
+        match s {
+            "interleave" => Some(PagePlacement::Interleave),
+            "first-touch" | "firsttouch" | "first_touch" => Some(PagePlacement::FirstTouch),
+            _ => None,
+        }
+    }
+}
+
 /// One cache level's geometry and hit latency (Table II).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CacheConfig {
@@ -163,6 +200,11 @@ pub struct SharedMemConfig {
     /// whose invalidations cross the interconnect, or a shared-LLC hit
     /// served by a remote socket's slice. Multiplied by the hop distance.
     pub remote_coherence_cycles: f64,
+    /// How DRAM pages map to socket channel groups (see
+    /// [`PagePlacement`]). Defaults to first-touch, which is structurally
+    /// identical to the blind interleave at one socket, so every 1-socket
+    /// result is unchanged bit for bit.
+    pub page_placement: PagePlacement,
 }
 
 impl Default for SharedMemConfig {
@@ -187,6 +229,7 @@ impl Default for SharedMemConfig {
             sockets: 1,
             remote_transfer_cycles: 12.0,
             remote_coherence_cycles: 24.0,
+            page_placement: PagePlacement::FirstTouch,
         }
     }
 }

@@ -378,6 +378,15 @@ pub struct ScalingPoint {
     pub mixed_impl_blocks: usize,
     /// Blocks `ws-adapt` split in two for bandwidth/balance; 0 otherwise.
     pub split_blocks: usize,
+    /// DRAM lines the run actually moved (shared-LLC demand misses summed
+    /// over cores); 0 on the serial baseline (no replay ran).
+    pub achieved_dram_lines: u64,
+    /// Compulsory-traffic oracle lower bound for the run
+    /// ([`crate::mem::oracle::OracleBound`]); 0 on the serial baseline.
+    pub oracle_dram_lines: u64,
+    /// `achieved / oracle` — the model-honesty ratio, >= 1.0 wherever both
+    /// are stamped; 0.0 on the serial baseline.
+    pub oracle_ratio: f64,
 }
 
 /// Run the Figure 12 scaling study: `impl_id` on every dataset at each core
@@ -415,6 +424,9 @@ pub fn scaling_sweep(
             remote_extra_cycles: 0.0,
             mixed_impl_blocks: 0,
             split_blocks: 0,
+            achieved_dram_lines: 0,
+            oracle_dram_lines: 0,
+            oracle_ratio: 0.0,
         });
         for &c in cores.iter().filter(|&&c| c > 1) {
             for &sched in scheds {
@@ -442,6 +454,9 @@ pub fn scaling_sweep(
                     remote_extra_cycles: sh.remote_extra_cycles,
                     mixed_impl_blocks: dec.map(|d| d.swapped_blocks).unwrap_or(0),
                     split_blocks: dec.map(|d| d.split_blocks).unwrap_or(0),
+                    achieved_dram_lines: sh.achieved_dram_lines,
+                    oracle_dram_lines: sh.oracle_dram_lines,
+                    oracle_ratio: sh.oracle_ratio(),
                 });
             }
         }
@@ -470,7 +485,9 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
          llc-hit/coh/dram-q/numa-cyc from the shared-memory replay at the \
          largest core count — numa-cyc is 0 unless --sockets >= 2; \
          mixed/split are ws-adapt's kernel swaps and block splits, 0 under \
-         every fixed scheduler)"
+         every fixed scheduler; dram-lines vs oracle is achieved DRAM \
+         traffic against the compulsory-traffic lower bound, ratio >= 1.0 \
+         by construction)"
     );
     let _ = write!(s, "{:<10} {:<14}", "Matrix", "sched");
     for c in &cores {
@@ -479,8 +496,9 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
     }
     let _ = writeln!(
         s,
-        " {:>10} {:>8} {:>8} {:>10} {:>10} {:>6} {:>6}",
-        "imbalance", "llc-hit", "coh", "dram-q", "numa-cyc", "mixed", "split"
+        " {:>10} {:>8} {:>8} {:>10} {:>10} {:>6} {:>6} {:>11} {:>11} {:>6}",
+        "imbalance", "llc-hit", "coh", "dram-q", "numa-cyc", "mixed", "split",
+        "dram-lines", "oracle", "ratio"
     );
     let mut datasets: Vec<&str> = Vec::new();
     for p in points {
@@ -520,20 +538,25 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
                 Some(p) => {
                     let _ = writeln!(
                         s,
-                        " {worst_imb:>9.2}x {:>7.1}% {:>8} {:>10.0} {:>10.0} {:>6} {:>6}",
+                        " {worst_imb:>9.2}x {:>7.1}% {:>8} {:>10.0} {:>10.0} {:>6} {:>6} \
+                         {:>11} {:>11} {:>6.2}",
                         100.0 * p.llc_hit_rate,
                         p.coherence_events,
                         p.dram_queue_cycles,
                         p.remote_extra_cycles,
                         p.mixed_impl_blocks,
-                        p.split_blocks
+                        p.split_blocks,
+                        p.achieved_dram_lines,
+                        p.oracle_dram_lines,
+                        p.oracle_ratio
                     );
                 }
                 None => {
                     let _ = writeln!(
                         s,
-                        " {worst_imb:>9.2}x {:>8} {:>8} {:>10} {:>10} {:>6} {:>6}",
-                        "-", "-", "-", "-", "-", "-"
+                        " {worst_imb:>9.2}x {:>8} {:>8} {:>10} {:>10} {:>6} {:>6} \
+                         {:>11} {:>11} {:>6}",
+                        "-", "-", "-", "-", "-", "-", "-", "-", "-"
                     );
                 }
             }
@@ -544,14 +567,16 @@ pub fn fig12(points: &[ScalingPoint]) -> String {
 
 /// TSV series for the scaling study (`fig12.tsv`). Columns only ever get
 /// appended (the NUMA pair landed after `dram_queue_cycles`; the ws-adapt
-/// decision pair after `remote_extra_cycles`). Row ordering derives from
-/// `Scheduler::ALL` — the same source as the text table — so a new
-/// scheduler cannot desynchronize the two renderings.
+/// decision pair after `remote_extra_cycles`; the oracle triple after
+/// `split_blocks`). Row ordering derives from `Scheduler::ALL` — the same
+/// source as the text table — so a new scheduler cannot desynchronize the
+/// two renderings.
 pub fn fig12_tsv(points: &[ScalingPoint]) -> String {
     let mut t = String::from(
         "matrix\timpl\tsched\tcores\tcycles\tspeedup\timbalance\tllc_hit_rate\t\
          coherence_events\tdram_queue_cycles\tremote_fills\tremote_extra_cycles\t\
-         mixed_impl_blocks\tsplit_blocks\n",
+         mixed_impl_blocks\tsplit_blocks\tachieved_dram_lines\toracle_dram_lines\t\
+         oracle_ratio\n",
     );
     let mut datasets: Vec<&str> = Vec::new();
     for p in points {
@@ -563,7 +588,7 @@ pub fn fig12_tsv(points: &[ScalingPoint]) -> String {
         let mut emit = |p: &ScalingPoint| {
             let _ = writeln!(
                 t,
-                "{}\t{}\t{}\t{}\t{:.1}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.1}\t{}\t{:.1}\t{}\t{}",
+                "{}\t{}\t{}\t{}\t{:.1}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.1}\t{}\t{:.1}\t{}\t{}\t{}\t{}\t{:.6}",
                 p.dataset,
                 p.impl_id,
                 p.scheduler.map(|s| s.name()).unwrap_or("serial"),
@@ -577,7 +602,10 @@ pub fn fig12_tsv(points: &[ScalingPoint]) -> String {
                 p.remote_fills,
                 p.remote_extra_cycles,
                 p.mixed_impl_blocks,
-                p.split_blocks
+                p.split_blocks,
+                p.achieved_dram_lines,
+                p.oracle_dram_lines,
+                p.oracle_ratio
             );
         };
         for p in points.iter().filter(|p| p.dataset == d && p.scheduler.is_none()) {
@@ -688,6 +716,15 @@ pub fn mem_report(r: &crate::api::JobResult) -> String {
         if tot.trace_peak_resident_chunks == 1 { "" } else { "s" },
         tot.trace_peak_resident_chunks * 64,
         tot.spilled_chunks
+    );
+    let _ = writeln!(
+        s,
+        "oracle    | achieved {} DRAM lines vs compulsory-traffic bound {} \
+         (ratio {:.2}x; >= 1.0 certifies the model moves at least the \
+         unavoidable traffic)",
+        tot.achieved_dram_lines,
+        tot.oracle_dram_lines,
+        tot.oracle_ratio()
     );
     if let Some(d) = &r.sched_decisions {
         let _ = writeln!(

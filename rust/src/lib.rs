@@ -63,7 +63,15 @@
 //! `(time, core, program-order)` interleaving — overflow chunks spill to a
 //! temp file and are demand-loaded back, so peak trace memory is bounded
 //! (`SharedMemConfig::trace_ring_chunks`) and per-core results stay
-//! bit-reproducible across host thread schedules *and* ring sizes. The `spz` CLI (`src/main.rs`) is a thin argv adapter
+//! bit-reproducible across host thread schedules *and* ring sizes. DRAM
+//! pages are placed NUMA-honestly: first-touch homes each 4KB page on the
+//! first demanding core's socket ([`config::PagePlacement`], identical to
+//! the historical blind interleave at one socket), and every multi-core run
+//! is certified against a compulsory-DRAM-traffic *oracle*
+//! ([`mem::oracle::OracleBound`]) — the achieved-vs-bound ratio rides in
+//! [`mem::SharedStats`], the stable JSON, fig12, and `spz mem`, and
+//! `achieved >= oracle` is a gating CI invariant on every registry
+//! dataset. The `spz` CLI (`src/main.rs`) is a thin argv adapter
 //! over this API, and [`coordinator`] renders [`api::SuiteRun`]s into the
 //! paper's tables and figures (including the `fig12` multi-core scaling
 //! study and the `spz mem` shared-memory report).

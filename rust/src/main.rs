@@ -81,31 +81,32 @@ fn parse_argv(args: &[String]) -> Result<Args> {
 fn allowed_opts(cmd: &str) -> &'static [&'static str] {
     const SUITE: &[&str] = &[
         "scale", "threads", "datasets", "engine", "artifacts", "mtx-dir", "out-dir", "cores",
-        "sched", "sockets", "replay-shards", "trace-ring-chunks",
+        "sched", "sockets", "replay-shards", "trace-ring-chunks", "page-placement",
     ];
     match cmd {
         // Only fig8/all honor --impls; the other figures fix their own
         // implementation set, so accepting it would silently discard it.
         "fig8" | "all" => &[
             "scale", "threads", "datasets", "impls", "engine", "artifacts", "mtx-dir", "out-dir",
-            "cores", "sched", "sockets", "replay-shards", "trace-ring-chunks",
+            "cores", "sched", "sockets", "replay-shards", "trace-ring-chunks", "page-placement",
         ],
         "table3" | "fig9" | "fig10" | "fig11" => SUITE,
         // fig12 sweeps a *list* of core counts and, by default, every
         // scheduler; --sched narrows it to a comma list.
         "fig12" => &[
             "scale", "datasets", "impl", "cores", "sched", "engine", "artifacts", "mtx-dir",
-            "out-dir", "sockets", "replay-shards", "trace-ring-chunks",
+            "out-dir", "sockets", "replay-shards", "trace-ring-chunks", "page-placement",
         ],
         "run" => &[
             "dataset", "impl", "scale", "engine", "artifacts", "mtx-dir", "cores", "sched",
-            "sockets", "replay-shards", "trace-ring-chunks",
+            "sockets", "replay-shards", "trace-ring-chunks", "page-placement",
         ],
         // mem runs one multi-core job and renders the shared-memory report
         // (per-core LLC/coherence/queueing + DRAM channel occupancy).
         "mem" => &[
             "dataset", "impl", "scale", "engine", "artifacts", "mtx-dir", "cores", "sched",
-            "channels", "sockets", "replay-shards", "trace-ring-chunks", "out-dir",
+            "channels", "sockets", "replay-shards", "trace-ring-chunks", "page-placement",
+            "out-dir",
         ],
         // ablate sweeps are engine-independent (hardwired NativeEngine).
         "ablate" => &["dataset", "scale", "mtx-dir", "out-dir"],
@@ -116,7 +117,7 @@ fn allowed_opts(cmd: &str) -> &'static [&'static str] {
         "serve-demo" => &[
             "tenants", "jobs", "workers", "depth", "backpressure", "weights", "dataset", "impl",
             "scale", "cores", "sched", "engine", "artifacts", "mtx-dir", "out-dir",
-            "replay-shards", "trace-ring-chunks",
+            "replay-shards", "trace-ring-chunks", "page-placement",
         ],
         _ => &[],
     }
@@ -150,7 +151,9 @@ fn print_help() {
          \x20   --replay-shards N (parallel deterministic replay; power of two, results\n\
          \x20   bit-identical at any value) --trace-ring-chunks N (resident 64KB trace\n\
          \x20   chunks per core, 0=unbounded, >=2 spills overflow to disk; bit-identical\n\
-         \x20   at any ring) (fig8 and all also take --impls a,b)\n\
+         \x20   at any ring) --page-placement first-touch|interleave (NUMA page homes:\n\
+         \x20   first toucher's socket vs blind line striping; identical at 1 socket)\n\
+         \x20   (fig8 and all also take --impls a,b)\n\
          run:    --dataset NAME [--impl NAME] [--scale F] [--engine native|xla]\n\
          \x20       [--mtx-dir DIR] [--artifacts DIR] [--cores N] [--sched S] [--sockets N]\n\
          \x20       [--replay-shards N] [--trace-ring-chunks N] [--verify] [--json]\n\
@@ -207,7 +210,17 @@ fn session_config(a: &Args) -> Result<SessionConfig> {
     if let Some(s) = a.opts.get("trace-ring-chunks") {
         cfg.sys.shared.trace_ring_chunks = s.parse().context("--trace-ring-chunks")?;
     }
-    if ["sockets", "channels", "replay-shards", "trace-ring-chunks"]
+    // --page-placement picks the DRAM page-to-socket policy; first-touch
+    // (the default) is bit-identical to the blind interleave at 1 socket.
+    if let Some(s) = a.opts.get("page-placement") {
+        cfg.sys.shared.page_placement =
+            sparsezipper::config::PagePlacement::parse(s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--page-placement must be `first-touch` or `interleave`, got `{s}`"
+                )
+            })?;
+    }
+    if ["sockets", "channels", "replay-shards", "trace-ring-chunks", "page-placement"]
         .iter()
         .any(|k| a.opts.contains_key(*k))
     {
@@ -929,6 +942,42 @@ mod tests {
         // gen/table4 never replay, so they do not take the knob.
         assert!(parse_argv(&v(&["gen", "--trace-ring-chunks", "4"])).is_err());
         assert!(parse_argv(&v(&["table4", "--trace-ring-chunks", "4"])).is_err());
+    }
+
+    #[test]
+    fn page_placement_option_parses_and_validates() {
+        // --page-placement rides the same session_config path as the other
+        // replay knobs: accepted wherever the replay runs, both policy names
+        // parsed, bad names a clean CLI error.
+        use sparsezipper::config::PagePlacement;
+        for cmd in [
+            vec!["run", "--page-placement", "interleave"],
+            vec!["mem", "--dataset", "p2p", "--page-placement", "interleave"],
+            vec!["fig12", "--page-placement", "interleave"],
+            vec!["fig8", "--page-placement", "interleave"],
+            vec!["serve-demo", "--page-placement", "interleave"],
+        ] {
+            let a = parse_argv(&v(&cmd)).unwrap();
+            let cfg = session_config(&a).unwrap();
+            assert_eq!(cfg.sys.shared.page_placement, PagePlacement::Interleave, "{cmd:?}");
+        }
+        // First-touch is the default and also spells explicitly.
+        let a = parse_argv(&v(&["run"])).unwrap();
+        assert_eq!(
+            session_config(&a).unwrap().sys.shared.page_placement,
+            PagePlacement::FirstTouch
+        );
+        let a = parse_argv(&v(&["run", "--page-placement", "first-touch"])).unwrap();
+        assert_eq!(
+            session_config(&a).unwrap().sys.shared.page_placement,
+            PagePlacement::FirstTouch
+        );
+        let a = parse_argv(&v(&["run", "--page-placement", "random"])).unwrap();
+        let e = format!("{:#}", session_config(&a).unwrap_err());
+        assert!(e.contains("page-placement"), "{e}");
+        // gen/table4 never replay, so they do not take the knob.
+        assert!(parse_argv(&v(&["gen", "--page-placement", "interleave"])).is_err());
+        assert!(parse_argv(&v(&["table4", "--page-placement", "interleave"])).is_err());
     }
 
     #[test]

@@ -9,10 +9,12 @@
 pub mod alloc;
 pub mod cache;
 pub mod hierarchy;
+pub mod oracle;
 pub mod shared;
 pub mod trace;
 
 pub use alloc::SimAlloc;
+pub use oracle::OracleBound;
 pub use cache::Cache;
 pub use hierarchy::{AccessKind, Hierarchy, MemStats};
 pub use shared::{replay, ReplayEngine, ReplayOutcome, SharedStats, TraceSource};

@@ -1,0 +1,292 @@
+//! Compulsory-DRAM-traffic oracle: a deterministic lower bound on the line
+//! traffic any execution of `C = A * B` must move between DRAM and the
+//! cache hierarchy, per `(matrix, cache budget)`.
+//!
+//! The bound is the yardstick the fig12 scaling study and `spz mem` report
+//! every scheduler against (`achieved_dram_lines / oracle_dram_lines`), in
+//! the spirit of spada-sim's `oracle_storage_traffic_model` and SpArch's
+//! traffic-bound analysis: scheduler quality measured against an absolute
+//! floor instead of only against other schedulers. "Achieved" is the
+//! replay's total shared-LLC demand-miss count — every miss fetches exactly
+//! one line from DRAM — so bound and measurement are in the same unit
+//! (64B lines) by construction.
+//!
+//! # Soundness
+//!
+//! Two elementary arguments, both independent of the replacement policy:
+//!
+//! 1. **Cold traffic.** Every line the workload touches must be fetched at
+//!    least once (the first access misses every level). The simulated
+//!    allocator line-aligns every region ([`crate::mem::alloc::SimAlloc`]
+//!    aligns to 64B or more), so disjoint byte intervals totalling `T`
+//!    bytes within a region occupy at least `ceil(T / 64)` distinct lines,
+//!    and distinct regions never share a line. Gustavson's algorithm
+//!    streams all of A, reads exactly the B rows named by A's column
+//!    indices, and writes every output element once.
+//!
+//! 2. **Capacity-forced re-reads.** While producing output row `i`, the
+//!    kernel touches the `|S_i|` distinct B lines of the rows that row
+//!    `i` of A names. If `|S_i|` exceeds the cache budget (shared LLC at
+//!    the active slicing plus every core's private L1+L2 — the hierarchy
+//!    is non-inclusive), then at least `|S_i| - budget` of those touches
+//!    miss during that row no matter what the replacement policy kept:
+//!    at most `budget` lines can be resident when the row starts. Rows
+//!    on one core occupy disjoint time intervals, so their deficits sum;
+//!    across cores a single DRAM fetch can satisfy the deficit of up to
+//!    `cores` concurrently-processed rows (the LLC is shared), so the
+//!    summed deficit is divided by the core count. The B traffic bound is
+//!    then `max(cold_B, reuse_B(budget) / cores)` — both are lower bounds
+//!    on the same miss population, so their max is too.
+//!
+//! Degenerate cases come out in closed form: when the budget covers the
+//! largest per-row working set the reuse term vanishes and the bound is
+//! exactly the cold footprint (cache >= footprint => compulsory misses
+//! only), and a bigger budget can never raise any term, so the bound is
+//! monotone non-increasing in the budget (pinned by `tests/oracle.rs`).
+
+use crate::config::{MemConfig, SharedMemConfig, SystemConfig};
+use crate::matrix::Csr;
+
+/// Cache-line size the whole simulator is built around (Table II).
+const LINE: u64 = 64;
+
+fn lines(bytes: u64) -> u64 {
+    bytes.div_ceil(LINE)
+}
+
+/// The per-matrix-pair oracle: cold line counts for the A stream, the
+/// needed B rows, and the C output, plus the per-output-row B working-set
+/// sizes the budget-dependent reuse term is computed from. Construction is
+/// `O(nnz(A) + nrows(B))`; evaluating the bound at a budget is
+/// `O(nrows(A))`.
+#[derive(Clone, Debug)]
+pub struct OracleBound {
+    /// Compulsory lines for streaming all of A (indptr + indices + data).
+    pub cold_a_lines: u64,
+    /// Compulsory lines for the B rows A actually names (union of their
+    /// index/data byte ranges plus the touched indptr entries).
+    pub cold_b_lines: u64,
+    /// Compulsory lines for writing C (indptr entries plus `c_nnz`
+    /// index/data elements).
+    pub cold_c_lines: u64,
+    /// Per-output-row distinct-B-line working sets `|S_i|`, the input to
+    /// the capacity-forced reuse term.
+    row_b_lines: Vec<u64>,
+}
+
+impl OracleBound {
+    /// Build the oracle for `C = A * B` where the finished product has
+    /// `c_nnz` nonzeros. Deterministic: depends only on the two sparsity
+    /// patterns and the output size.
+    pub fn new(a: &Csr, b: &Csr, c_nnz: u64) -> OracleBound {
+        // A is streamed in full: the whole indptr walk plus every
+        // index/data element exactly once (4B elements, 8B indptr entries,
+        // matching `CsrAddrs::csr_sizes`).
+        let a_nnz = a.nnz() as u64;
+        let cold_a_lines =
+            lines((a.nrows as u64 + 1) * 8) + 2 * lines(a_nnz * 4);
+
+        // Needed B rows: every distinct column index of A.
+        let mut needed = vec![false; b.nrows];
+        for &k in &a.indices {
+            if (k as usize) < b.nrows {
+                needed[k as usize] = true;
+            }
+        }
+
+        // Union of the needed rows' line footprints, swept in ascending
+        // row order so overlapping/adjacent line intervals merge exactly.
+        // The index and data regions have identical element offsets, so
+        // one sweep covers both (x2); the indptr region is swept
+        // separately (every needed row reads entries k and k+1).
+        let mut elem_lines = 0u64;
+        let mut elem_last: Option<u64> = None;
+        let mut ptr_lines = 0u64;
+        let mut ptr_last: Option<u64> = None;
+        for (k, &need) in needed.iter().enumerate() {
+            if !need {
+                continue;
+            }
+            let (s, e) = (b.indptr[k] as u64, b.indptr[k + 1] as u64);
+            if e > s {
+                sweep(&mut elem_lines, &mut elem_last, s * 4, e * 4);
+            }
+            sweep(&mut ptr_lines, &mut ptr_last, k as u64 * 8, (k as u64 + 2) * 8);
+        }
+        let cold_b_lines = 2 * elem_lines + ptr_lines;
+
+        // C output: the row-pointer walk plus every produced element
+        // written once into the index and data regions.
+        let cold_c_lines = lines(a.nrows as u64 * 8) + 2 * lines(c_nnz * 4);
+
+        // Per-output-row B working sets. Rows of one A row are distinct
+        // (valid CSR), so their B byte ranges are disjoint and the
+        // distinct-line count is at least ceil(total bytes / 64) per
+        // region.
+        let mut row_b_lines = Vec::with_capacity(a.nrows);
+        for i in 0..a.nrows {
+            let mut bytes = 0u64;
+            for &k in &a.indices[a.indptr[i]..a.indptr[i + 1]] {
+                if (k as usize) < b.nrows {
+                    bytes += b.row_len(k as usize) as u64 * 4;
+                }
+            }
+            row_b_lines.push(2 * lines(bytes));
+        }
+
+        OracleBound {
+            cold_a_lines,
+            cold_b_lines,
+            cold_c_lines,
+            row_b_lines,
+        }
+    }
+
+    /// Total compulsory (cold) lines — the bound at an infinite budget.
+    pub fn cold_lines(&self) -> u64 {
+        self.cold_a_lines + self.cold_b_lines + self.cold_c_lines
+    }
+
+    /// Capacity-forced B re-read lines at `budget_lines` of cache, before
+    /// the concurrency division: `sum_i max(0, |S_i| - budget)`.
+    pub fn reuse_b_lines(&self, budget_lines: u64) -> u64 {
+        self.row_b_lines
+            .iter()
+            .map(|&s| s.saturating_sub(budget_lines))
+            .sum()
+    }
+
+    /// The oracle: DRAM lines any `cores`-core execution under
+    /// `budget_lines` of total cache must move. Monotone non-increasing in
+    /// `budget_lines`; equals [`OracleBound::cold_lines`] whenever the
+    /// budget covers the largest per-row working set.
+    pub fn dram_lines(&self, budget_lines: u64, cores: usize) -> u64 {
+        let reuse = self
+            .reuse_b_lines(budget_lines)
+            .div_ceil(cores.max(1) as u64);
+        self.cold_a_lines + self.cold_c_lines + self.cold_b_lines.max(reuse)
+    }
+}
+
+/// Interval sweep over ascending, non-overlapping byte ranges `[s, e)`
+/// within one line-aligned region: counts each line at most once.
+fn sweep(count: &mut u64, last: &mut Option<u64>, s: u64, e: u64) {
+    debug_assert!(e > s);
+    let s_line = s / LINE;
+    let e_line = (e - 1) / LINE;
+    let from = match *last {
+        Some(l) if s_line <= l => l + 1,
+        _ => s_line,
+    };
+    if e_line >= from {
+        *count += e_line - from + 1;
+    }
+    *last = Some(last.map_or(e_line, |l| l.max(e_line)));
+}
+
+/// The cache budget (in 64B lines) a `cores`-core run of `sys` has to hold
+/// B rows in: the shared LLC at the active slicing policy
+/// ([`crate::mem::shared`] scales sliced LLCs with the core count) plus
+/// every core's private L1D and L2 — the hierarchy is non-inclusive, so
+/// private capacity shelters lines from LLC pressure too.
+pub fn budget_lines(sys: &SystemConfig, cores: usize) -> u64 {
+    budget_lines_for(&sys.mem, &sys.shared, cores)
+}
+
+/// [`budget_lines`] over the raw config pieces (test fixtures poke these
+/// directly).
+pub fn budget_lines_for(mem: &MemConfig, shared: &SharedMemConfig, cores: usize) -> u64 {
+    let llc = crate::mem::shared::scaled_llc_cfg(mem, shared, cores.max(1));
+    let private = (mem.l1d.size_bytes + mem.l2.size_bytes) as u64 / LINE;
+    llc.size_bytes as u64 / LINE + cores.max(1) as u64 * private
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    fn dense(n: usize) -> Csr {
+        let rows: Vec<(Vec<u32>, Vec<f32>)> = (0..n)
+            .map(|_| ((0..n as u32).collect(), vec![1.0; n]))
+            .collect();
+        Csr::from_rows(n, n, rows)
+    }
+
+    #[test]
+    fn dense_block_closed_form() {
+        let n = 64usize;
+        let a = dense(n);
+        let b = dense(n);
+        let c_nnz = (n * n) as u64;
+        let o = OracleBound::new(&a, &b, c_nnz);
+        let elem = lines((n * n) as u64 * 4);
+        assert_eq!(o.cold_a_lines, lines((n as u64 + 1) * 8) + 2 * elem);
+        // Every B row is needed: the whole element footprint plus the
+        // whole indptr walk.
+        assert_eq!(o.cold_b_lines, 2 * elem + lines((n as u64 + 1) * 8));
+        assert_eq!(o.cold_c_lines, lines(n as u64 * 8) + 2 * elem);
+        // Each output row touches all of B.
+        assert_eq!(o.reuse_b_lines(0), n as u64 * 2 * elem);
+        // Budget covering one full row's working set => cold only.
+        assert_eq!(o.dram_lines(2 * elem, 1), o.cold_lines());
+    }
+
+    #[test]
+    fn identity_b_has_no_reuse_pressure() {
+        let a = gen::erdos_renyi(128, 128, 512, 7);
+        let b = Csr::identity(128);
+        let o = OracleBound::new(&a, &b, a.nnz() as u64);
+        // Every per-row working set is at most a line or two of B.
+        let max_ws = o.row_b_lines.iter().copied().max().unwrap_or(0);
+        assert!(max_ws <= 2 * lines(128 * 4));
+        assert_eq!(o.reuse_b_lines(max_ws), 0);
+        assert_eq!(o.dram_lines(max_ws, 1), o.cold_lines());
+    }
+
+    #[test]
+    fn cache_exceeding_footprint_means_cold_only() {
+        let a = gen::erdos_renyi(200, 200, 1600, 3);
+        let b = gen::erdos_renyi(200, 200, 1600, 5);
+        let o = OracleBound::new(&a, &b, 4096);
+        let footprint = o.cold_lines();
+        assert_eq!(o.dram_lines(footprint, 4), o.cold_lines());
+        assert_eq!(o.dram_lines(u64::MAX, 1), o.cold_lines());
+    }
+
+    #[test]
+    fn bound_monotone_in_budget_and_cores() {
+        let a = gen::rmat(256, 256, 2048, 0.57, 0.19, 0.19, 11);
+        let b = gen::rmat(256, 256, 2048, 0.57, 0.19, 0.19, 13);
+        let o = OracleBound::new(&a, &b, 9000);
+        let mut prev = u64::MAX;
+        for budget in [0u64, 16, 64, 256, 1024, 4096, 1 << 20] {
+            let v = o.dram_lines(budget, 2);
+            assert!(v <= prev, "bound must not increase with budget");
+            assert!(v >= o.cold_lines(), "bound never drops below cold traffic");
+            prev = v;
+        }
+        // More cores can only relax (divide) the reuse term.
+        assert!(o.dram_lines(64, 8) <= o.dram_lines(64, 1));
+    }
+
+    #[test]
+    fn budget_counts_private_caches_and_slices() {
+        let sys = crate::SystemConfig::default();
+        let one = budget_lines(&sys, 1);
+        let four = budget_lines(&sys, 4);
+        assert!(four > one, "sliced LLC + private caches grow with cores");
+        let private = (sys.mem.l1d.size_bytes + sys.mem.l2.size_bytes) as u64 / 64;
+        assert_eq!(one, sys.mem.llc.size_bytes as u64 / 64 + private);
+    }
+
+    #[test]
+    fn empty_matrices_are_safe() {
+        let a = Csr::from_rows(2, 2, vec![(vec![], vec![]), (vec![], vec![])]);
+        let b = Csr::identity(2);
+        let o = OracleBound::new(&a, &b, 0);
+        assert_eq!(o.cold_b_lines, 0);
+        assert_eq!(o.reuse_b_lines(0), 0);
+        assert!(o.dram_lines(0, 1) >= o.cold_a_lines);
+    }
+}

@@ -220,6 +220,16 @@ pub struct SharedStats {
     /// Trace chunks this core spilled to disk (0 unless a ring budget
     /// forced eviction). Ring-dependent, zeroed in the stable JSON.
     pub spilled_chunks: u64,
+    /// DRAM lines this core actually moved: its shared-LLC demand misses
+    /// (every miss fetches exactly one line). Stamped by the parallel
+    /// driver so it can be compared against the oracle in the same unit;
+    /// zero for serial (non-replayed) runs like every other field here.
+    pub achieved_dram_lines: u64,
+    /// The compulsory-traffic oracle lower bound for the whole run
+    /// ([`crate::mem::oracle::OracleBound`] at the run's cache budget and
+    /// core count). A per-run fact stamped identically on every core and
+    /// aggregated with `max`, like `replay_iters`.
+    pub oracle_dram_lines: u64,
 }
 
 impl SharedStats {
@@ -254,6 +264,8 @@ impl SharedStats {
         self.trace_bytes_total += o.trace_bytes_total;
         self.trace_peak_resident_chunks += o.trace_peak_resident_chunks;
         self.spilled_chunks += o.spilled_chunks;
+        self.achieved_dram_lines += o.achieved_dram_lines;
+        self.oracle_dram_lines = self.oracle_dram_lines.max(o.oracle_dram_lines);
     }
 
     /// Shared-LLC demand hit rate.
@@ -268,6 +280,17 @@ impl SharedStats {
     /// Coherence protocol events this core initiated.
     pub fn coherence_events(&self) -> u64 {
         self.upgrades + self.dirty_forwards
+    }
+
+    /// Achieved DRAM traffic over the oracle lower bound (>= 1.0 whenever
+    /// both are stamped — the model-honesty invariant the CI oracle gate
+    /// enforces). 0.0 when no oracle was stamped (serial runs).
+    pub fn oracle_ratio(&self) -> f64 {
+        if self.oracle_dram_lines == 0 {
+            0.0
+        } else {
+            self.achieved_dram_lines as f64 / self.oracle_dram_lines as f64
+        }
     }
 
     /// Net replay-derived stall cycles (sharing refunds subtract).
@@ -615,7 +638,7 @@ impl OutcomeCursor {
 /// per-lookup way scan O(base ways)); odd core counts round up to the next
 /// power-of-two slicing via a second way bank. At 1 core both modes are
 /// exactly the shadow geometry.
-fn scaled_llc_cfg(
+pub(crate) fn scaled_llc_cfg(
     mem: &MemConfig,
     cfg: &SharedMemConfig,
     cores: usize,
@@ -908,6 +931,14 @@ impl<'a> ReplayEngine<'a> {
         let channels = cfg.dram_channels;
         let banks = cfg.dram_banks;
         let row_lines = cfg.row_buffer_lines as u64;
+        // First-touch page placement: lines of a 4KB page interleave over
+        // the *home* socket's channel group, the home being whichever
+        // socket demanded the page first in canonical merge order. The map
+        // is rebuilt per pass, which is deterministic (the demand order is
+        // pass-invariant) and exactly reproduces the blind interleave at
+        // one socket (home is always 0 and the group is every channel).
+        let group = (channels / cfg.sockets.max(1)).max(1);
+        let first_touch = cfg.page_placement == crate::config::PagePlacement::FirstTouch;
         let merge_walk = |next_outcome: &mut dyn FnMut(usize) -> EventOutcome| -> (
             Vec<SharedStats>,
             Vec<[f64; MAX_PHASES]>,
@@ -917,6 +948,7 @@ impl<'a> ReplayEngine<'a> {
             let mut channel_busy_cycles = vec![0.0f64; channels];
             let mut stats = vec![SharedStats::default(); cores];
             let mut phase_stalls = vec![[0.0f64; MAX_PHASES]; cores];
+            let mut page_home: HashMap<u64, u8> = HashMap::new();
             let mut pending = 0.0f64;
             let mut merge = CanonicalMerge::new(&self.source, sockets);
             while let Some((t, ci, e)) = merge.next() {
@@ -991,7 +1023,16 @@ impl<'a> ReplayEngine<'a> {
                         // branches below): within a channel, consecutive
                         // lines fill one bank's row for `row_buffer_lines`
                         // lines before rotating banks.
-                        let ch = (line % channels as u64) as usize;
+                        let (ch, home_sock) = if first_touch {
+                            // 64 lines of 64B = one 4KB page.
+                            let page = line >> 6;
+                            let home =
+                                *page_home.entry(page).or_insert(my_sock as u8) as usize;
+                            (home * group + (line % group as u64) as usize, home)
+                        } else {
+                            let ch = (line % channels as u64) as usize;
+                            (ch, cfg.socket_of_channel(ch))
+                        };
                         let in_chan = line / channels as u64;
                         let bk = ch * banks + ((in_chan / row_lines) % banks as u64) as usize;
                         let row = in_chan / (row_lines * banks as u64);
@@ -1000,7 +1041,7 @@ impl<'a> ReplayEngine<'a> {
                         // everywhere at one socket, so every charge below
                         // vanishes and the flat model is reproduced bit for
                         // bit.
-                        let home_hops = cfg.socket_distance(my_sock, cfg.socket_of_channel(ch));
+                        let home_hops = cfg.socket_distance(my_sock, home_sock);
 
                         // (4) Settle the shadow prediction against the
                         // shared truth.
@@ -1717,10 +1758,13 @@ mod tests {
 
     /// Two one-event traces on distinct sockets of a 2-socket, 4-channel
     /// config: lines are chosen so each core's line is either local or
-    /// remote to its socket's channel group.
+    /// remote to its socket's channel group. Pinned to the blind interleave
+    /// — these tests reason about the static `line % channels` homes;
+    /// first-touch has its own tests below.
     fn two_socket_cfg() -> SharedMemConfig {
         SharedMemConfig {
             sockets: 2,
+            page_placement: crate::config::PagePlacement::Interleave,
             ..SystemConfig::default().shared
         }
     }
@@ -1846,6 +1890,68 @@ mod tests {
             assert_eq!(s.remote_fills + s.remote_forwards, 0);
             assert_eq!(s.remote_extra_cycles, 0.0);
         }
+    }
+
+    #[test]
+    fn first_touch_homes_the_page_on_the_first_toucher() {
+        // Core 1 (socket 1) demands line 2 first — a line the blind
+        // interleave would home on socket 1's channel group anyway, but the
+        // *page* (lines 0..64) becomes socket 1's under first-touch. Core 0
+        // (socket 0) then reads line 0 of the same page: local under the
+        // interleave, remote under first-touch. The policies must disagree
+        // in exactly that way.
+        let c = sys();
+        let ft = SharedMemConfig {
+            sockets: 2,
+            ..SystemConfig::default().shared
+        };
+        assert_eq!(ft.page_placement, crate::config::PagePlacement::FirstTouch);
+        let il = SharedMemConfig {
+            page_placement: crate::config::PagePlacement::Interleave,
+            ..ft
+        };
+        let mk = || {
+            [
+                TraceBuf::from_events([(1_000_000.0, demand(0, false, false).with_socket(0))]),
+                TraceBuf::from_events([(0.0, demand(2, false, false).with_socket(1))]),
+            ]
+        };
+        let out_ft = replay(&c.mem, &ft, &mk());
+        assert_eq!(out_ft.per_core[1].remote_fills, 0, "first toucher is home");
+        assert_eq!(
+            out_ft.per_core[0].remote_fills, 1,
+            "the page was homed by the other socket's first touch"
+        );
+        let out_il = replay(&c.mem, &il, &mk());
+        assert_eq!(out_il.per_core[0].remote_fills, 0, "line 0 is ch 0, socket 0");
+        assert_eq!(out_il.per_core[1].remote_fills, 0, "line 2 is ch 2, socket 1");
+    }
+
+    #[test]
+    fn first_touch_is_the_interleave_bit_for_bit_at_one_socket() {
+        // One socket: the home is always socket 0 and the channel group is
+        // every channel, so the two policies must produce identical stats
+        // and identical per-channel occupancy on a mixed stream.
+        let c = sys();
+        let ft = SystemConfig::default().shared;
+        let il = SharedMemConfig {
+            page_placement: crate::config::PagePlacement::Interleave,
+            ..ft
+        };
+        let mk = || {
+            [
+                TraceBuf::from_events(
+                    (0..96u64).map(|i| (i as f64, demand(3 * i, i % 7 == 0, false))),
+                ),
+                TraceBuf::from_events(
+                    (0..96u64).map(|i| (i as f64 + 0.5, demand(5 * i, false, i % 11 == 0))),
+                ),
+            ]
+        };
+        let a = replay(&c.mem, &ft, &mk());
+        let b = replay(&c.mem, &il, &mk());
+        assert_eq!(a.per_core, b.per_core);
+        assert_eq!(a.channel_busy_cycles, b.channel_busy_cycles);
     }
 
     #[test]

@@ -618,8 +618,14 @@ impl<'a> Pilot<'a> {
     }
 
     /// Per-block fraction of the block's line footprint homed to each
-    /// socket (by the channel-group mapping) — what `ws-numa`'s candidate
-    /// claim keys block placement on.
+    /// socket under the blind `line % channels` interleave — what
+    /// `ws-numa`'s candidate claim keys block placement on when
+    /// [`crate::config::PagePlacement::Interleave`] is active. Under
+    /// first-touch the homes are schedule-made, so the claim loop in
+    /// [`assign_blocks_numa`] tracks them incrementally instead of using
+    /// this static table; `ws-adapt`'s scaled phase claim still uses it as
+    /// a cheap shaping heuristic there (the placement-aware pilot replay
+    /// arbitrates every candidate either way).
     fn socket_fractions(&self) -> Vec<Vec<f64>> {
         let shared = &self.sys.shared;
         let channels = shared.dram_channels as u64;
@@ -743,6 +749,16 @@ fn assign_blocks_bw(
 /// arbitrate — keeping `ws-bw`'s plan whenever the pilot predicts no win.
 /// At one socket every fraction is local and the candidate is never built,
 /// so `ws-numa` degrades to exactly `ws-bw`.
+///
+/// The candidate's distance signal follows the active page-placement
+/// policy. Under the blind interleave a block's footprint is striped over
+/// fixed channel groups, so the static per-socket mean hops
+/// ([`Pilot::socket_hops`]) are exact. Under first-touch the homes are
+/// *made* by the schedule itself, so the claim loop runs the same
+/// first-touch rule the replay will: pages nobody claimed yet are free
+/// (the claimant homes them locally), pages an earlier claim homed on
+/// another socket cost their hop distance — scheduler and allocator
+/// cooperating instead of fighting.
 fn assign_blocks_numa(
     pilot: &Pilot,
     row_work: &[u64],
@@ -754,7 +770,11 @@ fn assign_blocks_numa(
     if shared.sockets <= 1 {
         return plan_bw;
     }
-    let hops = pilot.socket_hops();
+    let first_touch = shared.page_placement == crate::config::PagePlacement::FirstTouch;
+    let static_hops = if first_touch { None } else { Some(pilot.socket_hops()) };
+    // Claim-order first-touch approximation: 4KB-page homes (64 lines per
+    // page, the same `line >> 6` the replay uses) assigned as blocks claim.
+    let mut page_home: HashMap<u64, u8> = HashMap::new();
     // How much a fully-remote footprint inflates a block's effective cost:
     // the hop-priced transfer relative to the local transfer occupancy. The
     // pilot arbitrates below; this only shapes the candidate.
@@ -763,10 +783,37 @@ fn assign_blocks_numa(
     let mut est = vec![0.0f64; cores];
     for bi in 0..blocks.len() {
         let wb = pilot.work[bi];
+        let hops_by_sock: Vec<f64> = match &static_hops {
+            Some(h) => h[bi].clone(),
+            None => {
+                // Mean hop distance of this block's lines from each socket
+                // given the homes claimed so far; still-unhomed lines are
+                // free for every socket (the winner will home them).
+                let mut per = vec![0.0f64; shared.sockets];
+                let mut total = 0u64;
+                for &(first, nlines, _) in &pilot.ranges[bi] {
+                    let mut l = first;
+                    let end = first + nlines;
+                    while l < end {
+                        let page = l >> 6;
+                        let span = (((page + 1) << 6).min(end)) - l;
+                        if let Some(&h) = page_home.get(&page) {
+                            for (s, v) in per.iter_mut().enumerate() {
+                                *v += span as f64
+                                    * shared.socket_distance(s, h as usize) as f64;
+                            }
+                        }
+                        total += span;
+                        l += span;
+                    }
+                }
+                per.iter().map(|&x| x / total.max(1) as f64).collect()
+            }
+        };
         let mut best = 0usize;
         let mut best_cost = f64::INFINITY;
         for (c, &e) in est.iter().enumerate() {
-            let cost = e + wb * (1.0 + beta * hops[bi][pilot.socks[c] as usize]);
+            let cost = e + wb * (1.0 + beta * hops_by_sock[pilot.socks[c] as usize]);
             if cost < best_cost {
                 best_cost = cost;
                 best = c;
@@ -774,6 +821,14 @@ fn assign_blocks_numa(
         }
         plan[best].push(bi);
         est[best] = best_cost;
+        if first_touch {
+            let home = pilot.socks[best];
+            for &(first, nlines, _) in &pilot.ranges[bi] {
+                for page in (first >> 6)..=((first + nlines - 1) >> 6) {
+                    page_home.entry(page).or_insert(home);
+                }
+            }
+        }
     }
     let stalls_numa = pilot.stalls(&plan);
     if pilot.makespan(&plan, &stalls_numa) < pilot.makespan(&plan_bw, &stalls_bw) {
@@ -1595,8 +1650,24 @@ where
         Ok(o) => o,
         Err(_) => anyhow::bail!("shared-memory replay engine panicked"),
     };
+    // Compulsory-traffic oracle for this run: the achieved side is each
+    // core's shared-LLC demand misses (one DRAM line per miss), the bound
+    // is computed from the two sparsity patterns, the finished output size,
+    // and the run's whole cache budget. The bound is a per-run fact stamped
+    // identically on every core (aggregated with `max`, like
+    // `replay_iters`).
+    let c_nnz: u64 = results
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|r| r.as_ref().map_or(0, |c| c.nnz() as u64))
+        .sum();
+    let oracle = crate::mem::oracle::OracleBound::new(a, b, c_nnz)
+        .dram_lines(crate::mem::oracle::budget_lines(&sys, cores), cores);
     for (c, m) in per_core.iter_mut().enumerate() {
         m.shared = outcome.per_core[c];
+        m.shared.achieved_dram_lines = m.shared.llc_misses;
+        m.shared.oracle_dram_lines = oracle;
         let stalls = &outcome.per_core_phase_stalls[c];
         for (p, &stall) in stalls.iter().enumerate().take(NUM_PHASES) {
             m.phase_cycles[p] += stall;

@@ -1,0 +1,179 @@
+//! The compulsory-DRAM-traffic oracle's honesty contract:
+//!
+//! * **closed forms** — a dense block, an identity B, and a cache larger
+//!   than the whole footprint all come out exactly as the formulas in
+//!   `mem::oracle`'s docs predict;
+//! * **registry-wide soundness** — on every registry dataset, for every
+//!   scheduler and for both kernel families, the replay's achieved DRAM
+//!   line count is at least the oracle bound (`oracle_ratio >= 1.0`): the
+//!   memory model never reports less traffic than any execution must move;
+//! * **monotonicity** — the bound never increases with the cache budget,
+//!   so a bigger simulated cache can only certify, never condemn.
+
+use anyhow::Result;
+use sparsezipper::config::SharedMemConfig;
+use sparsezipper::matrix::{registry, Csr};
+use sparsezipper::mem::oracle::{budget_lines, OracleBound};
+use sparsezipper::mem::SharedStats;
+use sparsezipper::spgemm::parallel::{self, ParallelConfig, Scheduler};
+use sparsezipper::spgemm::{ImplId, SpGemm};
+use sparsezipper::SystemConfig;
+
+const SCALE: f64 = 0.003;
+
+fn native(id: ImplId) -> impl Fn() -> Result<Box<dyn SpGemm>> + Sync {
+    move || id.instantiate(sparsezipper::Engine::Native, std::path::Path::new("."))
+}
+
+fn totals(run: &sparsezipper::MulticoreMetrics) -> SharedStats {
+    let mut tot = SharedStats::default();
+    for core in &run.per_core {
+        tot.add(&core.shared);
+    }
+    tot
+}
+
+fn dense(n: usize) -> Csr {
+    let rows: Vec<(Vec<u32>, Vec<f32>)> = (0..n)
+        .map(|_| ((0..n as u32).collect(), vec![1.0; n]))
+        .collect();
+    Csr::from_rows(n, n, rows)
+}
+
+#[test]
+fn dense_block_matches_the_closed_form() {
+    // A 64x64 dense block: every region's footprint is a whole multiple of
+    // lines, so the oracle is pure arithmetic. lines(b) = ceil(b/64).
+    let n = 64u64;
+    let a = dense(n as usize);
+    let o = OracleBound::new(&a, &a, n * n);
+    let elem = (n * n * 4).div_ceil(64); // one element region of B (or A, or C)
+    let ptr = ((n + 1) * 8).div_ceil(64);
+    assert_eq!(o.cold_a_lines, ptr + 2 * elem);
+    assert_eq!(o.cold_b_lines, 2 * elem + ptr);
+    assert_eq!(o.cold_c_lines, (n * 8).div_ceil(64) + 2 * elem);
+    // Each of the n output rows re-touches all of B: at budget 0 the raw
+    // reuse pressure is n * 2*elem lines.
+    assert_eq!(o.reuse_b_lines(0), n * 2 * elem);
+    // A budget covering one row's whole working set kills the reuse term.
+    assert_eq!(o.dram_lines(2 * elem, 1), o.cold_lines());
+}
+
+#[test]
+fn identity_b_and_oversized_cache_are_cold_only() {
+    let d = registry::find("p2p").expect("registry dataset");
+    let a = d.build(SCALE);
+    let b = Csr::identity(a.ncols);
+    let o = OracleBound::new(&a, &b, a.nnz() as u64);
+    // B = I: row i's working set is one 4-byte element per column of A's
+    // row i, so a budget covering the heaviest row's footprint (index +
+    // data regions) leaves compulsory traffic only.
+    let max_deg = (0..a.nrows)
+        .map(|i| (a.indptr[i + 1] - a.indptr[i]) as u64)
+        .max()
+        .unwrap_or(0);
+    let budget = 2 * (max_deg * 4).div_ceil(64);
+    assert_eq!(o.dram_lines(budget, 1), o.cold_lines());
+    // A cache bigger than the whole footprint leaves compulsory traffic
+    // only, on a real pattern too.
+    let o2 = OracleBound::new(&a, &a, 4 * a.nnz() as u64);
+    assert_eq!(o2.dram_lines(u64::MAX, 4), o2.cold_lines());
+}
+
+#[test]
+fn bound_is_monotone_non_increasing_in_the_budget() {
+    for d in registry::DATASETS.iter().take(5) {
+        let a = d.build(SCALE);
+        let o = OracleBound::new(&a, &a, 4 * a.nnz() as u64);
+        let mut prev = u64::MAX;
+        for budget in [0u64, 32, 128, 512, 2048, 8192, 1 << 22] {
+            let v = o.dram_lines(budget, 4);
+            assert!(
+                v <= prev,
+                "{}: bound rose from {prev} to {v} at budget {budget}",
+                d.name
+            );
+            assert!(v >= o.cold_lines(), "{}: bound under cold floor", d.name);
+            prev = v;
+        }
+        assert_eq!(o.dram_lines(u64::MAX, 4), o.cold_lines(), "{}", d.name);
+    }
+}
+
+#[test]
+fn achieved_traffic_never_undercuts_the_oracle_on_any_registry_dataset() {
+    // The headline honesty gate, mirrored in CI on the rendered fig12 TSV:
+    // on every registry dataset the replay's total LLC-miss count (the
+    // achieved DRAM line traffic) is at least the compulsory bound.
+    let sys = SystemConfig::default();
+    for d in registry::DATASETS {
+        let a = d.build(SCALE);
+        let cfg = ParallelConfig {
+            scheduler: Scheduler::WorkStealingDyn,
+            ..ParallelConfig::new(4)
+        };
+        let run = parallel::row_blocked(&sys, native(ImplId::Spz), &a, &a, &cfg).unwrap();
+        let tot = totals(&run.metrics);
+        assert!(tot.oracle_dram_lines > 0, "{}: oracle not stamped", d.name);
+        assert_eq!(
+            tot.achieved_dram_lines, tot.llc_misses,
+            "{}: achieved must be the LLC demand-miss count",
+            d.name
+        );
+        assert!(
+            tot.achieved_dram_lines >= tot.oracle_dram_lines,
+            "{}: achieved {} lines under oracle bound {}",
+            d.name,
+            tot.achieved_dram_lines,
+            tot.oracle_dram_lines
+        );
+        assert!(tot.oracle_ratio() >= 1.0, "{}: ratio {}", d.name, tot.oracle_ratio());
+        // The stamped oracle is exactly what the standalone construction
+        // computes for this (matrix, budget, cores) triple.
+        let c_nnz = run.csr.nnz() as u64;
+        let expect = OracleBound::new(&a, &a, c_nnz).dram_lines(budget_lines(&sys, 4), 4);
+        assert_eq!(tot.oracle_dram_lines, expect, "{}: stamp drifted", d.name);
+    }
+}
+
+#[test]
+fn every_scheduler_and_kernel_family_respects_the_bound() {
+    // Schedulers move work, not arithmetic: whatever plan runs, the model
+    // cannot report less DRAM traffic than compulsory. Two sockets so the
+    // NUMA-aware paths (first-touch homes, remote fills) are exercised too.
+    let base = SystemConfig::default();
+    let sys = SystemConfig {
+        shared: SharedMemConfig { sockets: 2, ..base.shared },
+        ..base
+    };
+    for d in registry::DATASETS.iter().take(3) {
+        let a = d.build(SCALE);
+        for id in [ImplId::SclHash, ImplId::Spz] {
+            for sched in Scheduler::ALL {
+                let cfg = ParallelConfig {
+                    scheduler: sched,
+                    ..ParallelConfig::new(4)
+                };
+                let run = parallel::row_blocked(&sys, native(id), &a, &a, &cfg).unwrap();
+                let tot = totals(&run.metrics);
+                assert!(
+                    tot.achieved_dram_lines >= tot.oracle_dram_lines,
+                    "{} {} {}: achieved {} < oracle {}",
+                    d.name,
+                    id.name(),
+                    sched.name(),
+                    tot.achieved_dram_lines,
+                    tot.oracle_dram_lines
+                );
+                assert!(
+                    tot.oracle_ratio() >= 1.0,
+                    "{} {} {}: ratio {}",
+                    d.name,
+                    id.name(),
+                    sched.name(),
+                    tot.oracle_ratio()
+                );
+            }
+        }
+    }
+}

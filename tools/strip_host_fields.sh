@@ -1,0 +1,21 @@
+# Shared sed programs for byte-diffing spz suite JSON across runs.
+#
+# Source this file (`. ../tools/strip_host_fields.sh` from rust/), then pipe
+# through `sed "$STRIP_HOST_FIELDS"` or `sed "$STRIP_RING_FIELDS"`. Every CI
+# byte-diff step uses these definitions so the list of host-artifact fields
+# lives in exactly one place.
+#
+# STRIP_HOST_FIELDS removes the fields that legitimately differ between two
+# runs of the *same* configuration: each job's host wall-clock and the
+# service pool's queue/slot high-water marks (how far the pool happened to
+# run ahead of the submitter). Every simulated number — cycles, stalls,
+# coherence counters, NUMA charges, oracle traffic — must survive the strip
+# and match exactly.
+#
+# STRIP_RING_FIELDS additionally removes the two ring-shaped trace counters
+# (peak resident chunks, spilled chunks) — the quantities
+# --trace-ring-chunks exists to change — for diffs *across* ring
+# configurations.
+
+STRIP_HOST_FIELDS='s/"wall_secs":[^,]*,//g; s/"queue_depth_high_water":[^,]*,//g; s/"slots_high_water":[^,]*,//g'
+STRIP_RING_FIELDS="$STRIP_HOST_FIELDS"'; s/"trace_peak_resident_chunks":[^,]*,//g; s/"spilled_chunks":[^,}]*//g'
